@@ -1,0 +1,73 @@
+//! Quickstart: the three-layer stack in ~60 lines.
+//!
+//! 1. Load an AOT-compiled Pallas kernel (the 16-lane matmul) through the
+//!    PJRT runtime and check its numerics from rust.
+//! 2. Run one convolution layer through the TensorDash cycle simulator
+//!    at 60% activation sparsity and print the projected speedup.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use tensordash::config::ChipConfig;
+use tensordash::conv::{ConvShape, TrainOp};
+use tensordash::repro::simulate_layer_op;
+use tensordash::runtime::{literal_f32, to_f32, Runtime};
+use tensordash::trace::synthetic::clustered_bitmap;
+use tensordash::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. the AOT Pallas kernel through PJRT --------------------------
+    let rt = Runtime::new("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+    let matmul = rt.load("matmul")?;
+
+    let mut rng = Rng::new(7);
+    let a: Vec<f32> = (0..64 * 64).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..64 * 64).map(|_| rng.normal() as f32).collect();
+    let out = matmul.run(&[literal_f32(&[64, 64], &a)?, literal_f32(&[64, 64], &b)?])?;
+    let got = to_f32(&out[0])?;
+
+    // Reference matmul in plain rust.
+    let mut want = vec![0f32; 64 * 64];
+    for i in 0..64 {
+        for k in 0..64 {
+            let av = a[i * 64 + k];
+            for j in 0..64 {
+                want[i * 64 + j] += av * b[k * 64 + j];
+            }
+        }
+    }
+    let max_err = got
+        .iter()
+        .zip(&want)
+        .map(|(g, w)| (g - w).abs())
+        .fold(0f32, f32::max);
+    println!("pallas matmul vs rust reference: max |err| = {max_err:.2e}");
+    assert!(max_err < 1e-3, "kernel numerics mismatch");
+
+    // --- 2. one layer through the TensorDash simulator ------------------
+    let shape = ConvShape::conv(4, 28, 28, 128, 128, 3, 1, 1);
+    let a_bm = clustered_bitmap((4, 28, 28, 128), 0.60, 0.35, &mut rng);
+    let g_bm = clustered_bitmap((4, 28, 28, 128), 0.70, 0.35, &mut rng);
+    let cfg = ChipConfig::default();
+    println!(
+        "\nlayer {}x{}x{} -> {} (3x3), A sparsity {:.2}, G sparsity {:.2}",
+        shape.h,
+        shape.w,
+        shape.c,
+        shape.f,
+        a_bm.sparsity(),
+        g_bm.sparsity()
+    );
+    for op in TrainOp::ALL {
+        let r = simulate_layer_op(&cfg, &shape, op, &a_bm, &g_bm, 6, 16, &mut rng);
+        println!(
+            "  {:<4} speedup {:.2}x  (baseline {} cycles -> TensorDash {})",
+            op.label(),
+            r.speedup(),
+            r.base_chip_cycles,
+            r.td_chip_cycles
+        );
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Sparsity sweep (the Fig. 20 experiment as a library example).
+//!
+//! Sweeps uniformly random tensor sparsity from 10% to 90% on one layer
+//! geometry and prints achieved vs ideal speedup for all three training
+//! convolutions, plus a depth-2 vs depth-3 comparison (Fig. 19's
+//! trade-off) on the same tensors.
+//!
+//! Run: `cargo run --release --example sparsity_sweep`
+
+use tensordash::config::ChipConfig;
+use tensordash::conv::{ConvShape, TrainOp};
+use tensordash::repro::simulate_layer_op;
+use tensordash::trace::synthetic::random_bitmap;
+use tensordash::util::rng::Rng;
+
+fn main() {
+    let shape = ConvShape::conv(4, 28, 28, 128, 128, 3, 1, 1);
+    let mut rng = Rng::new(1);
+    println!("layer: 28x28x128 -> 128, 3x3, batch-equivalent 64\n");
+    println!(
+        "{:>8} {:>7} {:>7} | {:>6} {:>6} {:>6} | {:>8} {:>8}",
+        "sparsity", "ideal", "cap3", "A*W", "A*G", "W*G", "depth3", "depth2"
+    );
+    for lvl in 1..=9 {
+        let sp = lvl as f64 / 10.0;
+        let a = random_bitmap((4, 28, 28, 128), sp, &mut rng);
+        let g = random_bitmap((4, 28, 28, 128), sp, &mut rng);
+        let cfg3 = ChipConfig::default();
+        let cfg2 = ChipConfig::default().with_depth(2);
+        let mut sps = [0.0; 3];
+        for op in TrainOp::ALL {
+            let r = simulate_layer_op(&cfg3, &shape, op, &a, &g, 6, 16, &mut rng);
+            sps[op as usize] = r.speedup();
+        }
+        let d3 = simulate_layer_op(&cfg3, &shape, TrainOp::Fwd, &a, &g, 6, 16, &mut rng);
+        let d2 = simulate_layer_op(&cfg2, &shape, TrainOp::Fwd, &a, &g, 6, 16, &mut rng);
+        println!(
+            "{:>7.0}% {:>7.2} {:>7.2} | {:>6.2} {:>6.2} {:>6.2} | {:>8.2} {:>8.2}",
+            sp * 100.0,
+            1.0 / (1.0 - sp),
+            (1.0 / (1.0 - sp)).min(3.0),
+            sps[0],
+            sps[1],
+            sps[2],
+            d3.speedup(),
+            d2.speedup(),
+        );
+        assert!(d2.speedup() <= 2.01, "depth-2 cap violated");
+        assert!(sps.iter().all(|&s| s <= 3.01), "depth-3 cap violated");
+    }
+    println!("\nsparsity_sweep OK");
+}

@@ -1,0 +1,91 @@
+//! End-to-end driver: REAL training through the full three-layer stack.
+//!
+//! Trains the AOT-compiled CNN (python/compile/model.py — explicit
+//! Eq.4/6/8 fwd/bwd through the Pallas kernels) for a few hundred SGD
+//! steps on the synthetic classification workload, entirely from rust
+//! via PJRT. Every step returns the per-layer zero bitmaps computed
+//! on-device by the Pallas `zero_bitmap16` kernel; periodically the
+//! cycle-accurate TensorDash simulator projects the speedup/energy the
+//! accelerator would achieve on those *real* tensors.
+//!
+//! This is the EXPERIMENTS.md §E2E run:
+//!   make artifacts && cargo run --release --example train_e2e [steps]
+
+use tensordash::config::ChipConfig;
+use tensordash::coordinator::data::DataGen;
+use tensordash::coordinator::Trainer;
+use tensordash::repro::simulate_trace;
+use tensordash::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize = std::env::args()
+        .nth(1)
+        .map(|s| s.parse().expect("steps must be an integer"))
+        .unwrap_or(300);
+    let seed = 42u64;
+
+    let rt = Runtime::new("artifacts")?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut trainer = Trainer::new(&rt, seed as i32)?;
+    let (n, h, w, c) = trainer.meta.input;
+    println!(
+        "model: {} conv layers + FC, batch {}, input {}x{}x{}, {} classes, lr {}",
+        trainer.meta.convs.len(),
+        n,
+        h,
+        w,
+        c,
+        trainer.meta.classes,
+        trainer.meta.lr
+    );
+    let mut data = DataGen::new(h, w, c, trainer.meta.classes, seed);
+    let shapes = trainer.meta.convs.clone();
+    let cfg = ChipConfig::default();
+
+    println!(
+        "\n{:>5} {:>9} {:>6} {:>8} {:>8} {:>9}",
+        "step", "loss", "acc", "A-spars", "G-spars", "speedup"
+    );
+    let mut first_loss = None;
+    let mut last_loss = 0.0;
+    let mut speedups: Vec<(usize, f64)> = Vec::new();
+    for step in 1..=steps {
+        let (x, y) = data.batch(n);
+        let out = trainer.step(&x, &y)?;
+        first_loss.get_or_insert(out.loss);
+        last_loss = out.loss;
+        if step == 1 || step % 25 == 0 || step == steps {
+            let (sa, sg) = out.trace.mean_sparsity();
+            let sim = simulate_trace(&cfg, &shapes, &out.trace.layers, 6, seed);
+            speedups.push((step, sim.overall_speedup()));
+            println!(
+                "{:>5} {:>9.4} {:>6.3} {:>8.3} {:>8.3} {:>8.2}x",
+                step,
+                out.loss,
+                out.accuracy,
+                sa,
+                sg,
+                sim.overall_speedup()
+            );
+        }
+    }
+
+    let first = first_loss.unwrap();
+    println!("\nloss: {first:.4} -> {last_loss:.4}");
+    anyhow::ensure!(
+        last_loss < first * 0.5,
+        "training did not converge (loss {first} -> {last_loss})"
+    );
+    let final_speedup = speedups.last().unwrap().1;
+    println!("TensorDash projection on the trained model's real tensors: {final_speedup:.2}x");
+    println!(
+        "speedup trajectory: {}",
+        speedups
+            .iter()
+            .map(|(s, v)| format!("{s}:{v:.2}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    println!("\ntrain_e2e OK — all three layers compose");
+    Ok(())
+}

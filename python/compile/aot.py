@@ -1,0 +1,177 @@
+"""AOT compile path: lower every computation the rust runtime needs to HLO TEXT.
+
+Run once at build time (``make artifacts``); python never appears on the
+request path. The interchange format is HLO *text*, not a serialized
+HloModuleProto: jax >= 0.5 emits protos with 64-bit instruction ids which
+the ``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md). Everything is lowered with
+``return_tuple=True`` and unwrapped with ``to_tuple`` on the rust side.
+
+Artifacts:
+  init.hlo.txt        (seed:i32[])                      -> params
+  train_step.hlo.txt  (params..., x, y)                 -> params', loss, acc, bitmaps...
+  conv_fwd.hlo.txt    (x, w)  at the conv-2 geometry    -> o          (Eq. 4)
+  conv_igrad.hlo.txt  (g, w)  at the conv-2 geometry    -> g_in       (Eq. 6)
+  conv_wgrad.hlo.txt  (x, g)  at the conv-2 geometry    -> g_w        (Eq. 8)
+  matmul.hlo.txt      (a:f32[64,64], b:f32[64,64])      -> a@b
+  bitmap.hlo.txt      (x:f32[256,16])                   -> i32[256]
+  meta.json           shapes + calling convention for the rust runtime
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .convs import conv_fwd, conv_igrad, conv_wgrad
+from .kernels import matmul16, zero_bitmap16
+from .model import CFG, init_params, train_step_flat
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _shape_meta(shape, dtype="f32"):
+    return {"shape": list(shape), "dtype": dtype}
+
+
+def export_all(out_dir: str) -> None:
+    cfg = CFG
+    os.makedirs(out_dir, exist_ok=True)
+    n, h, w, c0 = cfg.batch, cfg.height, cfg.width, cfg.in_channels
+    param_shapes = [(k, k, cin, cout) for (k, _, _, cin, cout) in cfg.convs]
+    param_shapes += [(cfg.flat_dim(), cfg.classes), (cfg.classes,)]
+    out_hw = cfg.conv_out_hw()
+
+    artifacts = {}
+
+    # --- init -------------------------------------------------------------
+    lowered = jax.jit(lambda seed: init_params(seed, cfg)).lower(
+        _spec((), jnp.int32)
+    )
+    artifacts["init"] = to_hlo_text(lowered)
+
+    # --- train step ---------------------------------------------------------
+    arg_specs = [_spec(s) for s in param_shapes]
+    arg_specs += [_spec((n, h, w, c0)), _spec((n,), jnp.int32)]
+    lowered = jax.jit(lambda *a: train_step_flat(*a, cfg=cfg)).lower(*arg_specs)
+    artifacts["train_step"] = to_hlo_text(lowered)
+
+    # --- standalone three convolutions at the conv-2 geometry ---------------
+    (k2, s2, p2, cin2, cout2) = cfg.convs[1]
+    ih2, iw2 = out_hw[0]
+    oh2, ow2 = out_hw[1]
+    x2 = _spec((n, ih2, iw2, cin2))
+    w2 = _spec((k2, k2, cin2, cout2))
+    g2 = _spec((n, oh2, ow2, cout2))
+    artifacts["conv_fwd"] = to_hlo_text(
+        jax.jit(lambda x, w_: conv_fwd(x, w_, stride=s2, padding=p2)).lower(x2, w2)
+    )
+    artifacts["conv_igrad"] = to_hlo_text(
+        jax.jit(
+            lambda g, w_: conv_igrad(g, w_, stride=s2, padding=p2,
+                                     input_hw=(ih2, iw2))
+        ).lower(g2, w2)
+    )
+    artifacts["conv_wgrad"] = to_hlo_text(
+        jax.jit(
+            lambda x, g: conv_wgrad(x, g, stride=s2, padding=p2,
+                                    kernel_hw=(k2, k2))
+        ).lower(x2, g2)
+    )
+
+    # --- kernel smoke artifacts ---------------------------------------------
+    artifacts["matmul"] = to_hlo_text(
+        jax.jit(matmul16).lower(_spec((64, 64)), _spec((64, 64)))
+    )
+    artifacts["bitmap"] = to_hlo_text(
+        jax.jit(zero_bitmap16).lower(_spec((256, 16)))
+    )
+
+    for name, text in artifacts.items():
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # --- meta.json: the rust calling convention ------------------------------
+    bitmap_groups_a = [
+        (n * hh * ww * cc) // 16
+        for (hh, ww), cc in zip(
+            [(h, w)] + out_hw[:-1], [c0] + [cv[4] for cv in cfg.convs[:-1]]
+        )
+    ]
+    bitmap_groups_g = [
+        (n * hh * ww * cv[4]) // 16 for (hh, ww), cv in zip(out_hw, cfg.convs)
+    ]
+    meta = {
+        "model": {
+            "batch": n,
+            "input": [n, h, w, c0],
+            "classes": cfg.classes,
+            "lr": cfg.lr,
+            "convs": [
+                {
+                    "kernel": k,
+                    "stride": s,
+                    "padding": p,
+                    "c_in": cin,
+                    "c_out": cout,
+                    "out_hw": list(ohw),
+                }
+                for (k, s, p, cin, cout), ohw in zip(cfg.convs, out_hw)
+            ],
+        },
+        "params": [_shape_meta(s) for s in param_shapes],
+        "train_step": {
+            "args": (
+                [_shape_meta(s) for s in param_shapes]
+                + [_shape_meta((n, h, w, c0)), _shape_meta((n,), "i32")]
+            ),
+            "returns": (
+                [_shape_meta(s) for s in param_shapes]
+                + [_shape_meta(()), _shape_meta(())]
+                + [_shape_meta((g,), "i32") for g in bitmap_groups_a]
+                + [_shape_meta((g,), "i32") for g in bitmap_groups_g]
+            ),
+            "bitmap_groups_a": bitmap_groups_a,
+            "bitmap_groups_g": bitmap_groups_g,
+        },
+        "conv2": {
+            "x": [n, ih2, iw2, cin2],
+            "w": [k2, k2, cin2, cout2],
+            "g": [n, oh2, ow2, cout2],
+            "stride": s2,
+            "padding": p2,
+        },
+    }
+    meta_path = os.path.join(out_dir, "meta.json")
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=2)
+    print(f"wrote {meta_path}")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts",
+                        help="artifact output directory")
+    args = parser.parse_args()
+    export_all(args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""Layer-2 building blocks: the paper's three training convolutions.
+
+Each of the three major computations of one training step (paper §2,
+Eq.(1)-(3) and Table 1) is lowered to the Layer-1 Pallas matmul kernel via
+im2col, so that the innermost reduction is over 16-channel lanes — the
+exact value stream a TensorDash PE consumes:
+
+  * ``conv_fwd``   — Eq.(4):  O   = A ★ W
+  * ``conv_igrad`` — Eq.(6):  G_A = G_O(dilated) ★ rot180(W)^T
+  * ``conv_wgrad`` — Eq.(8):  G_W = G_O ★ A   (reduction over batch+space)
+
+All tensors are NHWC / HWIO with channel innermost (the §3.4 16x16 group
+layout keeps 16 channel-contiguous values per group; every channel count
+in the model is a multiple of 16).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import matmul16
+
+
+def _im2col(x, kh: int, kw: int, stride: int, padding: int):
+    """Extract conv patches: (N,H,W,C) -> (N*OH*OW, KH*KW*C), ky-major."""
+    n, h, w, c = x.shape
+    xp = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    oh = (h + 2 * padding - kh) // stride + 1
+    ow = (w + 2 * padding - kw) // stride + 1
+    cols = []
+    for ky in range(kh):
+        for kx in range(kw):
+            sl = xp[:, ky : ky + (oh - 1) * stride + 1 : stride,
+                       kx : kx + (ow - 1) * stride + 1 : stride, :]
+            cols.append(sl)
+    # (N, OH, OW, KH*KW, C) with (ky,kx) major, channel innermost.
+    patches = jnp.stack(cols, axis=3)
+    return patches.reshape(n * oh * ow, kh * kw * c), (n, oh, ow)
+
+
+def conv_fwd(x, w, *, stride: int, padding: int):
+    """Forward convolution, Eq.(4). x:(N,H,W,C) w:(KH,KW,C,F) -> (N,OH,OW,F)."""
+    kh, kw, c, f = w.shape
+    patches, (n, oh, ow) = _im2col(x, kh, kw, stride, padding)
+    out = matmul16(patches, w.reshape(kh * kw * c, f))
+    return out.reshape(n, oh, ow, f)
+
+
+def _dilate_and_pad(g, *, stride: int, padding: int, kh: int, kw: int, input_hw):
+    """Dilate gradients by the stride and pad for the 'full' convolution."""
+    n, oh, ow, f = g.shape
+    h, w = input_hw
+    if stride > 1:
+        gd = jnp.zeros((n, (oh - 1) * stride + 1, (ow - 1) * stride + 1, f), g.dtype)
+        gd = gd.at[:, ::stride, ::stride, :].set(g)
+    else:
+        gd = g
+    # After padding, a stride-1 valid conv with a KHxKW filter must produce
+    # exactly (H, W) outputs.
+    pt = kh - 1 - padding
+    pl_ = kw - 1 - padding
+    pb = h + kh - 1 - gd.shape[1] - pt
+    pr = w + kw - 1 - gd.shape[2] - pl_
+    return jnp.pad(gd, ((0, 0), (pt, pb), (pl_, pr), (0, 0)))
+
+
+def conv_igrad(g, w, *, stride: int, padding: int, input_hw):
+    """Input-gradient convolution, Eq.(6).
+
+    g:(N,OH,OW,F), w:(KH,KW,C,F) -> (N,H,W,C). The filters are
+    "reconstructed": rotated 180 degrees spatially and with the C/F roles
+    swapped; the gradients are dilated by the forward stride.
+    """
+    kh, kw, c, f = w.shape
+    gp = _dilate_and_pad(g, stride=stride, padding=padding, kh=kh, kw=kw,
+                         input_hw=input_hw)
+    w_rot = jnp.flip(w, (0, 1)).transpose(0, 1, 3, 2)  # (KH,KW,F,C)
+    patches, (n, oh, ow) = _im2col(gp, kh, kw, 1, 0)
+    out = matmul16(patches, w_rot.reshape(kh * kw * f, c))
+    return out.reshape(n, oh, ow, c)
+
+
+def conv_wgrad(x, g, *, stride: int, padding: int, kernel_hw):
+    """Weight-gradient convolution, Eq.(8).
+
+    x:(N,H,W,C), g:(N,OH,OW,F) -> (KH,KW,C,F). The reduction dimension of
+    the matmul is batch x output-space — the paper's sum over si, xi, yi.
+    """
+    kh, kw = kernel_hw
+    n, oh, ow, f = g.shape
+    c = x.shape[3]
+    patches, _ = _im2col(x, kh, kw, stride, padding)  # (N*OH*OW, KH*KW*C)
+    gw = matmul16(patches.T, g.reshape(n * oh * ow, f))
+    return gw.reshape(kh, kw, c, f)
+
+
+def linear(x, w, b=None):
+    """Fully-connected layer (paper Eq.(5)) through the Pallas kernel."""
+    out = matmul16(x, w)
+    return out if b is None else out + b[None, :]

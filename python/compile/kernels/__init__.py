@@ -1,0 +1,16 @@
+"""Layer-1 Pallas kernels for the TensorDash compute stack.
+
+Every kernel is written with a 16-wide innermost reduction lane to mirror
+the TensorDash processing element (16 MACs/cycle over a 16-value channel
+block, paper §3.2) and the 16x16 tensor-group memory layout (paper §3.4).
+
+Kernels are lowered with ``interpret=True``: on the CPU PJRT plugin a real
+TPU lowering would emit a Mosaic custom-call that cannot execute; the
+interpret path lowers to plain HLO (a fori_loop over the grid) which runs
+on any backend. Correctness is checked against ``ref.py`` by pytest.
+"""
+
+from .matmul import matmul16, LANE
+from .bitmap import zero_bitmap16
+
+__all__ = ["matmul16", "zero_bitmap16", "LANE"]

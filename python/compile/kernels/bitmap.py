@@ -1,0 +1,56 @@
+"""Zero-bitmap Pallas kernel — the staging buffer's zero detector.
+
+The TensorDash staging buffer emits a 16-bit zero vector per row (paper
+§3.2, the ``AZ``/``BZ`` inputs of the hardware scheduler). This kernel
+computes those vectors for a whole tensor at once: the tensor is viewed as
+``(groups, 16)`` (16 channel-contiguous values per group, matching the
+16x16 layout of §3.4) and each group is packed into one int32 word with
+bit ``l`` set iff lane ``l`` is NON-zero.
+
+The AOT train-step artifact returns these bitmaps for every layer's
+activations and gradients so the rust coordinator can drive the
+cycle-accurate simulator without ever shipping full tensors.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import LANE
+
+# Rows of 16-value groups handled per grid step.
+BLOCK_G = 256
+
+
+def _bitmap_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    nz = (x != 0.0).astype(jnp.int32)
+    weights = (2 ** jnp.arange(LANE, dtype=jnp.int32))[None, :]
+    o_ref[...] = jnp.sum(nz * weights, axis=1)
+
+
+def zero_bitmap16(x):
+    """Pack non-zero lanes of ``x`` (viewed as (-1, 16)) into int32 words.
+
+    ``x.size`` must be a multiple of 16 — the model keeps every channel
+    dimension a multiple of 16 for exactly this reason (paper §3.4 layout).
+    """
+    flat = x.reshape(-1)
+    if flat.shape[0] % LANE != 0:
+        raise ValueError(f"tensor size {flat.shape[0]} not a multiple of {LANE}")
+    groups = flat.shape[0] // LANE
+    x2 = flat.reshape(groups, LANE)
+    bg = min(BLOCK_G, groups)
+    pad = (-groups) % bg
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    gp = x2.shape[0]
+    out = pl.pallas_call(
+        _bitmap_kernel,
+        grid=(gp // bg,),
+        in_specs=[pl.BlockSpec((bg, LANE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bg,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((gp,), jnp.int32),
+        interpret=True,
+    )(x2)
+    return out[:groups]

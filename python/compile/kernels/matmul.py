@@ -1,0 +1,92 @@
+"""Blocked matmul Pallas kernel with a 16-wide reduction lane.
+
+This is the compute hot-spot of the whole stack: all three training
+convolutions of the paper (forward ``A*W`` Eq.(4), input-gradient
+``G_O*W_rot`` Eq.(6) and weight-gradient ``G_O*A`` Eq.(8)) are lowered to
+this kernel via im2col (see ``compile/convs.py``), exactly as the
+TensorDash PE consumes them: dot products over blocks of 16
+channel-contiguous values (the PE's 16 MAC lanes, paper §3.2).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the BlockSpec tiles the
+(M,K)x(K,N) product into (bm,K)/(K,bn) VMEM-resident panels and iterates
+the reduction in LANE=16 steps — the same HBM->VMEM schedule the paper
+implements with AM/BM SRAM banks and 1KB scratchpads. On a real MXU the
+inner ``a @ b`` becomes a systolic bf16 matmul; under interpret=True it is
+numerically exact fp32, which is what the correctness oracle checks.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# The PE reduction width: 16 MAC lanes fed from 16-value channel blocks.
+LANE = 16
+
+# Default output tile. bm*K + K*bn + bm*bn fp32 values must fit the VMEM
+# budget; for the model sizes used here the footprint is < 64 KiB/tile.
+BLOCK_M = 32
+BLOCK_N = 32
+
+
+def _mm_kernel(a_ref, b_ref, o_ref, *, k_steps: int):
+    """One (bm, bn) output tile: accumulate K in LANE-wide slabs."""
+
+    def body(k, acc):
+        a = a_ref[:, pl.dslice(k * LANE, LANE)]
+        b = b_ref[pl.dslice(k * LANE, LANE), :]
+        # 16 MACs per output element per step == one PE row (paper Fig. 6).
+        return acc + jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+    acc = jax.lax.fori_loop(
+        0, k_steps, body, jnp.zeros(o_ref.shape, jnp.float32)
+    )
+    o_ref[...] = acc
+
+
+def _pad_to(x, mult, axis):
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+def matmul16(a, b, *, block_m: int = BLOCK_M, block_n: int = BLOCK_N):
+    """``a @ b`` through the Pallas PE-style kernel.
+
+    Arbitrary (M, K) x (K, N); inputs are zero-padded to multiples of the
+    block shape (zero padding is exact for matmul) and the result sliced
+    back. Accepts fp32; accumulation is fp32.
+    """
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"matmul16 expects 2-D operands, got {a.shape} @ {b.shape}")
+    if a.shape[1] != b.shape[0]:
+        raise ValueError(f"contraction mismatch: {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    bm = min(block_m, _round_up(m, 8))
+    bn = min(block_n, _round_up(n, 8))
+    a = _pad_to(_pad_to(a, bm, 0), LANE, 1)
+    b = _pad_to(_pad_to(b, LANE, 0), bn, 1)
+    mp, kp = a.shape
+    np_ = b.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, k_steps=kp // LANE),
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, kp), lambda i, j: (i, 0)),
+            pl.BlockSpec((kp, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,
+    )(a, b)
+    return out[:m, :n]
+
+
+def _round_up(x: int, mult: int) -> int:
+    return ((x + mult - 1) // mult) * mult

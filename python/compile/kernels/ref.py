@@ -1,0 +1,47 @@
+"""Pure-jnp correctness oracles for every Pallas kernel and conv op.
+
+Nothing here touches Pallas: these are the ground truth the pytest suite
+checks the kernels (and the rust-visible HLO artifacts) against. The two
+gradient convolutions are defined *by construction* as the VJP of the
+forward convolution — exactly what the paper's Eq.(6) and Eq.(8) are the
+closed forms of — so the oracle cannot share a bug with the kernels.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def matmul_ref(a, b):
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def zero_bitmap_ref(x):
+    x2 = x.reshape(-1, 16)
+    nz = (x2 != 0.0).astype(jnp.int32)
+    return jnp.sum(nz * (2 ** jnp.arange(16, dtype=jnp.int32))[None, :], axis=1)
+
+
+def conv_fwd_ref(x, w, *, stride: int, padding: int):
+    """Paper Eq.(4): NHWC x HWIO -> NHWC, explicit symmetric padding."""
+    return lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def conv_igrad_ref(g, w, *, stride: int, padding: int, input_shape):
+    """Paper Eq.(6): dL/dx of the forward conv, via VJP (ground truth)."""
+    x0 = jnp.zeros(input_shape, g.dtype)
+    _, vjp = jax.vjp(lambda x: conv_fwd_ref(x, w, stride=stride, padding=padding), x0)
+    return vjp(g)[0]
+
+
+def conv_wgrad_ref(x, g, *, stride: int, padding: int, kernel_shape):
+    """Paper Eq.(8): dL/dw of the forward conv, via VJP (ground truth)."""
+    w0 = jnp.zeros(kernel_shape, x.dtype)
+    _, vjp = jax.vjp(lambda w: conv_fwd_ref(x, w, stride=stride, padding=padding), w0)
+    return vjp(g)[0]

@@ -1,0 +1,192 @@
+"""Layer-2 model: a small CNN with the paper's explicit fwd/bwd structure.
+
+The training step is written exactly as the paper decomposes it (§2,
+Fig. 5): per layer, ONE forward convolution (Eq. 4), and during
+back-propagation ONE input-gradient convolution (Eq. 6) and ONE
+weight-gradient convolution (Eq. 8) — each lowered through the Layer-1
+Pallas matmul kernel. The backward pass is hand-derived (not ``jax.grad``)
+so that the three convolutions exist as distinct computations whose
+operand sparsity the rust coordinator can observe; pytest cross-checks
+the manual gradients against ``jax.grad`` of a pure-jnp twin.
+
+The train-step artifact additionally returns the per-layer zero bitmaps
+(A = input activations, G = output-activation gradients) computed by the
+``zero_bitmap16`` Pallas kernel — these drive the cycle-accurate
+simulator on the rust side without shipping full tensors.
+
+Channel counts are multiples of 16 to match the PE lane width and the
+§3.4 16x16 tensor-group layout.
+"""
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .convs import conv_fwd, conv_igrad, conv_wgrad, linear
+from .kernels import zero_bitmap16
+
+
+class ModelConfig(NamedTuple):
+    """Static architecture description (shared with rust via meta.json)."""
+
+    batch: int = 16
+    height: int = 8
+    width: int = 8
+    in_channels: int = 16
+    classes: int = 10
+    lr: float = 0.05
+    # (kernel, stride, padding, c_in, c_out) per conv layer.
+    convs: tuple = (
+        (3, 1, 1, 16, 32),
+        (3, 2, 1, 32, 32),
+        (3, 1, 1, 32, 32),
+    )
+
+    def conv_out_hw(self):
+        h, w = self.height, self.width
+        out = []
+        for (k, s, p, _, _) in self.convs:
+            h = (h + 2 * p - k) // s + 1
+            w = (w + 2 * p - k) // s + 1
+            out.append((h, w))
+        return out
+
+    def flat_dim(self):
+        (h, w) = self.conv_out_hw()[-1]
+        return h * w * self.convs[-1][4]
+
+
+CFG = ModelConfig()
+
+
+def init_params(seed, cfg: ModelConfig = CFG):
+    """He-initialised parameters from an int32 seed scalar.
+
+    Exported as its own HLO artifact so the rust coordinator never needs
+    python to (re)initialise a model.
+    """
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for (k, _, _, cin, cout) in cfg.convs:
+        key, sub = jax.random.split(key)
+        fan_in = k * k * cin
+        params.append(
+            jax.random.normal(sub, (k, k, cin, cout), jnp.float32)
+            * jnp.sqrt(2.0 / fan_in)
+        )
+    key, sub = jax.random.split(key)
+    params.append(
+        jax.random.normal(sub, (cfg.flat_dim(), cfg.classes), jnp.float32)
+        * jnp.sqrt(2.0 / cfg.flat_dim())
+    )
+    params.append(jnp.zeros((cfg.classes,), jnp.float32))
+    return tuple(params)
+
+
+def forward(params, x, cfg: ModelConfig = CFG):
+    """Forward pass. Returns logits plus the cache the backward pass needs."""
+    convs = params[: len(cfg.convs)]
+    wf, bf = params[-2], params[-1]
+    acts = [x]  # A^0 .. A^L (post-ReLU inputs of each layer)
+    pre = []  # z_l (pre-ReLU), needed for the ReLU mask in bwd
+    a = x
+    for w, (k, s, p, _, _) in zip(convs, cfg.convs):
+        z = conv_fwd(a, w, stride=s, padding=p)
+        a = jnp.maximum(z, 0.0)
+        pre.append(z)
+        acts.append(a)
+    flat = a.reshape(a.shape[0], -1)
+    logits = linear(flat, wf, bf)
+    return logits, (acts, pre, flat)
+
+
+def _softmax_xent(logits, y, classes):
+    lse = jax.scipy.special.logsumexp(logits, axis=1, keepdims=True)
+    logp = logits - lse
+    onehot = jax.nn.one_hot(y, classes, dtype=jnp.float32)
+    loss = -jnp.mean(jnp.sum(onehot * logp, axis=1))
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+    # dL/dlogits for mean-reduced cross entropy.
+    dlogits = (jnp.exp(logp) - onehot) / logits.shape[0]
+    return loss, acc, dlogits
+
+
+def loss_and_grads(params, x, y, cfg: ModelConfig = CFG):
+    """Manual forward+backward. Returns (loss, acc, grads, taps).
+
+    ``taps`` carries the tensors whose sparsity the paper exploits: the
+    per-layer input activations A_l (ops 1 and 3) and output-activation
+    gradients G_l (ops 2 and 3).
+    """
+    logits, (acts, pre, flat) = forward(params, x, cfg)
+    loss, acc, dlogits = _softmax_xent(logits, y, cfg.classes)
+
+    wf = params[-2]
+    dwf = jnp.dot(flat.T, dlogits)  # FC weight grad (Eq. 9)
+    dbf = jnp.sum(dlogits, axis=0)
+    dflat = jnp.dot(dlogits, wf.T)  # FC input grad (Eq. 7)
+    da = dflat.reshape(acts[-1].shape)
+
+    conv_ws = params[: len(cfg.convs)]
+    dconvs = [None] * len(cfg.convs)
+    grads_out = [None] * len(cfg.convs)  # G_l = dL/dz_l, the paper's G_O
+    for l in range(len(cfg.convs) - 1, -1, -1):
+        (k, s, p, _, _) = cfg.convs[l]
+        g = da * (pre[l] > 0.0).astype(jnp.float32)  # ReLU mask -> G_O
+        grads_out[l] = g
+        # Eq. (8): weight gradients = A_l (*) G_l.
+        dconvs[l] = conv_wgrad(acts[l], g, stride=s, padding=p, kernel_hw=(k, k))
+        if l > 0:
+            # Eq. (6): input gradients = G_l (*) rot180(W_l)^T.
+            da = conv_igrad(g, conv_ws[l], stride=s, padding=p,
+                            input_hw=acts[l].shape[1:3])
+    grads = tuple(dconvs) + (dwf, dbf)
+    taps = (acts[: len(cfg.convs)], grads_out)
+    return loss, acc, grads, taps
+
+
+def train_step(params, x, y, cfg: ModelConfig = CFG):
+    """One SGD step. Returns (new_params, loss, acc, bitmaps).
+
+    bitmaps = (A-bitmaps per layer ++ G-bitmaps per layer), each an int32
+    vector with one 16-lane word per 16-channel group (see kernels/bitmap).
+    """
+    loss, acc, grads, (acts_in, grads_out) = loss_and_grads(params, x, y, cfg)
+    new_params = tuple(p - cfg.lr * g for p, g in zip(params, grads))
+    bitmaps = tuple(zero_bitmap16(a) for a in acts_in) + tuple(
+        zero_bitmap16(g) for g in grads_out
+    )
+    return new_params, loss, acc, bitmaps
+
+
+def train_step_flat(*args, cfg: ModelConfig = CFG):
+    """Flat-signature wrapper for AOT export (rust calling convention).
+
+    args = (w1..wL, wf, bf, x, y); returns
+    (w1'..wL', wf', bf', loss, acc, ba_0..ba_{L-1}, bg_0..bg_{L-1}).
+    """
+    n_params = len(cfg.convs) + 2
+    params = tuple(args[:n_params])
+    x, y = args[n_params], args[n_params + 1]
+    new_params, loss, acc, bitmaps = train_step(params, x, y, cfg)
+    return tuple(new_params) + (loss, acc) + tuple(bitmaps)
+
+
+# ---------------------------------------------------------------------------
+# Pure-jnp twin (oracle): identical math via lax convolutions + jax.grad.
+# Used only by pytest to validate the manual backward pass above.
+# ---------------------------------------------------------------------------
+
+def twin_loss(params, x, y, cfg: ModelConfig = CFG):
+    from .kernels.ref import conv_fwd_ref
+
+    convs = params[: len(cfg.convs)]
+    wf, bf = params[-2], params[-1]
+    a = x
+    for w, (k, s, p, _, _) in zip(convs, cfg.convs):
+        a = jnp.maximum(conv_fwd_ref(a, w, stride=s, padding=p), 0.0)
+    logits = jnp.dot(a.reshape(a.shape[0], -1), wf) + bf[None, :]
+    lse = jax.scipy.special.logsumexp(logits, axis=1, keepdims=True)
+    onehot = jax.nn.one_hot(y, cfg.classes, dtype=jnp.float32)
+    return -jnp.mean(jnp.sum(onehot * (logits - lse), axis=1))

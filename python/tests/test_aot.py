@@ -1,0 +1,58 @@
+"""AOT export: every artifact lowers to parseable HLO text + sane meta."""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import export_all
+
+ARTIFACTS = [
+    "init",
+    "train_step",
+    "conv_fwd",
+    "conv_igrad",
+    "conv_wgrad",
+    "matmul",
+    "bitmap",
+]
+
+
+@pytest.fixture(scope="module")
+def outdir(tmp_path_factory):
+    d = tmp_path_factory.mktemp("artifacts")
+    export_all(str(d))
+    return str(d)
+
+
+@pytest.mark.parametrize("name", ARTIFACTS)
+def test_artifact_exists_and_is_hlo_text(outdir, name):
+    path = os.path.join(outdir, f"{name}.hlo.txt")
+    assert os.path.exists(path)
+    text = open(path).read()
+    assert "ENTRY" in text, f"{name}: missing ENTRY computation"
+    assert "HloModule" in text
+    # The interchange gotcha: must be text, never a serialized proto.
+    assert not text.startswith("\x08"), "artifact looks like a binary proto"
+
+
+def test_meta_json(outdir):
+    meta = json.load(open(os.path.join(outdir, "meta.json")))
+    assert meta["model"]["batch"] == 16
+    assert len(meta["model"]["convs"]) == 3
+    n_params = len(meta["params"])
+    assert n_params == 5
+    ts = meta["train_step"]
+    assert len(ts["args"]) == n_params + 2
+    assert len(ts["returns"]) == n_params + 2 + 6
+    # bitmap group counts must cover every activation/gradient value once.
+    m = meta["model"]
+    a_groups = ts["bitmap_groups_a"]
+    assert a_groups[0] * 16 == 16 * 8 * 8 * 16
+
+
+def test_train_step_hlo_has_all_outputs(outdir):
+    """The tuple root must carry params + loss + acc + 6 bitmaps = 13 leaves."""
+    text = open(os.path.join(outdir, "train_step.hlo.txt")).read()
+    root = [l for l in text.splitlines() if "ROOT" in l and "tuple(" in l]
+    assert root, "no tuple ROOT in train_step HLO"

@@ -1,0 +1,99 @@
+"""The three training convolutions (Eq. 4/6/8) vs lax-based oracles."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.convs import conv_fwd, conv_igrad, conv_wgrad
+from compile.kernels.ref import conv_fwd_ref, conv_igrad_ref, conv_wgrad_ref
+
+# (N, H, W, C_in, C_out, K, stride, padding) — includes the model's three
+# layer geometries plus stress cases.
+GEOMETRIES = [
+    (2, 8, 8, 16, 32, 3, 1, 1),  # conv1
+    (2, 8, 8, 32, 32, 3, 2, 1),  # conv2 (strided)
+    (2, 4, 4, 32, 32, 3, 1, 1),  # conv3
+    (1, 6, 6, 16, 16, 1, 1, 0),  # 1x1
+    (2, 7, 5, 16, 16, 3, 2, 1),  # odd spatial + stride
+    (1, 9, 9, 16, 32, 5, 2, 2),  # 5x5 kernel
+]
+
+
+def _io(n, h, w, cin, cout, k, s, p, seed, sparsity=0.5):
+    rng = np.random.default_rng(seed)
+    oh = (h + 2 * p - k) // s + 1
+    ow = (w + 2 * p - k) // s + 1
+    mk = lambda shape: (
+        rng.standard_normal(shape) * (rng.random(shape) >= sparsity)
+    ).astype(np.float32)
+    x = mk((n, h, w, cin))
+    wt = mk((k, k, cin, cout))
+    g = mk((n, oh, ow, cout))
+    return x, wt, g
+
+
+@pytest.mark.parametrize("geom", GEOMETRIES)
+def test_conv_fwd(geom):
+    n, h, w, cin, cout, k, s, p = geom
+    x, wt, _ = _io(*geom, seed=1)
+    assert_allclose(
+        conv_fwd(x, wt, stride=s, padding=p),
+        conv_fwd_ref(x, wt, stride=s, padding=p),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("geom", GEOMETRIES)
+def test_conv_igrad(geom):
+    n, h, w, cin, cout, k, s, p = geom
+    x, wt, g = _io(*geom, seed=2)
+    assert_allclose(
+        conv_igrad(g, wt, stride=s, padding=p, input_hw=(h, w)),
+        conv_igrad_ref(g, wt, stride=s, padding=p, input_shape=x.shape),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("geom", GEOMETRIES)
+def test_conv_wgrad(geom):
+    n, h, w, cin, cout, k, s, p = geom
+    x, wt, g = _io(*geom, seed=3)
+    assert_allclose(
+        conv_wgrad(x, g, stride=s, padding=p, kernel_hw=(k, k)),
+        conv_wgrad_ref(x, g, stride=s, padding=p, kernel_shape=wt.shape),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    n=st.integers(1, 3),
+    hw=st.integers(4, 9),
+    cin=st.sampled_from([16, 32]),
+    cout=st.sampled_from([16, 32]),
+    k=st.sampled_from([1, 3]),
+    s=st.sampled_from([1, 2]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_all_three_hypothesis(n, hw, cin, cout, k, s, seed):
+    p = (k - 1) // 2
+    if (hw + 2 * p - k) < 0:
+        return
+    geom = (n, hw, hw, cin, cout, k, s, p)
+    x, wt, g = _io(*geom, seed=seed)
+    assert_allclose(
+        conv_fwd(x, wt, stride=s, padding=p),
+        conv_fwd_ref(x, wt, stride=s, padding=p),
+        rtol=1e-4, atol=1e-4,
+    )
+    assert_allclose(
+        conv_igrad(g, wt, stride=s, padding=p, input_hw=(hw, hw)),
+        conv_igrad_ref(g, wt, stride=s, padding=p, input_shape=x.shape),
+        rtol=1e-4, atol=1e-4,
+    )
+    assert_allclose(
+        conv_wgrad(x, g, stride=s, padding=p, kernel_hw=(k, k)),
+        conv_wgrad_ref(x, g, stride=s, padding=p, kernel_shape=wt.shape),
+        rtol=1e-4, atol=1e-4,
+    )

@@ -1,0 +1,114 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import matmul16, zero_bitmap16
+from compile.kernels.ref import matmul_ref, zero_bitmap_ref
+
+
+def _rand(shape, rng, sparsity=0.0):
+    x = rng.standard_normal(shape).astype(np.float32)
+    if sparsity > 0.0:
+        mask = rng.random(shape) >= sparsity
+        x = x * mask
+    return x
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (16, 16, 16),  # exactly one PE row
+        (32, 16, 32),  # one output tile
+        (64, 160, 32),  # multi-step reduction
+        (1024, 144, 32),  # conv1 fwd geometry
+        (7, 16, 5),  # non-multiples -> padding path
+        (33, 17, 31),  # everything misaligned
+        (1, 16, 1),  # degenerate
+        (128, 512, 10),  # FC geometry
+    ],
+)
+def test_matmul16_matches_ref(m, k, n):
+    rng = np.random.default_rng(seed=m * 10007 + k * 101 + n)
+    a = _rand((m, k), rng)
+    b = _rand((k, n), rng)
+    assert_allclose(matmul16(a, b), matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("sparsity", [0.0, 0.5, 0.9, 1.0])
+def test_matmul16_sparse_operands(sparsity):
+    """Sparsity must not change numerics (the paper's 'no fidelity loss')."""
+    rng = np.random.default_rng(seed=7)
+    a = _rand((48, 64), rng, sparsity)
+    b = _rand((64, 48), rng, sparsity)
+    assert_allclose(matmul16(a, b), matmul_ref(a, b), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    m=st.integers(1, 40),
+    k=st.integers(1, 48),
+    n=st.integers(1, 40),
+    sparsity=st.sampled_from([0.0, 0.7]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul16_hypothesis(m, k, n, sparsity, seed):
+    rng = np.random.default_rng(seed)
+    a = _rand((m, k), rng, sparsity)
+    b = _rand((k, n), rng, sparsity)
+    assert_allclose(matmul16(a, b), matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul16_rejects_bad_shapes():
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError):
+        matmul16(_rand((4, 5), rng), _rand((6, 4), rng))
+    with pytest.raises(ValueError):
+        matmul16(_rand((4,), rng), _rand((4, 4), rng))
+
+
+@pytest.mark.parametrize("groups", [1, 16, 256, 300])
+def test_zero_bitmap_matches_ref(groups):
+    rng = np.random.default_rng(seed=groups)
+    x = _rand((groups, 16), rng, sparsity=0.6)
+    got = np.asarray(zero_bitmap16(x))
+    want = np.asarray(zero_bitmap_ref(x))
+    assert got.dtype == np.int32
+    np.testing.assert_array_equal(got, want)
+
+
+def test_zero_bitmap_all_zero_and_dense():
+    z = np.zeros((8, 16), np.float32)
+    np.testing.assert_array_equal(np.asarray(zero_bitmap16(z)), np.zeros(8, np.int32))
+    d = np.ones((8, 16), np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(zero_bitmap16(d)), np.full(8, 0xFFFF, np.int32)
+    )
+
+
+def test_zero_bitmap_bit_positions():
+    """Bit l corresponds to lane l (channel-contiguous ordering)."""
+    x = np.zeros((2, 16), np.float32)
+    x[0, 3] = 1.0
+    x[1, 0] = -2.5
+    x[1, 15] = 1e-30
+    got = np.asarray(zero_bitmap16(x))
+    assert got[0] == 1 << 3
+    assert got[1] == (1 << 0) | (1 << 15)
+
+
+def test_zero_bitmap_rejects_unaligned():
+    with pytest.raises(ValueError):
+        zero_bitmap16(np.zeros((5, 3), np.float32))
+
+
+@settings(max_examples=10, deadline=None)
+@given(groups=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_zero_bitmap_hypothesis(groups, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand((groups, 16), rng, sparsity=0.5)
+    np.testing.assert_array_equal(
+        np.asarray(zero_bitmap16(x)), np.asarray(zero_bitmap_ref(x))
+    )

@@ -1,0 +1,123 @@
+"""L2 model: manual backward pass vs jax.grad, bitmaps, training progress."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels.ref import zero_bitmap_ref
+from compile.model import (
+    CFG,
+    forward,
+    init_params,
+    loss_and_grads,
+    train_step,
+    train_step_flat,
+    twin_loss,
+)
+
+
+def _batch(seed=0):
+    rng = np.random.default_rng(seed)
+    x = np.maximum(
+        rng.standard_normal((CFG.batch, CFG.height, CFG.width, CFG.in_channels)),
+        0.0,
+    ).astype(np.float32)
+    y = rng.integers(0, CFG.classes, size=(CFG.batch,)).astype(np.int32)
+    return x, y
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(jnp.int32(42))
+
+
+def test_param_shapes(params):
+    assert len(params) == len(CFG.convs) + 2
+    for p, (k, _, _, cin, cout) in zip(params, CFG.convs):
+        assert p.shape == (k, k, cin, cout)
+    assert params[-2].shape == (CFG.flat_dim(), CFG.classes)
+    assert params[-1].shape == (CFG.classes,)
+
+
+def test_forward_shapes(params):
+    x, _ = _batch()
+    logits, (acts, pre, flat) = forward(params, x)
+    assert logits.shape == (CFG.batch, CFG.classes)
+    assert len(acts) == len(CFG.convs) + 1
+    for a, (hw, cv) in zip(acts[1:], zip(CFG.conv_out_hw(), CFG.convs)):
+        assert a.shape == (CFG.batch, hw[0], hw[1], cv[4])
+    assert flat.shape == (CFG.batch, CFG.flat_dim())
+
+
+def test_manual_grads_match_jax_grad(params):
+    """The paper's Eq.(6)/(8) backward vs autodiff of the pure-jnp twin."""
+    x, y = _batch(1)
+    loss, acc, grads, _ = loss_and_grads(params, x, y)
+    twin_l, twin_grads = jax.value_and_grad(twin_loss)(params, x, y)
+    assert_allclose(float(loss), float(twin_l), rtol=1e-5)
+    assert len(grads) == len(twin_grads)
+    for g, tg in zip(grads, twin_grads):
+        assert_allclose(np.asarray(g), np.asarray(tg), rtol=1e-3, atol=1e-4)
+
+
+def test_taps_are_the_papers_tensors(params):
+    """acts_in are pre-layer activations; grads_out are dL/dz (post-ReLU-mask)."""
+    x, y = _batch(2)
+    _, _, _, (acts_in, grads_out) = loss_and_grads(params, x, y)
+    assert len(acts_in) == len(CFG.convs)
+    assert len(grads_out) == len(CFG.convs)
+    # A^0 is the input batch itself.
+    assert_allclose(np.asarray(acts_in[0]), x)
+    # ReLU-masked gradients must be zero wherever pre-activation <= 0.
+    _, (acts, pre, _) = forward(params, x)
+    for g, z in zip(grads_out, pre):
+        g = np.asarray(g)
+        z = np.asarray(z)
+        assert np.all(g[z <= 0] == 0.0)
+
+
+def test_relu_induces_sparsity(params):
+    """The premise of the paper: activations/gradients are naturally sparse."""
+    x, y = _batch(3)
+    _, _, _, (acts_in, grads_out) = loss_and_grads(params, x, y)
+    for t in list(acts_in[1:]) + list(grads_out):
+        sparsity = float(np.mean(np.asarray(t) == 0.0))
+        assert sparsity > 0.2, f"expected natural sparsity, got {sparsity:.3f}"
+
+
+def test_train_step_bitmaps_match_ref(params):
+    x, y = _batch(4)
+    _, _, _, bitmaps = train_step(params, x, y)
+    _, _, _, (acts_in, grads_out) = loss_and_grads(params, x, y)
+    tensors = list(acts_in) + list(grads_out)
+    assert len(bitmaps) == len(tensors)
+    for bm, t in zip(bitmaps, tensors):
+        np.testing.assert_array_equal(
+            np.asarray(bm), np.asarray(zero_bitmap_ref(t))
+        )
+
+
+def test_train_step_flat_roundtrip(params):
+    x, y = _batch(5)
+    outs = train_step_flat(*params, x, y)
+    n_params = len(CFG.convs) + 2
+    for o, p in zip(outs[:n_params], params):
+        assert o.shape == p.shape
+    loss, acc = outs[n_params], outs[n_params + 1]
+    assert loss.shape == () and acc.shape == ()
+    assert 0.0 <= float(acc) <= 1.0
+
+
+def test_loss_decreases_over_steps(params):
+    """A few SGD steps on one batch must reduce the loss (overfit check)."""
+    x, y = _batch(6)
+    p = params
+    first = None
+    last = None
+    for _ in range(8):
+        p, loss, _, _ = train_step(p, x, y)
+        first = float(loss) if first is None else first
+        last = float(loss)
+    assert last < first * 0.9, f"loss did not decrease: {first} -> {last}"

@@ -1,0 +1,19 @@
+//! Bench + regeneration of Fig. 13 (TensorDash speedup per model/op).
+//!
+//! The headline result: ~1.95x average speedup over the baseline on the
+//! default Table-2 configuration.
+
+use tensordash::config::ChipConfig;
+use tensordash::repro;
+use tensordash::util::bench::{bench, section};
+
+fn main() {
+    let cfg = ChipConfig::default();
+    let samples = 6;
+    let seed = 42;
+    section("Fig. 13 reproduction");
+    let sims = repro::run_fig13_sims(&cfg, samples, seed);
+    repro::fig13(&sims).print();
+    section("timing (full 9-model sweep)");
+    bench("fig13_sweep", 0, 3, || repro::run_fig13_sims(&cfg, samples, seed));
+}

@@ -1,0 +1,26 @@
+//! Bench + regeneration of Fig. 15 (energy efficiency) and Fig. 16
+//! (energy breakdown).
+//!
+//! Anchors: compute-only efficiency ~1.89x, whole-chip ~1.6x; the core
+//! dominates total energy.
+
+use tensordash::config::ChipConfig;
+use tensordash::repro;
+use tensordash::util::bench::{bench, section};
+
+fn main() {
+    let cfg = ChipConfig::default();
+    let sims = repro::run_fig13_sims(&cfg, 6, 42);
+    section("Fig. 15 reproduction");
+    repro::fig15(&sims).print();
+    section("Fig. 16 reproduction");
+    repro::fig16(&sims).print();
+    section("timing (energy model alone)");
+    let em = tensordash::energy::EnergyModel::new(cfg);
+    let sram = tensordash::sim::memory::dense_counts(100, 1000, 64, 4, 4);
+    let dram = tensordash::sim::dram::DramTraffic { read_bytes: 1 << 20, write_bytes: 1 << 18 };
+    let tw = tensordash::sim::transposer::TransposerWork { groups: 1000 };
+    bench("energy_model_layer", 10, 1000, || {
+        em.layer_energy(100_000, &sram, &dram, &tw, true)
+    });
+}

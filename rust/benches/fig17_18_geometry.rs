@@ -1,0 +1,24 @@
+//! Bench + regeneration of Fig. 17 (speedup vs PE rows) and Fig. 18
+//! (speedup vs PE columns).
+//!
+//! Anchors: rows 1 -> 16 declines (~2.1x -> ~1.7x, inter-row work
+//! imbalance on the shared operand); columns barely matter.
+
+use tensordash::repro;
+use tensordash::util::bench::{bench, section};
+
+fn main() {
+    section("Fig. 17 reproduction (rows)");
+    repro::fig17_rows(4, 42).print();
+    section("Fig. 18 reproduction (columns)");
+    repro::fig18_cols(4, 42).print();
+    section("timing (16-row tile pass)");
+    let conn = tensordash::sim::Connectivity::new(3);
+    let mut rng = tensordash::util::rng::Rng::new(1);
+    let streams: Vec<Vec<u16>> = (0..16)
+        .map(|_| (0..128).map(|_| rng.mask16(0.4)).collect())
+        .collect();
+    bench("tile_pass_16rows_128steps", 10, 200, || {
+        tensordash::sim::tile::tile_pass_stats(&conn, &streams, 6)
+    });
+}

@@ -1,0 +1,18 @@
+//! Bench + regeneration of Fig. 19 (staging depth 2 vs 3) and Fig. 20
+//! (randomly sparse tensors).
+//!
+//! Anchors: depth 2 is a cheaper, lower-speedup point (cap 2x); on
+//! random tensors TensorDash tracks the ideal up to the 3x cap
+//! (~1.1x at 10% sparsity, ~2.95x at 90%).
+
+use tensordash::repro;
+use tensordash::util::bench::{bench, section};
+
+fn main() {
+    section("Fig. 19 reproduction");
+    repro::fig19(4, 42).print();
+    section("Fig. 20 reproduction");
+    repro::fig20(10, 42).print();
+    section("timing (fig20 one sparsity level, 2 samples)");
+    bench("fig20_two_samples", 0, 3, || repro::fig20(2, 7));
+}

@@ -1,0 +1,13 @@
+//! Bench + regeneration of the paper's Fig. 1 (potential speedup).
+//!
+//! Prints the figure's rows and times the profile evaluation.
+
+use tensordash::repro;
+use tensordash::util::bench::{bench, section};
+
+fn main() {
+    section("Fig. 1 reproduction");
+    repro::fig1().print();
+    section("timing");
+    bench("fig1_potential", 1, 10, repro::fig1);
+}

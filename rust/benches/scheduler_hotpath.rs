@@ -1,0 +1,49 @@
+//! §Perf micro-benchmarks of the simulator hot path.
+//!
+//! The hardware scheduler is invoked once per simulated PE-cycle; its
+//! throughput bounds every experiment above. Tracked in EXPERIMENTS.md
+//! §Perf (before/after for each optimisation step).
+
+use tensordash::sim::connectivity::Connectivity;
+use tensordash::sim::pe::simulate_stream_stats;
+use tensordash::sim::scheduler::schedule_cycle;
+use tensordash::sim::tile::tile_pass_stats;
+use tensordash::util::bench::{bench, section};
+use tensordash::util::rng::Rng;
+
+fn main() {
+    let conn = Connectivity::new(3);
+    let mut rng = Rng::new(42);
+
+    section("scheduler (single combinational cycle)");
+    let zs: Vec<u64> = (0..4096).map(|_| rng.next_u64() & conn.window_mask()).collect();
+    let s = bench("schedule_cycle_x4096", 20, 500, || {
+        let mut acc = 0u64;
+        for &z in &zs {
+            acc ^= schedule_cycle(&conn, z).picks;
+        }
+        acc
+    });
+    println!("  -> {:.1} ns per schedule", s.median_ns / zs.len() as f64);
+
+    section("PE stream simulation");
+    for density in [0.2f64, 0.5, 0.9] {
+        let rows: Vec<u16> = (0..16384).map(|_| rng.mask16(density)).collect();
+        let st = bench(
+            &format!("pe_stream_16k_rows_d{:.0}", density * 100.0),
+            3,
+            30,
+            || simulate_stream_stats(&conn, &rows),
+        );
+        let cycles = simulate_stream_stats(&conn, &rows).cycles;
+        println!(
+            "  -> {:.1} ns per simulated cycle ({cycles} cycles)",
+            st.median_ns / cycles as f64
+        );
+    }
+
+    section("tile pass (4 rows x 1024 steps)");
+    let streams: Vec<Vec<u16>> =
+        (0..4).map(|_| (0..1024).map(|_| rng.mask16(0.5)).collect()).collect();
+    bench("tile_pass_4x1024", 5, 100, || tile_pass_stats(&conn, &streams, 6));
+}

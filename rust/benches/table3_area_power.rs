@@ -1,0 +1,21 @@
+//! Regeneration of Table 3 (area/power breakdown), its bfloat16 variant
+//! (§4.4) and the GCN no-sparsity control.
+//!
+//! Anchors: FP32 compute overhead 1.09x area / ~1.02x power, whole chip
+//! ~1.0005x; bf16 1.13x / 1.05x; GCN gains ~1% and loses <1% energy
+//! efficiency without power gating.
+
+use tensordash::config::DataType;
+use tensordash::repro;
+use tensordash::util::bench::{bench, section};
+
+fn main() {
+    section("Table 3 reproduction (FP32)");
+    repro::table3(DataType::Fp32).print();
+    section("Table 3 variant (bfloat16, §4.4)");
+    repro::table3(DataType::Bf16).print();
+    section("GCN no-sparsity control (§4.4)");
+    repro::gcn_control(6, 42).print();
+    section("timing");
+    bench("table3_render", 10, 100, || repro::table3(DataType::Fp32).render());
+}

@@ -1,0 +1,154 @@
+//! Accelerator configuration — defaults are the paper's Table 2.
+
+/// Arithmetic datatype of the MAC datapath. The PE is datatype agnostic
+/// (paper §3); the datatype only affects the area/power model (§4.4) and
+/// operand width used by the memory model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DataType {
+    Fp32,
+    Bf16,
+}
+
+impl DataType {
+    pub fn bytes(self) -> u64 {
+        match self {
+            DataType::Fp32 => 4,
+            DataType::Bf16 => 2,
+        }
+    }
+}
+
+/// Which operand sides the front-end extracts sparsity from (§3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SparsitySide {
+    /// Tile configuration of Fig. 11: one scheduler per row, B side only.
+    /// This is the evaluated default — "there is sufficient sparsity on
+    /// one of the operands in each of the three major operations".
+    BSide,
+    /// Full per-PE configuration of Fig. 8: AZ & BZ both considered.
+    Both,
+}
+
+/// Chip configuration (Table 2 defaults).
+#[derive(Debug, Clone)]
+pub struct ChipConfig {
+    /// MAC lanes per PE (16 in the paper; the scheduler structure is
+    /// specialised for 16).
+    pub lanes: usize,
+    /// Staging buffer depth in rows: 3 (lookahead 2) or 2 (lookahead 1).
+    pub staging_depth: usize,
+    /// PE rows per tile.
+    pub tile_rows: usize,
+    /// PE columns per tile.
+    pub tile_cols: usize,
+    /// Number of tiles on the chip.
+    pub tiles: usize,
+    /// Core clock in MHz.
+    pub freq_mhz: u64,
+    /// Datapath datatype.
+    pub dtype: DataType,
+    /// Sparsity extraction configuration.
+    pub side: SparsitySide,
+    /// AM/BM/CM SRAM: bytes per bank and banks per tile.
+    pub sram_bank_bytes: u64,
+    pub sram_banks: u64,
+    /// Scratchpads: bytes per bank, banks per pad.
+    pub spad_bytes: u64,
+    pub spad_banks: u64,
+    /// Number of 16x16 transposers (§3.4).
+    pub transposers: u64,
+    /// Off-chip: LPDDR4-3200, 4 channels => peak bytes/sec.
+    pub dram_gbps: f64,
+    /// Whether TensorDash-specific components are power-gated when a
+    /// tensor shows no sparsity (§3.5).
+    pub power_gate: bool,
+    /// Inter-row lead bound in stream rows for the shared A-side storage
+    /// (see sim::tile). 0 = per-cycle lockstep; large = free running.
+    pub lead_limit: usize,
+    /// Gate performance on DRAM bandwidth (extension; the paper's
+    /// performance simulator is evidently compute-bound — e.g. Fig. 20
+    /// shows near-ideal speedup at 10% sparsity, impossible under a
+    /// bandwidth gate — so the default is off and DRAM traffic feeds
+    /// only the energy model, like the paper's).
+    pub dram_gate: bool,
+}
+
+impl Default for ChipConfig {
+    fn default() -> Self {
+        ChipConfig {
+            lanes: 16,
+            staging_depth: 3,
+            tile_rows: 4,
+            tile_cols: 4,
+            tiles: 16,
+            freq_mhz: 500,
+            dtype: DataType::Fp32,
+            side: SparsitySide::BSide,
+            sram_bank_bytes: 256 * 1024,
+            sram_banks: 4,
+            spad_bytes: 1024,
+            spad_banks: 3,
+            transposers: 15,
+            dram_gbps: 51.2, // 4 x LPDDR4-3200 x32
+            power_gate: false,
+            lead_limit: crate::sim::tile::DEFAULT_LEAD_LIMIT,
+            dram_gate: false,
+        }
+    }
+}
+
+impl ChipConfig {
+    /// Total MAC throughput per cycle (4096 for the default config).
+    pub fn macs_per_cycle(&self) -> u64 {
+        (self.lanes * self.tile_rows * self.tile_cols * self.tiles) as u64
+    }
+
+    /// Total PEs (256 for the default config).
+    pub fn total_pes(&self) -> u64 {
+        (self.tile_rows * self.tile_cols * self.tiles) as u64
+    }
+
+    /// Peak DRAM bytes available per core cycle.
+    pub fn dram_bytes_per_cycle(&self) -> f64 {
+        self.dram_gbps * 1e9 / (self.freq_mhz as f64 * 1e6)
+    }
+
+    pub fn with_depth(mut self, depth: usize) -> Self {
+        assert!(depth == 2 || depth == 3, "staging depth must be 2 or 3");
+        self.staging_depth = depth;
+        self
+    }
+
+    pub fn with_geometry(mut self, rows: usize, cols: usize) -> Self {
+        self.tile_rows = rows;
+        self.tile_cols = cols;
+        self
+    }
+
+    pub fn with_dtype(mut self, dtype: DataType) -> Self {
+        self.dtype = dtype;
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_defaults() {
+        let c = ChipConfig::default();
+        assert_eq!(c.macs_per_cycle(), 4096);
+        assert_eq!(c.total_pes(), 256);
+        assert_eq!(c.lanes, 16);
+        assert_eq!(c.staging_depth, 3);
+        assert_eq!(c.tiles, 16);
+    }
+
+    #[test]
+    fn dram_bandwidth_per_cycle() {
+        let c = ChipConfig::default();
+        // 51.2 GB/s at 500 MHz = 102.4 B/cycle.
+        assert!((c.dram_bytes_per_cycle() - 102.4).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,20 @@
+//! Lowering the paper's three training convolutions onto the accelerator.
+//!
+//! Each training step runs, per layer (paper §2, Eqs. 1–3):
+//!
+//! 1. `Fwd`   — `O = W ★ A`, sparsity extracted from **A**;
+//! 2. `Igrad` — `G_A = G_O ★ W`, sparsity extracted from **G_O**;
+//! 3. `Wgrad` — `G_W = G_O ★ A`, sparsity extracted from whichever of
+//!    `G_O` / `A` is sparser for the layer (§2).
+//!
+//! [`shape::ConvShape`] describes a layer; [`stream`] reconstructs the
+//! exact 16-lane operand streams a tile row consumes from the tensors'
+//! zero bitmaps; [`work`] computes the dense work geometry, memory
+//! traffic and transposer load.
+
+pub mod shape;
+pub mod stream;
+pub mod work;
+
+pub use shape::{ConvShape, TrainOp, WgradSide};
+pub use work::{op_work, OpWork};

@@ -1,0 +1,149 @@
+//! Layer geometry and the three training operations.
+
+/// A convolutional (or fully-connected) layer's geometry for one batch.
+///
+/// Fully-connected layers are the `h = w = kh = kw = 1` special case
+/// (paper Table 1: "a fully-connected layer can be treated as a
+/// special-case convolutional layer").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvShape {
+    /// Batch samples processed together.
+    pub n: usize,
+    /// Input spatial dims.
+    pub h: usize,
+    pub w: usize,
+    /// Input channels (multiple of 16).
+    pub c: usize,
+    /// Filters / output channels (multiple of 16 for lane alignment).
+    pub f: usize,
+    /// Kernel spatial dims.
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+}
+
+impl ConvShape {
+    pub fn conv(
+        n: usize,
+        h: usize,
+        w: usize,
+        c: usize,
+        f: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> Self {
+        ConvShape { n, h, w, c, f, kh: k, kw: k, stride, pad }
+    }
+
+    /// Fully-connected layer: `c` inputs, `f` outputs.
+    pub fn fc(n: usize, c: usize, f: usize) -> Self {
+        ConvShape { n, h: 1, w: 1, c, f, kh: 1, kw: 1, stride: 1, pad: 0 }
+    }
+
+    pub fn is_fc(&self) -> bool {
+        self.h == 1 && self.w == 1 && self.kh == 1 && self.kw == 1
+    }
+
+    pub fn out_h(&self) -> usize {
+        (self.h + 2 * self.pad - self.kh) / self.stride + 1
+    }
+
+    pub fn out_w(&self) -> usize {
+        (self.w + 2 * self.pad - self.kw) / self.stride + 1
+    }
+
+    /// Channel blocks of 16 on the input side.
+    pub fn c_blocks(&self) -> usize {
+        self.c.div_ceil(16)
+    }
+
+    /// Channel blocks of 16 on the filter side.
+    pub fn f_blocks(&self) -> usize {
+        self.f.div_ceil(16)
+    }
+
+    /// MACs of ONE of the three operations (they perform the same number
+    /// of MACs, paper §2).
+    pub fn macs(&self) -> u64 {
+        (self.n * self.out_h() * self.out_w()) as u64
+            * (self.c * self.f * self.kh * self.kw) as u64
+    }
+
+    /// Input activation tensor element count.
+    pub fn a_values(&self) -> u64 {
+        (self.n * self.h * self.w * self.c) as u64
+    }
+
+    /// Output-gradient tensor element count.
+    pub fn g_values(&self) -> u64 {
+        (self.n * self.out_h() * self.out_w() * self.f) as u64
+    }
+
+    /// Weight tensor element count.
+    pub fn w_values(&self) -> u64 {
+        (self.kh * self.kw * self.c * self.f) as u64
+    }
+}
+
+/// The three per-layer training computations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TrainOp {
+    /// `O = W ★ A` (Eq. 4) — the paper's `A ★ W` column in Fig. 13.
+    Fwd,
+    /// `G_A = G_O ★ W` (Eq. 6) — `A ★ G`.
+    Igrad,
+    /// `G_W = G_O ★ A` (Eq. 8) — `W ★ G`.
+    Wgrad,
+}
+
+impl TrainOp {
+    pub const ALL: [TrainOp; 3] = [TrainOp::Fwd, TrainOp::Igrad, TrainOp::Wgrad];
+
+    /// The paper's figure labels.
+    pub fn label(self) -> &'static str {
+        match self {
+            TrainOp::Fwd => "A*W",
+            TrainOp::Igrad => "A*G",
+            TrainOp::Wgrad => "W*G",
+        }
+    }
+}
+
+/// Which tensor the Wgrad op schedules on its B side (§2: "whichever is
+/// higher" sparsity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WgradSide {
+    Gradients,
+    Activations,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geometry() {
+        let s = ConvShape::conv(16, 8, 8, 16, 32, 3, 1, 1);
+        assert_eq!((s.out_h(), s.out_w()), (8, 8));
+        assert_eq!(s.macs(), 16 * 64 * (16 * 32 * 9) as u64);
+        let s2 = ConvShape::conv(16, 8, 8, 32, 32, 3, 2, 1);
+        assert_eq!((s2.out_h(), s2.out_w()), (4, 4));
+    }
+
+    #[test]
+    fn fc_special_case() {
+        let s = ConvShape::fc(16, 512, 10);
+        assert!(s.is_fc());
+        assert_eq!(s.macs(), 16 * 512 * 10);
+        assert_eq!((s.out_h(), s.out_w()), (1, 1));
+    }
+
+    #[test]
+    fn alexnet_conv1_like() {
+        // 227x227x3 k11 s4 -> 55x55. (c padded to 16 by the zoo.)
+        let s = ConvShape::conv(4, 227, 227, 16, 96, 11, 4, 0);
+        assert_eq!((s.out_h(), s.out_w()), (55, 55));
+    }
+}

@@ -1,0 +1,363 @@
+//! Reconstructing PE operand streams from tensor zero bitmaps.
+//!
+//! A tile row consumes its B operand as a sequence of 16-lane rows. This
+//! module builds those sequences — including the exact operand *order*
+//! each of the three training convolutions uses (paper §2, Table 1):
+//!
+//! * **Fwd**: one stream per output position `(n, oy, ox)`; steps run
+//!   over `(ky, kx, channel-block)` of the window, channel fastest
+//!   (matching the §3.4 layout: 16 channel-contiguous values per access).
+//! * **Igrad**: one stream per *input* position `(n, y, x)`; steps run
+//!   over the reconstructed (rotated, C/F-swapped) filter positions with
+//!   the output gradients **dilated by the stride** — positions that
+//!   fall between dilation holes or outside the gradient tensor
+//!   contribute all-zero lane words.
+//! * **Wgrad**: the reduction runs over batch x output-space. With B = G
+//!   one stream per filter channel `f` (lanes = 16 consecutive `ox`
+//!   positions — the transposed access the §3.4 transposers provide);
+//!   with B = A one stream per weight position `(ky, kx, c)`.
+//!
+//! These builders are exact: feeding them the bitmaps of real tensors
+//! reproduces the real MAC streams (validated in rust/tests against the
+//! runtime-executed model).
+
+use super::shape::ConvShape;
+use crate::tensor::TensorBitmap;
+
+/// B stream for the forward conv at output `(n, oy, ox)`.
+///
+/// `a` is the input-activation bitmap of shape `(n, h, w, c)`.
+pub fn fwd_stream(a: &TensorBitmap, s: &ConvShape, n: usize, oy: usize, ox: usize) -> Vec<u16> {
+    debug_assert_eq!(a.c, s.c);
+    let mut rows = Vec::with_capacity(s.kh * s.kw * s.c_blocks());
+    for ky in 0..s.kh {
+        for kx in 0..s.kw {
+            let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+            let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+            for cb in 0..s.c_blocks() {
+                rows.push(a.lane_word_padded(n, iy, ix, cb));
+            }
+        }
+    }
+    rows
+}
+
+/// B stream for the input-gradient conv at input position `(n, y, x)`.
+///
+/// `g` is the output-gradient bitmap of shape `(n, oh, ow, f)`. The
+/// gradients are dilated by the forward stride and convolved with the
+/// rotated filters; a window position maps back to gradient `(oy, ox)`
+/// only when the dilated coordinate is divisible by the stride.
+pub fn igrad_stream(g: &TensorBitmap, s: &ConvShape, n: usize, y: usize, x: usize) -> Vec<u16> {
+    debug_assert_eq!(g.c, s.f);
+    let (oh, ow) = (s.out_h(), s.out_w());
+    let mut rows = Vec::with_capacity(s.kh * s.kw * s.f_blocks());
+    for ky in 0..s.kh {
+        for kx in 0..s.kw {
+            // Position in the dilated gradient tensor. The forward output
+            // (oy, ox) contributes to input y iff y = oy*stride + ky - pad.
+            let dy = y as isize + s.pad as isize - ky as isize;
+            let dx = x as isize + s.pad as isize - kx as isize;
+            let valid = dy >= 0
+                && dx >= 0
+                && dy % s.stride as isize == 0
+                && dx % s.stride as isize == 0
+                && (dy / s.stride as isize) < oh as isize
+                && (dx / s.stride as isize) < ow as isize;
+            for fb in 0..s.f_blocks() {
+                rows.push(if valid {
+                    g.lane_word(n, (dy / s.stride as isize) as usize, (dx / s.stride as isize) as usize, fb)
+                } else {
+                    0
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// Map a flat reduction index to `(n, oy, ox)` for the Wgrad reduction
+/// over batch x output-space.
+#[inline]
+fn wgrad_pos(s: &ConvShape, r: usize) -> (usize, usize, usize) {
+    let (oh, ow) = (s.out_h(), s.out_w());
+    let per_n = oh * ow;
+    (r / per_n, (r % per_n) / ow, r % ow)
+}
+
+/// Total flat reduction length of the Wgrad op.
+pub fn wgrad_reduction(s: &ConvShape) -> usize {
+    s.n * s.out_h() * s.out_w()
+}
+
+/// B stream for the weight-gradient conv with **B = gradients**: fixed
+/// filter channel `f`, lanes along 16 *consecutive flat reduction
+/// indices* `(n, oy, ox)` — the transposed access the §3.4 layout's
+/// transposers provide (and the §3.6.2 group-spanning schedule permits;
+/// for FC layers the reduction is the batch dimension).
+pub fn wgrad_g_stream(g: &TensorBitmap, s: &ConvShape, f: usize) -> Vec<u16> {
+    debug_assert_eq!(g.c, s.f);
+    let red = wgrad_reduction(s);
+    let mut rows = Vec::with_capacity(red.div_ceil(16));
+    for base in (0..red).step_by(16) {
+        let mut word = 0u16;
+        for l in 0..16 {
+            let r = base + l;
+            if r >= red {
+                break;
+            }
+            let (n, oy, ox) = wgrad_pos(s, r);
+            if g.bit(n, oy, ox, f) {
+                word |= 1 << l;
+            }
+        }
+        rows.push(word);
+    }
+    rows
+}
+
+/// B stream for the weight-gradient conv with **B = activations**: fixed
+/// weight position `(ky, kx, c)`, lanes along the same flat reduction.
+pub fn wgrad_a_stream(
+    a: &TensorBitmap,
+    s: &ConvShape,
+    ky: usize,
+    kx: usize,
+    c: usize,
+) -> Vec<u16> {
+    debug_assert_eq!(a.c, s.c);
+    let red = wgrad_reduction(s);
+    let mut rows = Vec::with_capacity(red.div_ceil(16));
+    for base in (0..red).step_by(16) {
+        let mut word = 0u16;
+        for l in 0..16 {
+            let r = base + l;
+            if r >= red {
+                break;
+            }
+            let (n, oy, ox) = wgrad_pos(s, r);
+            let iy = (oy * s.stride + ky) as isize - s.pad as isize;
+            let ix = (ox * s.stride + kx) as isize - s.pad as isize;
+            if iy >= 0
+                && ix >= 0
+                && (iy as usize) < a.h
+                && (ix as usize) < a.w
+                && a.bit(n, iy as usize, ix as usize, c)
+            {
+                word |= 1 << l;
+            }
+        }
+        rows.push(word);
+    }
+    rows
+}
+
+// ---------------------------------------------------------------------
+// A-side (dense-operand) stream builders — used by the two-side
+// extraction mode (§3.1/Fig. 8, the paper's deferred evaluation): the
+// A operand of each op, in the SAME step order as the matching B stream,
+// so `AZ & BZ` is a per-slot AND of the two streams.
+// ---------------------------------------------------------------------
+
+/// Weight bitmaps are stored as `(f, kh, kw, c)` tensors (`n` = filter).
+pub type WeightBitmap = TensorBitmap;
+
+/// A stream of the forward conv for filter `f`: steps over
+/// `(ky, kx, c-block)` — aligned with [`fwd_stream`].
+pub fn fwd_weight_stream(w: &WeightBitmap, s: &ConvShape, f: usize) -> Vec<u16> {
+    debug_assert_eq!(w.c, s.c);
+    debug_assert_eq!((w.h, w.w), (s.kh, s.kw));
+    let mut rows = Vec::with_capacity(s.kh * s.kw * s.c_blocks());
+    for ky in 0..s.kh {
+        for kx in 0..s.kw {
+            for cb in 0..s.c_blocks() {
+                rows.push(w.lane_word(f, ky, kx, cb));
+            }
+        }
+    }
+    rows
+}
+
+/// A stream of the input-gradient conv for output channel `c`: the
+/// reconstructed (rotated, C/F-swapped) filters, steps over
+/// `(ky, kx, f-block)` with lanes along the filter dim — aligned with
+/// [`igrad_stream`].
+pub fn igrad_weight_stream(w: &WeightBitmap, s: &ConvShape, c: usize) -> Vec<u16> {
+    debug_assert_eq!(w.c, s.c);
+    let mut rows = Vec::with_capacity(s.kh * s.kw * s.f_blocks());
+    for ky in 0..s.kh {
+        for kx in 0..s.kw {
+            for fb in 0..s.f_blocks() {
+                let mut word = 0u16;
+                for l in 0..16 {
+                    let f = fb * 16 + l;
+                    if f < s.f && w.bit(f, s.kh - 1 - ky, s.kw - 1 - kx, c) {
+                        word |= 1 << l;
+                    }
+                }
+                rows.push(word);
+            }
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_bitmap(dims: (usize, usize, usize, usize), density: f64, seed: u64) -> TensorBitmap {
+        let (n, h, w, c) = dims;
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..n * h * w * c)
+            .map(|_| if rng.chance(density) { 1.0 } else { 0.0 })
+            .collect();
+        TensorBitmap::from_f32(dims, &data)
+    }
+
+    #[test]
+    fn fwd_stream_length_and_density() {
+        let s = ConvShape::conv(2, 8, 8, 32, 32, 3, 1, 1);
+        let a = random_bitmap((2, 8, 8, 32), 0.5, 1);
+        let st = fwd_stream(&a, &s, 0, 3, 3);
+        assert_eq!(st.len(), 3 * 3 * 2);
+        // interior window: expected ~50% bit density
+        let ones: u32 = st.iter().map(|w| w.count_ones()).sum();
+        let d = ones as f64 / (st.len() as f64 * 16.0);
+        assert!(d > 0.3 && d < 0.7, "density {d}");
+    }
+
+    #[test]
+    fn fwd_stream_corner_has_halo_zeros() {
+        let s = ConvShape::conv(1, 8, 8, 16, 16, 3, 1, 1);
+        let a = random_bitmap((1, 8, 8, 16), 1.0, 2);
+        let st = fwd_stream(&a, &s, 0, 0, 0);
+        // (ky=0) row and (kx=0) column fall outside: 3 + 2 = 5 of 9 taps
+        // valid => 4 zero rows... taps (0,0),(0,1),(0,2),(1,0),(2,0) are
+        // out of bounds = 5 zero rows of 9.
+        let zero_rows = st.iter().filter(|&&w| w == 0).count();
+        assert_eq!(zero_rows, 5);
+        assert_eq!(st.len(), 9);
+    }
+
+    #[test]
+    fn fwd_stream_exhaustive_bit_check() {
+        // Every bit in the stream must equal the source bitmap bit.
+        let s = ConvShape::conv(1, 5, 5, 16, 16, 3, 2, 1);
+        let a = random_bitmap((1, 5, 5, 16), 0.4, 3);
+        for oy in 0..s.out_h() {
+            for ox in 0..s.out_w() {
+                let st = fwd_stream(&a, &s, 0, oy, ox);
+                let mut i = 0;
+                for ky in 0..3 {
+                    for kx in 0..3 {
+                        let iy = (oy * 2 + ky) as isize - 1;
+                        let ix = (ox * 2 + kx) as isize - 1;
+                        for l in 0..16 {
+                            let want = iy >= 0
+                                && ix >= 0
+                                && (iy as usize) < 5
+                                && (ix as usize) < 5
+                                && a.bit(0, iy as usize, ix as usize, l);
+                            assert_eq!(st[i] & (1 << l) != 0, want);
+                        }
+                        i += 1;
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn igrad_stream_dilation_holes() {
+        // stride 2: only every other window position maps to a gradient.
+        let s = ConvShape::conv(1, 8, 8, 16, 16, 3, 2, 1);
+        let g = random_bitmap((1, 4, 4, 16), 1.0, 4);
+        // Input position (1,1): dy = 1+1-ky for ky in 0..3 => 2,1,0; only
+        // even dy/dx map to gradients (stride 2).
+        let st = igrad_stream(&g, &s, 0, 1, 1);
+        assert_eq!(st.len(), 9);
+        // valid (ky,kx) are those with dy,dx even: ky in {0,2} x kx {0,2}.
+        let nonzero = st.iter().filter(|&&w| w != 0).count();
+        assert_eq!(nonzero, 4);
+    }
+
+    #[test]
+    fn igrad_stream_stride1_matches_full_conv() {
+        let s = ConvShape::conv(1, 6, 6, 16, 16, 3, 1, 1);
+        let g = random_bitmap((1, 6, 6, 16), 0.5, 5);
+        // interior input position: all 9 taps valid.
+        let st = igrad_stream(&g, &s, 0, 3, 3);
+        assert_eq!(st.len(), 9);
+        let mut i = 0;
+        for ky in 0..3usize {
+            for kx in 0..3usize {
+                let oy = 3 + 1 - ky;
+                let ox = 3 + 1 - kx;
+                assert_eq!(st[i], g.lane_word(0, oy, ox, 0));
+                i += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn wgrad_g_stream_covers_reduction() {
+        let s = ConvShape::conv(2, 8, 8, 16, 32, 3, 1, 1);
+        let g = random_bitmap((2, 8, 8, 32), 0.5, 6);
+        let st = wgrad_g_stream(&g, &s, 17);
+        // flat reduction 2*8*8 = 128 -> 8 rows of 16 lanes, no padding.
+        assert_eq!(st.len(), 8);
+        // lane l of row 0 = flat index l = (n=0, oy=l/8, ox=l%8).
+        for l in 0..16usize {
+            assert_eq!(st[0] & (1 << l) != 0, g.bit(0, l / 8, l % 8, 17));
+        }
+        // row 4 starts at flat 64 = sample 1.
+        assert_eq!(st[4] & 1 != 0, g.bit(1, 0, 0, 17));
+    }
+
+    #[test]
+    fn wgrad_a_stream_matches_padded_taps() {
+        let s = ConvShape::conv(1, 8, 8, 16, 16, 3, 1, 1);
+        let a = random_bitmap((1, 8, 8, 16), 0.6, 7);
+        let st = wgrad_a_stream(&a, &s, 0, 0, 5);
+        // 64 outputs -> 4 rows of 16.
+        assert_eq!(st.len(), 4);
+        // row 0 covers oy in {0,1}: oy=0 -> iy=-1 halo (lanes 0..8 zero);
+        // oy=1 -> iy=0, ix = ox-1.
+        assert_eq!(st[0] & 0xFF, 0, "first output row is halo");
+        for l in 8..16usize {
+            let ox = l - 8;
+            let want = ox >= 1 && a.bit(0, 0, ox - 1, 5);
+            assert_eq!(st[0] & (1 << l) != 0, want, "lane {l}");
+        }
+    }
+
+    #[test]
+    fn wgrad_fc_lanes_along_batch() {
+        // FC layers: the reduction is the batch dimension — no fake
+        // padding lanes (the bug this test pins down).
+        let s = ConvShape::fc(32, 64, 32);
+        let g = random_bitmap((32, 1, 1, 32), 0.5, 10);
+        let st = wgrad_g_stream(&g, &s, 7);
+        assert_eq!(st.len(), 2);
+        for l in 0..16usize {
+            assert_eq!(st[0] & (1 << l) != 0, g.bit(l, 0, 0, 7));
+            assert_eq!(st[1] & (1 << l) != 0, g.bit(16 + l, 0, 0, 7));
+        }
+    }
+
+    #[test]
+    fn fc_layer_streams() {
+        // FC layers degenerate to single-tap streams.
+        let s = ConvShape::fc(4, 64, 32);
+        let a = random_bitmap((4, 1, 1, 64), 0.5, 8);
+        let st = fwd_stream(&a, &s, 2, 0, 0);
+        assert_eq!(st.len(), 4); // 64/16 channel blocks
+        assert_eq!(st[0], a.lane_word(2, 0, 0, 0));
+        let g = random_bitmap((4, 1, 1, 32), 0.5, 9);
+        let gi = igrad_stream(&g, &s, 1, 0, 0);
+        assert_eq!(gi.len(), 2);
+        assert_eq!(gi[0], g.lane_word(1, 0, 0, 0));
+    }
+}

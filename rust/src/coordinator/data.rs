@@ -1,0 +1,98 @@
+//! Synthetic classification workload for the end-to-end training runs.
+//!
+//! Substitution (DESIGN.md): the paper traces ImageNet-class training;
+//! here the e2e driver learns a synthetic but *real* (learnable) task:
+//! each class is a fixed random non-negative template over the input
+//! volume, and samples are noisy, randomly scaled copies. ReLU-style
+//! clamping keeps inputs non-negative like post-activation features.
+//! Only the resulting sparsity statistics reach the simulator.
+
+use crate::util::rng::Rng;
+
+/// Deterministic synthetic dataset generator.
+pub struct DataGen {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub classes: usize,
+    templates: Vec<Vec<f32>>,
+    rng: Rng,
+}
+
+impl DataGen {
+    pub fn new(h: usize, w: usize, c: usize, classes: usize, seed: u64) -> DataGen {
+        let mut rng = Rng::new(seed);
+        let size = h * w * c;
+        let templates = (0..classes)
+            .map(|_| {
+                (0..size)
+                    .map(|_| {
+                        // Sparse-ish non-negative templates: ~45% zeros.
+                        let v = rng.normal() as f32;
+                        if v > -0.1 {
+                            v.max(0.0) * 2.0
+                        } else {
+                            0.0
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        DataGen { h, w, c, classes, templates, rng }
+    }
+
+    /// Next batch: (x, y) with `x` NHWC row-major, `y` class labels.
+    pub fn batch(&mut self, n: usize) -> (Vec<f32>, Vec<i32>) {
+        let size = self.h * self.w * self.c;
+        let mut x = Vec::with_capacity(n * size);
+        let mut y = Vec::with_capacity(n);
+        for _ in 0..n {
+            let label = self.rng.below(self.classes);
+            y.push(label as i32);
+            let scale = 0.7 + 0.6 * self.rng.f64() as f32;
+            for i in 0..size {
+                let noise = 0.25 * self.rng.normal() as f32;
+                x.push((self.templates[label][i] * scale + noise).max(0.0));
+            }
+        }
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_labelled() {
+        let mut g1 = DataGen::new(8, 8, 16, 10, 42);
+        let mut g2 = DataGen::new(8, 8, 16, 10, 42);
+        let (x1, y1) = g1.batch(16);
+        let (x2, y2) = g2.batch(16);
+        assert_eq!(x1, x2);
+        assert_eq!(y1, y2);
+        assert_eq!(x1.len(), 16 * 8 * 8 * 16);
+        assert!(y1.iter().all(|&l| (0..10).contains(&l)));
+    }
+
+    #[test]
+    fn inputs_nonnegative_with_some_zeros() {
+        let mut g = DataGen::new(8, 8, 16, 10, 1);
+        let (x, _) = g.batch(8);
+        assert!(x.iter().all(|&v| v >= 0.0));
+        let zeros = x.iter().filter(|&&v| v == 0.0).count() as f64 / x.len() as f64;
+        assert!(zeros > 0.1 && zeros < 0.8, "input zero fraction {zeros}");
+    }
+
+    #[test]
+    fn classes_are_distinguishable() {
+        // Templates of different classes differ substantially.
+        let g = DataGen::new(8, 8, 16, 4, 7);
+        let d01: f32 = g.templates[0]
+            .iter()
+            .zip(&g.templates[1])
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(d01 / g.templates[0].len() as f32 > 0.5);
+    }
+}

@@ -1,0 +1,181 @@
+//! L3 coordinator: the training-loop driver.
+//!
+//! Owns the request path end to end — python never runs here. The
+//! coordinator loads the AOT artifacts (init + train step), generates
+//! the synthetic classification workload, executes training steps via
+//! PJRT, captures the per-layer sparsity bitmaps each step returns, and
+//! feeds them to the cycle-accurate simulator, producing the projected
+//! TensorDash speedup/energy for the *actual* tensors the model
+//! produced while it learned.
+
+pub mod data;
+
+use anyhow::{Context, Result};
+
+use crate::conv::ConvShape;
+use crate::runtime::{literal_f32, literal_i32, literal_i32_scalar, scalar_f32, to_i32, Executable, Runtime};
+use crate::trace::capture::StepTrace;
+use crate::util::json::Json;
+
+/// Model geometry parsed from `artifacts/meta.json`.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub batch: usize,
+    pub input: (usize, usize, usize, usize),
+    pub classes: usize,
+    pub lr: f64,
+    pub convs: Vec<ConvShape>,
+    pub param_shapes: Vec<Vec<usize>>,
+}
+
+impl ModelMeta {
+    pub fn parse(meta: &Json) -> Result<ModelMeta> {
+        let model = meta.get("model").context("meta.json: no model")?;
+        let input = model
+            .get("input")
+            .and_then(|v| v.as_usize_vec())
+            .context("meta.json: model.input")?;
+        anyhow::ensure!(input.len() == 4, "model.input must be NHWC");
+        let batch = input[0];
+        let mut convs = Vec::new();
+        let (mut h, mut w) = (input[1], input[2]);
+        let mut c = input[3];
+        for conv in model.get("convs").and_then(|v| v.as_arr()).context("convs")? {
+            let k = conv.get("kernel").and_then(|v| v.as_usize()).context("kernel")?;
+            let s = conv.get("stride").and_then(|v| v.as_usize()).context("stride")?;
+            let p = conv.get("padding").and_then(|v| v.as_usize()).context("padding")?;
+            let cout = conv.get("c_out").and_then(|v| v.as_usize()).context("c_out")?;
+            let shape = ConvShape { n: batch, h, w, c, f: cout, kh: k, kw: k, stride: s, pad: p };
+            let out_hw = conv.get("out_hw").and_then(|v| v.as_usize_vec()).context("out_hw")?;
+            anyhow::ensure!(
+                (shape.out_h(), shape.out_w()) == (out_hw[0], out_hw[1]),
+                "meta out_hw mismatch: computed {:?} vs meta {:?}",
+                (shape.out_h(), shape.out_w()),
+                out_hw
+            );
+            h = out_hw[0];
+            w = out_hw[1];
+            c = cout;
+            convs.push(shape);
+        }
+        let param_shapes = meta
+            .get("params")
+            .and_then(|v| v.as_arr())
+            .context("params")?
+            .iter()
+            .map(|p| p.get("shape").and_then(|s| s.as_usize_vec()).context("param shape"))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ModelMeta {
+            batch,
+            input: (input[0], input[1], input[2], input[3]),
+            classes: model.get("classes").and_then(|v| v.as_usize()).context("classes")?,
+            lr: model.get("lr").and_then(|v| v.as_f64()).context("lr")?,
+            convs,
+            param_shapes,
+        })
+    }
+}
+
+/// Outcome of one coordinated training step.
+#[derive(Debug, Clone)]
+pub struct StepOutcome {
+    pub step: usize,
+    pub loss: f32,
+    pub accuracy: f32,
+    pub trace: StepTrace,
+}
+
+/// The trainer: persistent parameters + compiled executables.
+pub struct Trainer {
+    pub meta: ModelMeta,
+    train_step: Executable,
+    params: Vec<xla::Literal>,
+    steps_done: usize,
+}
+
+impl Trainer {
+    /// Load artifacts, compile, and initialise parameters on-device via
+    /// the `init` artifact (seeded, reproducible).
+    pub fn new(rt: &Runtime, seed: i32) -> Result<Trainer> {
+        let meta = ModelMeta::parse(&rt.meta()?)?;
+        let init = rt.load("init")?;
+        let train_step = rt.load("train_step")?;
+        let params = init.run(&[literal_i32_scalar(seed)])?;
+        anyhow::ensure!(
+            params.len() == meta.param_shapes.len(),
+            "init returned {} params, meta says {}",
+            params.len(),
+            meta.param_shapes.len()
+        );
+        Ok(Trainer { meta, train_step, params, steps_done: 0 })
+    }
+
+    pub fn steps_done(&self) -> usize {
+        self.steps_done
+    }
+
+    /// Execute one SGD step on a batch, updating the held parameters and
+    /// returning metrics + the captured sparsity trace.
+    pub fn step(&mut self, x: &[f32], y: &[i32]) -> Result<StepOutcome> {
+        let (n, h, w, c) = self.meta.input;
+        anyhow::ensure!(x.len() == n * h * w * c, "bad x size");
+        anyhow::ensure!(y.len() == n, "bad y size");
+        let mut inputs: Vec<xla::Literal> = std::mem::take(&mut self.params);
+        inputs.push(literal_f32(&[n, h, w, c], x)?);
+        inputs.push(literal_i32(y));
+        let outs = self.train_step.run(&inputs)?;
+        let n_params = self.meta.param_shapes.len();
+        let n_layers = self.meta.convs.len();
+        anyhow::ensure!(
+            outs.len() == n_params + 2 + 2 * n_layers,
+            "train_step returned {} outputs, expected {}",
+            outs.len(),
+            n_params + 2 + 2 * n_layers
+        );
+        let mut outs = outs.into_iter();
+        self.params = (&mut outs).take(n_params).collect();
+        let loss = scalar_f32(&outs.next().unwrap())?;
+        let acc = scalar_f32(&outs.next().unwrap())?;
+        let a_words: Vec<Vec<i32>> = (&mut outs)
+            .take(n_layers)
+            .map(|l| to_i32(&l))
+            .collect::<Result<_>>()?;
+        let g_words: Vec<Vec<i32>> = outs.map(|l| to_i32(&l)).collect::<Result<_>>()?;
+        let trace = StepTrace::from_words(&self.meta.convs, &a_words, &g_words, loss, acc)?;
+        self.steps_done += 1;
+        Ok(StepOutcome { step: self.steps_done, loss, accuracy: acc, trace })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses_the_expected_document() {
+        let doc = r#"{
+          "model": {"batch": 16, "input": [16,8,8,16], "classes": 10, "lr": 0.05,
+            "convs": [
+              {"kernel":3,"stride":1,"padding":1,"c_in":16,"c_out":32,"out_hw":[8,8]},
+              {"kernel":3,"stride":2,"padding":1,"c_in":32,"c_out":32,"out_hw":[4,4]}
+            ]},
+          "params": [{"shape":[3,3,16,32],"dtype":"f32"},{"shape":[3,3,32,32],"dtype":"f32"}]
+        }"#;
+        let meta = ModelMeta::parse(&Json::parse(doc).unwrap()).unwrap();
+        assert_eq!(meta.batch, 16);
+        assert_eq!(meta.convs.len(), 2);
+        assert_eq!(meta.convs[1].stride, 2);
+        assert_eq!(meta.convs[1].out_h(), 4);
+        assert_eq!(meta.param_shapes[0], vec![3, 3, 16, 32]);
+    }
+
+    #[test]
+    fn meta_rejects_inconsistent_out_hw() {
+        let doc = r#"{
+          "model": {"batch": 4, "input": [4,8,8,16], "classes": 10, "lr": 0.05,
+            "convs": [{"kernel":3,"stride":1,"padding":1,"c_in":16,"c_out":32,"out_hw":[5,5]}]},
+          "params": []
+        }"#;
+        assert!(ModelMeta::parse(&Json::parse(doc).unwrap()).is_err());
+    }
+}

@@ -1,0 +1,288 @@
+//! Area, power and energy model.
+//!
+//! Substitution (DESIGN.md): the paper's numbers come from Synopsys DC +
+//! Cadence Innovus at 65nm plus CACTI and Micron's DRAM power model —
+//! none of which exist here. The quantities the paper reports are
+//! *ratios over a component breakdown*, so this module carries that
+//! breakdown directly: the per-component silicon constants are taken
+//! from the paper's Table 3 (65nm, 500 MHz) and the SRAM/DRAM per-access
+//! energies are CACTI/LPDDR4-class constants chosen once (documented
+//! below) and never tuned per experiment.
+//!
+//! Energy accounting follows the constant-power model the paper's own
+//! arithmetic implies (compute energy-efficiency 1.89x ~= speedup 1.95x
+//! / power overhead 1.02x): component energy = component power x busy
+//! time; memory energy = per-access energy x access counts.
+
+use crate::config::{ChipConfig, DataType};
+use crate::sim::dram::DramTraffic;
+use crate::sim::memory::SramCounts;
+use crate::sim::transposer::TransposerWork;
+
+/// Per-component silicon numbers for the **default Table 2 geometry**
+/// (256 PEs, 16 tiles of 4x4, 16 MACs/PE, 65nm, 500 MHz).
+#[derive(Debug, Clone, Copy)]
+pub struct SiliconTable {
+    /// Baseline compute cores (MACs + accumulators + control).
+    pub core_area_mm2: f64,
+    pub core_power_mw: f64,
+    /// TensorDash schedulers + B-side muxes (one scheduler per tile row).
+    pub sched_bmux_area_mm2: f64,
+    pub sched_bmux_power_mw: f64,
+    /// TensorDash A-side mux blocks (per PE).
+    pub amux_area_mm2: f64,
+    pub amux_power_mw: f64,
+    /// Transposers (§3.4) — part of TensorDash's memory path.
+    pub transposer_area_mm2: f64,
+    pub transposer_power_mw: f64,
+}
+
+/// Paper Table 3 (FP32).
+pub const FP32_TABLE: SiliconTable = SiliconTable {
+    core_area_mm2: 30.41,
+    core_power_mw: 13_910.0,
+    sched_bmux_area_mm2: 0.91,
+    sched_bmux_power_mw: 102.8,
+    amux_area_mm2: 1.73,
+    amux_power_mw: 145.3,
+    transposer_area_mm2: 0.38,
+    transposer_power_mw: 47.3,
+};
+
+/// bfloat16 variant (§4.4): multiplier cores scale ~quadratically, the
+/// datapath muxes/comparators ~linearly, and the priority encoders not
+/// at all — yielding the paper's 1.13x area / 1.05x power overheads.
+pub const BF16_TABLE: SiliconTable = SiliconTable {
+    core_area_mm2: 13.00,
+    core_power_mw: 5_600.0,
+    sched_bmux_area_mm2: 0.71,
+    sched_bmux_power_mw: 100.0,
+    amux_area_mm2: 0.88,
+    amux_power_mw: 140.0,
+    transposer_area_mm2: 0.19,
+    transposer_power_mw: 40.0,
+};
+
+/// On-chip memory macros (CACTI-class, 65nm). One AM/BM/CM chunk is
+/// 256KB x 4 banks x 16 tiles; the paper reports 192 mm^2 per chunk.
+pub const SRAM_CHUNK_AREA_MM2: f64 = 192.0;
+pub const SPAD_TOTAL_AREA_MM2: f64 = 17.0;
+
+/// Per-access energies (documented constants, not per-experiment tuning):
+/// 64B row from a 256KB bank ~ 45 pJ (CACTI 65nm class); 1KB scratchpad
+/// row ~ 3 pJ; LPDDR4 ~ 30 pJ/byte incl. PHY + DRAM core.
+pub const SRAM_ROW_PJ: f64 = 45.0;
+pub const SPAD_ROW_PJ: f64 = 3.0;
+pub const DRAM_PJ_PER_BYTE: f64 = 30.0;
+
+impl SiliconTable {
+    pub fn for_dtype(dtype: DataType) -> &'static SiliconTable {
+        match dtype {
+            DataType::Fp32 => &FP32_TABLE,
+            DataType::Bf16 => &BF16_TABLE,
+        }
+    }
+
+    /// SRAM row energy scales with the data width.
+    pub fn sram_row_pj(dtype: DataType) -> f64 {
+        match dtype {
+            DataType::Fp32 => SRAM_ROW_PJ,
+            DataType::Bf16 => SRAM_ROW_PJ * 0.62, // 32B rows
+        }
+    }
+}
+
+/// Area report (Table 3 + the whole-chip variant discussed in §4.3).
+#[derive(Debug, Clone, Copy)]
+pub struct AreaReport {
+    pub core_mm2: f64,
+    pub sched_bmux_mm2: f64,
+    pub amux_mm2: f64,
+    pub transposer_mm2: f64,
+    pub sram_mm2: f64,
+    pub spad_mm2: f64,
+}
+
+impl AreaReport {
+    pub fn compute(cfg: &ChipConfig) -> AreaReport {
+        let t = SiliconTable::for_dtype(cfg.dtype);
+        // Scale from the default 256-PE geometry.
+        let pe_scale = cfg.total_pes() as f64 / 256.0;
+        let row_scale = (cfg.tiles * cfg.tile_rows) as f64 / 64.0;
+        let sram_scale = (cfg.sram_bank_bytes * cfg.sram_banks * cfg.tiles as u64) as f64
+            / (256.0 * 1024.0 * 4.0 * 16.0);
+        AreaReport {
+            core_mm2: t.core_area_mm2 * pe_scale,
+            sched_bmux_mm2: t.sched_bmux_area_mm2 * row_scale,
+            amux_mm2: t.amux_area_mm2 * pe_scale,
+            transposer_mm2: t.transposer_area_mm2 * cfg.transposers as f64 / 15.0,
+            sram_mm2: 3.0 * SRAM_CHUNK_AREA_MM2 * sram_scale,
+            spad_mm2: SPAD_TOTAL_AREA_MM2 * pe_scale,
+        }
+    }
+
+    pub fn tensordash_compute(&self) -> f64 {
+        self.core_mm2 + self.sched_bmux_mm2 + self.amux_mm2 + self.transposer_mm2
+    }
+
+    pub fn baseline_compute(&self) -> f64 {
+        self.core_mm2
+    }
+
+    pub fn compute_overhead(&self) -> f64 {
+        self.tensordash_compute() / self.baseline_compute()
+    }
+
+    pub fn whole_chip_overhead(&self) -> f64 {
+        let mem = self.sram_mm2 + self.spad_mm2;
+        (self.tensordash_compute() + mem) / (self.baseline_compute() + mem)
+    }
+}
+
+/// Energy of one simulated layer-op (or a whole model when merged).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EnergyBreakdown {
+    pub core_pj: f64,
+    /// TensorDash-specific compute overhead (schedulers, muxes,
+    /// transposers). Zero for the baseline.
+    pub overhead_pj: f64,
+    pub sram_pj: f64,
+    pub spad_pj: f64,
+    pub dram_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn total_pj(&self) -> f64 {
+        self.core_pj + self.overhead_pj + self.sram_pj + self.spad_pj + self.dram_pj
+    }
+
+    pub fn compute_pj(&self) -> f64 {
+        self.core_pj + self.overhead_pj
+    }
+
+    pub fn merge(&mut self, o: &EnergyBreakdown) {
+        self.core_pj += o.core_pj;
+        self.overhead_pj += o.overhead_pj;
+        self.sram_pj += o.sram_pj;
+        self.spad_pj += o.spad_pj;
+        self.dram_pj += o.dram_pj;
+    }
+}
+
+/// Energy model front door.
+pub struct EnergyModel {
+    pub cfg: ChipConfig,
+    table: &'static SiliconTable,
+}
+
+impl EnergyModel {
+    pub fn new(cfg: ChipConfig) -> Self {
+        let table = SiliconTable::for_dtype(cfg.dtype);
+        EnergyModel { cfg, table }
+    }
+
+    fn pj_per_cycle(&self, power_mw: f64) -> f64 {
+        // mW / MHz = nJ/cycle; x1000 = pJ/cycle.
+        power_mw / self.cfg.freq_mhz as f64 * 1000.0
+    }
+
+    /// Energy for a layer-op given its *chip* cycle count and access
+    /// counts. `tensordash` selects whether the sparsity front-end is
+    /// powered (false = baseline, or power-gated TensorDash §3.5).
+    pub fn layer_energy(
+        &self,
+        chip_cycles: u64,
+        sram: &SramCounts,
+        dram: &DramTraffic,
+        transposers: &TransposerWork,
+        tensordash: bool,
+    ) -> EnergyBreakdown {
+        let pe_scale = self.cfg.total_pes() as f64 / 256.0;
+        let row_scale = (self.cfg.tiles * self.cfg.tile_rows) as f64 / 64.0;
+        let core = self.pj_per_cycle(self.table.core_power_mw * pe_scale) * chip_cycles as f64;
+        let overhead = if tensordash {
+            self.pj_per_cycle(
+                self.table.sched_bmux_power_mw * row_scale
+                    + self.table.amux_power_mw * pe_scale,
+            ) * chip_cycles as f64
+                + self.pj_per_cycle(self.table.transposer_power_mw)
+                    * transposers.min_cycles(self.cfg.transposers).min(chip_cycles) as f64
+        } else {
+            0.0
+        };
+        EnergyBreakdown {
+            core_pj: core,
+            overhead_pj: overhead,
+            sram_pj: sram.sram_rows() as f64 * SiliconTable::sram_row_pj(self.cfg.dtype),
+            spad_pj: sram.spad_rows() as f64 * SPAD_ROW_PJ,
+            dram_pj: dram.total() as f64 * DRAM_PJ_PER_BYTE,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ChipConfig;
+
+    #[test]
+    fn table3_fp32_ratios() {
+        let cfg = ChipConfig::default();
+        let a = AreaReport::compute(&cfg);
+        // Paper: 33.44 / 30.80 ~ 1.09x compute-area overhead. (Our
+        // baseline core is 30.41 — Table 3's 30.80 includes misc.)
+        let ovh = a.compute_overhead();
+        assert!((1.08..1.11).contains(&ovh), "compute overhead {ovh}");
+        // Whole chip: ~1.0005x (the paper's "imperceptible").
+        let whole = a.whole_chip_overhead();
+        assert!(whole < 1.006, "whole-chip overhead {whole}");
+        assert!(whole > 1.0);
+    }
+
+    #[test]
+    fn table3_bf16_ratios() {
+        let cfg = ChipConfig::default().with_dtype(DataType::Bf16);
+        let a = AreaReport::compute(&cfg);
+        let ovh = a.compute_overhead();
+        assert!((1.11..1.16).contains(&ovh), "bf16 compute overhead {ovh}");
+    }
+
+    #[test]
+    fn power_overhead_two_percent() {
+        // schedulers+muxes vs core: (102.8 + 145.3) / 13910 ~ 1.8%.
+        let t = FP32_TABLE;
+        let ovh = (t.sched_bmux_power_mw + t.amux_power_mw) / t.core_power_mw;
+        assert!(ovh < 0.025 && ovh > 0.015);
+        // bf16: ~5% (paper §4.4: 1.05x).
+        let t = BF16_TABLE;
+        let ovh = (t.sched_bmux_power_mw + t.amux_power_mw + t.transposer_power_mw)
+            / t.core_power_mw;
+        assert!((0.04..0.06).contains(&ovh), "bf16 power overhead {ovh}");
+    }
+
+    #[test]
+    fn energy_ratio_tracks_speedup() {
+        // Same work, TensorDash finishes 2x faster with ~2% more power
+        // => compute energy efficiency just under 2x.
+        let m = EnergyModel::new(ChipConfig::default());
+        let sram = SramCounts::default();
+        let dram = DramTraffic::default();
+        let tw = TransposerWork::default();
+        let base = m.layer_energy(1000, &sram, &dram, &tw, false);
+        let td = m.layer_energy(500, &sram, &dram, &tw, true);
+        let eff = base.total_pj() / td.total_pj();
+        assert!(eff > 1.9 && eff < 2.0, "eff {eff}");
+    }
+
+    #[test]
+    fn memory_energy_identical_across_designs() {
+        let m = EnergyModel::new(ChipConfig::default());
+        let sram = SramCounts { bm_reads: 1000, am_reads: 1000, ..Default::default() };
+        let dram = DramTraffic { read_bytes: 4096, write_bytes: 0 };
+        let tw = TransposerWork::default();
+        let base = m.layer_energy(100, &sram, &dram, &tw, false);
+        let td = m.layer_energy(50, &sram, &dram, &tw, true);
+        assert_eq!(base.sram_pj, td.sram_pj);
+        assert_eq!(base.dram_pj, td.dram_pj);
+    }
+}

@@ -1,0 +1,37 @@
+//! # TensorDash — reproduction of Mahmoud et al., MICRO 2020
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of *TensorDash:
+//! Exploiting Sparsity to Accelerate Deep Neural Network Training and
+//! Inference*.
+//!
+//! * **Layer 3 (this crate)** — the paper's hardware contribution as a
+//!   cycle-accurate model: the sparse operand interconnect
+//!   ([`sim::Connectivity`]), the hierarchical hardware scheduler
+//!   ([`sim::scheduler`]), processing elements, tiles and the full chip
+//!   ([`sim::chip`]); plus every substrate the evaluation depends on:
+//!   tensor layout/transposers ([`tensor`]), the three training
+//!   convolutions lowered to MAC streams ([`conv`]), an area/power/energy
+//!   model ([`energy`]), sparsity-trace capture and synthetic profiles
+//!   ([`trace`], [`models`]) and the PJRT runtime + training coordinator
+//!   ([`runtime`], [`coordinator`]) that drive a *real* training loop
+//!   through the AOT-compiled JAX/Pallas artifacts.
+//! * **Layer 2** — `python/compile/model.py`: the training step written as
+//!   the paper's Eq. (4)–(9), AOT-lowered once to HLO text.
+//! * **Layer 1** — `python/compile/kernels/`: Pallas kernels with 16-wide
+//!   reduction lanes mirroring the PE.
+//!
+//! Python never runs on the request path: the rust binary loads
+//! `artifacts/*.hlo.txt` through the PJRT C API and is self-contained.
+
+pub mod config;
+pub mod conv;
+pub mod coordinator;
+pub mod energy;
+pub mod metrics;
+pub mod models;
+pub mod repro;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod trace;
+pub mod util;

@@ -1,0 +1,234 @@
+//! `tensordash` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   repro     regenerate the paper's tables/figures (--fig N | --table 3|bf16 | --all)
+//!   simulate  run one model profile through the cycle simulator
+//!   train     run REAL training steps through the AOT artifacts and
+//!             project TensorDash speedup from the captured sparsity
+//!   info      print configuration + area model summary
+//!
+//! Examples:
+//!   tensordash repro --all
+//!   tensordash repro --fig 13 --samples 6 --seed 42
+//!   tensordash simulate --model resnet50 --epoch 0.4
+//!   tensordash train --steps 50 --log-every 10
+
+use anyhow::Result;
+use tensordash::config::{ChipConfig, DataType};
+use tensordash::coordinator::data::DataGen;
+use tensordash::coordinator::Trainer;
+use tensordash::metrics::{f2, Table};
+use tensordash::repro;
+use tensordash::runtime::Runtime;
+use tensordash::trace::profiles::ModelProfile;
+use tensordash::util::cli::Args;
+
+const USAGE: &str = "usage: tensordash <repro|simulate|train|info> [options]
+  repro    --all | --fig <1|13|14|15|16|17|18|19|20|gcn|ablations>
+           | --table <3|bf16>  [--samples N] [--seed S]
+  simulate --model <name> [--epoch F] [--samples N] [--seed S]
+           [--rows R] [--cols C] [--depth 2|3] [--bf16] [--power-gate]
+  train    [--steps N] [--log-every K] [--seed S] [--artifacts DIR]
+           [--samples N] [--sim-every K]
+  info";
+
+fn main() {
+    let args = Args::parse(&["all", "bf16", "power-gate", "help"]);
+    if args.flag("help") || args.positional.is_empty() {
+        println!("{USAGE}");
+        return;
+    }
+    let cmd = args.positional[0].clone();
+    let result = match cmd.as_str() {
+        "repro" => cmd_repro(&args),
+        "simulate" => cmd_simulate(&args),
+        "train" => cmd_train(&args),
+        "info" => cmd_info(&args),
+        other => {
+            eprintln!("unknown command '{other}'\n{USAGE}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn chip_from_args(args: &Args) -> Result<ChipConfig> {
+    let mut cfg = ChipConfig::default();
+    cfg.tile_rows = args.get_usize("rows", cfg.tile_rows)?;
+    cfg.tile_cols = args.get_usize("cols", cfg.tile_cols)?;
+    cfg.staging_depth = args.get_usize("depth", cfg.staging_depth)?;
+    if args.flag("bf16") {
+        cfg.dtype = DataType::Bf16;
+    }
+    if args.flag("power-gate") {
+        cfg.power_gate = true;
+    }
+    Ok(cfg)
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let samples = args.get_usize("samples", repro::DEFAULT_SAMPLES)?;
+    let seed = args.get_u64("seed", 42)?;
+    let all = args.flag("all");
+    let fig = args.get("fig").map(|s| s.to_string());
+    let table = args.get("table").map(|s| s.to_string());
+    if !all && fig.is_none() && table.is_none() {
+        anyhow::bail!("repro needs --all, --fig N or --table 3|bf16");
+    }
+    let cfg = ChipConfig::default();
+    let want = |f: &str| all || fig.as_deref() == Some(f);
+
+    if want("1") {
+        repro::fig1().print();
+    }
+    // Figs 13/15/16 share one simulation sweep.
+    if want("13") || want("15") || want("16") {
+        let sims = repro::run_fig13_sims(&cfg, samples, seed);
+        if want("13") {
+            repro::fig13(&sims).print();
+        }
+        if want("15") {
+            repro::fig15(&sims).print();
+        }
+        if want("16") {
+            repro::fig16(&sims).print();
+        }
+    }
+    if want("14") {
+        repro::fig14(&cfg, samples, seed).print();
+    }
+    if want("17") {
+        repro::fig17_rows(samples, seed).print();
+    }
+    if want("18") {
+        repro::fig18_cols(samples, seed).print();
+    }
+    if want("19") {
+        repro::fig19(samples, seed).print();
+    }
+    if want("20") {
+        repro::fig20(10, seed).print();
+    }
+    if want("gcn") {
+        repro::gcn_control(samples, seed).print();
+    }
+    if all || table.as_deref() == Some("3") {
+        repro::table3(DataType::Fp32).print();
+    }
+    if all || table.as_deref() == Some("bf16") {
+        repro::table3(DataType::Bf16).print();
+    }
+    if all || fig.as_deref() == Some("ablations") {
+        repro::ablations::ablation_two_side(3, seed).print();
+        repro::ablations::ablation_lead(3, seed).print();
+        repro::ablations::ablation_dram_gate(3, seed).print();
+        repro::ablations::ablation_backside_scheduler().print();
+    }
+    if all {
+        let (exact, sampled) = repro::validate_sampling(seed);
+        println!(
+            "\nsampling validation: exhaustive speedup {} vs sampled {} ({} passes)",
+            f2(exact),
+            f2(sampled),
+            samples
+        );
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let model = args.get("model").unwrap_or("resnet50").to_string();
+    let epoch = args.get_f64("epoch", repro::MID_EPOCH)?;
+    let samples = args.get_usize("samples", repro::DEFAULT_SAMPLES)?;
+    let seed = args.get_u64("seed", 42)?;
+    let cfg = chip_from_args(args)?;
+    let profile = ModelProfile::for_model(&model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{model}' (see models::FIG13_MODELS)"))?;
+    let sim = repro::simulate_profile(&cfg, &profile, epoch, samples, seed);
+    let mut t = Table::new(
+        format!("{model} @ epoch {epoch} ({}x{} tile, depth {})", cfg.tile_rows, cfg.tile_cols, cfg.staging_depth),
+        &["metric", "A*W", "A*G", "W*G", "overall"],
+    );
+    use tensordash::conv::TrainOp;
+    t.row(vec![
+        "speedup".into(),
+        f2(sim.op_speedup(TrainOp::Fwd)),
+        f2(sim.op_speedup(TrainOp::Igrad)),
+        f2(sim.op_speedup(TrainOp::Wgrad)),
+        f2(sim.overall_speedup()),
+    ]);
+    t.print();
+    println!(
+        "energy efficiency: compute {}x, whole chip {}x",
+        f2(sim.compute_efficiency()),
+        f2(sim.total_efficiency())
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let steps = args.get_usize("steps", 50)?;
+    let log_every = args.get_usize("log-every", 10)?.max(1);
+    let sim_every = args.get_usize("sim-every", 10)?.max(1);
+    let samples = args.get_usize("samples", repro::DEFAULT_SAMPLES)?;
+    let seed = args.get_u64("seed", 42)?;
+    let dir = args.get_or("artifacts", "artifacts");
+    let cfg = chip_from_args(args)?;
+
+    let rt = Runtime::new(dir)?;
+    println!("PJRT platform: {}", rt.platform());
+    let mut trainer = Trainer::new(&rt, seed as i32)?;
+    let (n, h, w, c) = trainer.meta.input;
+    let mut data = DataGen::new(h, w, c, trainer.meta.classes, seed);
+    println!(
+        "model: {} conv layers, batch {}, input {}x{}x{}, {} classes",
+        trainer.meta.convs.len(),
+        n,
+        h,
+        w,
+        c,
+        trainer.meta.classes
+    );
+    let shapes = trainer.meta.convs.clone();
+    let mut last_sim: Option<tensordash::repro::ModelSim> = None;
+    for step in 1..=steps {
+        let (x, y) = data.batch(n);
+        let out = trainer.step(&x, &y)?;
+        if step % log_every == 0 || step == 1 || step == steps {
+            let (sa, sg) = out.trace.mean_sparsity();
+            println!(
+                "step {:>4}  loss {:.4}  acc {:.3}  sparsity A {:.2} G {:.2}",
+                step, out.loss, out.accuracy, sa, sg
+            );
+        }
+        if step % sim_every == 0 || step == steps {
+            let sim = repro::simulate_trace(&cfg, &shapes, &out.trace.layers, samples, seed);
+            println!(
+                "        projected TensorDash speedup {:.2}x (compute eff {:.2}x, chip eff {:.2}x)",
+                sim.overall_speedup(),
+                sim.compute_efficiency(),
+                sim.total_efficiency()
+            );
+            last_sim = Some(sim);
+        }
+    }
+    if let Some(sim) = last_sim {
+        println!("\nfinal projection: {:.2}x speedup", sim.overall_speedup());
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = chip_from_args(args)?;
+    println!("TensorDash reproduction — configuration (paper Table 2 defaults)");
+    println!("  PEs: {} ({} tiles of {}x{}), {} MACs/cycle @ {} MHz",
+        cfg.total_pes(), cfg.tiles, cfg.tile_rows, cfg.tile_cols,
+        cfg.macs_per_cycle(), cfg.freq_mhz);
+    println!("  staging depth {}, dtype {:?}, side {:?}", cfg.staging_depth, cfg.dtype, cfg.side);
+    println!("  DRAM: {} GB/s ({:.1} B/cycle)", cfg.dram_gbps, cfg.dram_bytes_per_cycle());
+    repro::table3(cfg.dtype).print();
+    Ok(())
+}

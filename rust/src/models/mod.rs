@@ -1,0 +1,291 @@
+//! The evaluation model zoo (paper §4 "DNN models").
+//!
+//! Layer tables for the nine workloads the paper traces: AlexNet,
+//! VGG16, SqueezeNet, ResNet-50 (dense and the two pruned-training
+//! variants DS90/SM90), DenseNet121, img2txt (Show-and-Tell), SNLI and
+//! GCN (the gated-convolution language model used as the no-sparsity
+//! control).
+//!
+//! Substitutions (DESIGN.md): channel counts are rounded up to multiples
+//! of 16 (the PE lane width — real deployments pad exactly the same
+//! way); the recurrent models are expressed as the FC layers their
+//! time-steps execute; the simulated batch is small (the paper used
+//! 64–143 samples/batch; sparsity statistics, not batch size, drive the
+//! simulator).
+
+use crate::conv::ConvShape;
+
+/// One named layer of a workload.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub name: String,
+    pub shape: ConvShape,
+}
+
+/// A workload topology.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub name: &'static str,
+    pub layers: Vec<Layer>,
+}
+
+fn r16(c: usize) -> usize {
+    c.div_ceil(16) * 16
+}
+
+fn conv(name: impl Into<String>, n: usize, hw: usize, c: usize, f: usize, k: usize, s: usize, p: usize) -> Layer {
+    Layer { name: name.into(), shape: ConvShape::conv(n, hw, hw, r16(c), r16(f), k, s, p) }
+}
+
+fn fc(name: impl Into<String>, n: usize, c: usize, f: usize) -> Layer {
+    Layer { name: name.into(), shape: ConvShape::fc(n, r16(c), r16(f)) }
+}
+
+/// Simulated batch size (see module docs).
+pub const BATCH: usize = 4;
+
+pub fn alexnet(n: usize) -> Topology {
+    Topology {
+        name: "alexnet",
+        layers: vec![
+            conv("conv1", n, 227, 3, 96, 11, 4, 0),
+            conv("conv2", n, 27, 96, 256, 5, 1, 2),
+            conv("conv3", n, 13, 256, 384, 3, 1, 1),
+            conv("conv4", n, 13, 384, 384, 3, 1, 1),
+            conv("conv5", n, 13, 384, 256, 3, 1, 1),
+            fc("fc6", n, 9216, 4096),
+            fc("fc7", n, 4096, 4096),
+            fc("fc8", n, 4096, 1000),
+        ],
+    }
+}
+
+pub fn vgg16(n: usize) -> Topology {
+    let mut layers = Vec::new();
+    let blocks: [(usize, usize, usize); 5] =
+        [(224, 64, 2), (112, 128, 2), (56, 256, 3), (28, 512, 3), (14, 512, 3)];
+    let mut cin = 3;
+    for (bi, (hw, ch, reps)) in blocks.iter().enumerate() {
+        for r in 0..*reps {
+            layers.push(conv(format!("conv{}_{}", bi + 1, r + 1), n, *hw, cin, *ch, 3, 1, 1));
+            cin = *ch;
+        }
+    }
+    layers.push(fc("fc6", n, 25088, 4096));
+    layers.push(fc("fc7", n, 4096, 4096));
+    layers.push(fc("fc8", n, 4096, 1000));
+    Topology { name: "vgg16", layers }
+}
+
+pub fn squeezenet(n: usize) -> Topology {
+    let mut layers = vec![conv("conv1", n, 224, 3, 96, 7, 2, 3)];
+    // (hw, c_in, squeeze, expand) per fire module (v1.0).
+    let fires: [(usize, usize, usize, usize); 8] = [
+        (56, 96, 16, 64),
+        (56, 128, 16, 64),
+        (56, 128, 32, 128),
+        (28, 256, 32, 128),
+        (28, 256, 48, 192),
+        (28, 384, 48, 192),
+        (28, 384, 64, 256),
+        (14, 512, 64, 256),
+    ];
+    for (i, (hw, cin, sq, ex)) in fires.iter().enumerate() {
+        let f = i + 2;
+        layers.push(conv(format!("fire{f}_squeeze"), n, *hw, *cin, *sq, 1, 1, 0));
+        layers.push(conv(format!("fire{f}_expand1"), n, *hw, *sq, *ex, 1, 1, 0));
+        layers.push(conv(format!("fire{f}_expand3"), n, *hw, *sq, *ex, 3, 1, 1));
+    }
+    layers.push(conv("conv10", n, 14, 512, 1000, 1, 1, 0));
+    Topology { name: "squeezenet", layers }
+}
+
+pub fn resnet50(n: usize) -> Topology {
+    let mut layers = vec![conv("conv1", n, 224, 3, 64, 7, 2, 3)];
+    // (stage hw, bottleneck width, out channels, blocks)
+    let stages: [(usize, usize, usize, usize); 4] =
+        [(56, 64, 256, 3), (28, 128, 512, 4), (14, 256, 1024, 6), (7, 512, 2048, 3)];
+    let mut cin = 64;
+    for (si, (hw, width, cout, blocks)) in stages.iter().enumerate() {
+        for b in 0..*blocks {
+            let stride = if b == 0 && si > 0 { 2 } else { 1 };
+            let in_hw = if stride == 2 { hw * 2 } else { *hw };
+            let tag = format!("s{}b{}", si + 2, b + 1);
+            layers.push(conv(format!("{tag}_1x1a"), n, in_hw, cin, *width, 1, stride, 0));
+            layers.push(conv(format!("{tag}_3x3"), n, *hw, *width, *width, 3, 1, 1));
+            layers.push(conv(format!("{tag}_1x1b"), n, *hw, *width, *cout, 1, 1, 0));
+            if b == 0 {
+                layers.push(conv(format!("{tag}_down"), n, in_hw, cin, *cout, 1, stride, 0));
+            }
+            cin = *cout;
+        }
+    }
+    layers.push(fc("fc", n, 2048, 1000));
+    Topology { name: "resnet50", layers }
+}
+
+pub fn densenet121(n: usize) -> Topology {
+    let growth = 32;
+    let mut layers = vec![conv("conv1", n, 224, 3, 64, 7, 2, 3)];
+    let mut ch = 64;
+    let mut hw = 56;
+    for (bi, nlayers) in [6usize, 12, 24, 16].iter().enumerate() {
+        for l in 0..*nlayers {
+            layers.push(conv(format!("b{}l{}_1x1", bi + 1, l + 1), n, hw, ch, 4 * growth, 1, 1, 0));
+            layers.push(conv(format!("b{}l{}_3x3", bi + 1, l + 1), n, hw, 4 * growth, growth, 3, 1, 1));
+            ch += growth;
+        }
+        if bi < 3 {
+            layers.push(conv(format!("trans{}", bi + 1), n, hw, ch, ch / 2, 1, 1, 0));
+            ch /= 2;
+            hw /= 2;
+        }
+    }
+    layers.push(fc("fc", n, ch, 1000));
+    Topology { name: "densenet121", layers }
+}
+
+/// Show-and-Tell (img2txt): Inception-style encoder (representative
+/// subset) + LSTM decoder time-steps as FC layers + word projection.
+pub fn img2txt(n: usize) -> Topology {
+    let mut layers = vec![
+        conv("enc_conv1", n, 299, 3, 32, 3, 2, 0),
+        conv("enc_conv2", n, 149, 32, 32, 3, 1, 0),
+        conv("enc_conv3", n, 147, 32, 64, 3, 1, 1),
+        conv("enc_conv4", n, 73, 64, 80, 1, 1, 0),
+        conv("enc_conv5", n, 73, 80, 192, 3, 1, 0),
+        conv("enc_mix1", n, 35, 192, 256, 3, 1, 1),
+        conv("enc_mix2", n, 17, 256, 512, 3, 2, 1),
+        conv("enc_mix3", n, 8, 512, 1280, 3, 2, 1),
+        fc("embed", n, 2048, 512),
+    ];
+    // 8 decoder steps; each step computes the 4 LSTM gates as one GEMM
+    // (x_t ++ h_{t-1}) x W -> 4*512.
+    for t in 0..8 {
+        layers.push(fc(format!("lstm_t{t}"), n, 1024, 2048));
+    }
+    layers.push(fc("word_proj", n, 512, 10000));
+    Topology { name: "img2txt", layers }
+}
+
+/// SNLI classifier (Bowman et al. baseline): embedding projection, two
+/// sentence encoders, and a 3-layer 600-d classifier MLP. Token
+/// positions fold into the batch dimension (seq len 20 per premise /
+/// hypothesis).
+pub fn snli(n: usize) -> Topology {
+    let tokens = n * 20;
+    Topology {
+        name: "snli",
+        layers: vec![
+            fc("embed_proj", tokens * 2, 304, 304),
+            fc("premise_enc", tokens, 304, 304),
+            fc("hypothesis_enc", tokens, 304, 304),
+            fc("mlp1", n, 608, 608),
+            fc("mlp2", n, 608, 608),
+            fc("mlp3", n, 608, 608),
+            fc("classifier", n, 608, 16),
+        ],
+    }
+}
+
+/// GCN — Dauphin et al. gated convolutional language model (wikitext-2).
+/// 1-D causal convolutions over the sequence; gating keeps values mostly
+/// non-zero, which is why the paper uses it as the no-sparsity control.
+/// The width-4 causal convolutions are expressed as their unfolded GEMM
+/// (each output token contracts 4 x 912 inputs) — identical MAC count
+/// and stream structure, and no spurious 2-D padding halos.
+pub fn gcn(n: usize) -> Topology {
+    let seq = 32;
+    let mut layers = vec![fc("embed", n * seq, 912, 912)];
+    for l in 0..8 {
+        // width-4 1-D conv, 912 -> 2x912 (gate pairs), unfolded.
+        layers.push(fc(format!("gconv{l}"), n * seq, 4 * 912, 1824));
+    }
+    layers.push(fc("adaptive_softmax", n * seq, 912, 10000));
+    Topology { name: "gcn", layers }
+}
+
+/// Every paper workload by name (the ResNet pruned variants share the
+/// resnet50 topology; their difference lives in the sparsity profile).
+pub fn topology(name: &str, n: usize) -> Option<Topology> {
+    Some(match name {
+        "alexnet" => alexnet(n),
+        "vgg16" => vgg16(n),
+        "squeezenet" => squeezenet(n),
+        "resnet50" | "resnet50_DS90" | "resnet50_SM90" => {
+            let mut t = resnet50(n);
+            t.name = match name {
+                "resnet50_DS90" => "resnet50_DS90",
+                "resnet50_SM90" => "resnet50_SM90",
+                _ => "resnet50",
+            };
+            t
+        }
+        "densenet121" => densenet121(n),
+        "img2txt" => img2txt(n),
+        "snli" => snli(n),
+        "gcn" => gcn(n),
+        _ => return None,
+    })
+}
+
+/// The Fig. 13 model list (order of the paper's figures).
+pub const FIG13_MODELS: [&str; 9] = [
+    "alexnet",
+    "densenet121",
+    "img2txt",
+    "resnet50_DS90",
+    "resnet50_SM90",
+    "snli",
+    "squeezenet",
+    "vgg16",
+    "resnet50",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_build_and_are_lane_aligned() {
+        for name in FIG13_MODELS {
+            let t = topology(name, BATCH).unwrap();
+            assert!(!t.layers.is_empty(), "{name} empty");
+            for l in &t.layers {
+                assert_eq!(l.shape.c % 16, 0, "{name}/{} c", l.name);
+                assert_eq!(l.shape.f % 16, 0, "{name}/{} f", l.name);
+                assert!(l.shape.out_h() > 0 && l.shape.out_w() > 0);
+            }
+        }
+        assert!(topology("nope", 4).is_none());
+    }
+
+    #[test]
+    fn layer_counts_are_representative() {
+        assert_eq!(alexnet(4).layers.len(), 8);
+        assert_eq!(vgg16(4).layers.len(), 16);
+        assert_eq!(squeezenet(4).layers.len(), 26);
+        // 16 bottlenecks x 3 + 4 downsamples + conv1 + fc = 54.
+        assert_eq!(resnet50(4).layers.len(), 54);
+        // 58 dense-block convs x2 + 3 transitions + conv1 + fc = 121.
+        assert_eq!(densenet121(4).layers.len(), 121);
+    }
+
+    #[test]
+    fn resnet_macs_scale_sane() {
+        // ResNet-50 forward is ~4.1 GMACs per 224x224 image; with lane
+        // padding (3->16 in conv1) we land a bit above.
+        let t = resnet50(1);
+        let macs: u64 = t.layers.iter().map(|l| l.shape.macs()).sum();
+        let g = macs as f64 / 1e9;
+        assert!((3.5..7.0).contains(&g), "resnet50 {g} GMACs");
+    }
+
+    #[test]
+    fn densenet_channel_growth() {
+        let t = densenet121(1);
+        // Final FC input is 1024 channels (64 + 32*58 halved 3 times...).
+        let fcl = &t.layers.last().unwrap().shape;
+        assert_eq!(fcl.c, 1024);
+    }
+}

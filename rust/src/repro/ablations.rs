@@ -1,0 +1,305 @@
+//! Ablation studies over the design choices DESIGN.md calls out.
+//!
+//! * **Two-side extraction** (§3.1/Fig. 8) — the paper's PE can extract
+//!   sparsity on both operands ("we leave the evaluation of this option
+//!   for future work"); here it is evaluated: per-PE schedulers and
+//!   staging buffers (§3.3), one effectual-mask stream per PE formed as
+//!   `AZ & BZ`, pass cycles = the slowest PE. The gain is largest for
+//!   the pruned-training variants where the *weights* carry 90%
+//!   sparsity the one-side configuration cannot reach.
+//! * **Lead bound** — the inter-row synchronisation slack of the shared
+//!   A-side storage (DESIGN.md §2b).
+//! * **DRAM gate** — the optional bandwidth-bound performance model.
+//! * **Iterative back-side scheduler** (§3.7) — same schedule over 6
+//!   cycles; reported as compression throughput.
+
+use crate::config::ChipConfig;
+use crate::conv::stream::{fwd_weight_stream, igrad_weight_stream, wgrad_a_stream};
+use crate::conv::work::{build_stream, op_work, pick_wgrad_side};
+use crate::conv::{ConvShape, TrainOp, WgradSide};
+use crate::metrics::{f2, geomean, Table};
+use crate::sim::pe::simulate_stream;
+use crate::sim::Connectivity;
+use crate::tensor::TensorBitmap;
+use crate::trace::profiles::ModelProfile;
+use crate::util::rng::Rng;
+
+/// AND two mask streams slot-wise (their step orders are aligned by
+/// construction — asserted).
+fn and_streams(b: &[u16], a: &[u16]) -> Vec<u16> {
+    assert_eq!(b.len(), a.len(), "A/B stream step orders misaligned");
+    b.iter().zip(a).map(|(x, y)| x & y).collect()
+}
+
+/// Two-side pass cycles: per-PE schedulers, pass ends when the slowest
+/// PE finishes its `AZ & BZ` stream.
+fn two_side_pass_cycles(
+    conn: &Connectivity,
+    b_streams: &[Vec<u16>],
+    a_streams: &[Vec<u16>],
+) -> u64 {
+    let mut worst = 0u64;
+    for b in b_streams {
+        for a in a_streams {
+            worst = worst.max(simulate_stream(conn, &and_streams(b, a)));
+        }
+    }
+    worst
+}
+
+/// Speedup of one (layer, op) under one-side vs two-side extraction.
+/// Returns (one_side, two_side).
+#[allow(clippy::too_many_arguments)]
+pub fn layer_two_side(
+    cfg: &ChipConfig,
+    shape: &ConvShape,
+    op: TrainOp,
+    a_bm: &TensorBitmap,
+    g_bm: &TensorBitmap,
+    w_bm: &TensorBitmap,
+    samples: usize,
+    rng: &mut Rng,
+) -> (f64, f64) {
+    let conn = Connectivity::new(cfg.staging_depth);
+    let wside = match op {
+        TrainOp::Wgrad => pick_wgrad_side(a_bm, g_bm),
+        _ => WgradSide::Gradients,
+    };
+    let work = op_work(shape, op, wside);
+    let b_passes = work.b_groups.div_ceil(cfg.tile_rows as u64);
+    let a_passes = work.a_groups.div_ceil(cfg.tile_cols as u64);
+    let n_b = (samples as u64).min(b_passes);
+    let n_a = (samples as u64).min(a_passes);
+    let mut base = 0u64;
+    let mut one = 0u64;
+    let mut two = 0u64;
+    for _ in 0..n_b {
+        let bp = rng.below(b_passes as usize) as u64;
+        let b_streams: Vec<Vec<u16>> = (0..cfg.tile_rows as u64)
+            .map(|r| bp * cfg.tile_rows as u64 + r)
+            .filter(|&b| b < work.b_groups)
+            .map(|b| build_stream(shape, op, wside, a_bm, g_bm, b))
+            .collect();
+        let len = b_streams.iter().map(|s| s.len()).max().unwrap_or(0) as u64;
+        // One-side: the row schedule ignores the A operand.
+        let one_cycles = crate::sim::tile::tile_pass_cycles(&conn, &b_streams, cfg.lead_limit);
+        for _ in 0..n_a {
+            let ap = rng.below(a_passes as usize) as u64;
+            let a_streams: Vec<Vec<u16>> = (0..cfg.tile_cols as u64)
+                .map(|c| ap * cfg.tile_cols as u64 + c)
+                .filter(|&c| c < work.a_groups)
+                .map(|c| match op {
+                    TrainOp::Fwd => fwd_weight_stream(w_bm, shape, c as usize),
+                    TrainOp::Igrad => igrad_weight_stream(w_bm, shape, c as usize),
+                    TrainOp::Wgrad => {
+                        // B = G (the sparser side picked above); the A
+                        // operand is the activation patch stream.
+                        let cc = (c % shape.c as u64) as usize;
+                        let rest = (c / shape.c as u64) as usize;
+                        wgrad_a_stream(a_bm, shape, rest / shape.kw, rest % shape.kw, cc)
+                    }
+                })
+                .collect();
+            base += len;
+            one += one_cycles;
+            two += two_side_pass_cycles(&conn, &b_streams, &a_streams);
+        }
+    }
+    (base as f64 / one.max(1) as f64, base as f64 / two.max(1) as f64)
+}
+
+/// Ablation: one-side (the paper's evaluated config) vs two-side (its
+/// deferred option) on the dense and pruned ResNet-50 variants.
+pub fn ablation_two_side(samples: usize, seed: u64) -> Table {
+    let mut t = Table::new(
+        "Ablation — one-side (Fig. 11) vs two-side (Fig. 8) extraction",
+        &["model", "op", "one-side", "two-side", "gain"],
+    );
+    let cfg = ChipConfig::default();
+    for model in ["resnet50", "resnet50_DS90", "resnet50_SM90"] {
+        let p = ModelProfile::for_model(model).unwrap();
+        // A mid-network bottleneck 3x3 (layer index 10 = s2b3 conv) is
+        // representative; full-model two-side sims are quadratic in tile
+        // size and this is an ablation, not a headline.
+        let i = 10;
+        let (a_bm, g_bm) = p.layer_bitmaps(i, crate::repro::MID_EPOCH, seed);
+        let w_bm = p.layer_weight_bitmap(i, seed);
+        let mut rng = Rng::new(seed);
+        for op in TrainOp::ALL {
+            let (one, two) = layer_two_side(
+                &cfg,
+                &p.topology.layers[i].shape,
+                op,
+                &a_bm,
+                &g_bm,
+                &w_bm,
+                samples,
+                &mut rng,
+            );
+            t.row(vec![
+                model.to_string(),
+                op.label().to_string(),
+                f2(one),
+                f2(two),
+                format!("{:+.0}%", (two / one - 1.0) * 100.0),
+            ]);
+        }
+    }
+    t
+}
+
+/// Ablation: the inter-row lead bound (DESIGN.md §2b).
+pub fn ablation_lead(samples: usize, seed: u64) -> Table {
+    let mut t = Table::new(
+        "Ablation — shared-operand lead bound (rows may run ahead by N)",
+        &["lead", "geomean speedup"],
+    );
+    for lead in [0usize, 2, 6, 16, 4096] {
+        let mut vals = Vec::new();
+        for m in crate::models::FIG13_MODELS {
+            if m == "gcn" {
+                continue;
+            }
+            let p = ModelProfile::for_model(m).unwrap();
+            let mut cfg = ChipConfig::default();
+            cfg.lead_limit = lead;
+            vals.push(
+                crate::repro::simulate_profile(&cfg, &p, crate::repro::MID_EPOCH, samples, seed)
+                    .overall_speedup(),
+            );
+        }
+        let label = if lead == 0 {
+            "0 (lockstep)".to_string()
+        } else if lead >= 4096 {
+            "inf (pass barrier)".to_string()
+        } else {
+            lead.to_string()
+        };
+        t.row(vec![label, f2(geomean(vals))]);
+    }
+    t
+}
+
+/// Ablation: compute-bound (paper) vs DRAM-bandwidth-gated performance.
+pub fn ablation_dram_gate(samples: usize, seed: u64) -> Table {
+    let mut t = Table::new(
+        "Ablation — DRAM bandwidth gate (extension; paper model is compute bound)",
+        &["model", "compute-bound", "bandwidth-gated"],
+    );
+    for m in ["alexnet", "resnet50", "vgg16", "snli"] {
+        let p = ModelProfile::for_model(m).unwrap();
+        let plain =
+            crate::repro::simulate_profile(&ChipConfig::default(), &p, crate::repro::MID_EPOCH, samples, seed);
+        let mut gated_cfg = ChipConfig::default();
+        gated_cfg.dram_gate = true;
+        let gated =
+            crate::repro::simulate_profile(&gated_cfg, &p, crate::repro::MID_EPOCH, samples, seed);
+        t.row(vec![
+            m.to_string(),
+            f2(plain.overall_speedup()),
+            f2(gated.overall_speedup()),
+        ]);
+    }
+    t
+}
+
+/// §3.7 — back-side scheduler as a compression engine: combinational vs
+/// iterative cost for compressing a tensor into scheduled form.
+pub fn ablation_backside_scheduler() -> Table {
+    use crate::sim::scheduler::{schedule_cycle, schedule_iterative};
+    let conn = Connectivity::new(3);
+    let mut rng = Rng::new(77);
+    let rows: Vec<u64> = (0..4096)
+        .map(|_| {
+            (rng.mask16(0.4) as u64)
+                | ((rng.mask16(0.4) as u64) << 16)
+                | ((rng.mask16(0.4) as u64) << 32)
+        })
+        .collect();
+    let mut comb_cycles = 0u64;
+    let mut iter_cycles = 0u64;
+    for &z in &rows {
+        let a = schedule_cycle(&conn, z);
+        let (b, c) = schedule_iterative(&conn, z);
+        assert_eq!(a.picks, b.picks, "iterative scheduler must match");
+        comb_cycles += 1;
+        iter_cycles += c;
+    }
+    let mut t = Table::new(
+        "§3.7 — back-side scheduler: combinational vs iterative",
+        &["variant", "cycles / scheduled row", "relative hw cost"],
+    );
+    t.row(vec![
+        "combinational (6 levels)".into(),
+        f2(comb_cycles as f64 / rows.len() as f64),
+        "1.00 (all levels)".into(),
+    ]);
+    t.row(vec![
+        "iterative (1 level reused)".into(),
+        f2(iter_cycles as f64 / rows.len() as f64),
+        "~0.17 (one level)".into(),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synthetic::{clustered_bitmap, random_bitmap};
+
+    #[test]
+    fn two_side_never_worse_than_one_side() {
+        let cfg = ChipConfig::default();
+        let s = ConvShape::conv(2, 8, 8, 32, 32, 3, 1, 1);
+        let mut rng = Rng::new(5);
+        let a = clustered_bitmap((2, 8, 8, 32), 0.5, 0.35, &mut rng);
+        let g = clustered_bitmap((2, 8, 8, 32), 0.6, 0.35, &mut rng);
+        let w = random_bitmap((32, 3, 3, 32), 0.9, &mut rng);
+        for op in TrainOp::ALL {
+            let (one, two) = layer_two_side(&cfg, &s, op, &a, &g, &w, 3, &mut rng);
+            assert!(
+                two >= one * 0.98,
+                "{op:?}: two-side {two} < one-side {one}"
+            );
+            assert!(two <= 3.01);
+        }
+    }
+
+    #[test]
+    fn two_side_exploits_pruned_weights() {
+        // With 90% weight sparsity, Fwd two-side must clearly beat
+        // one-side (which only sees the activations).
+        let cfg = ChipConfig::default();
+        let s = ConvShape::conv(2, 8, 8, 32, 32, 3, 1, 1);
+        let mut rng = Rng::new(6);
+        let a = clustered_bitmap((2, 8, 8, 32), 0.3, 0.35, &mut rng);
+        let g = clustered_bitmap((2, 8, 8, 32), 0.3, 0.35, &mut rng);
+        let w = random_bitmap((32, 3, 3, 32), 0.9, &mut rng);
+        let (one, two) = layer_two_side(&cfg, &s, TrainOp::Fwd, &a, &g, &w, 3, &mut rng);
+        assert!(two > one * 1.3, "two-side {two} vs one-side {one}");
+    }
+
+    #[test]
+    fn weight_stream_orders_align() {
+        let s = ConvShape::conv(1, 6, 6, 16, 32, 3, 1, 1);
+        let mut rng = Rng::new(7);
+        let a = random_bitmap((1, 6, 6, 16), 0.5, &mut rng);
+        let w = random_bitmap((32, 3, 3, 16), 0.5, &mut rng);
+        let b = crate::conv::stream::fwd_stream(&a, &s, 0, 2, 2);
+        let aw = fwd_weight_stream(&w, &s, 3);
+        assert_eq!(b.len(), aw.len());
+        let g = random_bitmap((1, 6, 6, 32), 0.5, &mut rng);
+        let bi = crate::conv::stream::igrad_stream(&g, &s, 0, 2, 2);
+        let ai = igrad_weight_stream(&w, &s, 3);
+        assert_eq!(bi.len(), ai.len());
+        // igrad A-stream lane l of step (ky,kx,fb) is the rotated filter.
+        assert_eq!(ai[0] & 1 != 0, w.bit(0, 2, 2, 3));
+    }
+
+    #[test]
+    fn backside_table_builds() {
+        let t = ablation_backside_scheduler().render();
+        assert!(t.contains("6.00"));
+        assert!(t.contains("1.00"));
+    }
+}

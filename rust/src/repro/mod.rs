@@ -1,0 +1,607 @@
+//! Experiment drivers: one function per paper table/figure.
+//!
+//! Everything the benches and the CLI `repro` subcommand print comes
+//! from here, so a figure is regenerated identically no matter the entry
+//! point. See DESIGN.md §Experiment-index for the mapping.
+
+pub mod ablations;
+
+use crate::config::{ChipConfig, DataType};
+use crate::conv::work::{
+    dram_traffic, pick_wgrad_side, sample_passes, sram_counts, transposer_work,
+};
+use crate::conv::{op_work, ConvShape, TrainOp, WgradSide};
+use crate::energy::{AreaReport, EnergyBreakdown, EnergyModel};
+use crate::metrics::{f2, geomean, pct, Table};
+use crate::models::FIG13_MODELS;
+use crate::sim::ChipSim;
+use crate::tensor::TensorBitmap;
+use crate::trace::profiles::{ModelProfile, PHASES};
+use crate::trace::synthetic::random_bitmap;
+use crate::util::rng::Rng;
+
+/// Default pass-sample budget per (layer, op). Validated against
+/// exhaustive simulation by [`validate_sampling`].
+pub const DEFAULT_SAMPLES: usize = 6;
+
+/// Simulation outcome of one (layer, op).
+#[derive(Debug, Clone, Copy)]
+pub struct LayerOpSim {
+    pub op: TrainOp,
+    pub base_chip_cycles: u64,
+    pub td_chip_cycles: u64,
+    pub energy_base: EnergyBreakdown,
+    pub energy_td: EnergyBreakdown,
+    /// Sparsity of the operand scheduled on the B side.
+    pub b_sparsity: f64,
+    /// Whether §3.5 power gating bypassed TensorDash for this op.
+    pub gated: bool,
+}
+
+impl LayerOpSim {
+    pub fn speedup(&self) -> f64 {
+        self.base_chip_cycles as f64 / self.td_chip_cycles.max(1) as f64
+    }
+}
+
+/// Simulate one training operation of one layer from its tensors' zero
+/// bitmaps.
+pub fn simulate_layer_op(
+    cfg: &ChipConfig,
+    shape: &ConvShape,
+    op: TrainOp,
+    a_bm: &TensorBitmap,
+    g_bm: &TensorBitmap,
+    samples: usize,
+    batch_mult: u64,
+    rng: &mut Rng,
+) -> LayerOpSim {
+    let m = batch_mult.max(1);
+    let chip = ChipSim::new(cfg.clone());
+    let emodel = EnergyModel::new(cfg.clone());
+    let wside = match op {
+        TrainOp::Wgrad => pick_wgrad_side(a_bm, g_bm),
+        _ => WgradSide::Gradients,
+    };
+    let work = op_work(shape, op, wside);
+    let a_passes = work.a_groups.div_ceil(cfg.tile_cols as u64);
+
+    // Scale batch-dependent work to the paper's real batch size (the
+    // sparsity statistics come from the small simulated batch). Fwd and
+    // Igrad gain m-times more windows (weight multiplier); Wgrad's
+    // *reduction* runs over the batch, so its streams get m-times longer
+    // instead (a 1-row stream cannot express lookahead). Repetition is
+    // capped once streams exceed ~512 rows — the per-lane lead behaviour
+    // has converged by then — and the remaining factor scales cycles.
+    let (repeat, mm) = match op {
+        TrainOp::Wgrad => {
+            let steps = work.steps.max(1);
+            let full = 512u64.div_ceil(steps).clamp(1, m) as usize;
+            (full, m.div_ceil(full as u64))
+        }
+        _ => (1, m),
+    };
+    let passes = sample_passes(shape, op, wside, a_bm, g_bm, cfg.tile_rows, samples, repeat, rng);
+    let lc = chip.run_passes(passes.iter());
+    let base_tile = lc.base * a_passes * mm;
+    let b_sparsity = match op {
+        TrainOp::Fwd => a_bm.sparsity(),
+        TrainOp::Igrad => g_bm.sparsity(),
+        TrainOp::Wgrad => match wside {
+            WgradSide::Gradients => g_bm.sparsity(),
+            WgradSide::Activations => a_bm.sparsity(),
+        },
+    };
+    // §3.5: a per-tensor zero counter lets the chip power-gate the
+    // TensorDash front-end when a tensor shows (almost) no sparsity.
+    let gated = cfg.power_gate && b_sparsity < 0.025;
+    let td_tile = if gated { base_tile } else { lc.td * a_passes * mm };
+
+    let mut sram = sram_counts(shape, op, wside, cfg.tile_rows as u64, cfg.tile_cols as u64);
+    sram = sram.scaled(m);
+    let out_density = match op {
+        TrainOp::Fwd => 1.0,              // pre-activation outputs are dense
+        TrainOp::Igrad => a_bm.density(), // G_A inherits the ReLU mask
+        TrainOp::Wgrad => 1.0,            // weight gradients are dense
+    };
+    let dram = dram_traffic(shape, op, a_bm, g_bm, cfg.dtype.bytes(), out_density, m);
+    let mut trans = transposer_work(shape, op, wside);
+    if op == TrainOp::Wgrad {
+        // Wgrad transposes gradients/activations, which scale with batch;
+        // Igrad transposes the (batch-independent) weights.
+        trans.groups *= m;
+    }
+
+    let base_chip = chip.chip_cycles(base_tile, dram.total());
+    let td_chip = chip.chip_cycles(td_tile, dram.total());
+    LayerOpSim {
+        op,
+        base_chip_cycles: base_chip,
+        td_chip_cycles: td_chip,
+        energy_base: emodel.layer_energy(base_chip, &sram, &dram, &trans, false),
+        energy_td: emodel.layer_energy(td_chip, &sram, &dram, &trans, !gated),
+        b_sparsity,
+        gated,
+    }
+}
+
+/// Whole-model aggregation.
+#[derive(Debug, Clone)]
+pub struct ModelSim {
+    pub name: String,
+    /// Chip cycles summed per op: (base, td).
+    pub per_op: [(u64, u64); 3],
+    pub energy_base: EnergyBreakdown,
+    pub energy_td: EnergyBreakdown,
+}
+
+impl ModelSim {
+    pub fn op_speedup(&self, op: TrainOp) -> f64 {
+        let (b, t) = self.per_op[op as usize];
+        b as f64 / t.max(1) as f64
+    }
+
+    pub fn overall_speedup(&self) -> f64 {
+        let b: u64 = self.per_op.iter().map(|(b, _)| b).sum();
+        let t: u64 = self.per_op.iter().map(|(_, t)| t).sum();
+        b as f64 / t.max(1) as f64
+    }
+
+    pub fn compute_efficiency(&self) -> f64 {
+        self.energy_base.compute_pj() / self.energy_td.compute_pj()
+    }
+
+    pub fn total_efficiency(&self) -> f64 {
+        self.energy_base.total_pj() / self.energy_td.total_pj()
+    }
+}
+
+/// Simulate a full model from its synthetic sparsity profile at epoch
+/// fraction `epoch`.
+pub fn simulate_profile(
+    cfg: &ChipConfig,
+    profile: &ModelProfile,
+    epoch: f64,
+    samples: usize,
+    seed: u64,
+) -> ModelSim {
+    let mut per_op = [(0u64, 0u64); 3];
+    let mut e_base = EnergyBreakdown::default();
+    let mut e_td = EnergyBreakdown::default();
+    let mut rng = Rng::new(seed);
+    for (i, layer) in profile.topology.layers.iter().enumerate() {
+        let (a_bm, g_bm) = profile.layer_bitmaps(i, epoch, seed);
+        for op in TrainOp::ALL {
+            let r = simulate_layer_op(cfg, &layer.shape, op, &a_bm, &g_bm, samples, profile.batch_mult(), &mut rng);
+            per_op[op as usize].0 += r.base_chip_cycles;
+            per_op[op as usize].1 += r.td_chip_cycles;
+            e_base.merge(&r.energy_base);
+            e_td.merge(&r.energy_td);
+        }
+    }
+    ModelSim { name: profile.name().to_string(), per_op, energy_base: e_base, energy_td: e_td }
+}
+
+/// Simulate a model from *captured* (real-training) bitmaps.
+pub fn simulate_trace(
+    cfg: &ChipConfig,
+    shapes: &[ConvShape],
+    layers: &[(TensorBitmap, TensorBitmap)],
+    samples: usize,
+    seed: u64,
+) -> ModelSim {
+    let mut per_op = [(0u64, 0u64); 3];
+    let mut e_base = EnergyBreakdown::default();
+    let mut e_td = EnergyBreakdown::default();
+    let mut rng = Rng::new(seed);
+    for (shape, (a_bm, g_bm)) in shapes.iter().zip(layers) {
+        for op in TrainOp::ALL {
+            let r = simulate_layer_op(cfg, shape, op, a_bm, g_bm, samples, 1, &mut rng);
+            per_op[op as usize].0 += r.base_chip_cycles;
+            per_op[op as usize].1 += r.td_chip_cycles;
+            e_base.merge(&r.energy_base);
+            e_td.merge(&r.energy_td);
+        }
+    }
+    ModelSim { name: "captured".into(), per_op, energy_base: e_base, energy_td: e_td }
+}
+
+// ---------------------------------------------------------------------
+// Figure/table drivers
+// ---------------------------------------------------------------------
+
+/// The representative mid-training epoch used by single-point figures.
+pub const MID_EPOCH: f64 = 0.4;
+
+/// Fig. 1 — potential speedup (allMACs / remaining MACs) per conv.
+pub fn fig1() -> Table {
+    let mut t = Table::new(
+        "Fig. 1 — potential speedup from eliminating zero-operand MACs",
+        &["model", "A*W", "A*G", "W*G", "mean"],
+    );
+    let mut all = Vec::new();
+    for p in ModelProfile::all() {
+        let n = p.topology.layers.len();
+        // MAC-weighted potential per op.
+        let mut pot = [0.0f64; 3];
+        let total_macs: u64 = p.topology.layers.iter().map(|l| l.shape.macs()).sum();
+        for (i, l) in p.topology.layers.iter().enumerate() {
+            let w = l.shape.macs() as f64 / total_macs as f64;
+            for op in TrainOp::ALL {
+                pot[op as usize] += w * p.potential(i, op, MID_EPOCH);
+            }
+        }
+        let mean = (pot[0] + pot[1] + pot[2]) / 3.0;
+        if p.name() != "gcn" {
+            all.push(mean);
+        }
+        t.row(vec![p.name().into(), f2(pot[0]), f2(pot[1]), f2(pot[2]), f2(mean)]);
+        let _ = n;
+    }
+    t.row(vec![
+        "average(ex-gcn)".into(),
+        "".into(),
+        "".into(),
+        "".into(),
+        f2(all.iter().sum::<f64>() / all.len() as f64),
+    ]);
+    t
+}
+
+/// Run the Fig. 13 simulation set once (also feeds Figs. 15/16).
+pub fn run_fig13_sims(cfg: &ChipConfig, samples: usize, seed: u64) -> Vec<ModelSim> {
+    FIG13_MODELS
+        .iter()
+        .map(|m| {
+            let p = ModelProfile::for_model(m).unwrap();
+            simulate_profile(cfg, &p, MID_EPOCH, samples, seed)
+        })
+        .collect()
+}
+
+/// Fig. 13 — TensorDash speedup over the baseline per op and model.
+pub fn fig13(sims: &[ModelSim]) -> Table {
+    let mut t = Table::new(
+        "Fig. 13 — TensorDash speedup over baseline (default Table-2 config)",
+        &["model", "A*W", "A*G", "W*G", "overall"],
+    );
+    for s in sims {
+        t.row(vec![
+            s.name.clone(),
+            f2(s.op_speedup(TrainOp::Fwd)),
+            f2(s.op_speedup(TrainOp::Igrad)),
+            f2(s.op_speedup(TrainOp::Wgrad)),
+            f2(s.overall_speedup()),
+        ]);
+    }
+    let avg = geomean(sims.iter().filter(|s| s.name != "gcn").map(|s| s.overall_speedup()));
+    t.row(vec!["geomean(ex-gcn)".into(), "".into(), "".into(), "".into(), f2(avg)]);
+    t
+}
+
+/// Fig. 14 — speedup as training progresses.
+pub fn fig14(cfg: &ChipConfig, samples: usize, seed: u64) -> Table {
+    let mut headers: Vec<String> = vec!["model".into()];
+    headers.extend(PHASES.iter().map(|e| format!("{:.0}%", e * 100.0)));
+    let href: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Fig. 14 — speedup vs training progress", &href);
+    for m in FIG13_MODELS {
+        let p = ModelProfile::for_model(m).unwrap();
+        let mut row = vec![m.to_string()];
+        for &e in &PHASES {
+            let s = simulate_profile(cfg, &p, e, samples, seed);
+            row.push(f2(s.overall_speedup()));
+        }
+        t.row(row);
+    }
+    t
+}
+
+/// Fig. 15 — energy efficiency of TensorDash over the baseline.
+pub fn fig15(sims: &[ModelSim]) -> Table {
+    let mut t = Table::new(
+        "Fig. 15 — energy efficiency (TensorDash / baseline)",
+        &["model", "compute", "whole chip"],
+    );
+    for s in sims {
+        t.row(vec![s.name.clone(), f2(s.compute_efficiency()), f2(s.total_efficiency())]);
+    }
+    let ex: Vec<&ModelSim> = sims.iter().filter(|s| s.name != "gcn").collect();
+    t.row(vec![
+        "geomean(ex-gcn)".into(),
+        f2(geomean(ex.iter().map(|s| s.compute_efficiency()))),
+        f2(geomean(ex.iter().map(|s| s.total_efficiency()))),
+    ]);
+    t
+}
+
+/// Fig. 16 — energy breakdown (off-chip / core / on-chip).
+pub fn fig16(sims: &[ModelSim]) -> Table {
+    let mut t = Table::new(
+        "Fig. 16 — energy breakdown, TensorDash relative to its baseline",
+        &["model", "TD/base", "base core%", "base SRAM%", "base DRAM%", "TD core%", "TD SRAM%", "TD DRAM%"],
+    );
+    for s in sims {
+        let b = &s.energy_base;
+        let d = &s.energy_td;
+        let bt = b.total_pj();
+        let dt = d.total_pj();
+        t.row(vec![
+            s.name.clone(),
+            f2(dt / bt),
+            pct(b.compute_pj() / bt),
+            pct((b.sram_pj + b.spad_pj) / bt),
+            pct(b.dram_pj / bt),
+            pct(d.compute_pj() / dt),
+            pct((d.sram_pj + d.spad_pj) / dt),
+            pct(d.dram_pj / dt),
+        ]);
+    }
+    t
+}
+
+/// Fig. 17 / Fig. 18 — tile geometry sweeps.
+pub fn fig17_rows(samples: usize, seed: u64) -> Table {
+    geometry_sweep(&[1, 2, 4, 8, 16], true, samples, seed, "Fig. 17 — speedup vs PE rows (cols=4)")
+}
+
+pub fn fig18_cols(samples: usize, seed: u64) -> Table {
+    geometry_sweep(&[4, 8, 16], false, samples, seed, "Fig. 18 — speedup vs PE columns (rows=4)")
+}
+
+fn geometry_sweep(sizes: &[usize], vary_rows: bool, samples: usize, seed: u64, title: &str) -> Table {
+    let mut headers: Vec<String> = vec!["model".into()];
+    headers.extend(sizes.iter().map(|s| format!("{s}")));
+    let href: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(title, &href);
+    let mut avgs = vec![Vec::new(); sizes.len()];
+    for m in FIG13_MODELS {
+        if m == "gcn" {
+            continue;
+        }
+        let p = ModelProfile::for_model(m).unwrap();
+        let mut row = vec![m.to_string()];
+        for (j, &sz) in sizes.iter().enumerate() {
+            let cfg = if vary_rows {
+                ChipConfig::default().with_geometry(sz, 4)
+            } else {
+                ChipConfig::default().with_geometry(4, sz)
+            };
+            let s = simulate_profile(&cfg, &p, MID_EPOCH, samples, seed);
+            let v = s.overall_speedup();
+            avgs[j].push(v);
+            row.push(f2(v));
+        }
+        t.row(row);
+    }
+    let mut row = vec!["geomean".to_string()];
+    for a in &avgs {
+        row.push(f2(geomean(a.iter().copied())));
+    }
+    t.row(row);
+    t
+}
+
+/// Fig. 19 — staging-buffer depth 2 vs 3.
+pub fn fig19(samples: usize, seed: u64) -> Table {
+    let mut t = Table::new(
+        "Fig. 19 — speedup with staging depth 2 (lookahead 1) vs 3",
+        &["model", "depth 2", "depth 3"],
+    );
+    let (mut a2, mut a3) = (Vec::new(), Vec::new());
+    for m in FIG13_MODELS {
+        if m == "gcn" {
+            continue;
+        }
+        let p = ModelProfile::for_model(m).unwrap();
+        let s2 = simulate_profile(&ChipConfig::default().with_depth(2), &p, MID_EPOCH, samples, seed);
+        let s3 = simulate_profile(&ChipConfig::default(), &p, MID_EPOCH, samples, seed);
+        a2.push(s2.overall_speedup());
+        a3.push(s3.overall_speedup());
+        t.row(vec![m.to_string(), f2(s2.overall_speedup()), f2(s3.overall_speedup())]);
+    }
+    t.row(vec![
+        "geomean".into(),
+        f2(geomean(a2.iter().copied())),
+        f2(geomean(a3.iter().copied())),
+    ]);
+    t
+}
+
+/// Fig. 20 — randomly sparse tensors (DenseNet121 3rd-conv geometry),
+/// sparsity 10%..90%, 10 samples each, all three ops.
+pub fn fig20(samples_per_level: usize, seed: u64) -> Table {
+    let mut t = Table::new(
+        "Fig. 20 — speedup on randomly sparse tensors (DenseNet121 conv3 dims)",
+        &["sparsity", "ideal", "cap", "A*W", "A*G", "W*G", "mean"],
+    );
+    // DenseNet121's third convolution: dense block 1, first 3x3
+    // (128 -> 32, 56x56) — long reduction streams (72 rows forward).
+    let shape = crate::models::densenet121(crate::models::BATCH).layers[2].shape;
+    let cfg = ChipConfig::default();
+    let mut rng = Rng::new(seed);
+    for lvl in 1..=9u32 {
+        let sp = lvl as f64 / 10.0;
+        let mut per_op = [(0u64, 0u64); 3];
+        for _ in 0..samples_per_level {
+            let a = random_bitmap((shape.n, shape.h, shape.w, shape.c), sp, &mut rng);
+            let g = random_bitmap((shape.n, shape.out_h(), shape.out_w(), shape.f), sp, &mut rng);
+            for op in TrainOp::ALL {
+                let r = simulate_layer_op(&cfg, &shape, op, &a, &g, DEFAULT_SAMPLES, 16, &mut rng);
+                per_op[op as usize].0 += r.base_chip_cycles;
+                per_op[op as usize].1 += r.td_chip_cycles;
+            }
+        }
+        let sps: Vec<f64> = (0..3).map(|i| per_op[i].0 as f64 / per_op[i].1.max(1) as f64).collect();
+        let mean = (sps[0] + sps[1] + sps[2]) / 3.0;
+        t.row(vec![
+            pct(sp),
+            f2(1.0 / (1.0 - sp)),
+            f2((1.0 / (1.0 - sp)).min(3.0)),
+            f2(sps[0]),
+            f2(sps[1]),
+            f2(sps[2]),
+            f2(mean),
+        ]);
+    }
+    t
+}
+
+/// Table 3 — area and power breakdown (plus the §4.4 bf16 variant).
+pub fn table3(dtype: DataType) -> Table {
+    let cfg = ChipConfig::default().with_dtype(dtype);
+    let a = AreaReport::compute(&cfg);
+    let st = crate::energy::SiliconTable::for_dtype(dtype);
+    let label = match dtype {
+        DataType::Fp32 => "Table 3 — area/power breakdown (FP32, 65nm @500MHz)",
+        DataType::Bf16 => "Table 3 variant — bfloat16 (§4.4)",
+    };
+    let mut t = Table::new(label, &["component", "area mm2", "power mW"]);
+    t.row(vec!["compute cores".into(), f2(a.core_mm2), f2(st.core_power_mw)]);
+    t.row(vec!["transposers".into(), f2(a.transposer_mm2), f2(st.transposer_power_mw)]);
+    t.row(vec!["schedulers+B-muxes".into(), f2(a.sched_bmux_mm2), f2(st.sched_bmux_power_mw)]);
+    t.row(vec!["A-side muxes".into(), f2(a.amux_mm2), f2(st.amux_power_mw)]);
+    t.row(vec![
+        "TensorDash total".into(),
+        f2(a.tensordash_compute()),
+        f2(st.core_power_mw + st.transposer_power_mw + st.sched_bmux_power_mw + st.amux_power_mw),
+    ]);
+    t.row(vec!["baseline total".into(), f2(a.baseline_compute()), f2(st.core_power_mw)]);
+    t.row(vec!["compute overhead".into(), format!("{:.3}x", a.compute_overhead()), format!(
+        "{:.3}x",
+        (st.core_power_mw + st.transposer_power_mw + st.sched_bmux_power_mw + st.amux_power_mw)
+            / st.core_power_mw
+    )]);
+    t.row(vec![
+        "whole-chip overhead (incl. AM/BM/CM+SP)".into(),
+        format!("{:.4}x", a.whole_chip_overhead()),
+        "-".into(),
+    ]);
+    t
+}
+
+/// §4.4 — GCN, the no-sparsity control: with and without power gating.
+pub fn gcn_control(samples: usize, seed: u64) -> Table {
+    let p = ModelProfile::for_model("gcn").unwrap();
+    let mut t = Table::new(
+        "GCN (no sparsity): TensorDash must not hurt",
+        &["config", "speedup", "compute eff", "total eff"],
+    );
+    let plain = simulate_profile(&ChipConfig::default(), &p, MID_EPOCH, samples, seed);
+    let mut gated_cfg = ChipConfig::default();
+    gated_cfg.power_gate = true;
+    let gated = simulate_profile(&gated_cfg, &p, MID_EPOCH, samples, seed);
+    t.row(vec![
+        "no power gating".into(),
+        f2(plain.overall_speedup()),
+        f2(plain.compute_efficiency()),
+        f2(plain.total_efficiency()),
+    ]);
+    t.row(vec![
+        "power gated (§3.5)".into(),
+        f2(gated.overall_speedup()),
+        f2(gated.compute_efficiency()),
+        f2(gated.total_efficiency()),
+    ]);
+    t
+}
+
+/// Methodology check: sampled pass simulation vs exhaustive on a small
+/// layer (keeps `DEFAULT_SAMPLES` honest).
+pub fn validate_sampling(seed: u64) -> (f64, f64) {
+    let shape = ConvShape::conv(2, 10, 10, 32, 32, 3, 1, 1);
+    let mut rng = Rng::new(seed);
+    let a = crate::trace::synthetic::clustered_bitmap((2, 10, 10, 32), 0.6, 0.35, &mut rng);
+    let g = crate::trace::synthetic::clustered_bitmap((2, 10, 10, 32), 0.6, 0.35, &mut rng);
+    let cfg = ChipConfig::default();
+    let mut r1 = Rng::new(seed ^ 1);
+    let exact = simulate_layer_op(&cfg, &shape, TrainOp::Fwd, &a, &g, usize::MAX >> 1, 16, &mut r1);
+    let mut r2 = Rng::new(seed ^ 2);
+    let sampled = simulate_layer_op(&cfg, &shape, TrainOp::Fwd, &a, &g, DEFAULT_SAMPLES, 16, &mut r2);
+    (exact.speedup(), sampled.speedup())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synthetic::clustered_bitmap;
+
+    fn small_bitmaps(sp: f64, seed: u64) -> (ConvShape, TensorBitmap, TensorBitmap) {
+        let s = ConvShape::conv(2, 8, 8, 32, 32, 3, 1, 1);
+        let mut rng = Rng::new(seed);
+        let a = clustered_bitmap((2, 8, 8, 32), sp, 0.35, &mut rng);
+        let g = clustered_bitmap((2, 8, 8, 32), sp, 0.35, &mut rng);
+        (s, a, g)
+    }
+
+    #[test]
+    fn layer_op_speedup_bounds() {
+        let (s, a, g) = small_bitmaps(0.6, 1);
+        let mut rng = Rng::new(2);
+        for op in TrainOp::ALL {
+            let r = simulate_layer_op(&ChipConfig::default(), &s, op, &a, &g, 8, 16, &mut rng);
+            let sp = r.speedup();
+            assert!((1.0..=3.01).contains(&sp), "{op:?} speedup {sp}");
+            assert!(r.energy_td.total_pj() < r.energy_base.total_pj());
+        }
+    }
+
+    #[test]
+    fn dense_tensors_no_slowdown() {
+        let (s, a, g) = small_bitmaps(0.0, 3);
+        let mut rng = Rng::new(4);
+        let r = simulate_layer_op(&ChipConfig::default(), &s, TrainOp::Fwd, &a, &g, 8, 16, &mut rng);
+        // Even with fully dense tensors TensorDash may skip the *padding*
+        // zeros at window halos — a small real gain, never a slowdown.
+        assert!(
+            (1.0..1.1).contains(&r.speedup()),
+            "dense speedup {}",
+            r.speedup()
+        );
+        // Energy overhead without gating is bounded by the ~2% power adder.
+        let eff = r.energy_base.total_pj() / r.energy_td.total_pj();
+        assert!(eff > 0.97 && eff < 1.12, "dense eff {eff}");
+    }
+
+    #[test]
+    fn power_gating_removes_the_penalty() {
+        let (s, a, g) = small_bitmaps(0.0, 5);
+        let mut cfg = ChipConfig::default();
+        cfg.power_gate = true;
+        let mut rng = Rng::new(6);
+        let r = simulate_layer_op(&cfg, &s, TrainOp::Fwd, &a, &g, 8, 16, &mut rng);
+        assert!(r.gated);
+        assert_eq!(r.energy_base.total_pj(), r.energy_td.total_pj());
+    }
+
+    #[test]
+    fn sampling_close_to_exhaustive() {
+        let (exact, sampled) = validate_sampling(42);
+        assert!(
+            (exact - sampled).abs() / exact < 0.12,
+            "sampled {sampled} vs exact {exact}"
+        );
+    }
+
+    #[test]
+    fn fig20_monotonic_and_capped() {
+        let t = fig20(2, 7);
+        // mean speedup column increases with sparsity and respects caps.
+        let means: Vec<f64> = t.rows.iter().map(|r| r.last().unwrap().parse().unwrap()).collect();
+        assert_eq!(means.len(), 9);
+        for w in means.windows(2) {
+            assert!(w[1] >= w[0] - 0.05, "non-monotonic: {means:?}");
+        }
+        assert!(means[0] >= 1.0 && means[0] < 1.35);
+        assert!(means[8] <= 3.01);
+        assert!(means[8] > 2.5, "90% sparsity should approach the 3x cap: {}", means[8]);
+    }
+
+    #[test]
+    fn table3_prints_both_dtypes() {
+        let t = table3(DataType::Fp32).render();
+        assert!(t.contains("30.41"));
+        let b = table3(DataType::Bf16).render();
+        assert!(b.contains("bfloat16"));
+    }
+}

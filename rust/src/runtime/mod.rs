@@ -1,0 +1,138 @@
+//! PJRT runtime: load and execute the AOT-compiled HLO artifacts.
+//!
+//! This is the only place the `xla` crate is touched. Pattern (see
+//! /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`. The interchange format is HLO **text**
+//! — serialized protos from jax ≥ 0.5 carry 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids.
+//!
+//! Python never runs here: the artifacts under `artifacts/` were
+//! produced once by `make artifacts`, and the rust binary is
+//! self-contained afterwards.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// A PJRT CPU client plus the artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+}
+
+/// A compiled computation ready to execute.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client rooted at an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client, artifact_dir: artifact_dir.as_ref().to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    /// Load `<artifact_dir>/<name>.hlo.txt` and compile it.
+    pub fn load(&self, name: &str) -> Result<Executable> {
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        anyhow::ensure!(
+            path.exists(),
+            "artifact {} not found — run `make artifacts` first",
+            path.display()
+        );
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        Ok(Executable { exe, name: name.to_string() })
+    }
+
+    /// Read `<artifact_dir>/meta.json`.
+    pub fn meta(&self) -> Result<crate::util::json::Json> {
+        let path = self.artifact_dir.join("meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        crate::util::json::Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))
+    }
+}
+
+impl Executable {
+    /// Execute with literal inputs; the artifacts are lowered with
+    /// `return_tuple=True`, so the single output literal is decomposed
+    /// into the tuple's leaves.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let bufs = self
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("executing {}", self.name))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {}", self.name))?;
+        result
+            .to_tuple()
+            .with_context(|| format!("decomposing result tuple of {}", self.name))
+    }
+}
+
+/// Build an f32 literal of the given shape (row-major values).
+pub fn literal_f32(dims: &[usize], values: &[f32]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(values.len() == n, "shape/value mismatch: {dims:?} vs {}", values.len());
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(values).reshape(&dims_i64)?)
+}
+
+/// Build a 1-D i32 literal.
+pub fn literal_i32(values: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(values)
+}
+
+/// Build an i32 scalar literal.
+pub fn literal_i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// Extract a literal's data as `Vec<f32>`.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a literal's data as `Vec<i32>`.
+pub fn to_i32(lit: &xla::Literal) -> Result<Vec<i32>> {
+    Ok(lit.to_vec::<i32>()?)
+}
+
+/// Extract a scalar f32.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = literal_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(to_f32(&l).unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+        assert!(literal_f32(&[2, 2], &[1.0]).is_err());
+        let i = literal_i32(&[7, 8]);
+        assert_eq!(to_i32(&i).unwrap(), vec![7, 8]);
+    }
+
+    // Artifact-dependent tests live in rust/tests/ (they need
+    // `make artifacts` to have run first).
+}

@@ -1,0 +1,168 @@
+//! Chip-level aggregation: many tiles over many work passes.
+//!
+//! A *pass* is the unit of tile work: `tile_rows` B-side streams (one per
+//! PE row) processed to completion against `tile_cols` A-side operands.
+//! Tiles work on independent passes, so chip cycles for a layer are the
+//! weighted pass cycles divided by the tile count, plus any DRAM
+//! bandwidth stall (both architectures share the memory system, §4).
+//!
+//! Sampling: the evaluation samples passes (like the paper samples one
+//! batch per epoch); each sampled pass carries a `weight` = how many
+//! real passes it represents. `repro::` validates sampling against
+//! exhaustive simulation on small layers.
+
+use super::connectivity::Connectivity;
+use super::tile::tile_pass_stats;
+use crate::config::{ChipConfig, SparsitySide};
+
+/// One sampled unit of tile work.
+#[derive(Debug, Clone)]
+pub struct Pass {
+    /// B-side effectual-mask stream per PE row (`<= tile_rows` entries).
+    /// For `SparsitySide::Both` experiments the masks must already be
+    /// `AZ & BZ`.
+    pub streams: Vec<Vec<u16>>,
+    /// Number of real passes this sample stands for.
+    pub weight: u64,
+}
+
+/// Aggregated cycle/work counts for one layer-operation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LayerCycles {
+    /// Baseline (dense-schedule) tile cycles, weighted.
+    pub base: u64,
+    /// TensorDash tile cycles, weighted.
+    pub td: u64,
+    /// Dense MAC slots (lanes x steps x rows x weight), per column slot.
+    pub mac_slots: u64,
+    /// Effectual MACs issued, per column slot.
+    pub macs_effectual: u64,
+    /// Row-cycles lost to inter-row synchronisation, weighted.
+    pub stall_row_cycles: u64,
+}
+
+impl LayerCycles {
+    pub fn merge(&mut self, other: &LayerCycles) {
+        self.base += other.base;
+        self.td += other.td;
+        self.mac_slots += other.mac_slots;
+        self.macs_effectual += other.macs_effectual;
+        self.stall_row_cycles += other.stall_row_cycles;
+    }
+
+    pub fn speedup(&self) -> f64 {
+        if self.td == 0 {
+            1.0
+        } else {
+            self.base as f64 / self.td as f64
+        }
+    }
+}
+
+/// Cycle-level simulator front door.
+pub struct ChipSim {
+    pub cfg: ChipConfig,
+    conn: Connectivity,
+}
+
+impl ChipSim {
+    pub fn new(cfg: ChipConfig) -> Self {
+        let conn = Connectivity::new(cfg.staging_depth);
+        assert_eq!(cfg.lanes, 16, "the scheduler is specialised for 16 lanes");
+        assert!(
+            matches!(cfg.side, SparsitySide::BSide | SparsitySide::Both),
+            "unknown sparsity side"
+        );
+        ChipSim { cfg, conn }
+    }
+
+    pub fn connectivity(&self) -> &Connectivity {
+        &self.conn
+    }
+
+    /// Simulate a set of sampled passes for one layer-operation.
+    pub fn run_passes<'a>(&self, passes: impl IntoIterator<Item = &'a Pass>) -> LayerCycles {
+        let mut out = LayerCycles::default();
+        for pass in passes {
+            let max_len = pass.streams.iter().map(|s| s.len()).max().unwrap_or(0) as u64;
+            if max_len == 0 {
+                continue;
+            }
+            let stats = tile_pass_stats(&self.conn, &pass.streams, self.cfg.lead_limit);
+            out.base += max_len * pass.weight;
+            out.td += stats.cycles * pass.weight;
+            out.mac_slots += max_len * 16 * pass.streams.len() as u64 * pass.weight;
+            out.macs_effectual += stats.macs * pass.weight;
+            out.stall_row_cycles += stats.imbalance_stall_row_cycles * pass.weight;
+        }
+        out
+    }
+
+    /// Convert weighted per-tile pass cycles to whole-chip cycles. When
+    /// `cfg.dram_gate` is set, a layer additionally cannot finish faster
+    /// than its (compressed) off-chip traffic can stream — an extension
+    /// over the paper's compute-bound simulator.
+    pub fn chip_cycles(&self, tile_cycles: u64, dram_bytes: u64) -> u64 {
+        let compute = tile_cycles.div_ceil(self.cfg.tiles as u64);
+        if self.cfg.dram_gate {
+            let mem = (dram_bytes as f64 / self.cfg.dram_bytes_per_cycle()).ceil() as u64;
+            compute.max(mem)
+        } else {
+            compute
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sim() -> ChipSim {
+        ChipSim::new(ChipConfig::default())
+    }
+
+    #[test]
+    fn weighted_aggregation() {
+        let p = Pass { streams: vec![vec![0u16; 30]], weight: 5 };
+        let lc = sim().run_passes([&p].into_iter().cloned().collect::<Vec<_>>().iter());
+        assert_eq!(lc.base, 150);
+        assert_eq!(lc.td, 50); // all-zero stream -> 3x
+        assert!((lc.speedup() - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn never_slower_than_baseline() {
+        let mut state = 5u64;
+        let passes: Vec<Pass> = (0..10)
+            .map(|_| Pass {
+                streams: (0..4)
+                    .map(|_| {
+                        (0..20)
+                            .map(|_| {
+                                state = state.wrapping_mul(6364136223846793005).wrapping_add(11);
+                                (state >> 30) as u16
+                            })
+                            .collect()
+                    })
+                    .collect(),
+                weight: 1,
+            })
+            .collect();
+        let lc = sim().run_passes(passes.iter());
+        assert!(lc.td <= lc.base);
+        assert!(lc.speedup() >= 1.0);
+    }
+
+    #[test]
+    fn dram_gate() {
+        // Default: compute bound (paper methodology).
+        let s = sim();
+        assert_eq!(s.chip_cycles(1600, 102_400), 100);
+        // With the gate enabled: 102400 bytes at 102.4 B/cycle -> 1000.
+        let mut cfg = ChipConfig::default();
+        cfg.dram_gate = true;
+        let s = ChipSim::new(cfg);
+        assert_eq!(s.chip_cycles(1600, 0), 100);
+        assert_eq!(s.chip_cycles(1600, 102_400), 1000);
+    }
+}

@@ -1,0 +1,181 @@
+//! The sparse operand interconnect (paper Fig. 9).
+//!
+//! Each of the 16 multiplier lanes is fed by a small multiplexer that can
+//! read one of a *limited* set of staging-buffer entries. For the 3-deep
+//! staging buffer the per-lane options, in the scheduler's static priority
+//! order (§3.2), are — in `(step, lane)` notation relative to lane `i`:
+//!
+//! ```text
+//!   (+0, i)    dense-schedule value
+//!   (+1, i)    lookahead 1
+//!   (+2, i)    lookahead 2
+//!   (+1, i-1)  lookaside    \
+//!   (+1, i+1)  lookaside     |  5 lookaside options
+//!   (+2, i-2)  lookaside     |  (ring-wrapped at the lane ends)
+//!   (+2, i+2)  lookaside     |
+//!   (+1, i-3)  lookaside    /
+//! ```
+//!
+//! 8 options => a 3-bit `MS` select per lane. The 2-deep variant
+//! (Fig. 19) keeps the 5 options with step <= 1.
+
+/// MAC lanes per PE. The scheduler level structure is specific to 16.
+pub const LANES: usize = 16;
+
+/// Maximum staging depth supported (the paper evaluates 2 and 3).
+pub const MAX_DEPTH: usize = 3;
+
+/// Encodes a staging-buffer slot as a bit index into a `u64` window mask.
+#[inline(always)]
+pub const fn slot_bit(step: usize, lane: usize) -> u8 {
+    (step * LANES + lane) as u8
+}
+
+/// Sentinel bit index for unused option slots: bit 63 is outside every
+/// window mask (max depth 3 => bits 0..48), so a padded option can never
+/// appear available — this lets the scheduler scan a fixed 8 options
+/// branchlessly for both depths.
+pub const UNUSED_OPT: u8 = 63;
+
+/// The movement options of one lane, priority ordered.
+#[derive(Debug, Clone, Copy)]
+pub struct LaneOptions {
+    /// Bit indices (into the window mask) of each option; unused slots
+    /// hold [`UNUSED_OPT`].
+    pub bits: [u8; 8],
+    /// Number of valid options (8 for depth 3, 5 for depth 2).
+    pub len: usize,
+}
+
+/// The full interconnect pattern: identical per lane, shifted with
+/// wrap-around (the ports are "arranged into a ring", §3.1).
+#[derive(Debug, Clone)]
+pub struct Connectivity {
+    pub depth: usize,
+    pub lanes: [LaneOptions; LANES],
+    /// Per-lane masks of reachable window bits (for invariant checks).
+    pub reach: [u64; LANES],
+}
+
+/// `(step, lane_offset)` template, priority ordered, for depth 3.
+pub const TEMPLATE_D3: [(usize, isize); 8] = [
+    (0, 0),
+    (1, 0),
+    (2, 0),
+    (1, -1),
+    (1, 1),
+    (2, -2),
+    (2, 2),
+    (1, -3),
+];
+
+/// Depth-2 template: the 5 movements with step <= 1 (Fig. 19).
+pub const TEMPLATE_D2: [(usize, isize); 5] = [(0, 0), (1, 0), (1, -1), (1, 1), (1, -3)];
+
+impl Connectivity {
+    pub fn new(depth: usize) -> Self {
+        assert!(
+            depth == 2 || depth == 3,
+            "staging depth must be 2 or 3 (got {depth})"
+        );
+        let template: &[(usize, isize)] = if depth == 3 { &TEMPLATE_D3 } else { &TEMPLATE_D2 };
+        let mut lanes = [LaneOptions { bits: [0; 8], len: 0 }; LANES];
+        let mut reach = [0u64; LANES];
+        for i in 0..LANES {
+            let mut bits = [UNUSED_OPT; 8];
+            for (k, &(step, off)) in template.iter().enumerate() {
+                let lane = (i as isize + off).rem_euclid(LANES as isize) as usize;
+                bits[k] = slot_bit(step, lane);
+                reach[i] |= 1u64 << bits[k];
+            }
+            lanes[i] = LaneOptions { bits, len: template.len() };
+        }
+        Connectivity { depth, lanes, reach }
+    }
+
+    /// Mask of all window bits valid for this depth.
+    #[inline(always)]
+    pub fn window_mask(&self) -> u64 {
+        (1u64 << (self.depth * LANES)) - 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn depth3_has_eight_options_depth2_five() {
+        let c3 = Connectivity::new(3);
+        let c2 = Connectivity::new(2);
+        assert!(c3.lanes.iter().all(|l| l.len == 8));
+        assert!(c2.lanes.iter().all(|l| l.len == 5));
+    }
+
+    #[test]
+    fn fig9_lane8_options() {
+        // The paper's worked example: lane #8 can take (+0,8), lookahead
+        // (+1,8)/(+2,8), or steal (+1,7), (+1,9), (+2,6), (+2,10), (+1,5).
+        let c = Connectivity::new(3);
+        let want: Vec<u8> = [
+            (0usize, 8usize),
+            (1, 8),
+            (2, 8),
+            (1, 7),
+            (1, 9),
+            (2, 6),
+            (2, 10),
+            (1, 5),
+        ]
+        .iter()
+        .map(|&(s, l)| slot_bit(s, l))
+        .collect();
+        assert_eq!(&c.lanes[8].bits[..8], &want[..]);
+    }
+
+    #[test]
+    fn ring_wraparound() {
+        let c = Connectivity::new(3);
+        // lane 0: (+1, -1) wraps to lane 15, (+2,-2) to 14, (+1,-3) to 13.
+        assert_eq!(c.lanes[0].bits[3], slot_bit(1, 15));
+        assert_eq!(c.lanes[0].bits[5], slot_bit(2, 14));
+        assert_eq!(c.lanes[0].bits[7], slot_bit(1, 13));
+        // lane 15: (+1, +1) wraps to lane 0, (+2,+2) to 1.
+        assert_eq!(c.lanes[15].bits[4], slot_bit(1, 0));
+        assert_eq!(c.lanes[15].bits[6], slot_bit(2, 1));
+    }
+
+    #[test]
+    fn dense_option_is_exclusive_to_its_lane() {
+        // Step-0 slots appear only in their own lane's option list, so the
+        // head row can always fully drain in one cycle (no starvation).
+        let c = Connectivity::new(3);
+        for i in 0..LANES {
+            for j in 0..LANES {
+                if i == j {
+                    continue;
+                }
+                assert_eq!(c.reach[j] & (1u64 << slot_bit(0, i)), 0);
+            }
+        }
+    }
+
+    #[test]
+    fn level_groups_cannot_overlap() {
+        // Lanes 5 apart (the Fig. 10 level grouping) must have disjoint
+        // reachable sets — this is what makes per-level decisions safe.
+        let c = Connectivity::new(3);
+        for base in 0..LANES {
+            for other in [base + 5, base + 10] {
+                if other >= LANES {
+                    continue;
+                }
+                assert_eq!(
+                    c.reach[base] & c.reach[other],
+                    0,
+                    "lanes {base} and {other} overlap"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,60 @@
+//! Off-chip memory model: 16GB 4-channel LPDDR4-3200 with the
+//! compressing-DMA zero compression of Rhu et al. (paper Table 2 — used
+//! by BOTH the baseline and TensorDash).
+//!
+//! Zero compression: each transferred value carries a presence bit; only
+//! non-zero values move as data. Compressed bytes for a tensor of `n`
+//! values with non-zero fraction `d` and `w`-byte elements:
+//! `ceil(n/8) + n*d*w`.
+
+/// Off-chip traffic for one layer-operation, in bytes (post-compression).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct DramTraffic {
+    pub read_bytes: u64,
+    pub write_bytes: u64,
+}
+
+impl DramTraffic {
+    pub fn total(&self) -> u64 {
+        self.read_bytes + self.write_bytes
+    }
+
+    pub fn merge(&mut self, o: &DramTraffic) {
+        self.read_bytes += o.read_bytes;
+        self.write_bytes += o.write_bytes;
+    }
+}
+
+/// Compressed size in bytes of `values` elements of `elem_bytes` width at
+/// `nonzero_fraction` density (compressing-DMA encoding).
+pub fn compressed_bytes(values: u64, elem_bytes: u64, nonzero_fraction: f64) -> u64 {
+    let bitmap = values.div_ceil(8);
+    let data = (values as f64 * nonzero_fraction).ceil() as u64 * elem_bytes;
+    bitmap + data
+}
+
+/// Dense (uncompressed) size in bytes.
+pub fn dense_bytes(values: u64, elem_bytes: u64) -> u64 {
+    values * elem_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compression_never_exceeds_dense_plus_bitmap() {
+        let v = 1 << 20;
+        assert_eq!(compressed_bytes(v, 4, 1.0), v / 8 + v * 4);
+        assert_eq!(compressed_bytes(v, 4, 0.0), v / 8);
+        assert!(compressed_bytes(v, 4, 0.5) < dense_bytes(v, 4));
+    }
+
+    #[test]
+    fn bf16_halves_data_term() {
+        let v = 4096;
+        let fp32 = compressed_bytes(v, 4, 0.5);
+        let bf16 = compressed_bytes(v, 2, 0.5);
+        assert_eq!(fp32 - bf16, v / 2 * 2);
+    }
+}

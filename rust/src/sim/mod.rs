@@ -1,0 +1,35 @@
+//! Cycle-accurate model of the TensorDash micro-architecture (paper §3).
+//!
+//! The model is exact at the level the paper describes the hardware:
+//!
+//! * [`connectivity`] — the sparse operand interconnect: the per-lane
+//!   8-input multiplexer pattern of Fig. 9 (2 lookahead + 5 lookaside)
+//!   and its 5-option depth-2 variant (Fig. 19).
+//! * [`scheduler`] — the combinational hierarchical scheduler of Fig. 10:
+//!   per-lane static-priority encoders arranged in six levels whose lane
+//!   groups cannot make overlapping choices.
+//! * [`pe`] — a single processing element consuming a 16-lane operand
+//!   stream through a 2/3-deep staging buffer.
+//! * [`tile`] — the Fig. 11 tile: per-row schedulers and B-side staging,
+//!   shared A-side staging per column, rows synchronised on the common
+//!   staging-buffer advance (work imbalance => Fig. 17).
+//! * [`chip`] — many tiles processing independent work chunks plus the
+//!   DRAM bandwidth gate.
+//! * [`memory`], [`dram`], [`transposer`] — the on-chip SRAM hierarchy
+//!   (AM/BM/CM + scratchpads), the LPDDR4 + compressing-DMA model and the
+//!   16x16 transposers of §3.4; these feed the energy model.
+
+pub mod chip;
+pub mod connectivity;
+pub mod dram;
+pub mod memory;
+pub mod pe;
+pub mod scheduler;
+pub mod tile;
+pub mod transposer;
+
+pub use chip::{ChipSim, LayerCycles, Pass};
+pub use connectivity::{Connectivity, LANES};
+pub use pe::{baseline_cycles, simulate_stream};
+pub use scheduler::{schedule_cycle, Schedule, IDLE};
+pub use tile::{tile_pass_cycles, DEFAULT_LEAD_LIMIT};

@@ -1,0 +1,286 @@
+//! The hierarchical hardware scheduler (paper §3.2, Fig. 10).
+//!
+//! Input: the window bit-vector `Z` where bit `(step, lane)` is set iff
+//! that staging-buffer pair is *effectual* and not yet consumed (for
+//! two-side extraction `Z = AZ & BZ`; for the tile's one-side
+//! configuration `Z` is the B-side vector alone).
+//!
+//! Each lane runs an 8-to-3 static priority encoder over its movement
+//! options. Lanes are arranged in six levels — groups
+//! `{0,5,10} {1,6,11} {2,7,12} {3,8,13} {4,9,14} {15}` — such that lanes
+//! within a level cannot reach the same slot (their option sets are ≥5
+//! lanes apart, the widest lookaside being ±3). After each level its
+//! selections are ANDed out of `Z` before the next level sees it, which
+//! guarantees a *valid* schedule: every pair consumed at most once. The
+//! whole structure is combinational — one schedule per cycle.
+
+use super::connectivity::{Connectivity, LANES};
+
+/// `MS` value meaning "no effectual option available — lane idles".
+pub const IDLE: u8 = 0xFF;
+
+/// The Fig. 10 level grouping.
+pub const LEVELS: [&[usize]; 6] = [
+    &[0, 5, 10],
+    &[1, 6, 11],
+    &[2, 7, 12],
+    &[3, 8, 13],
+    &[4, 9, 14],
+    &[15],
+];
+
+/// One cycle's scheduling decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Schedule {
+    /// Per-lane mux select (index into the lane's option list), or
+    /// [`IDLE`]. Shared by the A-side and B-side muxes of the lane.
+    pub ms: [u8; LANES],
+    /// Window bits consumed by this schedule.
+    pub picks: u64,
+    /// The `AS` signal: number of leading staging rows fully drained
+    /// after this cycle (0..=depth). The staging buffer shifts by this
+    /// amount and refills from the (banked) scratchpads.
+    pub advance: u8,
+}
+
+impl Schedule {
+    /// Number of busy multiplier lanes this cycle.
+    #[inline]
+    pub fn busy_lanes(&self) -> u32 {
+        self.picks.count_ones()
+    }
+}
+
+/// Run the combinational scheduler over window vector `z`.
+///
+/// `z` must only contain bits within `conn.window_mask()`. Rows of the
+/// window that extend past the end of the operand stream must simply be
+/// zero (an empty row is indistinguishable from a fully-ineffectual one).
+pub fn schedule_cycle(conn: &Connectivity, z: u64) -> Schedule {
+    debug_assert_eq!(z & !conn.window_mask(), 0, "z has bits outside window");
+    let depth = conn.depth as u8;
+    // Fast path: an all-ineffectual window is skipped whole (§3.5 spirit:
+    // nothing to schedule, AS = depth). Very common at high sparsity.
+    if z == 0 {
+        return Schedule { ms: [IDLE; LANES], picks: 0, advance: depth };
+    }
+    let mut remaining = z;
+    let mut ms = [IDLE; LANES];
+    let mut picks = 0u64;
+    for level in LEVELS {
+        // All lanes of a level decide combinationally on the same view;
+        // their option sets are disjoint by construction, so consuming
+        // from `remaining` lane-by-lane is equivalent (and checked by the
+        // property tests).
+        for &lane in level {
+            // Cheap early-out: nothing this lane can reach is available
+            // (very common at high sparsity).
+            if remaining & conn.reach[lane] == 0 {
+                continue;
+            }
+            let opts = &conn.lanes[lane];
+            // Branchless 8-to-3 priority encode: gather each option's
+            // availability into one byte, then take the lowest set bit.
+            // Unused option slots point at the UNUSED_OPT sentinel bit,
+            // which is never set.
+            let b = &opts.bits;
+            let avail = (((remaining >> b[0]) & 1)
+                | ((remaining >> b[1]) & 1) << 1
+                | ((remaining >> b[2]) & 1) << 2
+                | ((remaining >> b[3]) & 1) << 3
+                | ((remaining >> b[4]) & 1) << 4
+                | ((remaining >> b[5]) & 1) << 5
+                | ((remaining >> b[6]) & 1) << 6
+                | ((remaining >> b[7]) & 1) << 7) as u32;
+            if avail != 0 {
+                let k = avail.trailing_zeros() as usize;
+                ms[lane] = k as u8;
+                let bit = 1u64 << b[k];
+                picks |= bit;
+                remaining &= !bit;
+            }
+        }
+    }
+    // AS: leading fully-drained rows = index of the lowest surviving bit
+    // divided by the row width (64 trailing zeros when empty => depth).
+    let after = z & !picks;
+    let advance = ((after.trailing_zeros() as u8) / LANES as u8).min(depth);
+    Schedule { ms, picks, advance }
+}
+
+/// The §3.7 *iterative* scheduler: reuses ONE level of priority encoders
+/// over several cycles instead of instantiating all six. Produces the
+/// exact same schedule as [`schedule_cycle`] (same priority structure),
+/// but takes `LEVELS.len()` cycles per scheduled row — the cheaper
+/// back-side configuration used when pre-scheduling tensors into memory,
+/// where a schedule is needed only once per *stored* row, not per
+/// executed cycle.
+///
+/// Returns the schedule plus the cycles the iteration consumed.
+pub fn schedule_iterative(conn: &Connectivity, z: u64) -> (Schedule, u64) {
+    // One level per cycle: identical selection semantics.
+    let mut remaining = z;
+    let mut ms = [IDLE; LANES];
+    let mut picks = 0u64;
+    let mut cycles = 0u64;
+    for level in LEVELS {
+        cycles += 1;
+        for &lane in level {
+            if remaining & conn.reach[lane] == 0 {
+                continue;
+            }
+            let b = &conn.lanes[lane].bits;
+            let avail = (((remaining >> b[0]) & 1)
+                | ((remaining >> b[1]) & 1) << 1
+                | ((remaining >> b[2]) & 1) << 2
+                | ((remaining >> b[3]) & 1) << 3
+                | ((remaining >> b[4]) & 1) << 4
+                | ((remaining >> b[5]) & 1) << 5
+                | ((remaining >> b[6]) & 1) << 6
+                | ((remaining >> b[7]) & 1) << 7) as u32;
+            if avail != 0 {
+                let k = avail.trailing_zeros() as usize;
+                ms[lane] = k as u8;
+                let bit = 1u64 << b[k];
+                picks |= bit;
+                remaining &= !bit;
+            }
+        }
+    }
+    let after = z & !picks;
+    let advance = ((after.trailing_zeros() as u8) / LANES as u8).min(conn.depth as u8);
+    (Schedule { ms, picks, advance }, cycles)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::connectivity::slot_bit;
+
+    fn conn() -> Connectivity {
+        Connectivity::new(3)
+    }
+
+    fn row_mask(bits: &[usize]) -> u64 {
+        bits.iter().map(|&b| 1u64 << b).fold(0, |a, b| a | b)
+    }
+
+    #[test]
+    fn dense_head_row_takes_priority() {
+        // Full head row: every lane picks its dense value, advance = 1
+        // (rows +1/+2 untouched even if populated).
+        let z = 0xFFFF | (0xFFFFu64 << 16) | (0xFFFFu64 << 32);
+        let s = schedule_cycle(&conn(), z);
+        assert!(s.ms.iter().all(|&m| m == 0));
+        assert_eq!(s.picks, 0xFFFF);
+        assert_eq!(s.advance, 1);
+        assert_eq!(s.busy_lanes(), 16);
+    }
+
+    #[test]
+    fn empty_window_skips_all_rows() {
+        // All pairs ineffectual: nothing scheduled, whole window drained
+        // in one cycle — the paper's 3x maximum speedup.
+        let s = schedule_cycle(&conn(), 0);
+        assert!(s.ms.iter().all(|&m| m == IDLE));
+        assert_eq!(s.picks, 0);
+        assert_eq!(s.advance, 3);
+    }
+
+    #[test]
+    fn lookahead_fills_idle_lane() {
+        // Lane 4 has nothing at step 0 but a value at step +1 -> lookahead.
+        let mut z = 0u64;
+        for l in 0..16 {
+            if l != 4 {
+                z |= 1 << slot_bit(0, l);
+            }
+        }
+        z |= 1 << slot_bit(1, 4);
+        let s = schedule_cycle(&conn(), z);
+        assert_eq!(s.ms[4], 1, "lane 4 should take lookahead (+1,4)");
+        // Rows 0 and 1 drain, and the (empty) row 2 counts as drained too.
+        assert_eq!(s.advance, 3);
+    }
+
+    #[test]
+    fn lookaside_steals_neighbor() {
+        // Lane 8 idle at (0,8),(1,8),(2,8); its first lookaside (+1,7) set.
+        let mut z = 0u64;
+        for l in 0..16 {
+            if l != 8 {
+                z |= 1 << slot_bit(0, l);
+            }
+        }
+        z |= 1 << slot_bit(1, 7);
+        let s = schedule_cycle(&conn(), z);
+        assert_eq!(s.ms[8], 3, "lane 8 should take lookaside (+1, i-1)");
+        // lane 7's own dense pick is untouched by lane 8's steal.
+        assert_eq!(s.ms[7], 0);
+    }
+
+    #[test]
+    fn no_double_consumption_across_levels() {
+        // Slot (1,7) is reachable by lanes 6 ((+1,i+1)), 7 ((+1,i)),
+        // 8 ((+1,i-1)) and 10 ((+1,i-3)). However the scheduler resolves
+        // the contention, exactly ONE lane may consume it.
+        let z = (1u64 << slot_bit(1, 7)) | (1 << slot_bit(0, 7));
+        let s = schedule_cycle(&conn(), z);
+        assert_eq!(s.ms[7], 0, "lane 7 prefers its dense value");
+        assert_eq!(s.picks, z, "both pairs consumed");
+        let takers = [6, 8, 10].iter().filter(|&&l| s.ms[l] != IDLE).count();
+        assert_eq!(takers, 1, "exactly one neighbour steals (1,7)");
+        // lane 10 sits in the FIRST level {0,5,10}, so it wins the steal.
+        assert_eq!(s.ms[10], 7);
+
+        let z2 = 1u64 << slot_bit(1, 7);
+        let s2 = schedule_cycle(&conn(), z2);
+        let takers: Vec<usize> = (0..LANES).filter(|&l| s2.ms[l] != IDLE).collect();
+        assert_eq!(takers.len(), 1, "single pair consumed exactly once");
+        assert_eq!(takers[0], 10, "earliest level wins");
+    }
+
+    #[test]
+    fn advance_counts_leading_drained_rows_only() {
+        // Head row drains; +1 row still holds a pair no lane consumed
+        // (e.g. more pairs than consumable): advance stays 1.
+        let mut z = 0xFFFFu64; // dense head
+        z |= 0xFFFFu64 << 16; // dense +1 row too
+        let s = schedule_cycle(&conn(), z);
+        assert_eq!(s.advance, 1);
+    }
+
+    #[test]
+    fn iterative_scheduler_matches_combinational() {
+        // §3.7: same schedule, 6 cycles instead of 1.
+        let c = conn();
+        let mut state = 0xABCDu64;
+        for _ in 0..2000 {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+            let z = state & c.window_mask();
+            let fast = schedule_cycle(&c, z);
+            let (slow, cycles) = schedule_iterative(&c, z);
+            assert_eq!(fast.picks, slow.picks);
+            assert_eq!(fast.ms, slow.ms);
+            assert_eq!(fast.advance, slow.advance);
+            assert_eq!(cycles, 6);
+        }
+    }
+
+    #[test]
+    fn schedule_is_work_conserving_small_cases() {
+        // For any z, picks ⊆ z and every picked bit reachable by picker.
+        let c = conn();
+        for trial in 0..500u64 {
+            let z = (trial.wrapping_mul(0x9E3779B97F4A7C15)) & c.window_mask();
+            let s = schedule_cycle(&c, z);
+            assert_eq!(s.picks & !z, 0, "picked a non-effectual slot");
+            for (lane, &m) in s.ms.iter().enumerate() {
+                if m != IDLE {
+                    let bit = 1u64 << c.lanes[lane].bits[m as usize];
+                    assert_ne!(s.picks & bit, 0);
+                }
+            }
+        }
+    }
+}

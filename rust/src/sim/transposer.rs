@@ -1,0 +1,57 @@
+//! The 16x16 tensor transposers (paper §3.4).
+//!
+//! During training every tensor is used by two convolutions that access
+//! it in different orders (e.g. filters are "reconstructed" channel-wise
+//! and rotated for the backward pass; gradients are grouped by channel
+//! for op 2 but by spatial position for op 3). The §3.4 layout stores
+//! tensors in 16x16 groups so that a transposer can read 16 blocks of 16
+//! channel-contiguous values and serve them transposed (one value from
+//! each block).
+//!
+//! Each transposer fills its 1KB 16x16 buffer with 16 row reads and then
+//! supplies 16 transposed rows — a sustained rate of one 16-value row
+//! per cycle per transposer (fill and drain overlap across the pool).
+
+/// Work done by the transposer pool for one layer-operation.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransposerWork {
+    /// 16x16 groups passed through the transposers.
+    pub groups: u64,
+}
+
+impl TransposerWork {
+    pub fn merge(&mut self, o: &TransposerWork) {
+        self.groups += o.groups;
+    }
+
+    /// Row accesses through transposer buffers (16 in + 16 out per group).
+    pub fn row_accesses(&self) -> u64 {
+        self.groups * 32
+    }
+
+    /// Minimum cycles for `n_transposers` to stream this work: each group
+    /// needs 16 row-supply cycles, transposers work in parallel.
+    pub fn min_cycles(&self, n_transposers: u64) -> u64 {
+        (self.groups * 16).div_ceil(n_transposers.max(1))
+    }
+}
+
+/// Groups that must be transposed for a tensor of `values` elements.
+pub fn groups_for_values(values: u64) -> u64 {
+    values.div_ceil(256)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn group_math() {
+        assert_eq!(groups_for_values(256), 1);
+        assert_eq!(groups_for_values(257), 2);
+        let w = TransposerWork { groups: 30 };
+        assert_eq!(w.row_accesses(), 960);
+        // 15 transposers, 30 groups x 16 supply cycles -> 32 cycles.
+        assert_eq!(w.min_cycles(15), 32);
+    }
+}

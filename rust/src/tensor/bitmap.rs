@@ -1,0 +1,202 @@
+//! Packed zero bitmaps of NHWC tensors.
+//!
+//! The simulator never needs tensor *values* — only which elements are
+//! zero. A [`TensorBitmap`] stores one bit per element (set = non-zero),
+//! packed 16 channel-contiguous elements per `u16` word: exactly the
+//! `AZ`/`BZ` zero vectors the staging buffers feed the hardware
+//! scheduler, and exactly what the AOT train-step artifact returns from
+//! the Pallas `zero_bitmap16` kernel.
+//!
+//! Fully-connected tensors are 2-D `(batch, features)`; they are stored
+//! as `(n, 1, 1, c)`.
+
+/// Zero bitmap of an `(n, h, w, c)` tensor, `c` a multiple of 16.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorBitmap {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    words: Vec<u16>,
+}
+
+impl TensorBitmap {
+    pub fn c_blocks(&self) -> usize {
+        self.c / 16
+    }
+
+    fn word_index(&self, n: usize, y: usize, x: usize, cb: usize) -> usize {
+        ((n * self.h + y) * self.w + x) * self.c_blocks() + cb
+    }
+
+    /// Build from raw f32 values in NHWC order.
+    pub fn from_f32(dims: (usize, usize, usize, usize), data: &[f32]) -> Self {
+        let (n, h, w, c) = dims;
+        assert_eq!(c % 16, 0, "channel dim must be a multiple of 16");
+        assert_eq!(data.len(), n * h * w * c, "data/dims mismatch");
+        let mut words = vec![0u16; n * h * w * c / 16];
+        for (g, chunk) in data.chunks_exact(16).enumerate() {
+            let mut word = 0u16;
+            for (l, &v) in chunk.iter().enumerate() {
+                if v != 0.0 {
+                    word |= 1 << l;
+                }
+            }
+            words[g] = word;
+        }
+        TensorBitmap { n, h, w, c, words }
+    }
+
+    /// Build from the packed int32 words produced by the Pallas
+    /// `zero_bitmap16` kernel (one word per 16-channel group).
+    pub fn from_words_i32(dims: (usize, usize, usize, usize), words: &[i32]) -> Self {
+        let (n, h, w, c) = dims;
+        assert_eq!(c % 16, 0, "channel dim must be a multiple of 16");
+        assert_eq!(words.len(), n * h * w * c / 16, "word count mismatch");
+        TensorBitmap {
+            n,
+            h,
+            w,
+            c,
+            words: words.iter().map(|&v| v as u16).collect(),
+        }
+    }
+
+    /// Build a 2-D `(batch, features)` bitmap (fully-connected tensors).
+    pub fn from_f32_2d(dims: (usize, usize), data: &[f32]) -> Self {
+        Self::from_f32((dims.0, 1, 1, dims.1), data)
+    }
+
+    /// Directly wrap pre-packed words.
+    pub fn from_raw(dims: (usize, usize, usize, usize), words: Vec<u16>) -> Self {
+        let (n, h, w, c) = dims;
+        assert_eq!(c % 16, 0);
+        assert_eq!(words.len(), n * h * w * c / 16);
+        TensorBitmap { n, h, w, c, words }
+    }
+
+    /// Is element `(n, y, x, c)` non-zero?
+    #[inline]
+    pub fn bit(&self, n: usize, y: usize, x: usize, c: usize) -> bool {
+        let word = self.words[self.word_index(n, y, x, c / 16)];
+        word & (1 << (c % 16)) != 0
+    }
+
+    /// The 16-lane word for channel block `cb` at `(n, y, x)` — one
+    /// staging-buffer row along the channel dimension.
+    #[inline]
+    pub fn lane_word(&self, n: usize, y: usize, x: usize, cb: usize) -> u16 {
+        self.words[self.word_index(n, y, x, cb)]
+    }
+
+    /// Like [`Self::lane_word`] but returns 0 (all-zero) outside bounds —
+    /// convolution halo handling.
+    #[inline]
+    pub fn lane_word_padded(&self, n: usize, y: isize, x: isize, cb: usize) -> u16 {
+        if y < 0 || x < 0 || y as usize >= self.h || x as usize >= self.w {
+            0
+        } else {
+            self.lane_word(n, y as usize, x as usize, cb)
+        }
+    }
+
+    /// A lane word along the **row (x) dimension** for a fixed channel:
+    /// bit `l` set iff element `(n, y, x0 + l, c)` is non-zero (used by
+    /// the weight-gradient op where the reduction runs over space; this
+    /// is the access pattern the §3.4 transposers exist to serve).
+    pub fn lane_word_spatial(&self, n: usize, y: usize, x0: usize, c: usize) -> u16 {
+        let mut word = 0u16;
+        for l in 0..16 {
+            let x = x0 + l;
+            if x < self.w && self.bit(n, y, x, c) {
+                word |= 1 << l;
+            }
+        }
+        word
+    }
+
+    pub fn values(&self) -> u64 {
+        (self.n * self.h * self.w * self.c) as u64
+    }
+
+    pub fn nonzeros(&self) -> u64 {
+        self.words.iter().map(|w| w.count_ones() as u64).sum()
+    }
+
+    /// Fraction of non-zero elements.
+    pub fn density(&self) -> f64 {
+        if self.values() == 0 {
+            0.0
+        } else {
+            self.nonzeros() as f64 / self.values() as f64
+        }
+    }
+
+    /// Fraction of zero elements.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.density()
+    }
+
+    pub fn words(&self) -> &[u16] {
+        &self.words
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_f32_roundtrip() {
+        let mut data = vec![0f32; 2 * 2 * 2 * 16];
+        data[0] = 1.0; // (0,0,0,0)
+        data[17] = -2.0; // (0,0,0,17) -> second block? c=16 so (0,0,1,1)
+        let bm = TensorBitmap::from_f32((2, 2, 2, 16), &data);
+        assert!(bm.bit(0, 0, 0, 0));
+        assert!(!bm.bit(0, 0, 0, 1));
+        assert!(bm.bit(0, 0, 1, 1));
+        assert_eq!(bm.nonzeros(), 2);
+        assert!((bm.density() - 2.0 / 128.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lane_word_padded_halo() {
+        let data = vec![1f32; 1 * 2 * 2 * 16];
+        let bm = TensorBitmap::from_f32((1, 2, 2, 16), &data);
+        assert_eq!(bm.lane_word_padded(0, -1, 0, 0), 0);
+        assert_eq!(bm.lane_word_padded(0, 0, 2, 0), 0);
+        assert_eq!(bm.lane_word_padded(0, 1, 1, 0), 0xFFFF);
+    }
+
+    #[test]
+    fn spatial_lane_word() {
+        // 1x1x20x16 tensor; nonzero at x in {0, 3, 18} for channel 5.
+        let mut data = vec![0f32; 20 * 16];
+        for x in [0usize, 3, 18] {
+            data[x * 16 + 5] = 1.0;
+        }
+        let bm = TensorBitmap::from_f32((1, 1, 20, 16), &data);
+        assert_eq!(bm.lane_word_spatial(0, 0, 0, 5), (1 << 0) | (1 << 3));
+        assert_eq!(bm.lane_word_spatial(0, 0, 16, 5), 1 << 2);
+        // Out-of-range lanes are zero (group at the tensor edge).
+        assert_eq!(bm.lane_word_spatial(0, 0, 16, 4), 0);
+    }
+
+    #[test]
+    fn from_words_matches_from_f32() {
+        let data: Vec<f32> = (0..64).map(|i| if i % 3 == 0 { 0.0 } else { 1.0 }).collect();
+        let bm1 = TensorBitmap::from_f32((1, 1, 4, 16), &data);
+        let words: Vec<i32> = bm1.words().iter().map(|&w| w as i32).collect();
+        let bm2 = TensorBitmap::from_words_i32((1, 1, 4, 16), &words);
+        assert_eq!(bm1, bm2);
+    }
+
+    #[test]
+    fn fc_tensor_as_2d() {
+        let data = vec![1f32; 4 * 32];
+        let bm = TensorBitmap::from_f32_2d((4, 32), &data);
+        assert_eq!(bm.n, 4);
+        assert_eq!(bm.c, 32);
+        assert_eq!(bm.density(), 1.0);
+    }
+}

@@ -1,0 +1,119 @@
+//! The 16x16 tensor-group memory layout (paper §3.4).
+//!
+//! Values are stored in groups of 16x16: 16 consecutive blocks along the
+//! row (x) dimension, each block 16 contiguous channel values, starting
+//! coordinates aligned by 16 in both dimensions; groups are laid out in
+//! channel, column, row order. A group can be written straight to 16
+//! banks (one block per bank), letting a PE fetch any 16-channel block in
+//! one access — and letting a transposer serve the *transposed* view (16
+//! values with the same channel across 16 row positions) that the
+//! backward-pass operand orders need.
+
+/// Layout geometry of one 2-D slice (fixed sample) of an NHWC tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GroupLayout {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl GroupLayout {
+    pub fn new(h: usize, w: usize, c: usize) -> Self {
+        assert_eq!(c % 16, 0, "channels must be a multiple of 16");
+        GroupLayout { h, w, c }
+    }
+
+    /// Number of 16x16 groups per sample (edges padded up).
+    pub fn groups(&self) -> usize {
+        self.h * self.w.div_ceil(16) * (self.c / 16)
+    }
+
+    /// Group index and within-group (block, lane) of element `(y, x, c)`.
+    /// Groups are ordered channel-block fastest, then column group, then
+    /// row — the §3.4 "channel, column, row order".
+    pub fn locate(&self, y: usize, x: usize, c: usize) -> (usize, usize, usize) {
+        assert!(y < self.h && x < self.w && c < self.c);
+        let xg = x / 16;
+        let cb = c / 16;
+        let group = (y * self.w.div_ceil(16) + xg) * (self.c / 16) + cb;
+        (group, x % 16, c % 16)
+    }
+
+    /// Gather one 16x16 group from a dense HWC slice (edge blocks are
+    /// zero padded). `group` is row-major `[block][lane]` = `[x][c]`.
+    pub fn gather_group(&self, data: &[f32], y: usize, xg: usize, cb: usize) -> [[f32; 16]; 16] {
+        assert_eq!(data.len(), self.h * self.w * self.c);
+        let mut out = [[0f32; 16]; 16];
+        for (bx, row) in out.iter_mut().enumerate() {
+            let x = xg * 16 + bx;
+            if x >= self.w {
+                continue;
+            }
+            for (l, v) in row.iter_mut().enumerate() {
+                *v = data[(y * self.w + x) * self.c + cb * 16 + l];
+            }
+        }
+        out
+    }
+}
+
+/// Transpose a 16x16 group in place semantics: the transposer's internal
+/// buffer is filled block-wise and drained value-wise (§3.4).
+pub fn transpose_group(g: &[[f32; 16]; 16]) -> [[f32; 16]; 16] {
+    let mut out = [[0f32; 16]; 16];
+    for i in 0..16 {
+        for j in 0..16 {
+            out[j][i] = g[i][j];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn locate_ordering() {
+        let l = GroupLayout::new(4, 32, 32);
+        // channel-block fastest:
+        assert_eq!(l.locate(0, 0, 0).0, 0);
+        assert_eq!(l.locate(0, 0, 16).0, 1);
+        // then column group:
+        assert_eq!(l.locate(0, 16, 0).0, 2);
+        // then row:
+        assert_eq!(l.locate(1, 0, 0).0, 4);
+        // within group: block = x % 16, lane = c % 16.
+        assert_eq!(l.locate(2, 17, 21), ((2 * 2 + 1) * 2 + 1, 1, 5));
+    }
+
+    #[test]
+    fn groups_count_pads_edges() {
+        let l = GroupLayout::new(7, 7, 32);
+        assert_eq!(l.groups(), 7 * 1 * 2);
+    }
+
+    #[test]
+    fn transpose_round_trip() {
+        let mut g = [[0f32; 16]; 16];
+        for (i, row) in g.iter_mut().enumerate() {
+            for (j, v) in row.iter_mut().enumerate() {
+                *v = (i * 16 + j) as f32;
+            }
+        }
+        let t = transpose_group(&g);
+        assert_eq!(t[3][5], g[5][3]);
+        assert_eq!(transpose_group(&t), g);
+    }
+
+    #[test]
+    fn gather_group_zero_pads_edge() {
+        let l = GroupLayout::new(1, 20, 16);
+        let data: Vec<f32> = (0..20 * 16).map(|i| i as f32 + 1.0).collect();
+        let g = l.gather_group(&data, 0, 1, 0);
+        // x = 16..19 valid, 20..31 zero padded.
+        assert_eq!(g[0][0], data[16 * 16]);
+        assert_eq!(g[3][15], data[19 * 16 + 15]);
+        assert_eq!(g[4], [0f32; 16]);
+    }
+}

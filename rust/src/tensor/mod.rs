@@ -1,0 +1,10 @@
+//! Tensor substrate: zero bitmaps, the 16x16 group layout (§3.4) and the
+//! scheduled `(value, idx)` compressed form (§3.6).
+
+pub mod bitmap;
+pub mod layout;
+pub mod scheduled;
+
+pub use bitmap::TensorBitmap;
+pub use layout::{transpose_group, GroupLayout};
+pub use scheduled::{compress_one_side, decompress, ScheduledTensor};

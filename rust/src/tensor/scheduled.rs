@@ -1,0 +1,205 @@
+//! The scheduled `(value, idx)` compressed tensor form (paper §3.6).
+//!
+//! TensorDash's scheduler doubles as a compression engine: a tensor can
+//! be stored as the *schedule* of its non-zero values — per packed row,
+//! each lane holds a value plus the 3-bit movement (`MS`) it performed,
+//! and the row records the 2-bit `AS` advance. Decompression (Fig. 12)
+//! is the mirror of the multiplexer stage: each `(value, idx)` pair is
+//! scattered back to the dense slot its movement came from.
+//!
+//! One-side scheduling only (the stored `idx` must be interpretable
+//! without the second operand), exactly as §3.6/§3.7 describe for the
+//! back-side scheduler.
+
+use crate::sim::connectivity::{Connectivity, LANES};
+use crate::sim::scheduler::{schedule_cycle, IDLE};
+
+/// One packed row of the scheduled form.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScheduledRow {
+    /// Per-lane value (meaningful only where `idx != IDLE`).
+    pub values: [f32; LANES],
+    /// Per-lane 3-bit movement select, or [`IDLE`].
+    pub idx: [u8; LANES],
+    /// The row's `AS`: how many dense rows the window advanced after
+    /// this packed row (1..=depth).
+    pub advance: u8,
+}
+
+/// A tensor stream compressed by one-side scheduling.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScheduledTensor {
+    pub rows: Vec<ScheduledRow>,
+    /// Dense row count of the original stream.
+    pub dense_rows: usize,
+    pub depth: usize,
+}
+
+impl ScheduledTensor {
+    /// Compression ratio in storage rows (dense / scheduled); > 1 means
+    /// the scheduled form is smaller.
+    pub fn compression(&self) -> f64 {
+        if self.rows.is_empty() {
+            return self.dense_rows.max(1) as f64;
+        }
+        self.dense_rows as f64 / self.rows.len() as f64
+    }
+}
+
+/// Compress a dense stream of 16-lane rows with one-side scheduling.
+pub fn compress_one_side(conn: &Connectivity, dense: &[[f32; LANES]]) -> ScheduledTensor {
+    let depth = conn.depth;
+    let n = dense.len();
+    let mut rows = Vec::new();
+    if n == 0 {
+        return ScheduledTensor { rows, dense_rows: 0, depth };
+    }
+    // Remaining-effectual masks over the shared window, as in pe.rs.
+    let mut pos = 0usize;
+    let mut win = [0u16; crate::sim::connectivity::MAX_DEPTH];
+    let mut loaded = 0usize;
+    let mask_of = |row: &[f32; LANES]| -> u16 {
+        let mut m = 0u16;
+        for (l, &v) in row.iter().enumerate() {
+            if v != 0.0 {
+                m |= 1 << l;
+            }
+        }
+        m
+    };
+    while loaded < depth && pos + loaded < n {
+        win[loaded] = mask_of(&dense[pos + loaded]);
+        loaded += 1;
+    }
+    while loaded > 0 {
+        let mut z = 0u64;
+        for s in 0..loaded {
+            z |= (win[s] as u64) << (s * LANES);
+        }
+        let sched = schedule_cycle(conn, z);
+        let mut out = ScheduledRow { values: [0.0; LANES], idx: [IDLE; LANES], advance: 0 };
+        for lane in 0..LANES {
+            let m = sched.ms[lane];
+            if m == IDLE {
+                continue;
+            }
+            let bit = conn.lanes[lane].bits[m as usize] as usize;
+            let (step, src_lane) = (bit / LANES, bit % LANES);
+            out.values[lane] = dense[pos + step][src_lane];
+            out.idx[lane] = m;
+        }
+        for s in 0..loaded {
+            win[s] &= !((sched.picks >> (s * LANES)) as u16);
+        }
+        let adv = (sched.advance as usize).min(loaded);
+        out.advance = adv as u8;
+        rows.push(out);
+        win.copy_within(adv..loaded, 0);
+        pos += adv;
+        loaded -= adv;
+        while loaded < depth && pos + loaded < n {
+            win[loaded] = mask_of(&dense[pos + loaded]);
+            loaded += 1;
+        }
+    }
+    ScheduledTensor { rows, dense_rows: n, depth }
+}
+
+/// Decompress back to the dense stream (Fig. 12): scatter each packed
+/// value to `(window_base + step, src_lane)` where `(step, src_lane)` is
+/// the slot its recorded movement reads from.
+pub fn decompress(conn: &Connectivity, t: &ScheduledTensor) -> Vec<[f32; LANES]> {
+    let mut dense = vec![[0f32; LANES]; t.dense_rows];
+    let mut base = 0usize;
+    for row in &t.rows {
+        for lane in 0..LANES {
+            if row.idx[lane] == IDLE {
+                continue;
+            }
+            let bit = conn.lanes[lane].bits[row.idx[lane] as usize] as usize;
+            let (step, src_lane) = (bit / LANES, bit % LANES);
+            let r = base + step;
+            debug_assert!(r < t.dense_rows);
+            dense[r][src_lane] = row.values[lane];
+        }
+        base += row.advance as usize;
+    }
+    dense
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn c3() -> Connectivity {
+        Connectivity::new(3)
+    }
+
+    fn stream(seed: u64, len: usize, density_pct: u64) -> Vec<[f32; LANES]> {
+        let mut s = seed;
+        (0..len)
+            .map(|_| {
+                let mut row = [0f32; LANES];
+                for v in row.iter_mut() {
+                    s = s.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                    if (s >> 33) % 100 < density_pct {
+                        *v = ((s >> 16) & 0xFF) as f32 + 1.0;
+                    }
+                }
+                row
+            })
+            .collect()
+    }
+
+    #[test]
+    fn round_trip_exact() {
+        let c = c3();
+        for (seed, density) in [(1u64, 10u64), (2, 30), (3, 60), (4, 95), (5, 100), (6, 0)] {
+            let dense = stream(seed, 50, density);
+            let st = compress_one_side(&c, &dense);
+            let back = decompress(&c, &st);
+            assert_eq!(back, dense, "round trip failed @density {density}");
+        }
+    }
+
+    #[test]
+    fn compression_tracks_sparsity() {
+        let c = c3();
+        let sparse = compress_one_side(&c, &stream(7, 300, 15));
+        let dense = compress_one_side(&c, &stream(8, 300, 95));
+        assert!(sparse.compression() > 1.5, "got {}", sparse.compression());
+        assert!(dense.compression() <= 1.1);
+        // Structural cap: never beyond depth x.
+        assert!(sparse.compression() <= 3.0 + 1e-9);
+    }
+
+    #[test]
+    fn empty_and_all_zero() {
+        let c = c3();
+        let st = compress_one_side(&c, &[]);
+        assert_eq!(st.rows.len(), 0);
+        assert_eq!(decompress(&c, &st).len(), 0);
+        let zeros = vec![[0f32; LANES]; 30];
+        let st = compress_one_side(&c, &zeros);
+        assert_eq!(st.rows.len(), 10); // ceil(30/3) all-skip rows
+        assert_eq!(decompress(&c, &st), zeros);
+    }
+
+    #[test]
+    fn depth2_round_trip() {
+        let c = Connectivity::new(2);
+        let dense = stream(9, 40, 40);
+        let st = compress_one_side(&c, &dense);
+        assert_eq!(decompress(&c, &st), dense);
+        assert!(st.compression() <= 2.0 + 1e-9);
+    }
+
+    #[test]
+    fn advances_sum_to_dense_rows() {
+        let c = c3();
+        let dense = stream(10, 64, 50);
+        let st = compress_one_side(&c, &dense);
+        let total: usize = st.rows.iter().map(|r| r.advance as usize).sum();
+        assert_eq!(total, 64);
+    }
+}

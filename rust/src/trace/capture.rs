@@ -1,0 +1,107 @@
+//! Real-trace capture: bitmap words from the AOT train step -> simulator.
+//!
+//! The train-step artifact (python/compile/model.py) returns, besides the
+//! updated parameters and metrics, one packed int32 bitmap word per
+//! 16-channel group for every layer's input activations (`A_l`) and
+//! output-activation gradients (`G_l`) — computed on-device by the
+//! Pallas `zero_bitmap16` kernel. This module reassembles them into
+//! [`TensorBitmap`]s keyed to the model's layer geometry.
+
+use crate::conv::ConvShape;
+use crate::tensor::TensorBitmap;
+
+/// One training step's sparsity observation for a whole model.
+#[derive(Debug, Clone)]
+pub struct StepTrace {
+    /// Per conv layer: (A bitmap, G bitmap).
+    pub layers: Vec<(TensorBitmap, TensorBitmap)>,
+    pub loss: f32,
+    pub accuracy: f32,
+}
+
+impl StepTrace {
+    /// Assemble from raw artifact outputs.
+    ///
+    /// `shapes[i]` is layer i's geometry; `a_words[i]` / `g_words[i]` the
+    /// packed words for its input-activation / output-gradient tensors.
+    pub fn from_words(
+        shapes: &[ConvShape],
+        a_words: &[Vec<i32>],
+        g_words: &[Vec<i32>],
+        loss: f32,
+        accuracy: f32,
+    ) -> anyhow::Result<StepTrace> {
+        anyhow::ensure!(
+            shapes.len() == a_words.len() && shapes.len() == g_words.len(),
+            "layer count mismatch: {} shapes, {} A, {} G",
+            shapes.len(),
+            a_words.len(),
+            g_words.len()
+        );
+        let mut layers = Vec::with_capacity(shapes.len());
+        for (i, s) in shapes.iter().enumerate() {
+            let a_dims = (s.n, s.h, s.w, s.c);
+            let g_dims = (s.n, s.out_h(), s.out_w(), s.f);
+            anyhow::ensure!(
+                a_words[i].len() * 16 == s.n * s.h * s.w * s.c,
+                "layer {i}: A words {} != {} values / 16",
+                a_words[i].len(),
+                s.n * s.h * s.w * s.c,
+            );
+            layers.push((
+                TensorBitmap::from_words_i32(a_dims, &a_words[i]),
+                TensorBitmap::from_words_i32(g_dims, &g_words[i]),
+            ));
+        }
+        Ok(StepTrace { layers, loss, accuracy })
+    }
+
+    /// Mean sparsity across all captured tensors (progress logging).
+    pub fn mean_sparsity(&self) -> (f64, f64) {
+        let n = self.layers.len().max(1) as f64;
+        let a = self.layers.iter().map(|(a, _)| a.sparsity()).sum::<f64>() / n;
+        let g = self.layers.iter().map(|(_, g)| g.sparsity()).sum::<f64>() / n;
+        (a, g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes() -> Vec<ConvShape> {
+        vec![
+            ConvShape::conv(2, 4, 4, 16, 32, 3, 1, 1),
+            ConvShape::conv(2, 4, 4, 32, 32, 3, 2, 1),
+        ]
+    }
+
+    #[test]
+    fn reassembles_bitmaps() {
+        let s = shapes();
+        let a0 = vec![0x0F0Fu16 as i32; 2 * 4 * 4 * 1];
+        let g0 = vec![0xFFFF_u16 as i32; 2 * 4 * 4 * 2];
+        let a1 = vec![0i32; 2 * 4 * 4 * 2];
+        let g1 = vec![1i32; 2 * 2 * 2 * 2];
+        let t = StepTrace::from_words(&s, &[a0, a1], &[g0, g1], 2.5, 0.1).unwrap();
+        assert_eq!(t.layers.len(), 2);
+        assert!((t.layers[0].0.sparsity() - 0.5).abs() < 1e-9);
+        assert_eq!(t.layers[0].1.density(), 1.0);
+        assert_eq!(t.layers[1].0.nonzeros(), 0);
+        assert!(t.layers[1].1.bit(0, 0, 0, 0));
+        assert!(!t.layers[1].1.bit(0, 0, 0, 1));
+        let (ma, mg) = t.mean_sparsity();
+        assert!(ma > 0.7 && mg < 0.6);
+    }
+
+    #[test]
+    fn rejects_mismatched_counts() {
+        let s = shapes();
+        assert!(StepTrace::from_words(&s, &[vec![0; 4]], &[vec![], vec![]], 0.0, 0.0).is_err());
+        // wrong word count for layer 0
+        assert!(
+            StepTrace::from_words(&s, &[vec![0; 3], vec![0; 64]], &[vec![0; 64], vec![0; 16]], 0.0, 0.0)
+                .is_err()
+        );
+    }
+}

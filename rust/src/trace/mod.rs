@@ -1,0 +1,21 @@
+//! Sparsity traces: where the simulator's zero bitmaps come from.
+//!
+//! Two sources, mirroring the paper's methodology (§4 "Collecting
+//! Traces") under this environment's substitutions (DESIGN.md):
+//!
+//! * [`capture`] — **real** traces: the coordinator runs the AOT-compiled
+//!   train step and converts the returned per-layer bitmap words into
+//!   [`crate::tensor::TensorBitmap`]s.
+//! * [`synthetic`] — synthetic tensors: uniformly random sparsity
+//!   (exactly the paper's Fig. 20 experiment) and the *clustered*
+//!   variant modelling the §4.4 observation that non-zeros concentrate
+//!   in a subset of 2-D feature maps.
+//! * [`profiles`] — per-model, per-epoch sparsity profiles for the nine
+//!   paper workloads, calibrated to the paper's reported anchors.
+
+pub mod capture;
+pub mod profiles;
+pub mod synthetic;
+
+pub use profiles::{ModelProfile, PHASES};
+pub use synthetic::{clustered_bitmap, random_bitmap};

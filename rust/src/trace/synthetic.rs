@@ -1,0 +1,174 @@
+//! Synthetic sparse tensors.
+//!
+//! [`random_bitmap`] draws each element i.i.d. — the paper's Fig. 20
+//! setup ("synthetically generated sparse tensors with sparsity levels
+//! from 10% up to 90%", uniformly random values).
+//!
+//! [`clustered_bitmap`] models the structure the paper identifies in
+//! §4.4: "non-zero activations and gradients tend to cluster in certain
+//! 2D feature maps whereas the other 2D maps become more sparse" —
+//! per (sample, channel) feature map, a density multiplier splits maps
+//! into mostly-dense and mostly-sparse populations while preserving the
+//! target average sparsity. This is what creates the row-imbalance that
+//! Fig. 17 measures.
+
+use crate::tensor::TensorBitmap;
+use crate::util::rng::Rng;
+
+/// i.i.d. Bernoulli bitmap with the given `sparsity` (fraction of zeros).
+pub fn random_bitmap(
+    dims: (usize, usize, usize, usize),
+    sparsity: f64,
+    rng: &mut Rng,
+) -> TensorBitmap {
+    let (n, h, w, c) = dims;
+    assert_eq!(c % 16, 0);
+    let density = 1.0 - sparsity.clamp(0.0, 1.0);
+    let words: Vec<u16> = (0..n * h * w * c / 16).map(|_| rng.mask16(density)).collect();
+    TensorBitmap::from_raw(dims, words)
+}
+
+/// Cluster strength used for model profiles: fraction of feature maps
+/// that hold most of the non-zeros.
+pub const DEFAULT_CLUSTER: f64 = 0.35;
+
+/// Clustered bitmap: a fraction `cluster` of the (sample, channel) maps
+/// are "feature-present" (dense-ish); the rest are mostly zero. Average
+/// density matches `1 - sparsity`.
+pub fn clustered_bitmap(
+    dims: (usize, usize, usize, usize),
+    sparsity: f64,
+    cluster: f64,
+    rng: &mut Rng,
+) -> TensorBitmap {
+    let (n, h, w, c) = dims;
+    assert_eq!(c % 16, 0);
+    let density = (1.0 - sparsity).clamp(0.0, 1.0);
+    let cluster = cluster.clamp(0.05, 1.0);
+    // Dense maps carry `hi`, sparse maps `lo`, with
+    // cluster*hi + (1-cluster)*lo = density and lo = 0.45 * hi (feature-
+    // present maps roughly twice as dense as feature-absent maps; real
+    // post-ReLU maps keep substantial zeros even when "present").
+    const LO_RATIO: f64 = 0.45;
+    let hi = (density / (cluster + (1.0 - cluster) * LO_RATIO)).min(1.0);
+    let lo = ((density - cluster * hi) / (1.0 - cluster)).max(0.0);
+    // Per-(n, c) map density: exactly round(cluster * maps) maps are
+    // dense (stratified draw — keeps the realised average density tight
+    // even for layers with few feature maps).
+    let maps = n * c;
+    let k = ((cluster * maps as f64).round() as usize).clamp(1, maps);
+    let mut map_density = vec![lo; maps];
+    for i in rng.sample_indices(maps, k) {
+        map_density[i] = hi;
+    }
+    // Pre-quantise per-map densities to the batched 8-bit thresholds.
+    let thresholds: Vec<[u16; 16]> = (0..n * cb_count(c))
+        .map(|mi| {
+            let ni = mi / cb_count(c);
+            let b = mi % cb_count(c);
+            let mut t = [0u16; 16];
+            for (l, tl) in t.iter_mut().enumerate() {
+                let d = map_density[ni * c + b * 16 + l];
+                *tl = if d >= 1.0 {
+                    256
+                } else if d <= 0.0 {
+                    0
+                } else {
+                    (d * 256.0).round().clamp(1.0, 255.0) as u16
+                };
+            }
+            t
+        })
+        .collect();
+    let cb = cb_count(c);
+    let mut words = vec![0u16; n * h * w * cb];
+    let mut i = 0;
+    for ni in 0..n {
+        for _y in 0..h {
+            for _x in 0..w {
+                for b in 0..cb {
+                    words[i] = rng.mask16_thresholds(&thresholds[ni * cb + b]);
+                    i += 1;
+                }
+            }
+        }
+    }
+    TensorBitmap::from_raw(dims, words)
+}
+
+#[inline]
+fn cb_count(c: usize) -> usize {
+    c / 16
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_density_matches_target() {
+        let mut rng = Rng::new(1);
+        for sp in [0.1, 0.5, 0.9] {
+            let bm = random_bitmap((4, 16, 16, 64), sp, &mut rng);
+            assert!(
+                (bm.sparsity() - sp).abs() < 0.02,
+                "target {sp}, got {}",
+                bm.sparsity()
+            );
+        }
+    }
+
+    #[test]
+    fn clustered_density_matches_target() {
+        let mut rng = Rng::new(2);
+        for sp in [0.3, 0.6, 0.85] {
+            let bm = clustered_bitmap((4, 14, 14, 128), sp, DEFAULT_CLUSTER, &mut rng);
+            assert!(
+                (bm.sparsity() - sp).abs() < 0.05,
+                "target {sp}, got {}",
+                bm.sparsity()
+            );
+        }
+    }
+
+    #[test]
+    fn clustered_has_per_map_variance() {
+        // Variance of per-map density must far exceed the i.i.d. case.
+        let mut rng = Rng::new(3);
+        let dims = (2, 16, 16, 64);
+        let spread = |bm: &TensorBitmap| {
+            let mut per_map = Vec::new();
+            for n in 0..dims.0 {
+                for c in 0..dims.3 {
+                    let mut nz = 0u64;
+                    for y in 0..dims.1 {
+                        for x in 0..dims.2 {
+                            nz += bm.bit(n, y, x, c) as u64;
+                        }
+                    }
+                    per_map.push(nz as f64 / (dims.1 * dims.2) as f64);
+                }
+            }
+            let m = per_map.iter().sum::<f64>() / per_map.len() as f64;
+            per_map.iter().map(|d| (d - m) * (d - m)).sum::<f64>() / per_map.len() as f64
+        };
+        let cl = clustered_bitmap(dims, 0.6, DEFAULT_CLUSTER, &mut rng);
+        let rd = random_bitmap(dims, 0.6, &mut rng);
+        assert!(
+            spread(&cl) > 10.0 * spread(&rd),
+            "clustered {} vs random {}",
+            spread(&cl),
+            spread(&rd)
+        );
+    }
+
+    #[test]
+    fn extremes() {
+        let mut rng = Rng::new(4);
+        assert_eq!(random_bitmap((1, 4, 4, 16), 1.0, &mut rng).nonzeros(), 0);
+        assert_eq!(
+            random_bitmap((1, 4, 4, 16), 0.0, &mut rng).density(),
+            1.0
+        );
+    }
+}

@@ -1,0 +1,83 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! Provides warm-up, repeated timed runs, and median/mean/stddev
+//! reporting. Used by every `benches/*.rs` target; those binaries also
+//! print the paper's table/figure rows they regenerate.
+
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: u32,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Run `f` with warmup then `iters` timed iterations. `f` must do the
+/// same work every call; return a value to defeat dead-code elimination
+/// (it is passed through `std::hint::black_box`).
+pub fn bench<T>(name: &str, warmup: u32, iters: u32, mut f: impl FnMut() -> T) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len() as f64;
+    let mean = samples.iter().sum::<f64>() / n;
+    let median = samples[samples.len() / 2];
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    let stats = BenchStats {
+        iters,
+        mean_ns: mean,
+        median_ns: median,
+        stddev_ns: var.sqrt(),
+        min_ns: samples[0],
+    };
+    println!(
+        "bench {name:<40} {:>12.3} ms/iter (median {:.3} ms, min {:.3} ms, sd {:.1}%, n={})",
+        stats.mean_ns / 1e6,
+        stats.median_ns / 1e6,
+        stats.min_ns / 1e6,
+        if mean > 0.0 { stats.stddev_ns / mean * 100.0 } else { 0.0 },
+        iters,
+    );
+    stats
+}
+
+/// Pretty separator for the table/figure sections benches print.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let s = bench("noop-ish", 1, 5, || {
+            let mut x = 0u64;
+            for i in 0..1000u64 {
+                x = x.wrapping_add(i * i);
+            }
+            x
+        });
+        assert!(s.mean_ns > 0.0);
+        assert!(s.min_ns <= s.median_ns);
+        assert_eq!(s.iters, 5);
+    }
+}

@@ -1,0 +1,123 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (testable) — flags must be listed
+    /// in `known_flags` so `--flag positional` is not mis-parsed.
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I, known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        out.flags.push(body.to_string());
+                    } else {
+                        let v = it.next().unwrap();
+                        out.options.insert(body.to_string(), v);
+                    }
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn parse(known_flags: &[&str]) -> Args {
+        Self::parse_from(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str], flags: &[&str]) -> Args {
+        Args::parse_from(s.iter().map(|v| v.to_string()), flags)
+    }
+
+    #[test]
+    fn positional_options_flags() {
+        let a = args(
+            &["repro", "--fig", "13", "--verbose", "--seed=7", "extra"],
+            &["verbose"],
+        );
+        assert_eq!(a.positional, vec!["repro", "extra"]);
+        assert_eq!(a.get("fig"), Some("13"));
+        assert_eq!(a.get("seed"), Some("7"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = args(&["--n", "5", "--x", "2.5"], &[]);
+        assert_eq!(a.get_usize("n", 0).unwrap(), 5);
+        assert_eq!(a.get_f64("x", 0.0).unwrap(), 2.5);
+        assert_eq!(a.get_usize("missing", 9).unwrap(), 9);
+        assert!(args(&["--n", "zz"], &[]).get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn unknown_flag_before_flag() {
+        let a = args(&["--a", "--b"], &[]);
+        assert!(a.flag("a"));
+        assert!(a.flag("b"));
+    }
+}

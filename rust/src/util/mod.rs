@@ -1,0 +1,11 @@
+//! Small in-repo substrates.
+//!
+//! The build environment is fully offline, so the usual ecosystem crates
+//! (clap, serde_json, rand, criterion, proptest) are unavailable; the
+//! pieces of them this project needs are implemented here. Each is
+//! deliberately minimal but fully tested.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;

@@ -1,0 +1,257 @@
+//! Property-based tests on the coordinator/simulator invariants.
+//!
+//! proptest is unavailable in this offline environment, so these are
+//! hand-rolled property tests: seeded random-case generators + shrink-free
+//! assertions over many trials. Each property is the kind of invariant
+//! the paper's hardware must uphold by construction.
+
+use tensordash::config::ChipConfig;
+use tensordash::conv::work::{build_stream, op_work, sample_passes};
+use tensordash::conv::{ConvShape, TrainOp, WgradSide};
+use tensordash::sim::connectivity::{Connectivity, LANES};
+use tensordash::sim::pe::{effectual_macs, simulate_stream_stats};
+use tensordash::sim::scheduler::{schedule_cycle, IDLE};
+use tensordash::sim::tile::{tile_pass_stats, DEFAULT_LEAD_LIMIT};
+use tensordash::tensor::{compress_one_side, decompress, TensorBitmap};
+use tensordash::trace::synthetic::{clustered_bitmap, random_bitmap};
+use tensordash::util::rng::Rng;
+
+const TRIALS: usize = 300;
+
+/// Property: every schedule is VALID — each selected option maps to an
+/// effectual slot, no slot is consumed twice, and every head-row bit is
+/// consumed (liveness).
+#[test]
+fn prop_schedule_validity() {
+    for depth in [2usize, 3] {
+        let conn = Connectivity::new(depth);
+        let mut rng = Rng::new(0xDA5);
+        for _ in 0..TRIALS * 10 {
+            let z = rng.next_u64() & conn.window_mask();
+            let s = schedule_cycle(&conn, z);
+            assert_eq!(s.picks & !z, 0, "picked ineffectual slot");
+            let mut seen = 0u64;
+            for lane in 0..LANES {
+                if s.ms[lane] == IDLE {
+                    continue;
+                }
+                let bit = 1u64 << conn.lanes[lane].bits[s.ms[lane] as usize];
+                assert_eq!(seen & bit, 0, "slot consumed twice");
+                seen |= bit;
+            }
+            assert_eq!(seen, s.picks, "picks bookkeeping");
+            // Liveness: head row always drains.
+            assert_eq!((z & !s.picks) & 0xFFFF, 0, "head row bit survived");
+            assert!(s.advance >= 1 || z == 0 || depth == 0);
+        }
+    }
+}
+
+/// Property: the PE never loses or duplicates work, never slows down,
+/// and respects the structural speedup caps.
+#[test]
+fn prop_pe_work_conservation_and_bounds() {
+    let mut rng = Rng::new(0xBEEF);
+    for depth in [2usize, 3] {
+        let conn = Connectivity::new(depth);
+        for _ in 0..TRIALS {
+            let len = 1 + rng.below(80);
+            let density = rng.f64();
+            let rows: Vec<u16> = (0..len).map(|_| rng.mask16(density)).collect();
+            let stats = simulate_stream_stats(&conn, &rows);
+            assert_eq!(stats.macs, effectual_macs(&rows), "work conservation");
+            assert!(stats.cycles <= len as u64, "slower than baseline");
+            let min_cycles = (effectual_macs(&rows).div_ceil(16))
+                .max((len as u64).div_ceil(depth as u64))
+                .min(len as u64)
+                .max(u64::from(len > 0));
+            assert!(stats.cycles >= min_cycles, "beat the structural caps");
+        }
+    }
+}
+
+/// Property: tile-level run is work conserving, bounded by the slowest
+/// row, and monotone in the lead bound.
+#[test]
+fn prop_tile_bounds_and_lead_monotonicity() {
+    let conn = Connectivity::new(3);
+    let mut rng = Rng::new(0x711E);
+    for _ in 0..80 {
+        let n_rows = 1 + rng.below(8);
+        let len = 5 + rng.below(40);
+        let streams: Vec<Vec<u16>> = (0..n_rows)
+            .map(|_| {
+                let d = rng.f64();
+                (0..len).map(|_| rng.mask16(d)).collect()
+            })
+            .collect();
+        let total: u64 = streams.iter().map(|s| effectual_macs(s)).sum();
+        let mut last = None;
+        // Wider lead bounds can only help.
+        for lead in [0usize, 2, DEFAULT_LEAD_LIMIT, 1000] {
+            let st = tile_pass_stats(&conn, &streams, lead);
+            assert_eq!(st.macs, total, "tile work conservation");
+            assert!(st.cycles <= len as u64);
+            if let Some(prev) = last {
+                assert!(st.cycles <= prev, "lead {lead} slower than tighter bound");
+            }
+            last = Some(st.cycles);
+        }
+    }
+}
+
+/// Property: scheduled-form compression round-trips losslessly at any
+/// sparsity and never exceeds the depth-x compression cap.
+#[test]
+fn prop_scheduled_roundtrip() {
+    let mut rng = Rng::new(0xC0DE);
+    for depth in [2usize, 3] {
+        let conn = Connectivity::new(depth);
+        for _ in 0..TRIALS {
+            let len = rng.below(60);
+            let density = rng.f64();
+            let dense: Vec<[f32; LANES]> = (0..len)
+                .map(|_| {
+                    let mut row = [0f32; LANES];
+                    for v in row.iter_mut() {
+                        if rng.chance(density) {
+                            *v = (rng.next_u64() % 1000 + 1) as f32;
+                        }
+                    }
+                    row
+                })
+                .collect();
+            let st = compress_one_side(&conn, &dense);
+            assert_eq!(decompress(&conn, &st), dense, "round trip");
+            assert!(st.compression() <= depth as f64 + 1e-9);
+        }
+    }
+}
+
+/// Property: every stream builder covers exactly the effectual MACs the
+/// tensor implies — summed over all B streams of an op, the stream bits
+/// equal the operand's non-zero count times its fan-out.
+#[test]
+fn prop_stream_builders_cover_tensor() {
+    let mut rng = Rng::new(0x57E);
+    for trial in 0..24 {
+        let stride = 1 + (trial % 2);
+        let s = ConvShape::conv(2, 6, 6, 16, 16, 3, stride, 1);
+        let a = random_bitmap((2, 6, 6, 16), 0.5, &mut rng);
+        let g = random_bitmap((2, s.out_h(), s.out_w(), 16), 0.5, &mut rng);
+
+        // Fwd: each A element appears once per window that covers it;
+        // total bits == effectual taps == sum over windows of non-zeros.
+        let w = op_work(&s, TrainOp::Fwd, WgradSide::Gradients);
+        let mut bits = 0u64;
+        for b in 0..w.b_groups {
+            bits += build_stream(&s, TrainOp::Fwd, WgradSide::Gradients, &a, &g, b)
+                .iter()
+                .map(|r| r.count_ones() as u64)
+                .sum::<u64>();
+        }
+        // Cross-check against a direct tap count.
+        let mut want = 0u64;
+        for n in 0..2 {
+            for oy in 0..s.out_h() {
+                for ox in 0..s.out_w() {
+                    for ky in 0..3 {
+                        for kx in 0..3 {
+                            let iy = (oy * stride + ky) as isize - 1;
+                            let ix = (ox * stride + kx) as isize - 1;
+                            if iy < 0 || ix < 0 || iy >= 6 || ix >= 6 {
+                                continue;
+                            }
+                            for c in 0..16 {
+                                if a.bit(n, iy as usize, ix as usize, c) {
+                                    want += 1;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        assert_eq!(bits, want, "fwd stream bit coverage (stride {stride})");
+
+        // Wgrad with B=G: every gradient element appears exactly once per
+        // stream, one stream per filter channel.
+        let mut gbits = 0u64;
+        for f in 0..16u64 {
+            gbits += build_stream(&s, TrainOp::Wgrad, WgradSide::Gradients, &a, &g, f)
+                .iter()
+                .map(|r| r.count_ones() as u64)
+                .sum::<u64>();
+        }
+        assert_eq!(gbits, g.nonzeros(), "wgrad stream covers G exactly once");
+    }
+}
+
+/// Property: igrad streams reference every gradient element exactly
+/// (kh*kw) times across all input positions at stride 1 (full conv).
+#[test]
+fn prop_igrad_fanout() {
+    let mut rng = Rng::new(0x16);
+    let s = ConvShape::conv(1, 6, 6, 16, 16, 3, 1, 1);
+    let g = random_bitmap((1, 6, 6, 16), 0.4, &mut rng);
+    let mut bits = 0u64;
+    for b in 0..(s.n * s.h * s.w) as u64 {
+        bits += build_stream(&s, TrainOp::Igrad, WgradSide::Gradients, &TensorBitmap::from_f32((1, 6, 6, 16), &vec![0.0; 6 * 6 * 16]), &g, b)
+            .iter()
+            .map(|r| r.count_ones() as u64)
+            .sum::<u64>();
+    }
+    // Each gradient at (oy, ox) feeds inputs y = oy - 1 .. oy + 1 (those
+    // inside bounds): interior gradients 9 taps, edges fewer.
+    let mut want = 0u64;
+    for oy in 0..6usize {
+        for ox in 0..6usize {
+            let fan_y = (oy.min(5 - oy) + 2).min(3) as u64;
+            let fan_x = (ox.min(5 - ox) + 2).min(3) as u64;
+            for c in 0..16 {
+                if g.bit(0, oy, ox, c) {
+                    want += fan_y.min(3) * fan_x.min(3);
+                }
+            }
+        }
+    }
+    assert_eq!(bits, want, "igrad fan-out");
+}
+
+/// Property: sampled pass weights always sum to the exact total pass
+/// count, for arbitrary geometry.
+#[test]
+fn prop_sampling_weights_exact() {
+    let mut rng = Rng::new(0x5A);
+    for _ in 0..40 {
+        let hw = 4 + rng.below(6);
+        let s = ConvShape::conv(1 + rng.below(3), hw, hw, 16, 16, 3, 1, 1);
+        let a = random_bitmap((s.n, s.h, s.w, 16), 0.5, &mut rng);
+        let g = random_bitmap((s.n, s.out_h(), s.out_w(), 16), 0.5, &mut rng);
+        let rows = 1 + rng.below(8);
+        let budget = 1 + rng.below(10);
+        let passes = sample_passes(&s, TrainOp::Fwd, WgradSide::Gradients, &a, &g, rows, budget, 1, &mut rng);
+        let total: u64 = passes.iter().map(|p| p.weight).sum();
+        let want = ((s.n * s.out_h() * s.out_w()) as u64).div_ceil(rows as u64);
+        assert_eq!(total, want);
+    }
+}
+
+/// Property: whole-model simulation never reports a slowdown and stays
+/// within the structural 3x cap, at any sparsity profile.
+#[test]
+fn prop_model_sim_bounds() {
+    let cfg = ChipConfig::default();
+    let mut rng = Rng::new(0xF00);
+    for trial in 0..10 {
+        let sp = trial as f64 / 10.0;
+        let s = ConvShape::conv(2, 8, 8, 32, 32, 3, 1, 1);
+        let a = clustered_bitmap((2, 8, 8, 32), sp, 0.35, &mut rng);
+        let g = clustered_bitmap((2, 8, 8, 32), sp, 0.35, &mut rng);
+        for op in TrainOp::ALL {
+            let r = tensordash::repro::simulate_layer_op(&cfg, &s, op, &a, &g, 4, 8, &mut rng);
+            assert!(r.speedup() >= 1.0 - 1e-9, "{op:?} slowdown at sparsity {sp}");
+            assert!(r.speedup() <= 3.0 + 1e-9, "{op:?} beat the cap at {sp}");
+        }
+    }
+}

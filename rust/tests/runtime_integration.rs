@@ -1,0 +1,228 @@
+//! Integration tests over the PJRT runtime + AOT artifacts.
+//!
+//! These tests exercise the python→HLO→rust boundary with real numerics:
+//! every artifact is executed and validated against plain-rust oracles.
+//! They require `make artifacts` (skipped with a notice otherwise).
+
+use tensordash::runtime::{literal_f32, literal_i32, to_f32, to_i32, Runtime};
+use tensordash::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("meta.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+fn rand_vec(n: usize, rng: &mut Rng, sparsity: f64) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            if rng.chance(sparsity) {
+                0.0
+            } else {
+                rng.normal() as f32
+            }
+        })
+        .collect()
+}
+
+/// Naive NHWC conv in plain rust — the oracle for the conv artifacts.
+#[allow(clippy::too_many_arguments)]
+fn conv_ref(
+    x: &[f32],
+    w: &[f32],
+    (n, h, wd, c): (usize, usize, usize, usize),
+    (kh, kw, _ci, f): (usize, usize, usize, usize),
+    stride: usize,
+    pad: usize,
+) -> Vec<f32> {
+    let oh = (h + 2 * pad - kh) / stride + 1;
+    let ow = (wd + 2 * pad - kw) / stride + 1;
+    let mut out = vec![0f32; n * oh * ow * f];
+    for ni in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                for fi in 0..f {
+                    let mut acc = 0f32;
+                    for ky in 0..kh {
+                        for kx in 0..kw {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            if iy < 0 || ix < 0 || iy >= h as isize || ix >= wd as isize {
+                                continue;
+                            }
+                            for ci in 0..c {
+                                acc += x[((ni * h + iy as usize) * wd + ix as usize) * c + ci]
+                                    * w[((ky * kw + kx) * c + ci) * f + fi];
+                            }
+                        }
+                    }
+                    out[((ni * oh + oy) * ow + ox) * f + fi] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn assert_close(got: &[f32], want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    let mut max_err = 0f32;
+    for (g, w) in got.iter().zip(want) {
+        max_err = max_err.max((g - w).abs());
+    }
+    assert!(max_err < tol, "{what}: max err {max_err}");
+}
+
+#[test]
+fn matmul_artifact_matches_rust_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let exe = rt.load("matmul").unwrap();
+    let mut rng = Rng::new(1);
+    let a = rand_vec(64 * 64, &mut rng, 0.3);
+    let b = rand_vec(64 * 64, &mut rng, 0.3);
+    let out = exe
+        .run(&[literal_f32(&[64, 64], &a).unwrap(), literal_f32(&[64, 64], &b).unwrap()])
+        .unwrap();
+    let got = to_f32(&out[0]).unwrap();
+    let mut want = vec![0f32; 64 * 64];
+    for i in 0..64 {
+        for k in 0..64 {
+            for j in 0..64 {
+                want[i * 64 + j] += a[i * 64 + k] * b[k * 64 + j];
+            }
+        }
+    }
+    assert_close(&got, &want, 1e-3, "matmul");
+}
+
+#[test]
+fn conv_fwd_artifact_matches_rust_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let meta = rt.meta().unwrap();
+    let xs = meta.path(&["conv2", "x"]).unwrap().as_usize_vec().unwrap();
+    let ws = meta.path(&["conv2", "w"]).unwrap().as_usize_vec().unwrap();
+    let stride = meta.path(&["conv2", "stride"]).unwrap().as_usize().unwrap();
+    let pad = meta.path(&["conv2", "padding"]).unwrap().as_usize().unwrap();
+    let exe = rt.load("conv_fwd").unwrap();
+    let mut rng = Rng::new(2);
+    let x = rand_vec(xs.iter().product(), &mut rng, 0.5);
+    let w = rand_vec(ws.iter().product(), &mut rng, 0.0);
+    let out = exe
+        .run(&[literal_f32(&xs, &x).unwrap(), literal_f32(&ws, &w).unwrap()])
+        .unwrap();
+    let got = to_f32(&out[0]).unwrap();
+    let want = conv_ref(
+        &x,
+        &w,
+        (xs[0], xs[1], xs[2], xs[3]),
+        (ws[0], ws[1], ws[2], ws[3]),
+        stride,
+        pad,
+    );
+    assert_close(&got, &want, 1e-3, "conv_fwd");
+}
+
+#[test]
+fn conv_gradient_artifacts_satisfy_dot_product_identity() {
+    // <conv_fwd(x, w), g> == <x, conv_igrad(g, w)> == <w, conv_wgrad(x, g)>
+    // — the adjoint identity pins BOTH backward artifacts to the forward
+    // one with no independent oracle needed.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let meta = rt.meta().unwrap();
+    let xs = meta.path(&["conv2", "x"]).unwrap().as_usize_vec().unwrap();
+    let ws = meta.path(&["conv2", "w"]).unwrap().as_usize_vec().unwrap();
+    let gs = meta.path(&["conv2", "g"]).unwrap().as_usize_vec().unwrap();
+    let fwd = rt.load("conv_fwd").unwrap();
+    let igrad = rt.load("conv_igrad").unwrap();
+    let wgrad = rt.load("conv_wgrad").unwrap();
+
+    let mut rng = Rng::new(3);
+    let x = rand_vec(xs.iter().product(), &mut rng, 0.4);
+    let w = rand_vec(ws.iter().product(), &mut rng, 0.0);
+    let g = rand_vec(gs.iter().product(), &mut rng, 0.4);
+
+    let o = to_f32(&fwd.run(&[literal_f32(&xs, &x).unwrap(), literal_f32(&ws, &w).unwrap()]).unwrap()[0]).unwrap();
+    let gx = to_f32(&igrad.run(&[literal_f32(&gs, &g).unwrap(), literal_f32(&ws, &w).unwrap()]).unwrap()[0]).unwrap();
+    let gw = to_f32(&wgrad.run(&[literal_f32(&xs, &x).unwrap(), literal_f32(&gs, &g).unwrap()]).unwrap()[0]).unwrap();
+
+    let dot = |a: &[f32], b: &[f32]| a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum::<f64>();
+    let og = dot(&o, &g);
+    let xgx = dot(&x, &gx);
+    let wgw = dot(&w, &gw);
+    let scale = og.abs().max(1.0);
+    assert!(
+        (og - xgx).abs() / scale < 1e-4,
+        "adjoint identity (igrad): {og} vs {xgx}"
+    );
+    assert!(
+        (og - wgw).abs() / scale < 1e-4,
+        "adjoint identity (wgrad): {og} vs {wgw}"
+    );
+}
+
+#[test]
+fn bitmap_artifact_matches_rust_bitmap() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let exe = rt.load("bitmap").unwrap();
+    let mut rng = Rng::new(4);
+    let x = rand_vec(256 * 16, &mut rng, 0.6);
+    let out = exe.run(&[literal_f32(&[256, 16], &x).unwrap()]).unwrap();
+    let got = to_i32(&out[0]).unwrap();
+    // Rust-side oracle: same packing as tensor::bitmap.
+    let bm = tensordash::tensor::TensorBitmap::from_f32((1, 1, 256, 16), &x);
+    let want: Vec<i32> = bm.words().iter().map(|&w| w as i32).collect();
+    assert_eq!(got, want, "on-device bitmap != rust bitmap");
+}
+
+#[test]
+fn init_artifact_is_deterministic_and_scaled() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let exe = rt.load("init").unwrap();
+    let p1 = exe.run(&[tensordash::runtime::literal_i32_scalar(5)]).unwrap();
+    let p2 = exe.run(&[tensordash::runtime::literal_i32_scalar(5)]).unwrap();
+    let p3 = exe.run(&[tensordash::runtime::literal_i32_scalar(6)]).unwrap();
+    assert_eq!(p1.len(), 5, "expect 5 params");
+    let v1 = to_f32(&p1[0]).unwrap();
+    assert_eq!(v1, to_f32(&p2[0]).unwrap(), "same seed, same params");
+    assert_ne!(v1, to_f32(&p3[0]).unwrap(), "different seed differs");
+    // He-scaled: sane magnitude.
+    let rms = (v1.iter().map(|v| v * v).sum::<f32>() / v1.len() as f32).sqrt();
+    assert!(rms > 0.01 && rms < 1.0, "w1 rms {rms}");
+    // Final bias starts at zero.
+    let bias = to_f32(&p1[4]).unwrap();
+    assert!(bias.iter().all(|&b| b == 0.0));
+}
+
+#[test]
+fn train_step_artifact_runs_and_reduces_loss() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::new(dir).unwrap();
+    let mut trainer = tensordash::coordinator::Trainer::new(&rt, 11).unwrap();
+    let (n, h, w, c) = trainer.meta.input;
+    let mut data = tensordash::coordinator::data::DataGen::new(h, w, c, trainer.meta.classes, 11);
+    let (x, y) = data.batch(n);
+    let mut losses = Vec::new();
+    for _ in 0..6 {
+        // Same batch: must overfit quickly.
+        let out = trainer.step(&x, &y).unwrap();
+        losses.push(out.loss);
+        // Bitmap sanity: layer-0 A bitmap must match the input batch.
+        let a0 = &out.trace.layers[0].0;
+        let want = tensordash::tensor::TensorBitmap::from_f32((n, h, w, c), &x);
+        assert_eq!(a0, &want, "on-device A0 bitmap != input zeros");
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.8),
+        "loss not decreasing: {losses:?}"
+    );
+    let _ = literal_i32(&[0]);
+}
