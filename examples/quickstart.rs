@@ -3,13 +3,15 @@
 //! 1. Load an AOT-compiled Pallas kernel (the 16-lane matmul) through the
 //!    PJRT runtime and check its numerics from rust.
 //! 2. Run one convolution layer through the TensorDash cycle simulator
-//!    at 60% activation sparsity and print the projected speedup.
+//!    at 60% activation sparsity via the typed `api::` pipeline (one
+//!    `SimRequest` per training op, executed on the `Engine`) and print
+//!    the projected speedup.
 //!
 //! Run: `make artifacts && cargo run --release --example quickstart`
 
+use tensordash::api::{Engine, SimRequest};
 use tensordash::config::ChipConfig;
 use tensordash::conv::{ConvShape, TrainOp};
-use tensordash::repro::simulate_layer_op;
 use tensordash::runtime::{literal_f32, to_f32, Runtime};
 use tensordash::trace::synthetic::clustered_bitmap;
 use tensordash::util::rng::Rng;
@@ -58,14 +60,31 @@ fn main() -> anyhow::Result<()> {
         a_bm.sparsity(),
         g_bm.sparsity()
     );
-    for op in TrainOp::ALL {
-        let r = simulate_layer_op(&cfg, &shape, op, &a_bm, &g_bm, 6, 16, &mut rng);
+    let engine = Engine::parallel();
+    let reqs: Vec<SimRequest> = TrainOp::ALL
+        .iter()
+        .map(|&op| {
+            SimRequest::single_op(
+                op.label(),
+                shape,
+                op,
+                a_bm.clone(),
+                g_bm.clone(),
+                16,
+                cfg.clone(),
+                6,
+                7 + op as u64,
+            )
+        })
+        .collect();
+    for (op, sim) in TrainOp::ALL.iter().zip(engine.run_all(&reqs)) {
+        let (base, td) = sim.per_op[*op as usize];
         println!(
             "  {:<4} speedup {:.2}x  (baseline {} cycles -> TensorDash {})",
             op.label(),
-            r.speedup(),
-            r.base_chip_cycles,
-            r.td_chip_cycles
+            sim.op_speedup(*op),
+            base,
+            td
         );
     }
     println!("\nquickstart OK");

@@ -1,52 +1,77 @@
-//! Sparsity sweep (the Fig. 20 experiment as a library example).
+//! Sparsity sweep (the Fig. 20 experiment as a library example), driven
+//! entirely through the typed `api::` pipeline.
 //!
 //! Sweeps uniformly random tensor sparsity from 10% to 90% on one layer
-//! geometry and prints achieved vs ideal speedup for all three training
+//! geometry and reports achieved vs ideal speedup for all three training
 //! convolutions, plus a depth-2 vs depth-3 comparison (Fig. 19's
-//! trade-off) on the same tensors.
+//! trade-off) on independently drawn tensors per level. The whole sweep
+//! is a batch of `SimRequest`s executed on the `Engine` worker pool —
+//! identical results at any `--jobs`-style worker count — and the final
+//! `Report` is printed as a table *and* dumped as JSON to show the
+//! machine-readable path.
 //!
 //! Run: `cargo run --release --example sparsity_sweep`
 
+use tensordash::api::{derive_seed, Cell, Engine, Report, SimRequest};
 use tensordash::config::ChipConfig;
 use tensordash::conv::{ConvShape, TrainOp};
-use tensordash::repro::simulate_layer_op;
-use tensordash::trace::synthetic::random_bitmap;
-use tensordash::util::rng::Rng;
 
 fn main() {
     let shape = ConvShape::conv(4, 28, 28, 128, 128, 3, 1, 1);
-    let mut rng = Rng::new(1);
-    println!("layer: 28x28x128 -> 128, 3x3, batch-equivalent 64\n");
+    let seed = 1u64;
+    let engine = Engine::parallel();
     println!(
-        "{:>8} {:>7} {:>7} | {:>6} {:>6} {:>6} | {:>8} {:>8}",
-        "sparsity", "ideal", "cap3", "A*W", "A*G", "W*G", "depth3", "depth2"
+        "layer: 28x28x128 -> 128, 3x3, batch-equivalent 64 ({} workers)\n",
+        engine.jobs()
     );
-    for lvl in 1..=9 {
+
+    // Two requests per sparsity level: the depth-3 chip (Fig. 20) and
+    // the depth-2 variant (Fig. 19's cheaper point), same seed so both
+    // see identical tensors.
+    let cfg3 = ChipConfig::default();
+    let cfg2 = ChipConfig::default().with_depth(2);
+    let mut reqs: Vec<SimRequest> = Vec::new();
+    for lvl in 1..=9u64 {
         let sp = lvl as f64 / 10.0;
-        let a = random_bitmap((4, 28, 28, 128), sp, &mut rng);
-        let g = random_bitmap((4, 28, 28, 128), sp, &mut rng);
-        let cfg3 = ChipConfig::default();
-        let cfg2 = ChipConfig::default().with_depth(2);
-        let mut sps = [0.0; 3];
-        for op in TrainOp::ALL {
-            let r = simulate_layer_op(&cfg3, &shape, op, &a, &g, 6, 16, &mut rng);
-            sps[op as usize] = r.speedup();
-        }
-        let d3 = simulate_layer_op(&cfg3, &shape, TrainOp::Fwd, &a, &g, 6, 16, &mut rng);
-        let d2 = simulate_layer_op(&cfg2, &shape, TrainOp::Fwd, &a, &g, 6, 16, &mut rng);
-        println!(
-            "{:>7.0}% {:>7.2} {:>7.2} | {:>6.2} {:>6.2} {:>6.2} | {:>8.2} {:>8.2}",
-            sp * 100.0,
-            1.0 / (1.0 - sp),
-            (1.0 / (1.0 - sp)).min(3.0),
-            sps[0],
-            sps[1],
-            sps[2],
-            d3.speedup(),
-            d2.speedup(),
-        );
-        assert!(d2.speedup() <= 2.01, "depth-2 cap violated");
+        let s = derive_seed(seed, lvl - 1);
+        reqs.push(SimRequest::random_sparse(shape, sp, 1, 16, cfg3.clone(), 6, s));
+        reqs.push(SimRequest::random_sparse(shape, sp, 1, 16, cfg2.clone(), 6, s));
+    }
+    let sims = engine.run_all(&reqs);
+
+    let mut r = Report::new(
+        "sparsity_sweep",
+        "Sparsity sweep — random tensors, depth 3 vs depth 2",
+        &["sparsity", "ideal", "cap3", "A*W", "A*G", "W*G", "depth3", "depth2"],
+    );
+    for lvl in 1..=9usize {
+        let sp = lvl as f64 / 10.0;
+        let d3 = &sims[(lvl - 1) * 2];
+        let d2 = &sims[(lvl - 1) * 2 + 1];
+        let sps: Vec<f64> = TrainOp::ALL.iter().map(|&op| d3.op_speedup(op)).collect();
+        r.row(vec![
+            Cell::fmt(format!("{:.0}%", sp * 100.0), sp),
+            Cell::num(1.0 / (1.0 - sp)),
+            Cell::num((1.0 / (1.0 - sp)).min(3.0)),
+            Cell::num(sps[0]),
+            Cell::num(sps[1]),
+            Cell::num(sps[2]),
+            Cell::num(d3.overall_speedup()),
+            Cell::num(d2.overall_speedup()),
+        ]);
+        assert!(d2.overall_speedup() <= 2.01, "depth-2 cap violated");
         assert!(sps.iter().all(|&s| s <= 3.01), "depth-3 cap violated");
+    }
+    r.print();
+
+    // The same report, machine-readable — what `--format json` emits.
+    println!("\nreport as tensordash.report.v1 JSON:\n{}", r.render_json());
+
+    // Determinism spot check: a serial engine reproduces the pool's
+    // results byte-for-byte.
+    let serial = Engine::serial().run_all(&reqs);
+    for (a, b) in sims.iter().zip(&serial) {
+        assert_eq!(a.per_op, b.per_op, "worker count changed a result");
     }
     println!("\nsparsity_sweep OK");
 }

@@ -4,17 +4,19 @@
 //! Eq.4/6/8 fwd/bwd through the Pallas kernels) for a few hundred SGD
 //! steps on the synthetic classification workload, entirely from rust
 //! via PJRT. Every step returns the per-layer zero bitmaps computed
-//! on-device by the Pallas `zero_bitmap16` kernel; periodically the
-//! cycle-accurate TensorDash simulator projects the speedup/energy the
-//! accelerator would achieve on those *real* tensors.
+//! on-device by the Pallas `zero_bitmap16` kernel; periodically a
+//! `SimRequest::trace` through the `api::Engine` projects the
+//! speedup/energy the accelerator would achieve on those *real*
+//! tensors, and the trajectory is emitted as a structured `Report`
+//! (table + JSON) at the end.
 //!
 //! This is the EXPERIMENTS.md §E2E run:
 //!   make artifacts && cargo run --release --example train_e2e [steps]
 
+use tensordash::api::{Cell, Engine, Report, SimRequest};
 use tensordash::config::ChipConfig;
 use tensordash::coordinator::data::DataGen;
 use tensordash::coordinator::Trainer;
-use tensordash::repro::simulate_trace;
 use tensordash::runtime::Runtime;
 
 fn main() -> anyhow::Result<()> {
@@ -41,6 +43,7 @@ fn main() -> anyhow::Result<()> {
     let mut data = DataGen::new(h, w, c, trainer.meta.classes, seed);
     let shapes = trainer.meta.convs.clone();
     let cfg = ChipConfig::default();
+    let engine = Engine::parallel();
 
     println!(
         "\n{:>5} {:>9} {:>6} {:>8} {:>8} {:>9}",
@@ -48,7 +51,11 @@ fn main() -> anyhow::Result<()> {
     );
     let mut first_loss = None;
     let mut last_loss = 0.0;
-    let mut speedups: Vec<(usize, f64)> = Vec::new();
+    let mut trajectory = Report::new(
+        "train_e2e",
+        "E2E — TensorDash projection on real training tensors",
+        &["step", "loss", "accuracy", "A sparsity", "G sparsity", "speedup"],
+    );
     for step in 1..=steps {
         let (x, y) = data.batch(n);
         let out = trainer.step(&x, &y)?;
@@ -56,8 +63,15 @@ fn main() -> anyhow::Result<()> {
         last_loss = out.loss;
         if step == 1 || step % 25 == 0 || step == steps {
             let (sa, sg) = out.trace.mean_sparsity();
-            let sim = simulate_trace(&cfg, &shapes, &out.trace.layers, 6, seed);
-            speedups.push((step, sim.overall_speedup()));
+            let req = SimRequest::trace(
+                "captured",
+                shapes.clone(),
+                out.trace.layers.clone(),
+                cfg.clone(),
+                6,
+                seed,
+            );
+            let sim = engine.run(&req);
             println!(
                 "{:>5} {:>9.4} {:>6.3} {:>8.3} {:>8.3} {:>8.2}x",
                 step,
@@ -67,6 +81,14 @@ fn main() -> anyhow::Result<()> {
                 sg,
                 sim.overall_speedup()
             );
+            trajectory.row(vec![
+                Cell::fmt(format!("{step}"), step as f64),
+                Cell::fmt(format!("{:.4}", out.loss), out.loss as f64),
+                Cell::fmt(format!("{:.3}", out.accuracy), out.accuracy as f64),
+                Cell::num(sa),
+                Cell::num(sg),
+                Cell::num(sim.overall_speedup()),
+            ]);
         }
     }
 
@@ -76,16 +98,12 @@ fn main() -> anyhow::Result<()> {
         last_loss < first * 0.5,
         "training did not converge (loss {first} -> {last_loss})"
     );
-    let final_speedup = speedups.last().unwrap().1;
+    let final_speedup = trajectory
+        .value(trajectory.rows.len() - 1, "speedup")
+        .expect("trajectory has at least the final step");
     println!("TensorDash projection on the trained model's real tensors: {final_speedup:.2}x");
-    println!(
-        "speedup trajectory: {}",
-        speedups
-            .iter()
-            .map(|(s, v)| format!("{s}:{v:.2}"))
-            .collect::<Vec<_>>()
-            .join(" ")
-    );
+    trajectory.print();
+    println!("\ntrajectory as JSON:\n{}", trajectory.render_json());
     println!("\ntrain_e2e OK — all three layers compose");
     Ok(())
 }

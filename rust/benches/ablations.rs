@@ -3,18 +3,21 @@
 //! inter-row lead bound, the DRAM bandwidth gate, and the §3.7
 //! iterative back-side scheduler.
 
+use tensordash::api::Engine;
 use tensordash::repro::ablations;
 use tensordash::util::bench::{bench, section};
 
 fn main() {
+    let engine = Engine::parallel();
     section("two-side vs one-side extraction (§3.1/Fig. 8)");
-    ablations::ablation_two_side(3, 42).print();
+    ablations::ablation_two_side(&engine, 3, 42).print();
     section("inter-row lead bound (DESIGN.md §2b)");
-    ablations::ablation_lead(3, 42).print();
+    ablations::ablation_lead(&engine, 3, 42).print();
     section("DRAM bandwidth gate (extension)");
-    ablations::ablation_dram_gate(3, 42).print();
+    ablations::ablation_dram_gate(&engine, 3, 42).print();
     section("back-side scheduler: combinational vs iterative (§3.7)");
     ablations::ablation_backside_scheduler().print();
     section("timing");
-    bench("two_side_layer", 0, 3, || ablations::ablation_two_side(2, 7));
+    let serial = Engine::serial();
+    bench("two_side_layer", 0, 3, || ablations::ablation_two_side(&serial, 2, 7));
 }

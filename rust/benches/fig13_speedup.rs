@@ -1,8 +1,12 @@
 //! Bench + regeneration of Fig. 13 (TensorDash speedup per model/op).
 //!
 //! The headline result: ~1.95x average speedup over the baseline on the
-//! default Table-2 configuration.
+//! default Table-2 configuration. The sweep goes through the typed
+//! `api::Engine`, so the same run also demonstrates the worker pool:
+//! the timing section compares 1 worker against all cores on the
+//! identical (byte-for-byte) result.
 
+use tensordash::api::Engine;
 use tensordash::config::ChipConfig;
 use tensordash::repro;
 use tensordash::util::bench::{bench, section};
@@ -11,9 +15,17 @@ fn main() {
     let cfg = ChipConfig::default();
     let samples = 6;
     let seed = 42;
+    let engine = Engine::parallel();
     section("Fig. 13 reproduction");
-    let sims = repro::run_fig13_sims(&cfg, samples, seed);
+    let sims = repro::run_fig13_sims(&engine, &cfg, samples, seed);
     repro::fig13(&sims).print();
-    section("timing (full 9-model sweep)");
-    bench("fig13_sweep", 0, 3, || repro::run_fig13_sims(&cfg, samples, seed));
+    section("timing (full 9-model sweep, 1 worker vs all cores)");
+    let serial = Engine::serial();
+    bench("fig13_sweep_jobs1", 0, 3, || repro::run_fig13_sims(&serial, &cfg, samples, seed));
+    bench(
+        &format!("fig13_sweep_jobs{}", engine.jobs()),
+        0,
+        3,
+        || repro::run_fig13_sims(&engine, &cfg, samples, seed),
+    );
 }

@@ -3,6 +3,7 @@
 //! Anchors: stable speedups; pruned ResNets settle after ~5% of training
 //! (DS90 ~1.95 -> ~1.8, SM90 ~1.75 -> ~1.5); dense models inverted-U.
 
+use tensordash::api::Engine;
 use tensordash::config::ChipConfig;
 use tensordash::repro;
 use tensordash::trace::profiles::ModelProfile;
@@ -10,8 +11,9 @@ use tensordash::util::bench::{bench, section};
 
 fn main() {
     let cfg = ChipConfig::default();
+    let engine = Engine::parallel();
     section("Fig. 14 reproduction");
-    repro::fig14(&cfg, 4, 42).print();
+    repro::fig14(&engine, &cfg, 4, 42).print();
     section("timing (one model, one epoch point)");
     let p = ModelProfile::for_model("resnet50").unwrap();
     bench("fig14_one_point", 1, 5, || {

@@ -4,13 +4,15 @@
 //! Anchors: compute-only efficiency ~1.89x, whole-chip ~1.6x; the core
 //! dominates total energy.
 
+use tensordash::api::Engine;
 use tensordash::config::ChipConfig;
 use tensordash::repro;
 use tensordash::util::bench::{bench, section};
 
 fn main() {
     let cfg = ChipConfig::default();
-    let sims = repro::run_fig13_sims(&cfg, 6, 42);
+    let engine = Engine::parallel();
+    let sims = repro::run_fig13_sims(&engine, &cfg, 6, 42);
     section("Fig. 15 reproduction");
     repro::fig15(&sims).print();
     section("Fig. 16 reproduction");

@@ -4,14 +4,16 @@
 //! Anchors: rows 1 -> 16 declines (~2.1x -> ~1.7x, inter-row work
 //! imbalance on the shared operand); columns barely matter.
 
+use tensordash::api::Engine;
 use tensordash::repro;
 use tensordash::util::bench::{bench, section};
 
 fn main() {
+    let engine = Engine::parallel();
     section("Fig. 17 reproduction (rows)");
-    repro::fig17_rows(4, 42).print();
+    repro::fig17_rows(&engine, 4, 42).print();
     section("Fig. 18 reproduction (columns)");
-    repro::fig18_cols(4, 42).print();
+    repro::fig18_cols(&engine, 4, 42).print();
     section("timing (16-row tile pass)");
     let conn = tensordash::sim::Connectivity::new(3);
     let mut rng = tensordash::util::rng::Rng::new(1);

@@ -5,14 +5,17 @@
 //! random tensors TensorDash tracks the ideal up to the 3x cap
 //! (~1.1x at 10% sparsity, ~2.95x at 90%).
 
+use tensordash::api::Engine;
 use tensordash::repro;
 use tensordash::util::bench::{bench, section};
 
 fn main() {
+    let engine = Engine::parallel();
     section("Fig. 19 reproduction");
-    repro::fig19(4, 42).print();
+    repro::fig19(&engine, 4, 42).print();
     section("Fig. 20 reproduction");
-    repro::fig20(10, 42).print();
+    repro::fig20(&engine, 10, 42).print();
     section("timing (fig20 one sparsity level, 2 samples)");
-    bench("fig20_two_samples", 0, 3, || repro::fig20(2, 7));
+    let serial = Engine::serial();
+    bench("fig20_two_samples", 0, 3, || repro::fig20(&serial, 2, 7));
 }

@@ -3,17 +3,38 @@
 //! The hardware scheduler is invoked once per simulated PE-cycle; its
 //! throughput bounds every experiment above. Tracked in EXPERIMENTS.md
 //! §Perf (before/after for each optimisation step).
+//!
+//! Besides the console log, the run emits its medians as
+//! `BENCH_scheduler.json` (or `$BENCH_OUT` if set) through the
+//! `util::json` writer, so CI archives one machine-readable perf point
+//! per PR.
+
+use std::collections::BTreeMap;
 
 use tensordash::sim::connectivity::Connectivity;
 use tensordash::sim::pe::simulate_stream_stats;
 use tensordash::sim::scheduler::schedule_cycle;
 use tensordash::sim::tile::tile_pass_stats;
-use tensordash::util::bench::{bench, section};
+use tensordash::util::bench::{bench, section, BenchStats};
+use tensordash::util::json::Json;
 use tensordash::util::rng::Rng;
+
+/// One benchmark record for the JSON perf log.
+fn record(name: &str, s: &BenchStats) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(name.to_string()));
+    m.insert("median_ns".to_string(), Json::Num(s.median_ns));
+    m.insert("mean_ns".to_string(), Json::Num(s.mean_ns));
+    m.insert("min_ns".to_string(), Json::Num(s.min_ns));
+    m.insert("stddev_ns".to_string(), Json::Num(s.stddev_ns));
+    m.insert("iters".to_string(), Json::Num(s.iters as f64));
+    Json::Obj(m)
+}
 
 fn main() {
     let conn = Connectivity::new(3);
     let mut rng = Rng::new(42);
+    let mut records: Vec<Json> = Vec::new();
 
     section("scheduler (single combinational cycle)");
     let zs: Vec<u64> = (0..4096).map(|_| rng.next_u64() & conn.window_mask()).collect();
@@ -25,25 +46,37 @@ fn main() {
         acc
     });
     println!("  -> {:.1} ns per schedule", s.median_ns / zs.len() as f64);
+    records.push(record("schedule_cycle_x4096", &s));
 
     section("PE stream simulation");
     for density in [0.2f64, 0.5, 0.9] {
         let rows: Vec<u16> = (0..16384).map(|_| rng.mask16(density)).collect();
-        let st = bench(
-            &format!("pe_stream_16k_rows_d{:.0}", density * 100.0),
-            3,
-            30,
-            || simulate_stream_stats(&conn, &rows),
-        );
+        let name = format!("pe_stream_16k_rows_d{:.0}", density * 100.0);
+        let st = bench(&name, 3, 30, || simulate_stream_stats(&conn, &rows));
         let cycles = simulate_stream_stats(&conn, &rows).cycles;
         println!(
             "  -> {:.1} ns per simulated cycle ({cycles} cycles)",
             st.median_ns / cycles as f64
         );
+        records.push(record(&name, &st));
     }
 
     section("tile pass (4 rows x 1024 steps)");
     let streams: Vec<Vec<u16>> =
         (0..4).map(|_| (0..1024).map(|_| rng.mask16(0.5)).collect()).collect();
-    bench("tile_pass_4x1024", 5, 100, || tile_pass_stats(&conn, &streams, 6));
+    let t = bench("tile_pass_4x1024", 5, 100, || tile_pass_stats(&conn, &streams, 6));
+    records.push(record("tile_pass_4x1024", &t));
+
+    // Machine-readable perf point for the BENCH_* trajectory.
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_scheduler.json".to_string());
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".to_string(), Json::Str("tensordash.bench.v1".to_string()));
+    doc.insert("bench".to_string(), Json::Str("scheduler_hotpath".to_string()));
+    doc.insert("records".to_string(), Json::Arr(records));
+    let mut text = Json::Obj(doc).render_pretty();
+    text.push('\n');
+    match std::fs::write(&out_path, text.as_bytes()) {
+        Ok(()) => println!("\nwrote {out_path} ({} bytes)", text.len()),
+        Err(e) => eprintln!("\ncould not write {out_path}: {e}"),
+    }
 }

@@ -5,17 +5,19 @@
 //! ~1.0005x; bf16 1.13x / 1.05x; GCN gains ~1% and loses <1% energy
 //! efficiency without power gating.
 
+use tensordash::api::Engine;
 use tensordash::config::DataType;
 use tensordash::repro;
 use tensordash::util::bench::{bench, section};
 
 fn main() {
+    let engine = Engine::parallel();
     section("Table 3 reproduction (FP32)");
     repro::table3(DataType::Fp32).print();
     section("Table 3 variant (bfloat16, §4.4)");
     repro::table3(DataType::Bf16).print();
     section("GCN no-sparsity control (§4.4)");
-    repro::gcn_control(6, 42).print();
+    repro::gcn_control(&engine, 6, 42).print();
     section("timing");
-    bench("table3_render", 10, 100, || repro::table3(DataType::Fp32).render());
+    bench("table3_render", 10, 100, || repro::table3(DataType::Fp32).render_text());
 }

@@ -1,0 +1,190 @@
+//! The experiment engine: executes [`SimRequest`]s on a `std::thread`
+//! worker pool.
+//!
+//! Design constraints:
+//!
+//! * **No new dependencies** — plain `std::thread::scope` workers over an
+//!   atomic work index (rayon is unavailable offline).
+//! * **Determinism** — every cell's result depends only on its own
+//!   request (config + workload + samples + seed), never on worker
+//!   count or completion order; results are re-assembled in submission
+//!   order. `--jobs 4` is byte-identical to `--jobs 1`.
+//! * **Throughput** — sweep cells are embarrassingly parallel (each is a
+//!   full cycle-simulation), so the pool scales until the hardware runs
+//!   out of cores.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::repro::{simulate_layer_op, simulate_profile, simulate_trace, ModelSim};
+use crate::trace::profiles::ModelProfile;
+use crate::trace::synthetic::random_bitmap;
+use crate::util::rng::Rng;
+
+use super::request::{SimRequest, Workload};
+
+/// Number of workers the engine uses when the caller does not say
+/// (`--jobs` unset): every available core.
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Executes requests; cheap to construct, freely shareable by reference.
+#[derive(Debug, Clone)]
+pub struct Engine {
+    jobs: usize,
+}
+
+impl Engine {
+    pub fn new(jobs: usize) -> Engine {
+        Engine { jobs: jobs.max(1) }
+    }
+
+    /// A single-threaded engine (tests, tiny workloads).
+    pub fn serial() -> Engine {
+        Engine::new(1)
+    }
+
+    /// An engine using [`default_jobs`] workers.
+    pub fn parallel() -> Engine {
+        Engine::new(default_jobs())
+    }
+
+    pub fn jobs(&self) -> usize {
+        self.jobs
+    }
+
+    /// Execute one request synchronously on the calling thread.
+    pub fn run(&self, req: &SimRequest) -> ModelSim {
+        execute(req)
+    }
+
+    /// Execute a batch of requests on the worker pool; results are in
+    /// input order regardless of worker count.
+    pub fn run_all(&self, reqs: &[SimRequest]) -> Vec<ModelSim> {
+        self.map(reqs.len(), |i| execute(&reqs[i]))
+    }
+
+    /// The pool primitive: compute `f(0..n)` with work stealing, return
+    /// results in index order. `f` only sees the cell index, so any
+    /// deterministic per-cell computation (not just `SimRequest`s) can
+    /// ride the pool — the geometry/ablation sweeps use this directly.
+    pub fn map<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        let jobs = self.jobs.min(n.max(1));
+        if jobs <= 1 {
+            return (0..n).map(f).collect();
+        }
+        let next = AtomicUsize::new(0);
+        let results: Mutex<Vec<(usize, T)>> = Mutex::new(Vec::with_capacity(n));
+        std::thread::scope(|s| {
+            for _ in 0..jobs {
+                s.spawn(|| {
+                    let mut local: Vec<(usize, T)> = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    results.lock().unwrap().extend(local);
+                });
+            }
+        });
+        let mut v = results.into_inner().unwrap();
+        v.sort_by_key(|(i, _)| *i);
+        v.into_iter().map(|(_, t)| t).collect()
+    }
+}
+
+/// Execute one request. Pure: depends only on the request contents.
+fn execute(req: &SimRequest) -> ModelSim {
+    match &req.workload {
+        Workload::Profile { model, epoch } => {
+            // Unknown names are rejected at request-build time; an
+            // invariant breach here should be loud.
+            let p = ModelProfile::for_model(model)
+                .unwrap_or_else(|| panic!("unknown model '{model}' reached the engine"));
+            let mut sim = simulate_profile(&req.cfg, &p, *epoch, req.samples, req.seed);
+            sim.name = req.label.clone();
+            sim
+        }
+        Workload::Trace { shapes, layers } => {
+            let mut sim = simulate_trace(&req.cfg, shapes, layers, req.samples, req.seed);
+            sim.name = req.label.clone();
+            sim
+        }
+        Workload::SingleOp { shape, op, a, g, batch_mult } => {
+            let mut rng = Rng::new(req.seed);
+            let r = simulate_layer_op(&req.cfg, shape, *op, a, g, req.samples, *batch_mult, &mut rng);
+            let mut per_op = [(0u64, 0u64); 3];
+            per_op[*op as usize] = (r.base_chip_cycles, r.td_chip_cycles);
+            ModelSim {
+                name: req.label.clone(),
+                per_op,
+                energy_base: r.energy_base,
+                energy_td: r.energy_td,
+            }
+        }
+        Workload::RandomSparse { shape, sparsity, samples_per_level, batch_mult } => {
+            use crate::conv::TrainOp;
+            let mut rng = Rng::new(req.seed);
+            let mut per_op = [(0u64, 0u64); 3];
+            let mut e_base = crate::energy::EnergyBreakdown::default();
+            let mut e_td = crate::energy::EnergyBreakdown::default();
+            for _ in 0..*samples_per_level {
+                let a = random_bitmap((shape.n, shape.h, shape.w, shape.c), *sparsity, &mut rng);
+                let g =
+                    random_bitmap((shape.n, shape.out_h(), shape.out_w(), shape.f), *sparsity, &mut rng);
+                for op in TrainOp::ALL {
+                    let r =
+                        simulate_layer_op(&req.cfg, shape, op, &a, &g, req.samples, *batch_mult, &mut rng);
+                    per_op[op as usize].0 += r.base_chip_cycles;
+                    per_op[op as usize].1 += r.td_chip_cycles;
+                    e_base.merge(&r.energy_base);
+                    e_td.merge(&r.energy_td);
+                }
+            }
+            ModelSim { name: req.label.clone(), per_op, energy_base: e_base, energy_td: e_td }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::SweepSpec;
+    use crate::config::ChipConfig;
+
+    #[test]
+    fn map_preserves_order_and_covers_all_indices() {
+        let e = Engine::new(4);
+        let out = e.map(97, |i| i * 3);
+        assert_eq!(out.len(), 97);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * 3);
+        }
+        // Serial path too.
+        assert_eq!(Engine::serial().map(5, |i| i), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn parallel_sweep_matches_serial_exactly() {
+        let cfg = ChipConfig::default();
+        // Two tiny-ish profile cells; samples=1 keeps this fast.
+        let spec = SweepSpec::models(&["alexnet", "gcn"], 0.4, &cfg, 1, 11);
+        let serial: Vec<ModelSim> = Engine::serial().run_all(&spec.cells());
+        let parallel: Vec<ModelSim> = Engine::new(4).run_all(&spec.cells());
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.per_op, b.per_op);
+            assert_eq!(a.energy_base.total_pj().to_bits(), b.energy_base.total_pj().to_bits());
+            assert_eq!(a.energy_td.total_pj().to_bits(), b.energy_td.total_pj().to_bits());
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! The typed experiment API — the single front door to the simulator.
+//!
+//! Every evaluation in the paper (Figs. 13–20, Table 3, the ablations)
+//! flows through the same pipeline:
+//!
+//! ```text
+//!   SimRequest / SweepSpec  ──►  Engine (--jobs N worker pool)  ──►  Report
+//!        what to run              deterministic execution         data first
+//!                                                                     │
+//!                                        ┌────────────────────────────┼───────────────┐
+//!                                   render_text()               render_json()    render_csv()
+//!                                (metrics::Table)          (tensordash.report.v1)
+//! ```
+//!
+//! * [`SimRequest`] — one unit of simulation: a [`Workload`] (model
+//!   profile, captured trace, random-sparsity level, or a single conv
+//!   op) plus `ChipConfig`, sampling budget and seed.
+//! * [`SweepSpec`] — a grid over `ChipConfig` × epoch × model that
+//!   expands to one request per cell with a seed derived by
+//!   [`derive_seed`], making results independent of worker count and
+//!   execution order.
+//! * [`Engine`] — executes requests on a `std::thread` pool
+//!   ([`Engine::map`] is the generic primitive the figure sweeps use).
+//! * [`Report`] / [`ReportRow`] / [`Cell`] — the structured result:
+//!   `repro::` figure functions *return* reports; text tables, JSON and
+//!   CSV are renderers over them, so every figure regenerates
+//!   identically — and machine-readably — from every entry point (CLI,
+//!   benches, examples, tests).
+
+pub mod engine;
+pub mod report;
+pub mod request;
+
+pub use engine::{default_jobs, Engine};
+pub use report::{report_set_json, Cell, Report, ReportRow, REPORT_SCHEMA, REPORT_SET_SCHEMA};
+pub use request::{derive_seed, SimRequest, SweepSpec, Workload};

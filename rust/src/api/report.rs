@@ -1,0 +1,303 @@
+//! Structured experiment results: data first, rendering second.
+//!
+//! Every figure/table in the reproduction is materialised as a
+//! [`Report`] — a titled grid of typed [`Cell`]s — before anything is
+//! printed. Renderers then turn one `Report` into the three interchange
+//! forms the pipeline needs:
+//!
+//! * `render_text()` — the aligned console table (via [`crate::metrics::Table`],
+//!   which is now *one renderer* over `Report`, not the result type);
+//! * `to_json()` / `render_json()` — the `tensordash.report.v1` schema
+//!   written through [`Json::render`](crate::util::json::Json), consumed
+//!   by CI, the `BENCH_*.json` perf trajectory and downstream tooling;
+//! * `render_csv()` — flat spreadsheet form.
+//!
+//! A numeric cell carries both its raw `f64` **and** the display text it
+//! was formatted with, so the JSON form is lossless in both directions:
+//! machine consumers read full-precision values while `from_json` can
+//! reconstruct a byte-identical text rendering.
+
+use std::collections::BTreeMap;
+
+use crate::metrics::{f2, Table};
+use crate::util::json::Json;
+
+/// One table cell: display text plus, for numeric cells, the raw value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cell {
+    pub text: String,
+    pub value: Option<f64>,
+}
+
+impl Cell {
+    /// A plain text cell (labels, dashes, blanks).
+    pub fn text(s: impl Into<String>) -> Cell {
+        Cell { text: s.into(), value: None }
+    }
+
+    /// An empty cell (geomean rows leave per-op columns blank).
+    pub fn empty() -> Cell {
+        Cell::text("")
+    }
+
+    /// A numeric cell with the default 2-decimal display format.
+    pub fn num(v: f64) -> Cell {
+        Cell { text: f2(v), value: Some(v) }
+    }
+
+    /// A numeric cell with caller-chosen display text (percentages,
+    /// `{:+.0}%` deltas, 3-decimal overheads, ...).
+    pub fn fmt(text: impl Into<String>, v: f64) -> Cell {
+        Cell { text: text.into(), value: Some(v) }
+    }
+}
+
+/// One report row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReportRow {
+    pub cells: Vec<Cell>,
+}
+
+/// A structured experiment result: the single type every `repro::`
+/// driver returns and every renderer/serialiser consumes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Report {
+    /// Stable machine identifier, e.g. `"fig13"`, `"table3_fp32"`.
+    pub id: String,
+    /// Human title (the old table heading).
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<ReportRow>,
+    /// Free-form provenance: seed, samples, jobs, config knobs.
+    pub meta: BTreeMap<String, Json>,
+}
+
+/// Version tag written into every serialised report.
+pub const REPORT_SCHEMA: &str = "tensordash.report.v1";
+/// Version tag for a multi-report document (`repro --all --format json`).
+pub const REPORT_SET_SCHEMA: &str = "tensordash.reportset.v1";
+
+impl Report {
+    pub fn new(id: impl Into<String>, title: impl Into<String>, columns: &[&str]) -> Report {
+        Report {
+            id: id.into(),
+            title: title.into(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+            meta: BTreeMap::new(),
+        }
+    }
+
+    /// Append a row; arity is checked against `columns`.
+    pub fn row(&mut self, cells: Vec<Cell>) {
+        assert_eq!(cells.len(), self.columns.len(), "report row arity mismatch");
+        self.rows.push(ReportRow { cells });
+    }
+
+    pub fn meta_num(&mut self, key: &str, v: f64) {
+        self.meta.insert(key.to_string(), Json::Num(v));
+    }
+
+    pub fn meta_str(&mut self, key: &str, v: &str) {
+        self.meta.insert(key.to_string(), Json::Str(v.to_string()));
+    }
+
+    /// Raw numeric value at (row, column-name), if that cell is numeric.
+    pub fn value(&self, row: usize, column: &str) -> Option<f64> {
+        let c = self.columns.iter().position(|c| c == column)?;
+        self.rows.get(row)?.cells.get(c)?.value
+    }
+
+    // -- renderers ----------------------------------------------------
+
+    /// The text renderer: lower onto [`crate::metrics::Table`].
+    pub fn to_table(&self) -> Table {
+        let href: Vec<&str> = self.columns.iter().map(|s| s.as_str()).collect();
+        let mut t = Table::new(self.title.clone(), &href);
+        for r in &self.rows {
+            t.row(r.cells.iter().map(|c| c.text.clone()).collect());
+        }
+        t
+    }
+
+    pub fn render_text(&self) -> String {
+        self.to_table().render()
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render_text());
+    }
+
+    /// The `tensordash.report.v1` JSON document.
+    pub fn to_json(&self) -> Json {
+        let mut obj = BTreeMap::new();
+        obj.insert("schema".to_string(), Json::Str(REPORT_SCHEMA.to_string()));
+        obj.insert("id".to_string(), Json::Str(self.id.clone()));
+        obj.insert("title".to_string(), Json::Str(self.title.clone()));
+        obj.insert(
+            "columns".to_string(),
+            Json::Arr(self.columns.iter().map(|c| Json::Str(c.clone())).collect()),
+        );
+        let rows = self
+            .rows
+            .iter()
+            .map(|r| {
+                let cells = r
+                    .cells
+                    .iter()
+                    .map(|c| {
+                        let mut m = BTreeMap::new();
+                        m.insert("text".to_string(), Json::Str(c.text.clone()));
+                        if let Some(v) = c.value {
+                            m.insert("value".to_string(), Json::Num(v));
+                        }
+                        Json::Obj(m)
+                    })
+                    .collect();
+                let mut m = BTreeMap::new();
+                m.insert("cells".to_string(), Json::Arr(cells));
+                Json::Obj(m)
+            })
+            .collect();
+        obj.insert("rows".to_string(), Json::Arr(rows));
+        if !self.meta.is_empty() {
+            obj.insert("meta".to_string(), Json::Obj(self.meta.clone()));
+        }
+        Json::Obj(obj)
+    }
+
+    pub fn render_json(&self) -> String {
+        self.to_json().render_pretty()
+    }
+
+    /// Reconstruct a report from its `tensordash.report.v1` JSON form.
+    /// Lossless: `from_json(parse(render_json(r))) == r`.
+    pub fn from_json(j: &Json) -> Option<Report> {
+        if j.get("schema")?.as_str()? != REPORT_SCHEMA {
+            return None;
+        }
+        let columns: Vec<String> =
+            j.get("columns")?.as_arr()?.iter().map(|c| c.as_str().map(str::to_string)).collect::<Option<_>>()?;
+        let mut rows = Vec::new();
+        for r in j.get("rows")?.as_arr()? {
+            let mut cells = Vec::new();
+            for c in r.get("cells")?.as_arr()? {
+                cells.push(Cell {
+                    text: c.get("text")?.as_str()?.to_string(),
+                    value: c.get("value").and_then(|v| v.as_f64()),
+                });
+            }
+            if cells.len() != columns.len() {
+                return None;
+            }
+            rows.push(ReportRow { cells });
+        }
+        let meta = match j.get("meta") {
+            Some(Json::Obj(m)) => m.clone(),
+            _ => BTreeMap::new(),
+        };
+        Some(Report {
+            id: j.get("id")?.as_str()?.to_string(),
+            title: j.get("title")?.as_str()?.to_string(),
+            columns,
+            rows,
+            meta,
+        })
+    }
+
+    /// CSV renderer (RFC-4180-style quoting; cell display text).
+    pub fn render_csv(&self) -> String {
+        fn esc(s: &str) -> String {
+            if s.contains(',') || s.contains('"') || s.contains('\n') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&self.columns.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.cells.iter().map(|c| esc(&c.text)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Combine reports into one JSON document: a single report stays a bare
+/// `tensordash.report.v1` object; several become a
+/// `tensordash.reportset.v1` wrapper.
+pub fn report_set_json(reports: &[Report]) -> Json {
+    if reports.len() == 1 {
+        return reports[0].to_json();
+    }
+    let mut obj = BTreeMap::new();
+    obj.insert("schema".to_string(), Json::Str(REPORT_SET_SCHEMA.to_string()));
+    obj.insert(
+        "reports".to_string(),
+        Json::Arr(reports.iter().map(|r| r.to_json()).collect()),
+    );
+    Json::Obj(obj)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo() -> Report {
+        let mut r = Report::new("demo", "Demo — speedups", &["model", "overall"]);
+        r.row(vec![Cell::text("alexnet"), Cell::num(1.953_222)]);
+        r.row(vec![Cell::text("gcn"), Cell::num(1.01)]);
+        r.meta_num("seed", 42.0);
+        r.meta_str("config", "default");
+        r
+    }
+
+    #[test]
+    fn text_render_matches_table() {
+        let r = demo();
+        let s = r.render_text();
+        assert!(s.contains("## Demo — speedups"));
+        assert!(s.contains("1.95"));
+        assert!(s.contains("alexnet"));
+    }
+
+    #[test]
+    fn json_round_trip_is_lossless() {
+        let r = demo();
+        let j = Json::parse(&r.render_json()).expect("report json parses");
+        let back = Report::from_json(&j).expect("report json reconstructs");
+        assert_eq!(back, r);
+        assert_eq!(back.render_text(), r.render_text());
+        // Full-precision value survives even though text is 2-decimal.
+        assert_eq!(back.value(0, "overall"), Some(1.953_222));
+    }
+
+    #[test]
+    fn csv_quotes_commas() {
+        let mut r = Report::new("x", "t", &["a", "b"]);
+        r.row(vec![Cell::text("v,w"), Cell::fmt("say \"hi\"", 1.0)]);
+        let csv = r.render_csv();
+        assert!(csv.starts_with("a,b\n"));
+        assert!(csv.contains("\"v,w\""));
+        assert!(csv.contains("\"say \"\"hi\"\"\""));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut r = Report::new("x", "t", &["a", "b"]);
+        r.row(vec![Cell::empty()]);
+    }
+
+    #[test]
+    fn report_set_wraps_multiple() {
+        let rs = [demo(), demo()];
+        let j = report_set_json(&rs);
+        assert_eq!(j.get("schema").unwrap().as_str(), Some(REPORT_SET_SCHEMA));
+        assert_eq!(j.get("reports").unwrap().as_arr().unwrap().len(), 2);
+        let single = report_set_json(&rs[..1]);
+        assert_eq!(single.get("schema").unwrap().as_str(), Some(REPORT_SCHEMA));
+    }
+}

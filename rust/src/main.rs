@@ -7,20 +7,25 @@
 //!             project TensorDash speedup from the captured sparsity
 //!   info      print configuration + area model summary
 //!
+//! Every result is built as a structured `api::Report` first; `--format`
+//! picks the renderer (aligned text table, `tensordash.report.v1` JSON,
+//! or CSV), `--out` redirects it to a file, and `--jobs` sizes the
+//! engine's worker pool — sweep results are byte-identical for every
+//! worker count thanks to per-cell seed derivation.
+//!
 //! Examples:
-//!   tensordash repro --all
-//!   tensordash repro --fig 13 --samples 6 --seed 42
+//!   tensordash repro --all --jobs 8
+//!   tensordash repro --fig 13 --samples 6 --seed 42 --format json --out fig13.json
 //!   tensordash simulate --model resnet50 --epoch 0.4
 //!   tensordash train --steps 50 --log-every 10
 
 use anyhow::Result;
+use tensordash::api::{self, Cell, Engine, Report, SimRequest};
 use tensordash::config::{ChipConfig, DataType};
 use tensordash::coordinator::data::DataGen;
 use tensordash::coordinator::Trainer;
-use tensordash::metrics::{f2, Table};
 use tensordash::repro;
 use tensordash::runtime::Runtime;
-use tensordash::trace::profiles::ModelProfile;
 use tensordash::util::cli::Args;
 
 const USAGE: &str = "usage: tensordash <repro|simulate|train|info> [options]
@@ -30,7 +35,15 @@ const USAGE: &str = "usage: tensordash <repro|simulate|train|info> [options]
            [--rows R] [--cols C] [--depth 2|3] [--bf16] [--power-gate]
   train    [--steps N] [--log-every K] [--seed S] [--artifacts DIR]
            [--samples N] [--sim-every K]
-  info";
+  info
+
+report options (repro, simulate, train):
+  --format table|json|csv   renderer (default table). json emits the
+                            tensordash.report.v1 schema; several reports
+                            nest in one tensordash.reportset.v1 document
+  --out FILE                write the rendering to FILE instead of stdout
+  --jobs N                  engine worker threads (default: all cores);
+                            results are byte-identical for any N";
 
 fn main() {
     let args = Args::parse(&["all", "bf16", "power-gate", "help"]);
@@ -69,7 +82,45 @@ fn chip_from_args(args: &Args) -> Result<ChipConfig> {
     Ok(cfg)
 }
 
+fn engine_from_args(args: &Args) -> Result<Engine> {
+    Ok(Engine::new(args.get_usize("jobs", api::default_jobs())?))
+}
+
+/// Validate `--format` up front, before any simulation runs — a typo
+/// should fail in milliseconds, not after a full sweep.
+fn report_format<'a>(args: &'a Args) -> Result<&'a str> {
+    let format = args.get_or("format", "table");
+    match format {
+        "table" | "json" | "csv" => Ok(format),
+        other => anyhow::bail!("unknown --format '{other}' (table|json|csv)"),
+    }
+}
+
+/// Render reports per `--format` and deliver them per `--out`.
+fn emit(reports: &[Report], args: &Args) -> Result<()> {
+    let rendered = match report_format(args)? {
+        "table" => reports.iter().map(|r| r.render_text()).collect::<Vec<_>>().join(""),
+        "json" => {
+            let mut s = api::report_set_json(reports).render_pretty();
+            s.push('\n');
+            s
+        }
+        "csv" => reports.iter().map(|r| r.render_csv()).collect::<Vec<_>>().join("\n"),
+        _ => unreachable!("report_format validated"),
+    };
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, rendered.as_bytes())
+                .map_err(|e| anyhow::anyhow!("writing {path}: {e}"))?;
+            eprintln!("wrote {path} ({} bytes)", rendered.len());
+        }
+        None => print!("{rendered}"),
+    }
+    Ok(())
+}
+
 fn cmd_repro(args: &Args) -> Result<()> {
+    let format = report_format(args)?;
     let samples = args.get_usize("samples", repro::DEFAULT_SAMPLES)?;
     let seed = args.get_u64("seed", 42)?;
     let all = args.flag("all");
@@ -78,98 +129,131 @@ fn cmd_repro(args: &Args) -> Result<()> {
     if !all && fig.is_none() && table.is_none() {
         anyhow::bail!("repro needs --all, --fig N or --table 3|bf16");
     }
+    let engine = engine_from_args(args)?;
     let cfg = ChipConfig::default();
     let want = |f: &str| all || fig.as_deref() == Some(f);
+    let mut reports: Vec<Report> = Vec::new();
+    // Progressive output: with the default table-to-stdout rendering,
+    // each figure prints as soon as it completes (a full --all run
+    // takes minutes); file/JSON/CSV deliveries stay whole-document.
+    let progressive = format == "table" && args.get("out").is_none();
+    let mut add = |r: Report| {
+        if progressive {
+            r.print();
+        }
+        reports.push(r);
+    };
 
     if want("1") {
-        repro::fig1().print();
+        add(repro::fig1());
     }
     // Figs 13/15/16 share one simulation sweep.
     if want("13") || want("15") || want("16") {
-        let sims = repro::run_fig13_sims(&cfg, samples, seed);
+        let sims = repro::run_fig13_sims(&engine, &cfg, samples, seed);
         if want("13") {
-            repro::fig13(&sims).print();
+            add(repro::fig13(&sims));
         }
         if want("15") {
-            repro::fig15(&sims).print();
+            add(repro::fig15(&sims));
         }
         if want("16") {
-            repro::fig16(&sims).print();
+            add(repro::fig16(&sims));
         }
     }
     if want("14") {
-        repro::fig14(&cfg, samples, seed).print();
+        add(repro::fig14(&engine, &cfg, samples, seed));
     }
     if want("17") {
-        repro::fig17_rows(samples, seed).print();
+        add(repro::fig17_rows(&engine, samples, seed));
     }
     if want("18") {
-        repro::fig18_cols(samples, seed).print();
+        add(repro::fig18_cols(&engine, samples, seed));
     }
     if want("19") {
-        repro::fig19(samples, seed).print();
+        add(repro::fig19(&engine, samples, seed));
     }
     if want("20") {
-        repro::fig20(10, seed).print();
+        // Fig. 20's sampling knob is tensor draws per sparsity level; it
+        // honors --samples like every other figure (default 10, the
+        // paper's setting).
+        let per_level = args.get_usize("samples", 10)?;
+        add(repro::fig20(&engine, per_level, seed));
     }
     if want("gcn") {
-        repro::gcn_control(samples, seed).print();
+        add(repro::gcn_control(&engine, samples, seed));
     }
     if all || table.as_deref() == Some("3") {
-        repro::table3(DataType::Fp32).print();
+        add(repro::table3(DataType::Fp32));
     }
     if all || table.as_deref() == Some("bf16") {
-        repro::table3(DataType::Bf16).print();
+        add(repro::table3(DataType::Bf16));
     }
     if all || fig.as_deref() == Some("ablations") {
-        repro::ablations::ablation_two_side(3, seed).print();
-        repro::ablations::ablation_lead(3, seed).print();
-        repro::ablations::ablation_dram_gate(3, seed).print();
-        repro::ablations::ablation_backside_scheduler().print();
+        add(repro::ablations::ablation_two_side(&engine, 3, seed));
+        add(repro::ablations::ablation_lead(&engine, 3, seed));
+        add(repro::ablations::ablation_dram_gate(&engine, 3, seed));
+        add(repro::ablations::ablation_backside_scheduler());
     }
     if all {
-        let (exact, sampled) = repro::validate_sampling(seed);
-        println!(
-            "\nsampling validation: exhaustive speedup {} vs sampled {} ({} passes)",
-            f2(exact),
-            f2(sampled),
-            samples
-        );
+        add(repro::sampling_report(seed));
     }
-    Ok(())
+    if progressive {
+        return Ok(());
+    }
+    emit(&reports, args)
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
+    report_format(args)?;
     let model = args.get("model").unwrap_or("resnet50").to_string();
     let epoch = args.get_f64("epoch", repro::MID_EPOCH)?;
     let samples = args.get_usize("samples", repro::DEFAULT_SAMPLES)?;
     let seed = args.get_u64("seed", 42)?;
     let cfg = chip_from_args(args)?;
-    let profile = ModelProfile::for_model(&model)
-        .ok_or_else(|| anyhow::anyhow!("unknown model '{model}' (see models::FIG13_MODELS)"))?;
-    let sim = repro::simulate_profile(&cfg, &profile, epoch, samples, seed);
-    let mut t = Table::new(
-        format!("{model} @ epoch {epoch} ({}x{} tile, depth {})", cfg.tile_rows, cfg.tile_cols, cfg.staging_depth),
+    let engine = engine_from_args(args)?;
+    let req = SimRequest::profile(&model, epoch, cfg.clone(), samples, seed)
+        .map_err(|e| anyhow::anyhow!(e))?;
+    let sim = engine.run(&req);
+
+    use tensordash::conv::TrainOp;
+    let mut r = Report::new(
+        "simulate",
+        format!(
+            "{model} @ epoch {epoch} ({}x{} tile, depth {})",
+            cfg.tile_rows, cfg.tile_cols, cfg.staging_depth
+        ),
         &["metric", "A*W", "A*G", "W*G", "overall"],
     );
-    use tensordash::conv::TrainOp;
-    t.row(vec![
-        "speedup".into(),
-        f2(sim.op_speedup(TrainOp::Fwd)),
-        f2(sim.op_speedup(TrainOp::Igrad)),
-        f2(sim.op_speedup(TrainOp::Wgrad)),
-        f2(sim.overall_speedup()),
+    r.row(vec![
+        Cell::text("speedup"),
+        Cell::num(sim.op_speedup(TrainOp::Fwd)),
+        Cell::num(sim.op_speedup(TrainOp::Igrad)),
+        Cell::num(sim.op_speedup(TrainOp::Wgrad)),
+        Cell::num(sim.overall_speedup()),
     ]);
-    t.print();
-    println!(
-        "energy efficiency: compute {}x, whole chip {}x",
-        f2(sim.compute_efficiency()),
-        f2(sim.total_efficiency())
-    );
-    Ok(())
+    r.row(vec![
+        Cell::text("compute efficiency"),
+        Cell::empty(),
+        Cell::empty(),
+        Cell::empty(),
+        Cell::num(sim.compute_efficiency()),
+    ]);
+    r.row(vec![
+        Cell::text("whole-chip efficiency"),
+        Cell::empty(),
+        Cell::empty(),
+        Cell::empty(),
+        Cell::num(sim.total_efficiency()),
+    ]);
+    r.meta_str("model", &model);
+    r.meta_num("epoch", epoch);
+    r.meta_num("seed", seed as f64);
+    r.meta_num("samples", samples as f64);
+    emit(&[r], args)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
+    report_format(args)?;
     let steps = args.get_usize("steps", 50)?;
     let log_every = args.get_usize("log-every", 10)?.max(1);
     let sim_every = args.get_usize("sim-every", 10)?.max(1);
@@ -177,13 +261,16 @@ fn cmd_train(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 42)?;
     let dir = args.get_or("artifacts", "artifacts");
     let cfg = chip_from_args(args)?;
+    let engine = engine_from_args(args)?;
 
     let rt = Runtime::new(dir)?;
-    println!("PJRT platform: {}", rt.platform());
+    // Progress goes to stderr: stdout belongs to the report, so
+    // `train --format json | jq` stays parseable.
+    eprintln!("PJRT platform: {}", rt.platform());
     let mut trainer = Trainer::new(&rt, seed as i32)?;
     let (n, h, w, c) = trainer.meta.input;
     let mut data = DataGen::new(h, w, c, trainer.meta.classes, seed);
-    println!(
+    eprintln!(
         "model: {} conv layers, batch {}, input {}x{}x{}, {} classes",
         trainer.meta.convs.len(),
         n,
@@ -193,32 +280,62 @@ fn cmd_train(args: &Args) -> Result<()> {
         trainer.meta.classes
     );
     let shapes = trainer.meta.convs.clone();
-    let mut last_sim: Option<tensordash::repro::ModelSim> = None;
+    let mut report = Report::new(
+        "train_projection",
+        format!("TensorDash projection over {steps} real training steps"),
+        &["step", "loss", "accuracy", "A sparsity", "G sparsity", "speedup", "compute eff", "chip eff"],
+    );
+    report.meta_num("seed", seed as f64);
+    report.meta_num("samples", samples as f64);
     for step in 1..=steps {
         let (x, y) = data.batch(n);
         let out = trainer.step(&x, &y)?;
-        if step % log_every == 0 || step == 1 || step == steps {
-            let (sa, sg) = out.trace.mean_sparsity();
-            println!(
+        let should_log = step % log_every == 0 || step == 1 || step == steps;
+        let should_sim = step % sim_every == 0 || step == steps;
+        if !(should_log || should_sim) {
+            continue;
+        }
+        // Bitmap popcounts are not free; only pay them on steps that
+        // log or simulate.
+        let (sa, sg) = out.trace.mean_sparsity();
+        if should_log {
+            eprintln!(
                 "step {:>4}  loss {:.4}  acc {:.3}  sparsity A {:.2} G {:.2}",
                 step, out.loss, out.accuracy, sa, sg
             );
         }
-        if step % sim_every == 0 || step == steps {
-            let sim = repro::simulate_trace(&cfg, &shapes, &out.trace.layers, samples, seed);
-            println!(
+        if should_sim {
+            let req = SimRequest::trace(
+                "captured",
+                shapes.clone(),
+                out.trace.layers.clone(),
+                cfg.clone(),
+                samples,
+                seed,
+            );
+            let sim = engine.run(&req);
+            eprintln!(
                 "        projected TensorDash speedup {:.2}x (compute eff {:.2}x, chip eff {:.2}x)",
                 sim.overall_speedup(),
                 sim.compute_efficiency(),
                 sim.total_efficiency()
             );
-            last_sim = Some(sim);
+            report.row(vec![
+                Cell::fmt(format!("{step}"), step as f64),
+                Cell::fmt(format!("{:.4}", out.loss), out.loss as f64),
+                Cell::fmt(format!("{:.3}", out.accuracy), out.accuracy as f64),
+                Cell::num(sa),
+                Cell::num(sg),
+                Cell::num(sim.overall_speedup()),
+                Cell::num(sim.compute_efficiency()),
+                Cell::num(sim.total_efficiency()),
+            ]);
         }
     }
-    if let Some(sim) = last_sim {
-        println!("\nfinal projection: {:.2}x speedup", sim.overall_speedup());
+    if let Some(last) = report.rows.last() {
+        eprintln!("\nfinal projection: {} speedup", last.cells[5].text);
     }
-    Ok(())
+    emit(&[report], args)
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

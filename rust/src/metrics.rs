@@ -1,4 +1,10 @@
-//! Plain-text table rendering for the experiment reports.
+//! Plain-text table rendering — the *text renderer* of the experiment
+//! pipeline.
+//!
+//! Since the typed-API redesign, experiment results are
+//! [`crate::api::Report`]s; `Table` is one renderer over them (via
+//! `Report::to_table`), alongside the JSON and CSV renderers. Nothing
+//! builds `Table`s as a result type anymore.
 
 /// A simple aligned-column table printer.
 #[derive(Debug, Clone, Default)]

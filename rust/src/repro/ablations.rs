@@ -12,12 +12,18 @@
 //! * **DRAM gate** — the optional bandwidth-bound performance model.
 //! * **Iterative back-side scheduler** (§3.7) — same schedule over 6
 //!   cycles; reported as compression throughput.
+//!
+//! Like the figure drivers, every ablation returns a structured
+//! [`Report`] and fans its cells out over the [`Engine`] worker pool
+//! with per-cell derived seeds (config variants of the same workload
+//! share a seed so the comparison columns see identical tensors).
 
+use crate::api::{derive_seed, Cell, Engine, Report};
 use crate::config::ChipConfig;
 use crate::conv::stream::{fwd_weight_stream, igrad_weight_stream, wgrad_a_stream};
 use crate::conv::work::{build_stream, op_work, pick_wgrad_side};
 use crate::conv::{ConvShape, TrainOp, WgradSide};
-use crate::metrics::{f2, geomean, Table};
+use crate::metrics::{f2, geomean};
 use crate::sim::pe::simulate_stream;
 use crate::sim::Connectivity;
 use crate::tensor::TensorBitmap;
@@ -110,64 +116,79 @@ pub fn layer_two_side(
 
 /// Ablation: one-side (the paper's evaluated config) vs two-side (its
 /// deferred option) on the dense and pruned ResNet-50 variants.
-pub fn ablation_two_side(samples: usize, seed: u64) -> Table {
-    let mut t = Table::new(
+pub fn ablation_two_side(engine: &Engine, samples: usize, seed: u64) -> Report {
+    let mut r = Report::new(
+        "ablation_two_side",
         "Ablation — one-side (Fig. 11) vs two-side (Fig. 8) extraction",
         &["model", "op", "one-side", "two-side", "gain"],
     );
     let cfg = ChipConfig::default();
-    for model in ["resnet50", "resnet50_DS90", "resnet50_SM90"] {
-        let p = ModelProfile::for_model(model).unwrap();
-        // A mid-network bottleneck 3x3 (layer index 10 = s2b3 conv) is
-        // representative; full-model two-side sims are quadratic in tile
-        // size and this is an ablation, not a headline.
-        let i = 10;
-        let (a_bm, g_bm) = p.layer_bitmaps(i, crate::repro::MID_EPOCH, seed);
-        let w_bm = p.layer_weight_bitmap(i, seed);
-        let mut rng = Rng::new(seed);
-        for op in TrainOp::ALL {
-            let (one, two) = layer_two_side(
-                &cfg,
-                &p.topology.layers[i].shape,
-                op,
-                &a_bm,
-                &g_bm,
-                &w_bm,
-                samples,
-                &mut rng,
-            );
-            t.row(vec![
-                model.to_string(),
-                op.label().to_string(),
-                f2(one),
-                f2(two),
-                format!("{:+.0}%", (two / one - 1.0) * 100.0),
-            ]);
-        }
+    let models = ["resnet50", "resnet50_DS90", "resnet50_SM90"];
+    // A mid-network bottleneck 3x3 (layer index 10 = s2b3 conv) is
+    // representative; full-model two-side sims are quadratic in tile
+    // size and this is an ablation, not a headline.
+    let li = 10;
+    // Bitmaps depend only on (model, seed): synthesize each model's
+    // tensors once and share them across its three op cells.
+    let inputs: Vec<_> = models
+        .iter()
+        .map(|m| {
+            let p = ModelProfile::for_model(m).unwrap();
+            let (a_bm, g_bm) = p.layer_bitmaps(li, crate::repro::MID_EPOCH, seed);
+            let w_bm = p.layer_weight_bitmap(li, seed);
+            (a_bm, g_bm, w_bm, p.topology.layers[li].shape)
+        })
+        .collect();
+    // One cell per (model, op); pass sampling is per-cell seeded.
+    let cells = engine.map(models.len() * TrainOp::ALL.len(), |i| {
+        let (a_bm, g_bm, w_bm, shape) = &inputs[i / TrainOp::ALL.len()];
+        let op = TrainOp::ALL[i % TrainOp::ALL.len()];
+        let mut rng = Rng::new(derive_seed(seed, i as u64));
+        layer_two_side(&cfg, shape, op, a_bm, g_bm, w_bm, samples, &mut rng)
+    });
+    for (i, (one, two)) in cells.iter().enumerate() {
+        let model = models[i / TrainOp::ALL.len()];
+        let op = TrainOp::ALL[i % TrainOp::ALL.len()];
+        let gain = two / one - 1.0;
+        r.row(vec![
+            Cell::text(model),
+            Cell::text(op.label()),
+            Cell::num(*one),
+            Cell::num(*two),
+            Cell::fmt(format!("{:+.0}%", gain * 100.0), gain),
+        ]);
     }
-    t
+    r
 }
 
 /// Ablation: the inter-row lead bound (DESIGN.md §2b).
-pub fn ablation_lead(samples: usize, seed: u64) -> Table {
-    let mut t = Table::new(
+pub fn ablation_lead(engine: &Engine, samples: usize, seed: u64) -> Report {
+    let mut r = Report::new(
+        "ablation_lead",
         "Ablation — shared-operand lead bound (rows may run ahead by N)",
         &["lead", "geomean speedup"],
     );
-    for lead in [0usize, 2, 6, 16, 4096] {
-        let mut vals = Vec::new();
-        for m in crate::models::FIG13_MODELS {
-            if m == "gcn" {
-                continue;
-            }
-            let p = ModelProfile::for_model(m).unwrap();
-            let mut cfg = ChipConfig::default();
-            cfg.lead_limit = lead;
-            vals.push(
-                crate::repro::simulate_profile(&cfg, &p, crate::repro::MID_EPOCH, samples, seed)
-                    .overall_speedup(),
-            );
-        }
+    let leads = [0usize, 2, 6, 16, 4096];
+    let models: Vec<&str> =
+        crate::models::FIG13_MODELS.iter().copied().filter(|m| *m != "gcn").collect();
+    // Flat (lead, model) grid; each model keeps one derived seed across
+    // all lead settings so the column stays comparable.
+    let vals = engine.map(leads.len() * models.len(), |i| {
+        let lead = leads[i / models.len()];
+        let mi = i % models.len();
+        let p = ModelProfile::for_model(models[mi]).unwrap();
+        let mut cfg = ChipConfig::default();
+        cfg.lead_limit = lead;
+        crate::repro::simulate_profile(
+            &cfg,
+            &p,
+            crate::repro::MID_EPOCH,
+            samples,
+            derive_seed(seed, mi as u64),
+        )
+        .overall_speedup()
+    });
+    for (j, &lead) in leads.iter().enumerate() {
         let label = if lead == 0 {
             "0 (lockstep)".to_string()
         } else if lead >= 4096 {
@@ -175,37 +196,49 @@ pub fn ablation_lead(samples: usize, seed: u64) -> Table {
         } else {
             lead.to_string()
         };
-        t.row(vec![label, f2(geomean(vals))]);
+        let slice = &vals[j * models.len()..(j + 1) * models.len()];
+        r.row(vec![Cell::text(label), Cell::num(geomean(slice.iter().copied()))]);
     }
-    t
+    r
 }
 
 /// Ablation: compute-bound (paper) vs DRAM-bandwidth-gated performance.
-pub fn ablation_dram_gate(samples: usize, seed: u64) -> Table {
-    let mut t = Table::new(
+pub fn ablation_dram_gate(engine: &Engine, samples: usize, seed: u64) -> Report {
+    let mut r = Report::new(
+        "ablation_dram_gate",
         "Ablation — DRAM bandwidth gate (extension; paper model is compute bound)",
         &["model", "compute-bound", "bandwidth-gated"],
     );
-    for m in ["alexnet", "resnet50", "vgg16", "snli"] {
-        let p = ModelProfile::for_model(m).unwrap();
-        let plain =
-            crate::repro::simulate_profile(&ChipConfig::default(), &p, crate::repro::MID_EPOCH, samples, seed);
-        let mut gated_cfg = ChipConfig::default();
-        gated_cfg.dram_gate = true;
-        let gated =
-            crate::repro::simulate_profile(&gated_cfg, &p, crate::repro::MID_EPOCH, samples, seed);
-        t.row(vec![
-            m.to_string(),
-            f2(plain.overall_speedup()),
-            f2(gated.overall_speedup()),
+    let models = ["alexnet", "resnet50", "vgg16", "snli"];
+    // (model, gated?) grid; both variants of a model share its seed.
+    let vals = engine.map(models.len() * 2, |i| {
+        let mi = i / 2;
+        let gated = i % 2 == 1;
+        let p = ModelProfile::for_model(models[mi]).unwrap();
+        let mut cfg = ChipConfig::default();
+        cfg.dram_gate = gated;
+        crate::repro::simulate_profile(
+            &cfg,
+            &p,
+            crate::repro::MID_EPOCH,
+            samples,
+            derive_seed(seed, mi as u64),
+        )
+        .overall_speedup()
+    });
+    for (mi, m) in models.iter().enumerate() {
+        r.row(vec![
+            Cell::text(*m),
+            Cell::num(vals[mi * 2]),
+            Cell::num(vals[mi * 2 + 1]),
         ]);
     }
-    t
+    r
 }
 
 /// §3.7 — back-side scheduler as a compression engine: combinational vs
 /// iterative cost for compressing a tensor into scheduled form.
-pub fn ablation_backside_scheduler() -> Table {
+pub fn ablation_backside_scheduler() -> Report {
     use crate::sim::scheduler::{schedule_cycle, schedule_iterative};
     let conn = Connectivity::new(3);
     let mut rng = Rng::new(77);
@@ -225,21 +258,24 @@ pub fn ablation_backside_scheduler() -> Table {
         comb_cycles += 1;
         iter_cycles += c;
     }
-    let mut t = Table::new(
+    let mut r = Report::new(
+        "ablation_backside_scheduler",
         "§3.7 — back-side scheduler: combinational vs iterative",
         &["variant", "cycles / scheduled row", "relative hw cost"],
     );
-    t.row(vec![
-        "combinational (6 levels)".into(),
-        f2(comb_cycles as f64 / rows.len() as f64),
-        "1.00 (all levels)".into(),
+    let comb = comb_cycles as f64 / rows.len() as f64;
+    let iter = iter_cycles as f64 / rows.len() as f64;
+    r.row(vec![
+        Cell::text("combinational (6 levels)"),
+        Cell::fmt(f2(comb), comb),
+        Cell::text("1.00 (all levels)"),
     ]);
-    t.row(vec![
-        "iterative (1 level reused)".into(),
-        f2(iter_cycles as f64 / rows.len() as f64),
-        "~0.17 (one level)".into(),
+    r.row(vec![
+        Cell::text("iterative (1 level reused)"),
+        Cell::fmt(f2(iter), iter),
+        Cell::text("~0.17 (one level)"),
     ]);
-    t
+    r
 }
 
 #[cfg(test)]
@@ -298,8 +334,15 @@ mod tests {
 
     #[test]
     fn backside_table_builds() {
-        let t = ablation_backside_scheduler().render();
+        let t = ablation_backside_scheduler().render_text();
         assert!(t.contains("6.00"));
         assert!(t.contains("1.00"));
+    }
+
+    #[test]
+    fn two_side_ablation_deterministic_across_jobs() {
+        let a = ablation_two_side(&Engine::serial(), 1, 3);
+        let b = ablation_two_side(&Engine::new(3), 1, 3);
+        assert_eq!(a, b);
     }
 }

@@ -51,6 +51,47 @@ impl Schedule {
     }
 }
 
+/// One lane's 8-to-3 static priority encoder: pick the lane's highest-
+/// priority available option out of `remaining`, record the mux select
+/// in `ms` and consume the picked bit. The single implementation shared
+/// by the combinational ([`schedule_cycle`]) and iterative
+/// ([`schedule_iterative`]) schedulers — they differ only in how many
+/// cycles the level walk costs, never in selection semantics.
+#[inline(always)]
+fn encode_lane(
+    conn: &Connectivity,
+    lane: usize,
+    remaining: &mut u64,
+    ms: &mut [u8; LANES],
+    picks: &mut u64,
+) {
+    // Cheap early-out: nothing this lane can reach is available
+    // (very common at high sparsity).
+    if *remaining & conn.reach[lane] == 0 {
+        return;
+    }
+    // Branchless 8-to-3 priority encode: gather each option's
+    // availability into one byte, then take the lowest set bit.
+    // Unused option slots point at the UNUSED_OPT sentinel bit,
+    // which is never set.
+    let b = &conn.lanes[lane].bits;
+    let avail = (((*remaining >> b[0]) & 1)
+        | ((*remaining >> b[1]) & 1) << 1
+        | ((*remaining >> b[2]) & 1) << 2
+        | ((*remaining >> b[3]) & 1) << 3
+        | ((*remaining >> b[4]) & 1) << 4
+        | ((*remaining >> b[5]) & 1) << 5
+        | ((*remaining >> b[6]) & 1) << 6
+        | ((*remaining >> b[7]) & 1) << 7) as u32;
+    if avail != 0 {
+        let k = avail.trailing_zeros() as usize;
+        ms[lane] = k as u8;
+        let bit = 1u64 << b[k];
+        *picks |= bit;
+        *remaining &= !bit;
+    }
+}
+
 /// Run the combinational scheduler over window vector `z`.
 ///
 /// `z` must only contain bits within `conn.window_mask()`. Rows of the
@@ -73,32 +114,7 @@ pub fn schedule_cycle(conn: &Connectivity, z: u64) -> Schedule {
         // from `remaining` lane-by-lane is equivalent (and checked by the
         // property tests).
         for &lane in level {
-            // Cheap early-out: nothing this lane can reach is available
-            // (very common at high sparsity).
-            if remaining & conn.reach[lane] == 0 {
-                continue;
-            }
-            let opts = &conn.lanes[lane];
-            // Branchless 8-to-3 priority encode: gather each option's
-            // availability into one byte, then take the lowest set bit.
-            // Unused option slots point at the UNUSED_OPT sentinel bit,
-            // which is never set.
-            let b = &opts.bits;
-            let avail = (((remaining >> b[0]) & 1)
-                | ((remaining >> b[1]) & 1) << 1
-                | ((remaining >> b[2]) & 1) << 2
-                | ((remaining >> b[3]) & 1) << 3
-                | ((remaining >> b[4]) & 1) << 4
-                | ((remaining >> b[5]) & 1) << 5
-                | ((remaining >> b[6]) & 1) << 6
-                | ((remaining >> b[7]) & 1) << 7) as u32;
-            if avail != 0 {
-                let k = avail.trailing_zeros() as usize;
-                ms[lane] = k as u8;
-                let bit = 1u64 << b[k];
-                picks |= bit;
-                remaining &= !bit;
-            }
+            encode_lane(conn, lane, &mut remaining, &mut ms, &mut picks);
         }
     }
     // AS: leading fully-drained rows = index of the lowest surviving bit
@@ -126,25 +142,7 @@ pub fn schedule_iterative(conn: &Connectivity, z: u64) -> (Schedule, u64) {
     for level in LEVELS {
         cycles += 1;
         for &lane in level {
-            if remaining & conn.reach[lane] == 0 {
-                continue;
-            }
-            let b = &conn.lanes[lane].bits;
-            let avail = (((remaining >> b[0]) & 1)
-                | ((remaining >> b[1]) & 1) << 1
-                | ((remaining >> b[2]) & 1) << 2
-                | ((remaining >> b[3]) & 1) << 3
-                | ((remaining >> b[4]) & 1) << 4
-                | ((remaining >> b[5]) & 1) << 5
-                | ((remaining >> b[6]) & 1) << 6
-                | ((remaining >> b[7]) & 1) << 7) as u32;
-            if avail != 0 {
-                let k = avail.trailing_zeros() as usize;
-                ms[lane] = k as u8;
-                let bit = 1u64 << b[k];
-                picks |= bit;
-                remaining &= !bit;
-            }
+            encode_lane(conn, lane, &mut remaining, &mut ms, &mut picks);
         }
     }
     let after = z & !picks;

@@ -1,9 +1,15 @@
-//! Minimal JSON reader for `artifacts/meta.json`.
+//! Minimal JSON reader **and writer**.
 //!
-//! The AOT compile path emits a machine-generated, known-shape JSON
-//! document; this parser supports exactly the JSON subset it uses
-//! (objects, arrays, strings without escapes beyond \" \\ \/ \n \t,
-//! integers, floats, booleans, null). No serde available offline.
+//! Reading: `artifacts/meta.json` (the AOT compile path emits a
+//! machine-generated, known-shape document; the parser supports exactly
+//! the JSON subset it uses — objects, arrays, strings without escapes
+//! beyond \" \\ \/ \n \t \r, integers, floats, booleans, null).
+//!
+//! Writing: the experiment pipeline serialises [`api::Report`](crate::api::Report)s
+//! and `BENCH_*.json` perf records through [`Json::render`] /
+//! [`Json::render_pretty`]. The writer emits only the subset the parser
+//! accepts, so `parse(render(x)) == x` for every finite value — pinned
+//! by property tests. No serde available offline.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -93,6 +99,114 @@ impl Json {
     pub fn as_usize_vec(&self) -> Option<Vec<usize>> {
         self.as_arr()?.iter().map(|v| v.as_usize()).collect()
     }
+
+    // -- writer -------------------------------------------------------
+
+    /// Compact one-line rendering. Round-trips through [`Json::parse`]
+    /// for every value this module can represent (non-finite numbers,
+    /// which JSON cannot express, render as `null`).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, None, 0);
+        out
+    }
+
+    /// Human-readable rendering with 2-space indentation (the form
+    /// `--out FILE` writes). Parses back identically to [`render`](Json::render).
+    pub fn render_pretty(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, Some(2), 0);
+        out
+    }
+
+    fn write(&self, out: &mut String, indent: Option<usize>, depth: usize) {
+        let (nl, pad, pad_in, colon) = match indent {
+            Some(w) => (
+                "\n",
+                " ".repeat(w * depth),
+                " ".repeat(w * (depth + 1)),
+                ": ",
+            ),
+            None => ("", String::new(), String::new(), ":"),
+        };
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(true) => out.push_str("true"),
+            Json::Bool(false) => out.push_str("false"),
+            Json::Num(n) => out.push_str(&render_num(*n)),
+            Json::Str(s) => render_str(s, out),
+            Json::Arr(a) => {
+                if a.is_empty() {
+                    out.push_str("[]");
+                    return;
+                }
+                out.push('[');
+                for (i, v) in a.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(nl);
+                    out.push_str(&pad_in);
+                    v.write(out, indent, depth + 1);
+                }
+                out.push_str(nl);
+                out.push_str(&pad);
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                if m.is_empty() {
+                    out.push_str("{}");
+                    return;
+                }
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    out.push_str(nl);
+                    out.push_str(&pad_in);
+                    render_str(k, out);
+                    out.push_str(colon);
+                    v.write(out, indent, depth + 1);
+                }
+                out.push_str(nl);
+                out.push_str(&pad);
+                out.push('}');
+            }
+        }
+    }
+}
+
+/// Number formatting: integers without a trailing `.0`, everything else
+/// through Rust's shortest-round-trip `Display` — so parsing the text
+/// back recovers the exact same `f64`.
+fn render_num(n: f64) -> String {
+    if !n.is_finite() {
+        return "null".to_string();
+    }
+    if n == n.trunc() && n.abs() < 9.0e15 {
+        format!("{}", n as i64)
+    } else {
+        format!("{n}")
+    }
+}
+
+/// String escaping limited to exactly the escapes the parser accepts.
+/// (Control characters other than \n \t \r do not appear in this
+/// project's documents; they would pass through raw.)
+fn render_str(s: &str, out: &mut String) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            _ => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -309,6 +423,110 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("{\"a\" 1}").is_err());
         assert!(Json::parse("123abc").is_err());
+    }
+
+    // -- writer tests -------------------------------------------------
+
+    #[test]
+    fn renders_scalars() {
+        assert_eq!(Json::Null.render(), "null");
+        assert_eq!(Json::Bool(true).render(), "true");
+        assert_eq!(Json::Num(2.0).render(), "2");
+        assert_eq!(Json::Num(-0.5).render(), "-0.5");
+        assert_eq!(Json::Num(f64::NAN).render(), "null");
+        assert_eq!(Json::Str("a\"b\\c\nd\te\rf".into()).render(), r#""a\"b\\c\nd\te\rf""#);
+    }
+
+    #[test]
+    fn renders_compound() {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("b".to_string(), Json::Arr(vec![Json::Num(1.0), Json::Null]));
+        m.insert("a".to_string(), Json::Str("x".into()));
+        let j = Json::Obj(m);
+        assert_eq!(j.render(), r#"{"a":"x","b":[1,null]}"#);
+        // Pretty form parses back to the same value.
+        assert_eq!(Json::parse(&j.render_pretty()).unwrap(), j);
+        assert_eq!(Json::Arr(vec![]).render(), "[]");
+        assert_eq!(Json::Obj(Default::default()).render(), "{}");
+    }
+
+    /// Random JSON document generator for the round-trip property test.
+    fn arbitrary(rng: &mut crate::util::rng::Rng, depth: usize) -> Json {
+        let pick = if depth == 0 { rng.below(4) } else { rng.below(6) };
+        match pick {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => {
+                // Mix of integers, fractions and extreme magnitudes.
+                match rng.below(4) {
+                    0 => Json::Num((rng.below(2_000_001) as f64) - 1_000_000.0),
+                    1 => Json::Num(rng.f64() * 2.0 - 1.0),
+                    2 => Json::Num((rng.f64() - 0.5) * 1e12),
+                    _ => Json::Num(rng.f64() * 1e-9),
+                }
+            }
+            3 => {
+                let n = rng.below(12);
+                let s: String = (0..n)
+                    .map(|_| {
+                        let alphabet = "ab\"\\\n\t\r xyZ0—é";
+                        let chars: Vec<char> = alphabet.chars().collect();
+                        chars[rng.below(chars.len())]
+                    })
+                    .collect();
+                Json::Str(s)
+            }
+            4 => {
+                let n = rng.below(5);
+                Json::Arr((0..n).map(|_| arbitrary(rng, depth - 1)).collect())
+            }
+            _ => {
+                let n = rng.below(5);
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..n {
+                    m.insert(format!("k{i}"), arbitrary(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+
+    #[test]
+    fn property_round_trip_compact_and_pretty() {
+        let mut rng = crate::util::rng::Rng::new(20260731);
+        for _ in 0..500 {
+            let x = arbitrary(&mut rng, 3);
+            let compact = Json::parse(&x.render())
+                .unwrap_or_else(|e| panic!("compact reparse failed: {e} for {}", x.render()));
+            assert_eq!(compact, x, "compact round trip: {}", x.render());
+            let pretty = Json::parse(&x.render_pretty())
+                .unwrap_or_else(|e| panic!("pretty reparse failed: {e} for {}", x.render_pretty()));
+            assert_eq!(pretty, x, "pretty round trip");
+        }
+    }
+
+    #[test]
+    fn property_float_formatting_round_trips_exactly() {
+        // Shortest-round-trip Display: parse(render(x)) recovers the
+        // exact f64 bits for any finite value, including awkward ones.
+        let mut rng = crate::util::rng::Rng::new(99);
+        let mut cases = vec![0.0, -0.0, 1.0 / 3.0, 0.1, 1e-300, 1e300, 2f64.powi(-52), 102.4];
+        for _ in 0..2000 {
+            let bits = rng.next_u64();
+            let v = f64::from_bits(bits);
+            if v.is_finite() {
+                cases.push(v);
+            }
+        }
+        for v in cases {
+            let j = Json::parse(&Json::Num(v).render()).unwrap();
+            let got = j.as_f64().unwrap();
+            assert!(
+                got == v || (got == 0.0 && v == 0.0),
+                "float {v:?} rendered {} reparsed {got:?}",
+                Json::Num(v).render()
+            );
+        }
     }
 
     #[test]

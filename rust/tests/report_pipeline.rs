@@ -1,0 +1,114 @@
+//! Integration tests of the typed experiment pipeline:
+//! `SimRequest`/`SweepSpec` → `Engine` → `Report` → JSON → parse-back.
+//!
+//! These pin the acceptance properties of the api redesign:
+//! * `repro --fig 13 --format json` output parses back with
+//!   `util::json` and its speedup values are identical to the
+//!   text-table rendering;
+//! * a multi-cell sweep is byte-identical at any `--jobs` count;
+//! * the `tensordash.report.v1` schema is pinned by a golden test on a
+//!   small deterministic figure (Table 3).
+
+use tensordash::api::{Engine, Report, SweepSpec};
+use tensordash::config::{ChipConfig, DataType};
+use tensordash::repro;
+use tensordash::util::json::Json;
+
+/// The acceptance path behind
+/// `tensordash repro --fig 13 --format json --out fig13.json`:
+/// the written document parses with `util::json` and every speedup cell
+/// carries both the table text and the full-precision value.
+#[test]
+fn fig13_json_round_trips_and_matches_text_rendering() {
+    let engine = Engine::new(2);
+    let cfg = ChipConfig::default();
+    let sims = repro::run_fig13_sims(&engine, &cfg, 1, 42);
+    let report = repro::fig13(&sims);
+    let text = report.render_text();
+    let json = report.render_json();
+
+    let parsed = Json::parse(&json).expect("report JSON parses with util::json");
+    assert_eq!(parsed.get("schema").unwrap().as_str(), Some("tensordash.report.v1"));
+    assert_eq!(parsed.get("id").unwrap().as_str(), Some("fig13"));
+
+    let back = Report::from_json(&parsed).expect("report reconstructs from JSON");
+    assert_eq!(back, report);
+    assert_eq!(back.render_text(), text);
+
+    // Speedup cells: JSON text equals the table cell text, and the raw
+    // value re-formats to exactly that text.
+    let cols = parsed.get("columns").unwrap().as_arr().unwrap();
+    let overall = cols.iter().position(|c| c.as_str() == Some("overall")).unwrap();
+    let rows = parsed.get("rows").unwrap().as_arr().unwrap();
+    assert_eq!(rows.len(), sims.len() + 1, "9 models + geomean row");
+    for (ri, row) in rows.iter().enumerate() {
+        let cell = &row.get("cells").unwrap().as_arr().unwrap()[overall];
+        let cell_text = cell.get("text").unwrap().as_str().unwrap();
+        assert!(text.contains(cell_text), "row {ri}: '{cell_text}' missing from table");
+        let v = cell.get("value").unwrap().as_f64().unwrap();
+        assert_eq!(format!("{v:.2}"), cell_text, "row {ri}");
+        assert!((1.0..=3.01).contains(&v), "row {ri}: speedup {v} out of range");
+    }
+}
+
+/// `--jobs 4` must be byte-identical to `--jobs 1`: per-cell seed
+/// derivation makes every cell independent of worker count and
+/// completion order.
+#[test]
+fn multi_cell_sweep_byte_identical_across_worker_counts() {
+    let spec = SweepSpec::models(&["alexnet", "squeezenet", "gcn"], 0.4, &ChipConfig::default(), 1, 7)
+        .with_configs(vec![
+            ("depth2".to_string(), ChipConfig::default().with_depth(2)),
+            ("depth3".to_string(), ChipConfig::default()),
+        ]);
+    let sims1 = Engine::new(1).run_all(&spec.cells());
+    let sims4 = Engine::new(4).run_all(&spec.cells());
+    let r1 = repro::fig13(&sims1);
+    let r4 = repro::fig13(&sims4);
+    assert_eq!(r1, r4);
+    assert_eq!(r1.render_json().into_bytes(), r4.render_json().into_bytes());
+    assert_eq!(r1.render_text(), r4.render_text());
+    assert_eq!(r1.render_csv(), r4.render_csv());
+}
+
+/// Golden test pinning the `tensordash.report.v1` JSON schema on a
+/// small, fully deterministic figure. If this breaks, downstream
+/// consumers of the BENCH_*/report pipeline break too — bump the
+/// schema version instead of silently changing shape.
+#[test]
+fn table3_report_json_golden() {
+    let report = repro::table3(DataType::Fp32);
+    let compact = report.to_json().render();
+
+    // Envelope: BTreeMap ordering puts columns first, schema/title last.
+    assert!(
+        compact.starts_with(r#"{"columns":["component","area mm2","power mW"]"#),
+        "schema envelope changed: {}",
+        &compact[..80.min(compact.len())]
+    );
+    assert!(compact.contains(r#""id":"table3_fp32""#));
+    assert!(compact.contains(r#""schema":"tensordash.report.v1""#));
+    // First row: the paper's Table 3 core area, text + raw value.
+    assert!(compact.contains(r#"{"cells":[{"text":"compute cores"},{"text":"30.41","value":30.41}"#));
+    // Non-numeric cells carry no "value" key.
+    assert!(compact.contains(r#"{"text":"-"}"#));
+
+    // The golden document round-trips through parse → reconstruct.
+    let parsed = Json::parse(&compact).unwrap();
+    let back = Report::from_json(&parsed).unwrap();
+    assert_eq!(back, report);
+    // And pretty rendering parses to the identical value.
+    assert_eq!(Json::parse(&report.render_json()).unwrap(), parsed);
+}
+
+/// CSV renderer sanity on a real figure.
+#[test]
+fn table3_csv_has_header_and_rows() {
+    let csv = repro::table3(DataType::Fp32).render_csv();
+    let mut lines = csv.lines();
+    assert_eq!(lines.next(), Some("component,area mm2,power mW"));
+    assert!(csv.lines().count() >= 8);
+    assert!(csv.contains("compute cores,30.41"));
+    // The overhead row's comma-free cells need no quoting.
+    assert!(csv.contains("\"whole-chip overhead (incl. AM/BM/CM+SP)\"") || csv.contains("whole-chip overhead (incl. AM/BM/CM+SP)"));
+}
