@@ -1,0 +1,188 @@
+//! §Perf — the tile-pass hot path: the unified streaming core with its
+//! memoizing scheduler cache and zero-run skipping, measured against the
+//! pre-refactor uncached loops (`sim::stream::reference`).
+//!
+//! Workload: *trace-like* streams at 60–90% sparsity. Real traces are
+//! not uniform noise — §4.4: non-zeros cluster in a subset of feature
+//! maps, so a stream is dominated by a handful of recurring channel
+//! masks plus runs of all-zero rows. That recurrence is exactly what the
+//! direct-mapped memo table and the zero-run skipper monetise; uniform
+//! random masks (the `scheduler_hotpath` workload) are the cache's
+//! worst case and remain covered there.
+//!
+//! Every timed pair is asserted cycle- and MAC-identical first — the
+//! speedup is only meaningful if the cores agree.
+//!
+//! Besides the console log, the run emits its medians and the
+//! cached-over-reference speedups as `BENCH_tile.json` (or `$BENCH_OUT`
+//! if set) through the `util::json` writer; CI archives it next to
+//! `BENCH_scheduler.json` as the perf-trajectory artifact.
+
+use std::collections::BTreeMap;
+
+use tensordash::sim::connectivity::Connectivity;
+use tensordash::sim::pe::simulate_stream_stats;
+use tensordash::sim::stream::reference;
+use tensordash::sim::tile::tile_pass_stats;
+use tensordash::util::bench::{bench, section, BenchStats};
+use tensordash::util::json::Json;
+use tensordash::util::rng::Rng;
+
+/// One benchmark record for the JSON perf log.
+fn record(name: &str, s: &BenchStats) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(name.to_string()));
+    m.insert("median_ns".to_string(), Json::Num(s.median_ns));
+    m.insert("mean_ns".to_string(), Json::Num(s.mean_ns));
+    m.insert("min_ns".to_string(), Json::Num(s.min_ns));
+    m.insert("stddev_ns".to_string(), Json::Num(s.stddev_ns));
+    m.insert("iters".to_string(), Json::Num(s.iters as f64));
+    Json::Obj(m)
+}
+
+/// A speedup summary record (reference median over cached median).
+fn speedup_record(name: &str, reference_ns: f64, cached_ns: f64) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(name.to_string()));
+    m.insert("reference_median_ns".to_string(), Json::Num(reference_ns));
+    m.insert("cached_median_ns".to_string(), Json::Num(cached_ns));
+    m.insert("speedup".to_string(), Json::Num(reference_ns / cached_ns));
+    Json::Obj(m)
+}
+
+/// One trace-like B-side stream: a small, skewed dictionary of
+/// recurring channel masks (clustered non-zeros) interleaved with
+/// zero-row runs, tuned so the fraction of zero *values* lands near
+/// `sparsity`.
+fn trace_like_stream(rng: &mut Rng, len: usize, sparsity: f64) -> Vec<u16> {
+    // Roughly 60% of the sparsity comes from whole-zero rows (dead
+    // feature maps / ReLU-killed pixels), the rest from thin rows.
+    let zero_frac = sparsity * 0.6;
+    let residual_density = ((1.0 - sparsity) / (1.0 - zero_frac)).min(1.0);
+    let dict: Vec<u16> = (0..12).map(|_| rng.mask16(residual_density)).collect();
+    // Average zero-run length ~4.5 rows; solve the start probability so
+    // the expected zero-row fraction matches zero_frac.
+    let avg_run = 4.5;
+    let p_run = zero_frac / (avg_run * (1.0 - zero_frac) + zero_frac);
+    let mut out = Vec::with_capacity(len);
+    while out.len() < len {
+        if rng.chance(p_run) {
+            for _ in 0..(2 + rng.below(6)) {
+                out.push(0);
+            }
+        } else {
+            // Skewed dictionary pick: low indices dominate, like the
+            // handful of hot channel patterns in a real trace.
+            let i = rng.below(dict.len()).min(rng.below(dict.len()));
+            out.push(dict[i]);
+        }
+    }
+    out.truncate(len);
+    out
+}
+
+/// The acceptance bar: cached tile-pass throughput must be at least
+/// this multiple of the reference at every trace-like sparsity level.
+/// The run still writes `BENCH_tile.json` before failing, so the
+/// regression is archived even when the gate trips.
+const TILE_SPEEDUP_GATE: f64 = 2.0;
+
+fn main() {
+    let conn = Connectivity::new(3);
+    let mut rng = Rng::new(2020);
+    let mut records: Vec<Json> = Vec::new();
+    let mut tile_speedups: Vec<(String, f64)> = Vec::new();
+
+    for sparsity in [0.6f64, 0.75, 0.9] {
+        let tag = format!("s{:.0}", sparsity * 100.0);
+        section(&format!("tile pass, trace-like {:.0}% sparsity (4 rows x 4096 steps)", sparsity * 100.0));
+        let streams: Vec<Vec<u16>> =
+            (0..4).map(|_| trace_like_stream(&mut rng, 4096, sparsity)).collect();
+
+        // The refactor must not change what is simulated — assert before
+        // timing anything.
+        let new = tile_pass_stats(&conn, &streams, 6);
+        let old = reference::tile_pass_stats(&conn, &streams, 6);
+        assert_eq!(new.cycles, old.cycles, "cached core diverged (cycles)");
+        assert_eq!(new.macs, old.macs, "cached core diverged (macs)");
+        println!(
+            "  window answers: {} walks, {} memo hits, {} fast paths (hit rate {:.1}%)",
+            new.schedules,
+            new.cache_hits,
+            new.fast_paths,
+            100.0 * (new.cache_hits + new.fast_paths) as f64
+                / (new.schedules + new.cache_hits + new.fast_paths).max(1) as f64
+        );
+
+        let r = bench(&format!("tile_pass_reference_{tag}"), 3, 40, || {
+            reference::tile_pass_stats(&conn, &streams, 6)
+        });
+        let c = bench(&format!("tile_pass_cached_{tag}"), 3, 40, || {
+            tile_pass_stats(&conn, &streams, 6)
+        });
+        println!("  -> tile-pass speedup {:.2}x (reference / cached)", r.median_ns / c.median_ns);
+        records.push(record(&format!("tile_pass_reference_{tag}"), &r));
+        records.push(record(&format!("tile_pass_cached_{tag}"), &c));
+        records.push(speedup_record(&format!("tile_pass_speedup_{tag}"), r.median_ns, c.median_ns));
+        tile_speedups.push((tag.clone(), r.median_ns / c.median_ns));
+
+        section(&format!("PE stream, trace-like {:.0}% sparsity (16k rows)", sparsity * 100.0));
+        let rows = trace_like_stream(&mut rng, 16384, sparsity);
+        let new = simulate_stream_stats(&conn, &rows);
+        let old = reference::simulate_stream_stats(&conn, &rows);
+        assert_eq!(new.cycles, old.cycles, "cached PE core diverged (cycles)");
+        assert_eq!(new.macs, old.macs, "cached PE core diverged (macs)");
+        let r = bench(&format!("pe_stream_reference_{tag}"), 3, 40, || {
+            reference::simulate_stream_stats(&conn, &rows)
+        });
+        let c = bench(&format!("pe_stream_cached_{tag}"), 3, 40, || {
+            simulate_stream_stats(&conn, &rows)
+        });
+        println!(
+            "  -> PE-stream speedup {:.2}x ({} of {} cycles zero-run-skipped)",
+            r.median_ns / c.median_ns,
+            new.skipped_cycles,
+            new.cycles
+        );
+        records.push(record(&format!("pe_stream_reference_{tag}"), &r));
+        records.push(record(&format!("pe_stream_cached_{tag}"), &c));
+        records.push(speedup_record(&format!("pe_stream_speedup_{tag}"), r.median_ns, c.median_ns));
+    }
+
+    // Machine-readable perf point for the BENCH_* trajectory.
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_tile.json".to_string());
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".to_string(), Json::Str("tensordash.bench.v1".to_string()));
+    doc.insert("bench".to_string(), Json::Str("tile_hotpath".to_string()));
+    doc.insert("records".to_string(), Json::Arr(records));
+    let mut text = Json::Obj(doc).render_pretty();
+    text.push('\n');
+    match std::fs::write(&out_path, text.as_bytes()) {
+        Ok(()) => println!("\nwrote {out_path} ({} bytes)", text.len()),
+        Err(e) => eprintln!("\ncould not write {out_path}: {e}"),
+    }
+
+    // Enforce the stream-core acceptance bar (EXPERIMENTS.md §Perf)
+    // after the artifact is on disk.
+    let mut failed = false;
+    for (tag, speedup) in &tile_speedups {
+        if *speedup < TILE_SPEEDUP_GATE {
+            eprintln!(
+                "PERF GATE: tile_pass_{tag} speedup {speedup:.2}x < {TILE_SPEEDUP_GATE}x \
+                 — the cached core regressed vs the uncached reference"
+            );
+            failed = true;
+        }
+    }
+    if failed {
+        std::process::exit(1);
+    }
+    println!(
+        "perf gate passed: tile-pass speedups {} (all >= {TILE_SPEEDUP_GATE}x)",
+        tile_speedups
+            .iter()
+            .map(|(t, s)| format!("{t}={s:.2}x"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+}

@@ -128,6 +128,7 @@ fn execute(req: &SimRequest) -> ModelSim {
                 per_op,
                 energy_base: r.energy_base,
                 energy_td: r.energy_td,
+                sched: r.sched,
             }
         }
         Workload::RandomSparse { shape, sparsity, samples_per_level, batch_mult } => {
@@ -136,6 +137,7 @@ fn execute(req: &SimRequest) -> ModelSim {
             let mut per_op = [(0u64, 0u64); 3];
             let mut e_base = crate::energy::EnergyBreakdown::default();
             let mut e_td = crate::energy::EnergyBreakdown::default();
+            let mut sched = crate::sim::CacheStats::default();
             for _ in 0..*samples_per_level {
                 let a = random_bitmap((shape.n, shape.h, shape.w, shape.c), *sparsity, &mut rng);
                 let g =
@@ -147,9 +149,10 @@ fn execute(req: &SimRequest) -> ModelSim {
                     per_op[op as usize].1 += r.td_chip_cycles;
                     e_base.merge(&r.energy_base);
                     e_td.merge(&r.energy_td);
+                    sched.merge(&r.sched);
                 }
             }
-            ModelSim { name: req.label.clone(), per_op, energy_base: e_base, energy_td: e_td }
+            ModelSim { name: req.label.clone(), per_op, energy_base: e_base, energy_td: e_td, sched }
         }
     }
 }
@@ -185,6 +188,9 @@ mod tests {
             assert_eq!(a.per_op, b.per_op);
             assert_eq!(a.energy_base.total_pj().to_bits(), b.energy_base.total_pj().to_bits());
             assert_eq!(a.energy_td.total_pj().to_bits(), b.energy_td.total_pj().to_bits());
+            // Scheduler-cache telemetry is per-cell (one cache per
+            // run_passes call), so it too must not depend on workers.
+            assert_eq!(a.sched, b.sched);
         }
     }
 }

@@ -249,6 +249,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     r.meta_num("epoch", epoch);
     r.meta_num("seed", seed as f64);
     r.meta_num("samples", samples as f64);
+    // Scheduler-cache telemetry of the underlying cycle simulation
+    // (walks = actual encoder walks, i.e. memo misses).
+    r.meta_num("sched_walks", sim.sched.walks as f64);
+    r.meta_num("sched_cache_hits", sim.sched.hits as f64);
+    r.meta_num("sched_fast_paths", sim.sched.fast_paths as f64);
+    r.meta_num("sched_skipped_cycles", sim.sched.skipped_cycles as f64);
+    r.meta_num("sched_hit_rate", sim.sched.hit_rate());
     emit(&[r], args)
 }
 

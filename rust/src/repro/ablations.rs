@@ -24,8 +24,9 @@ use crate::conv::stream::{fwd_weight_stream, igrad_weight_stream, wgrad_a_stream
 use crate::conv::work::{build_stream, op_work, pick_wgrad_side};
 use crate::conv::{ConvShape, TrainOp, WgradSide};
 use crate::metrics::{f2, geomean};
-use crate::sim::pe::simulate_stream;
-use crate::sim::Connectivity;
+use crate::sim::pe::simulate_stream_cached;
+use crate::sim::tile::tile_pass_stats_cached;
+use crate::sim::{CachedScheduler, Connectivity};
 use crate::tensor::TensorBitmap;
 use crate::trace::profiles::ModelProfile;
 use crate::util::rng::Rng;
@@ -38,16 +39,18 @@ fn and_streams(b: &[u16], a: &[u16]) -> Vec<u16> {
 }
 
 /// Two-side pass cycles: per-PE schedulers, pass ends when the slowest
-/// PE finishes its `AZ & BZ` stream.
+/// PE finishes its `AZ & BZ` stream. The caller's scheduler cache is
+/// shared across the whole PE grid — the `AZ & BZ` streams of one pass
+/// repeat window patterns heavily.
 fn two_side_pass_cycles(
-    conn: &Connectivity,
+    sched: &mut CachedScheduler,
     b_streams: &[Vec<u16>],
     a_streams: &[Vec<u16>],
 ) -> u64 {
     let mut worst = 0u64;
     for b in b_streams {
         for a in a_streams {
-            worst = worst.max(simulate_stream(conn, &and_streams(b, a)));
+            worst = worst.max(simulate_stream_cached(sched, &and_streams(b, a)).cycles);
         }
     }
     worst
@@ -66,7 +69,7 @@ pub fn layer_two_side(
     samples: usize,
     rng: &mut Rng,
 ) -> (f64, f64) {
-    let conn = Connectivity::new(cfg.staging_depth);
+    let mut sched = CachedScheduler::new(Connectivity::new(cfg.staging_depth));
     let wside = match op {
         TrainOp::Wgrad => pick_wgrad_side(a_bm, g_bm),
         _ => WgradSide::Gradients,
@@ -88,7 +91,7 @@ pub fn layer_two_side(
             .collect();
         let len = b_streams.iter().map(|s| s.len()).max().unwrap_or(0) as u64;
         // One-side: the row schedule ignores the A operand.
-        let one_cycles = crate::sim::tile::tile_pass_cycles(&conn, &b_streams, cfg.lead_limit);
+        let one_cycles = tile_pass_stats_cached(&mut sched, &b_streams, cfg.lead_limit).cycles;
         for _ in 0..n_a {
             let ap = rng.below(a_passes as usize) as u64;
             let a_streams: Vec<Vec<u16>> = (0..cfg.tile_cols as u64)
@@ -108,7 +111,7 @@ pub fn layer_two_side(
                 .collect();
             base += len;
             one += one_cycles;
-            two += two_side_pass_cycles(&conn, &b_streams, &a_streams);
+            two += two_side_pass_cycles(&mut sched, &b_streams, &a_streams);
         }
     }
     (base as f64 / one.max(1) as f64, base as f64 / two.max(1) as f64)

@@ -41,6 +41,9 @@ pub struct LayerOpSim {
     pub b_sparsity: f64,
     /// Whether §3.5 power gating bypassed TensorDash for this op.
     pub gated: bool,
+    /// Scheduler-cache telemetry of the underlying tile simulation
+    /// (walks / memo hits / fast paths / zero-run-skipped cycles).
+    pub sched: crate::sim::CacheStats,
 }
 
 impl LayerOpSim {
@@ -87,7 +90,7 @@ pub fn simulate_layer_op(
         _ => (1, m),
     };
     let passes = sample_passes(shape, op, wside, a_bm, g_bm, cfg.tile_rows, samples, repeat, rng);
-    let lc = chip.run_passes(passes.iter());
+    let lc = chip.run_passes(&passes);
     let base_tile = lc.base * a_passes * mm;
     let b_sparsity = match op {
         TrainOp::Fwd => a_bm.sparsity(),
@@ -127,6 +130,7 @@ pub fn simulate_layer_op(
         energy_td: emodel.layer_energy(td_chip, &sram, &dram, &trans, !gated),
         b_sparsity,
         gated,
+        sched: lc.sched,
     }
 }
 
@@ -138,6 +142,8 @@ pub struct ModelSim {
     pub per_op: [(u64, u64); 3],
     pub energy_base: EnergyBreakdown,
     pub energy_td: EnergyBreakdown,
+    /// Scheduler-cache telemetry summed over every simulated (layer, op).
+    pub sched: crate::sim::CacheStats,
 }
 
 impl ModelSim {
@@ -173,6 +179,7 @@ pub fn simulate_profile(
     let mut per_op = [(0u64, 0u64); 3];
     let mut e_base = EnergyBreakdown::default();
     let mut e_td = EnergyBreakdown::default();
+    let mut sched = crate::sim::CacheStats::default();
     let mut rng = Rng::new(seed);
     for (i, layer) in profile.topology.layers.iter().enumerate() {
         let (a_bm, g_bm) = profile.layer_bitmaps(i, epoch, seed);
@@ -182,9 +189,10 @@ pub fn simulate_profile(
             per_op[op as usize].1 += r.td_chip_cycles;
             e_base.merge(&r.energy_base);
             e_td.merge(&r.energy_td);
+            sched.merge(&r.sched);
         }
     }
-    ModelSim { name: profile.name().to_string(), per_op, energy_base: e_base, energy_td: e_td }
+    ModelSim { name: profile.name().to_string(), per_op, energy_base: e_base, energy_td: e_td, sched }
 }
 
 /// Simulate a model from *captured* (real-training) bitmaps.
@@ -198,6 +206,7 @@ pub fn simulate_trace(
     let mut per_op = [(0u64, 0u64); 3];
     let mut e_base = EnergyBreakdown::default();
     let mut e_td = EnergyBreakdown::default();
+    let mut sched = crate::sim::CacheStats::default();
     let mut rng = Rng::new(seed);
     for (shape, (a_bm, g_bm)) in shapes.iter().zip(layers) {
         for op in TrainOp::ALL {
@@ -206,9 +215,10 @@ pub fn simulate_trace(
             per_op[op as usize].1 += r.td_chip_cycles;
             e_base.merge(&r.energy_base);
             e_td.merge(&r.energy_td);
+            sched.merge(&r.sched);
         }
     }
-    ModelSim { name: "captured".into(), per_op, energy_base: e_base, energy_td: e_td }
+    ModelSim { name: "captured".into(), per_op, energy_base: e_base, energy_td: e_td, sched }
 }
 
 // ---------------------------------------------------------------------
@@ -290,6 +300,18 @@ pub fn fig13(sims: &[ModelSim]) -> Report {
         Cell::empty(),
         Cell::num(avg),
     ]);
+    // Scheduler-cache telemetry of the sweep, surfaced machine-readably
+    // (the counters are per-cell deterministic, so this meta block is
+    // byte-identical at any --jobs count).
+    let mut cache = crate::sim::CacheStats::default();
+    for s in sims {
+        cache.merge(&s.sched);
+    }
+    r.meta_num("sched_walks", cache.walks as f64);
+    r.meta_num("sched_cache_hits", cache.hits as f64);
+    r.meta_num("sched_fast_paths", cache.fast_paths as f64);
+    r.meta_num("sched_skipped_cycles", cache.skipped_cycles as f64);
+    r.meta_num("sched_hit_rate", cache.hit_rate());
     r
 }
 

@@ -12,7 +12,8 @@
 //! exhaustive simulation on small layers.
 
 use super::connectivity::Connectivity;
-use super::tile::tile_pass_stats;
+use super::stream::{CacheStats, CachedScheduler};
+use super::tile::tile_pass_stats_cached;
 use crate::config::{ChipConfig, SparsitySide};
 
 /// One sampled unit of tile work.
@@ -39,6 +40,10 @@ pub struct LayerCycles {
     pub macs_effectual: u64,
     /// Row-cycles lost to inter-row synchronisation, weighted.
     pub stall_row_cycles: u64,
+    /// Scheduler-cache telemetry (walks / hits / fast paths / skips).
+    /// *Unweighted*: it counts actual simulation work performed, not
+    /// modeled hardware events, so pass weights do not apply.
+    pub sched: CacheStats,
 }
 
 impl LayerCycles {
@@ -48,6 +53,7 @@ impl LayerCycles {
         self.mac_slots += other.mac_slots;
         self.macs_effectual += other.macs_effectual;
         self.stall_row_cycles += other.stall_row_cycles;
+        self.sched.merge(&other.sched);
     }
 
     pub fn speedup(&self) -> f64 {
@@ -81,20 +87,28 @@ impl ChipSim {
     }
 
     /// Simulate a set of sampled passes for one layer-operation.
-    pub fn run_passes<'a>(&self, passes: impl IntoIterator<Item = &'a Pass>) -> LayerCycles {
+    ///
+    /// One scheduler cache serves the whole call: recurring window
+    /// patterns stay warm across the passes of one (layer, op), while
+    /// every `Engine::map` cell still builds its own `ChipSim` — so the
+    /// telemetry, like the cycle counts, is byte-identical for any
+    /// `--jobs N`.
+    pub fn run_passes(&self, passes: &[Pass]) -> LayerCycles {
         let mut out = LayerCycles::default();
+        let mut sched = CachedScheduler::new(self.conn.clone());
         for pass in passes {
             let max_len = pass.streams.iter().map(|s| s.len()).max().unwrap_or(0) as u64;
             if max_len == 0 {
                 continue;
             }
-            let stats = tile_pass_stats(&self.conn, &pass.streams, self.cfg.lead_limit);
+            let stats = tile_pass_stats_cached(&mut sched, &pass.streams, self.cfg.lead_limit);
             out.base += max_len * pass.weight;
             out.td += stats.cycles * pass.weight;
             out.mac_slots += max_len * 16 * pass.streams.len() as u64 * pass.weight;
             out.macs_effectual += stats.macs * pass.weight;
             out.stall_row_cycles += stats.imbalance_stall_row_cycles * pass.weight;
         }
+        out.sched = sched.stats;
         out
     }
 
@@ -123,11 +137,17 @@ mod tests {
 
     #[test]
     fn weighted_aggregation() {
+        // `&[Pass]` means a single pass needs no clone dance — just a
+        // one-element slice borrow.
         let p = Pass { streams: vec![vec![0u16; 30]], weight: 5 };
-        let lc = sim().run_passes([&p].into_iter().cloned().collect::<Vec<_>>().iter());
+        let lc = sim().run_passes(std::slice::from_ref(&p));
         assert_eq!(lc.base, 150);
         assert_eq!(lc.td, 50); // all-zero stream -> 3x
         assert!((lc.speedup() - 3.0).abs() < 1e-12);
+        // Telemetry is unweighted simulation work: the all-zero windows
+        // are all fast-path answers, no encoder walk.
+        assert_eq!(lc.sched.walks, 0);
+        assert_eq!(lc.sched.fast_paths, lc.td / 5);
     }
 
     #[test]
@@ -148,7 +168,7 @@ mod tests {
                 weight: 1,
             })
             .collect();
-        let lc = sim().run_passes(passes.iter());
+        let lc = sim().run_passes(&passes);
         assert!(lc.td <= lc.base);
         assert!(lc.speedup() >= 1.0);
     }

@@ -13,6 +13,10 @@
 //! * [`tile`] — the Fig. 11 tile: per-row schedulers and B-side staging,
 //!   shared A-side staging per column, rows synchronised on the common
 //!   staging-buffer advance (work imbalance => Fig. 17).
+//! * [`stream`] — the shared streaming window core: the `Z`-vector
+//!   cursor (load/consume/shift/refill) every per-cycle loop runs on,
+//!   the memoizing [`stream::CachedScheduler`] (analytical fast paths +
+//!   direct-mapped memo table) and arithmetic zero-run skipping.
 //! * [`chip`] — many tiles processing independent work chunks plus the
 //!   DRAM bandwidth gate.
 //! * [`memory`], [`dram`], [`transposer`] — the on-chip SRAM hierarchy
@@ -25,6 +29,7 @@ pub mod dram;
 pub mod memory;
 pub mod pe;
 pub mod scheduler;
+pub mod stream;
 pub mod tile;
 pub mod transposer;
 
@@ -32,4 +37,5 @@ pub use chip::{ChipSim, LayerCycles, Pass};
 pub use connectivity::{Connectivity, LANES};
 pub use pe::{baseline_cycles, simulate_stream};
 pub use scheduler::{schedule_cycle, Schedule, IDLE};
+pub use stream::{CacheStats, CachedScheduler, StreamWindow};
 pub use tile::{tile_pass_cycles, DEFAULT_LEAD_LIMIT};

@@ -6,9 +6,13 @@
 //! extraction the caller ANDs the A and B masks; for one-side, the B mask
 //! alone). The baseline PE takes exactly `R` cycles; TensorDash takes
 //! between `ceil(R / depth)` and `R`.
+//!
+//! The window/refill state machine lives in [`crate::sim::stream`]
+//! (shared with the tile and the compression engine); this module is a
+//! thin per-cycle sink over [`drive`] that accumulates [`StreamStats`].
 
-use super::connectivity::{Connectivity, LANES};
-use super::scheduler::schedule_cycle;
+use super::connectivity::Connectivity;
+use super::stream::{drive, CachedScheduler, StreamEvent};
 
 /// Cycle count of the baseline dense PE for a stream of `rows` rows.
 #[inline]
@@ -22,8 +26,20 @@ pub struct StreamStats {
     pub cycles: u64,
     /// Effectual MACs issued (equals the popcount of all input masks).
     pub macs: u64,
-    /// Scheduler invocations (one per cycle — it is combinational).
+    /// Actual encoder walks performed — i.e. scheduler-cache misses.
+    /// Historically one per cycle (the scheduler is combinational);
+    /// since the memoizing [`CachedScheduler`] this is the cache
+    /// telemetry: `cycles - skipped_cycles = schedules + cache_hits +
+    /// fast_paths`.
     pub schedules: u64,
+    /// Scheduler answers served from the direct-mapped memo table.
+    pub cache_hits: u64,
+    /// Scheduler answers served by the analytical fast paths (empty
+    /// window / fully-dense head row).
+    pub fast_paths: u64,
+    /// Cycles retired arithmetically by zero-run skipping (included in
+    /// `cycles`; these never invoke the scheduler at all).
+    pub skipped_cycles: u64,
 }
 
 /// Simulate one PE over a stream of effectual masks, returning cycles.
@@ -31,44 +47,31 @@ pub fn simulate_stream(conn: &Connectivity, rows: &[u16]) -> u64 {
     simulate_stream_stats(conn, rows).cycles
 }
 
-/// Full-stats variant of [`simulate_stream`].
+/// Full-stats variant of [`simulate_stream`] (fresh scheduler cache —
+/// use [`simulate_stream_cached`] to amortise one across streams).
 pub fn simulate_stream_stats(conn: &Connectivity, rows: &[u16]) -> StreamStats {
-    let depth = conn.depth;
-    let n = rows.len();
+    let mut sched = CachedScheduler::new(conn.clone());
+    simulate_stream_cached(&mut sched, rows)
+}
+
+/// Simulate one PE stream through a caller-owned [`CachedScheduler`],
+/// so a worker processing many streams keeps its warm memo table. The
+/// returned telemetry covers this stream only (counter deltas).
+pub fn simulate_stream_cached(sched: &mut CachedScheduler, rows: &[u16]) -> StreamStats {
+    let before = sched.stats;
     let mut stats = StreamStats::default();
-    if n == 0 {
-        return stats;
-    }
-    // Window state: remaining-effectual masks of rows `pos .. pos+loaded`,
-    // packed directly as the scheduler's Z vector (row s at bits 16s..).
-    let mut z = 0u64;
-    let mut pos = 0usize; // index of the row at window step 0
-    let mut loaded = 0usize;
-    while loaded < depth && pos + loaded < n {
-        z |= (rows[pos + loaded] as u64) << (loaded * LANES);
-        loaded += 1;
-    }
-    loop {
-        let sched = schedule_cycle(conn, z);
-        stats.cycles += 1;
-        stats.schedules += 1;
-        stats.macs += sched.picks.count_ones() as u64;
-        // Consume, then advance: the scheduler reports drained rows over
-        // the full depth (missing rows look drained); cap at what is
-        // actually loaded. The shift drops the drained rows in one op.
-        let adv = (sched.advance as usize).min(loaded);
-        debug_assert!(adv >= 1, "head row must drain every cycle");
-        z = (z & !sched.picks) >> (adv * LANES);
-        pos += adv;
-        loaded -= adv;
-        while loaded < depth && pos + loaded < n {
-            z |= (rows[pos + loaded] as u64) << (loaded * LANES);
-            loaded += 1;
+    drive(sched, rows, |ev| match ev {
+        StreamEvent::Cycle { sched: s, .. } => {
+            stats.cycles += 1;
+            stats.macs += s.picks.count_ones() as u64;
         }
-        if loaded == 0 {
-            break;
-        }
-    }
+        StreamEvent::ZeroRun { cycles, .. } => stats.cycles += cycles,
+    });
+    let d = sched.stats.since(&before);
+    stats.schedules = d.walks;
+    stats.cache_hits = d.hits;
+    stats.fast_paths = d.fast_paths;
+    stats.skipped_cycles = d.skipped_cycles;
     stats
 }
 
@@ -148,12 +151,57 @@ mod tests {
     }
 
     #[test]
+    fn telemetry_accounts_for_every_cycle() {
+        // Every cycle is either zero-run-skipped or answered by exactly
+        // one of walk / memo hit / fast path.
+        let c = c3();
+        let mut state = 0xFEEDu64;
+        for len in [1usize, 7, 64, 300] {
+            let rows: Vec<u16> = (0..len)
+                .map(|_| {
+                    state = state.wrapping_mul(6364136223846793005).wrapping_add(1);
+                    (state >> 40) as u16 & (state >> 20) as u16
+                })
+                .collect();
+            let s = simulate_stream_stats(&c, &rows);
+            assert_eq!(
+                s.cycles - s.skipped_cycles,
+                s.schedules + s.cache_hits + s.fast_paths,
+                "len {len}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_runs_are_skipped_not_iterated() {
+        let mut rows = vec![0xFFFFu16; 4];
+        rows.extend(vec![0u16; 30]);
+        let s = simulate_stream_stats(&c3(), &rows);
+        assert_eq!(s.cycles, 4 + 10);
+        assert_eq!(s.skipped_cycles, 10, "the 30-zero tail must retire arithmetically");
+        // The dense prefix is answered by the dense-head fast path.
+        assert_eq!(s.fast_paths, 4);
+        assert_eq!(s.schedules, 0, "no encoder walk needed anywhere");
+    }
+
+    #[test]
     fn single_dense_lane_compressed_by_neighbors() {
         // One lane always effectual (lane 5). Its own lane drains (0,5),
         // while lane 6 steals (+1, i-1) and lane 7 steals (+2, i-2) — so
         // three rows retire per cycle and the stream compresses 3x.
         let rows = vec![1u16 << 5; 30];
         assert_eq!(simulate_stream(&c3(), &rows), 10);
+    }
+
+    #[test]
+    fn recurring_pattern_hits_the_memo_table() {
+        // The single-dense-lane stream presents the identical window
+        // every cycle: one walk, then memo hits.
+        let rows = vec![1u16 << 5; 30];
+        let s = simulate_stream_stats(&c3(), &rows);
+        assert_eq!(s.cycles, 10);
+        assert_eq!(s.schedules, 1, "first window walks");
+        assert_eq!(s.cache_hits, 9, "recurrences hit");
     }
 
     #[test]

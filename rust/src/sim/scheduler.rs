@@ -92,6 +92,35 @@ fn encode_lane(
     }
 }
 
+/// The Fig. 10 level walk shared by the combinational and iterative
+/// schedulers: run every level's lane encoders over `z`, returning the
+/// per-lane selections and the consumed bits. The two schedulers differ
+/// only in how many cycles this walk costs, never in selection
+/// semantics.
+fn walk_levels(conn: &Connectivity, z: u64) -> ([u8; LANES], u64) {
+    let mut remaining = z;
+    let mut ms = [IDLE; LANES];
+    let mut picks = 0u64;
+    for level in LEVELS {
+        // All lanes of a level decide combinationally on the same view;
+        // their option sets are disjoint by construction, so consuming
+        // from `remaining` lane-by-lane is equivalent (and checked by the
+        // property tests).
+        for &lane in level {
+            encode_lane(conn, lane, &mut remaining, &mut ms, &mut picks);
+        }
+    }
+    (ms, picks)
+}
+
+/// `AS`: leading fully-drained rows = index of the lowest surviving bit
+/// divided by the row width (64 trailing zeros when empty => depth).
+#[inline]
+fn advance_of(z: u64, picks: u64, depth: u8) -> u8 {
+    let after = z & !picks;
+    ((after.trailing_zeros() as u8) / LANES as u8).min(depth)
+}
+
 /// Run the combinational scheduler over window vector `z`.
 ///
 /// `z` must only contain bits within `conn.window_mask()`. Rows of the
@@ -105,49 +134,30 @@ pub fn schedule_cycle(conn: &Connectivity, z: u64) -> Schedule {
     if z == 0 {
         return Schedule { ms: [IDLE; LANES], picks: 0, advance: depth };
     }
-    let mut remaining = z;
-    let mut ms = [IDLE; LANES];
-    let mut picks = 0u64;
-    for level in LEVELS {
-        // All lanes of a level decide combinationally on the same view;
-        // their option sets are disjoint by construction, so consuming
-        // from `remaining` lane-by-lane is equivalent (and checked by the
-        // property tests).
-        for &lane in level {
-            encode_lane(conn, lane, &mut remaining, &mut ms, &mut picks);
-        }
-    }
-    // AS: leading fully-drained rows = index of the lowest surviving bit
-    // divided by the row width (64 trailing zeros when empty => depth).
-    let after = z & !picks;
-    let advance = ((after.trailing_zeros() as u8) / LANES as u8).min(depth);
-    Schedule { ms, picks, advance }
+    let (ms, picks) = walk_levels(conn, z);
+    Schedule { ms, picks, advance: advance_of(z, picks, depth) }
 }
 
 /// The §3.7 *iterative* scheduler: reuses ONE level of priority encoders
 /// over several cycles instead of instantiating all six. Produces the
-/// exact same schedule as [`schedule_cycle`] (same priority structure),
-/// but takes `LEVELS.len()` cycles per scheduled row — the cheaper
-/// back-side configuration used when pre-scheduling tensors into memory,
-/// where a schedule is needed only once per *stored* row, not per
-/// executed cycle.
+/// exact same schedule as [`schedule_cycle`] (same priority structure —
+/// literally the same [`walk_levels`] body), but takes `LEVELS.len()`
+/// cycles per scheduled row — the cheaper back-side configuration used
+/// when pre-scheduling tensors into memory, where a schedule is needed
+/// only once per *stored* row, not per executed cycle.
 ///
-/// Returns the schedule plus the cycles the iteration consumed.
+/// Returns the schedule plus the cycles the iteration consumed. The
+/// all-ineffectual window takes the same early-out the combinational
+/// path has: detecting `z == 0` is a single NOR, so the all-skip row is
+/// emitted in one cycle instead of iterating six idle levels.
 pub fn schedule_iterative(conn: &Connectivity, z: u64) -> (Schedule, u64) {
-    // One level per cycle: identical selection semantics.
-    let mut remaining = z;
-    let mut ms = [IDLE; LANES];
-    let mut picks = 0u64;
-    let mut cycles = 0u64;
-    for level in LEVELS {
-        cycles += 1;
-        for &lane in level {
-            encode_lane(conn, lane, &mut remaining, &mut ms, &mut picks);
-        }
+    let depth = conn.depth as u8;
+    if z == 0 {
+        return (Schedule { ms: [IDLE; LANES], picks: 0, advance: depth }, 1);
     }
-    let after = z & !picks;
-    let advance = ((after.trailing_zeros() as u8) / LANES as u8).min(conn.depth as u8);
-    (Schedule { ms, picks, advance }, cycles)
+    // One level per cycle: identical selection semantics.
+    let (ms, picks) = walk_levels(conn, z);
+    (Schedule { ms, picks, advance: advance_of(z, picks, depth) }, LEVELS.len() as u64)
 }
 
 #[cfg(test)]
@@ -261,8 +271,20 @@ mod tests {
             assert_eq!(fast.picks, slow.picks);
             assert_eq!(fast.ms, slow.ms);
             assert_eq!(fast.advance, slow.advance);
-            assert_eq!(cycles, 6);
+            assert_eq!(cycles, if z == 0 { 1 } else { 6 });
         }
+    }
+
+    #[test]
+    fn iterative_empty_window_early_out() {
+        // The combinational z == 0 early-out applies to the iterative
+        // scheduler too: the all-skip row costs one cycle, not six.
+        let c = conn();
+        let (s, cycles) = schedule_iterative(&c, 0);
+        assert_eq!(cycles, 1);
+        assert_eq!(s, schedule_cycle(&c, 0));
+        assert_eq!(s.advance, 3);
+        assert!(s.ms.iter().all(|&m| m == IDLE));
     }
 
     #[test]

@@ -1,0 +1,594 @@
+//! The unified streaming window core.
+//!
+//! Every per-cycle loop in the simulator — single-PE streams
+//! ([`crate::sim::pe`]), tile rows ([`crate::sim::tile`]) and the
+//! back-side compression engine ([`crate::tensor::scheduled`]) — runs
+//! the same state machine: pack up to `depth` 16-lane effectual masks
+//! into the scheduler's 48-bit window vector `Z`, schedule a cycle,
+//! AND out the consumed pairs, shift by the advance, refill from the
+//! stream. This module is the single implementation of that machine:
+//!
+//! * [`StreamWindow`] — the cursor (load / consume / shift / refill)
+//!   plus arithmetic zero-run skipping: a run of `k` all-zero rows
+//!   retires in `ceil(k / depth)` cycles computed in O(k) mask reads
+//!   instead of iterated schedule/shift cycles.
+//! * [`CachedScheduler`] — a memoizing wrapper around
+//!   [`schedule_cycle`]: analytical fast paths for the empty window and
+//!   the fully-dense head row (constant-time, no encoder walk), and a
+//!   fixed-size direct-mapped memo table keyed on `(z, depth)` so the
+//!   recurring window patterns that dominate real traces (§4.4: dense
+//!   rows, empty rows, clustered-nonzero channel patterns) schedule in
+//!   one lookup. The schedule is a pure function of `(z, depth)`, so
+//!   caching can never change simulated cycles or MACs — only how fast
+//!   the simulator produces them. [`reference`] keeps the pre-refactor
+//!   uncached loops as the differential baseline
+//!   (`rust/tests/stream_differential.rs` pins byte-identity,
+//!   `rust/benches/tile_hotpath.rs` pins the throughput win).
+//! * [`drive`] — the run-to-completion loop, generic over a per-cycle
+//!   sink ([`StreamEvent`]), shared by the PE simulator and the
+//!   compression engine. The tile steps its rows cycle-by-cycle against
+//!   the shared-operand lead bound and therefore uses [`StreamWindow`]
+//!   directly.
+//!
+//! **Determinism.** Simulation results depend only on the window
+//! contents, never on cache state. Telemetry (hit/miss/skip counters)
+//! *does* depend on cache state, so callers that surface telemetry
+//! construct one fresh [`CachedScheduler`] per independent unit of work
+//! (e.g. one per [`crate::sim::ChipSim::run_passes`] call). `Engine::map`
+//! cells each build their own simulator, so `--jobs N` output — counters
+//! included — is byte-identical to `--jobs 1`.
+
+use super::connectivity::{Connectivity, LANES};
+use super::scheduler::{schedule_cycle, Schedule, IDLE};
+
+/// Mask of the window's head row (step 0).
+const HEAD_ROW: u64 = 0xFFFF;
+
+/// log2 of the memo-table size. 4096 direct-mapped entries (~160 KiB)
+/// comfortably hold the working set of recurring window patterns a
+/// trace-like stream produces while staying L2-resident.
+pub const MEMO_BITS: u32 = 12;
+
+/// Number of direct-mapped memo entries.
+pub const MEMO_SIZE: usize = 1 << MEMO_BITS;
+
+/// The direct-mapped slot a window vector hashes to. Fibonacci hashing
+/// spreads the low-entropy sparse windows across the table; public so
+/// the differential tests can construct adversarial collision pairs.
+#[inline(always)]
+pub fn memo_index(z: u64) -> usize {
+    (z.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> (64 - MEMO_BITS)) as usize
+}
+
+/// The first pair of distinct single-head-row window keys that collide
+/// in the memo table — adversarial-test support for the direct-mapped
+/// eviction path. Scanning keys `1..` in order, the pigeonhole
+/// principle bounds both members of the pair by `MEMO_SIZE + 1`, so
+/// they are always valid non-empty, non-dense `u16` head masks.
+pub fn memo_collision_pair() -> (u64, u64) {
+    let mut first: Vec<Option<u64>> = vec![None; MEMO_SIZE];
+    for m in 1u64..=(MEMO_SIZE as u64 + 1) {
+        let idx = memo_index(m);
+        match first[idx] {
+            None => first[idx] = Some(m),
+            Some(other) => return (other, m),
+        }
+    }
+    unreachable!("MEMO_SIZE + 1 distinct keys cannot all map to distinct slots")
+}
+
+/// Telemetry counters of a [`CachedScheduler`] (monotone).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Full encoder walks performed ([`schedule_cycle`] calls — the
+    /// expensive path, i.e. memo misses).
+    pub walks: u64,
+    /// Direct-mapped memo-table hits.
+    pub hits: u64,
+    /// Analytical fast-path answers: empty window or fully-dense head
+    /// row (no table access, no walk).
+    pub fast_paths: u64,
+    /// Cycles retired arithmetically by zero-run skipping
+    /// ([`StreamWindow::skip_zero_run`]) — these cycles never reach the
+    /// scheduler at all.
+    pub skipped_cycles: u64,
+}
+
+impl CacheStats {
+    pub fn merge(&mut self, other: &CacheStats) {
+        self.walks += other.walks;
+        self.hits += other.hits;
+        self.fast_paths += other.fast_paths;
+        self.skipped_cycles += other.skipped_cycles;
+    }
+
+    /// Counter deltas accumulated since an earlier snapshot.
+    pub fn since(&self, before: &CacheStats) -> CacheStats {
+        CacheStats {
+            walks: self.walks - before.walks,
+            hits: self.hits - before.hits,
+            fast_paths: self.fast_paths - before.fast_paths,
+            skipped_cycles: self.skipped_cycles - before.skipped_cycles,
+        }
+    }
+
+    /// Fraction of scheduler answers that avoided an encoder walk.
+    pub fn hit_rate(&self) -> f64 {
+        let answered = self.walks + self.hits + self.fast_paths;
+        if answered == 0 {
+            0.0
+        } else {
+            (self.hits + self.fast_paths) as f64 / answered as f64
+        }
+    }
+}
+
+/// One memo slot. `z == 0` marks an empty slot: the all-zero window is
+/// answered by the fast path and never enters the table.
+#[derive(Debug, Clone, Copy)]
+struct MemoEntry {
+    z: u64,
+    depth: u8,
+    sched: Schedule,
+}
+
+/// A memoizing wrapper around the combinational scheduler. See the
+/// module docs for the fast paths, the key layout and the determinism
+/// argument.
+#[derive(Debug, Clone)]
+pub struct CachedScheduler {
+    conn: Connectivity,
+    table: Vec<MemoEntry>,
+    pub stats: CacheStats,
+}
+
+impl CachedScheduler {
+    pub fn new(conn: Connectivity) -> CachedScheduler {
+        let empty = MemoEntry {
+            z: 0,
+            depth: 0,
+            sched: Schedule { ms: [IDLE; LANES], picks: 0, advance: 0 },
+        };
+        CachedScheduler { conn, table: vec![empty; MEMO_SIZE], stats: CacheStats::default() }
+    }
+
+    #[inline]
+    pub fn depth(&self) -> usize {
+        self.conn.depth
+    }
+
+    pub fn connectivity(&self) -> &Connectivity {
+        &self.conn
+    }
+
+    /// Schedule one window — bit-identical to
+    /// `schedule_cycle(conn, z)`, answered without an encoder walk
+    /// whenever a fast path or the memo table applies.
+    pub fn schedule(&mut self, z: u64) -> Schedule {
+        debug_assert_eq!(z & !self.conn.window_mask(), 0, "z has bits outside window");
+        let depth = self.conn.depth as u8;
+        // Fast path 1: all-ineffectual window — nothing to schedule,
+        // the whole window drains (AS = depth).
+        if z == 0 {
+            self.stats.fast_paths += 1;
+            return Schedule { ms: [IDLE; LANES], picks: 0, advance: depth };
+        }
+        // Fast path 2: fully-dense head row. Step-0 slots are exclusive
+        // to their own lane and option 0 is every lane's top priority,
+        // so each lane takes its dense value: MS = 0 everywhere, picks =
+        // exactly the head row, and the advance falls out of the same
+        // leading-drained-rows arithmetic the walk uses.
+        if z & HEAD_ROW == HEAD_ROW {
+            self.stats.fast_paths += 1;
+            let after = z & !HEAD_ROW;
+            let advance = ((after.trailing_zeros() as u8) / LANES as u8).min(depth);
+            return Schedule { ms: [0; LANES], picks: HEAD_ROW, advance };
+        }
+        // Direct-mapped memo probe, keyed on (z, depth).
+        let idx = memo_index(z);
+        let e = &self.table[idx];
+        if e.z == z && e.depth == depth {
+            self.stats.hits += 1;
+            return e.sched;
+        }
+        let sched = schedule_cycle(&self.conn, z);
+        self.stats.walks += 1;
+        self.table[idx] = MemoEntry { z, depth, sched };
+        sched
+    }
+}
+
+/// The shared window cursor: the packed `Z` vector over a stream of
+/// 16-lane effectual masks, with load/consume/shift/refill and
+/// arithmetic zero-run skipping.
+pub struct StreamWindow<'a> {
+    stream: &'a [u16],
+    /// Remaining-effectual window, row `s` of the window at bits
+    /// `16s..16s+16`.
+    z: u64,
+    /// Stream index of the row at window step 0.
+    pos: usize,
+    /// Rows currently loaded (`<= depth`; less only near stream end).
+    loaded: usize,
+    depth: usize,
+}
+
+impl<'a> StreamWindow<'a> {
+    pub fn new(stream: &'a [u16], depth: usize) -> StreamWindow<'a> {
+        let mut w = StreamWindow { stream, z: 0, pos: 0, loaded: 0, depth };
+        w.refill();
+        w
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        while self.loaded < self.depth && self.pos + self.loaded < self.stream.len() {
+            self.z |= (self.stream[self.pos + self.loaded] as u64) << (self.loaded * LANES);
+            self.loaded += 1;
+        }
+    }
+
+    /// The current window vector for the scheduler.
+    #[inline]
+    pub fn z(&self) -> u64 {
+        self.z
+    }
+
+    /// Stream index of the row at window step 0.
+    #[inline]
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Rows currently loaded in the window.
+    #[inline]
+    pub fn loaded(&self) -> usize {
+        self.loaded
+    }
+
+    /// Whether the stream is fully consumed. (The refill invariant makes
+    /// `loaded == 0` equivalent to `pos >= stream.len()`.)
+    #[inline]
+    pub fn done(&self) -> bool {
+        self.loaded == 0
+    }
+
+    /// Consume one schedule: AND out the picks, shift by the advance
+    /// (capped at what is actually loaded — missing rows look drained to
+    /// the scheduler), refill. Returns the rows actually advanced.
+    #[inline]
+    pub fn apply(&mut self, sched: &Schedule) -> usize {
+        let adv = (sched.advance as usize).min(self.loaded);
+        debug_assert!(adv >= 1, "head row must drain every cycle");
+        self.z = (self.z & !sched.picks) >> (adv * LANES);
+        self.pos += adv;
+        self.loaded -= adv;
+        self.refill();
+        adv
+    }
+
+    /// Arithmetic zero-run skipping. When the loaded window is entirely
+    /// ineffectual (`z == 0`), extend the run over the un-loaded stream
+    /// tail and retire it wholesale: a run of `k` all-zero rows costs
+    /// `ceil(k / depth)` all-skip cycles when it reaches the stream end,
+    /// and `floor(k / depth)` full-depth skip cycles when a non-zero row
+    /// follows (the residual `k % depth` zero rows then drain for free
+    /// with the next real schedule's advance, exactly as the iterated
+    /// loop would). Returns the cycles retired (0 if the window holds
+    /// any effectual pair or the stream is done); the cursor lands on
+    /// the state the iterated loop would reach.
+    pub fn skip_zero_run(&mut self) -> u64 {
+        if self.z != 0 || self.loaded == 0 {
+            return 0;
+        }
+        let n = self.stream.len();
+        // All `loaded` window rows are zero; extend over the tail.
+        let mut end = self.pos + self.loaded;
+        while end < n && self.stream[end] == 0 {
+            end += 1;
+        }
+        let k = end - self.pos;
+        if end == n {
+            // The run reaches the stream end: ceil(k/depth) cycles, each
+            // draining min(depth, remaining) rows.
+            self.pos = n;
+            self.loaded = 0;
+            (k as u64).div_ceil(self.depth as u64)
+        } else {
+            // A non-zero row sits at `end`, so only windows fully inside
+            // the run schedule as pure skips. (The window is full here:
+            // `loaded < depth` implies the refill hit the stream end,
+            // contradicting `end < n`.)
+            debug_assert_eq!(self.loaded, self.depth);
+            let cycles = (k / self.depth) as u64;
+            self.pos += cycles as usize * self.depth;
+            self.loaded = 0;
+            self.refill();
+            cycles
+        }
+    }
+}
+
+/// One retirement event of [`drive`].
+pub enum StreamEvent {
+    /// A scheduled cycle. `pos` is the stream index of window step 0 at
+    /// schedule time; `advance` is the applied (capped) row advance.
+    Cycle { pos: usize, sched: Schedule, advance: usize },
+    /// `cycles` all-skip cycles retiring `rows` all-zero stream rows
+    /// arithmetically. Every skip cycle advances `depth` rows except
+    /// possibly the last (`rows - (cycles - 1) * depth`).
+    ZeroRun { cycles: u64, rows: usize },
+}
+
+/// Run one stream to completion through the cached scheduler, invoking
+/// `sink` for every retirement event in stream order. This is the
+/// shared free-running loop of the PE simulator and the compression
+/// engine; the tile steps [`StreamWindow`]s directly against its
+/// inter-row lead bound.
+pub fn drive(sched: &mut CachedScheduler, stream: &[u16], mut sink: impl FnMut(StreamEvent)) {
+    let mut win = StreamWindow::new(stream, sched.depth());
+    while !win.done() {
+        let pos = win.pos();
+        let skipped = win.skip_zero_run();
+        if skipped > 0 {
+            sched.stats.skipped_cycles += skipped;
+            sink(StreamEvent::ZeroRun { cycles: skipped, rows: win.pos() - pos });
+            continue;
+        }
+        let s = sched.schedule(win.z());
+        let advance = win.apply(&s);
+        sink(StreamEvent::Cycle { pos, sched: s, advance });
+    }
+}
+
+pub mod reference {
+    //! The pre-refactor, uncached per-cycle loops — kept verbatim as the
+    //! differential baseline. `rust/tests/stream_differential.rs` pins
+    //! the cached/skipping core byte-identical to these;
+    //! `rust/benches/tile_hotpath.rs` measures the throughput win
+    //! against them. Not used on any simulation path.
+
+    use super::super::connectivity::{Connectivity, LANES};
+    use super::super::pe::StreamStats;
+    use super::super::scheduler::schedule_cycle;
+    use super::super::tile::TileStats;
+
+    /// Naive PE stream simulation: one [`schedule_cycle`] walk per
+    /// simulated cycle, no memo, no zero-run skipping.
+    pub fn simulate_stream_stats(conn: &Connectivity, rows: &[u16]) -> StreamStats {
+        let depth = conn.depth;
+        let n = rows.len();
+        let mut stats = StreamStats::default();
+        if n == 0 {
+            return stats;
+        }
+        let mut z = 0u64;
+        let mut pos = 0usize;
+        let mut loaded = 0usize;
+        while loaded < depth && pos + loaded < n {
+            z |= (rows[pos + loaded] as u64) << (loaded * LANES);
+            loaded += 1;
+        }
+        loop {
+            let sched = schedule_cycle(conn, z);
+            stats.cycles += 1;
+            stats.schedules += 1;
+            stats.macs += sched.picks.count_ones() as u64;
+            let adv = (sched.advance as usize).min(loaded);
+            debug_assert!(adv >= 1, "head row must drain every cycle");
+            z = (z & !sched.picks) >> (adv * LANES);
+            pos += adv;
+            loaded -= adv;
+            while loaded < depth && pos + loaded < n {
+                z |= (rows[pos + loaded] as u64) << (loaded * LANES);
+                loaded += 1;
+            }
+            if loaded == 0 {
+                break;
+            }
+        }
+        stats
+    }
+
+    /// Naive tile pass: the old per-row window state machine with one
+    /// scheduler walk per active row per cycle.
+    pub fn tile_pass_stats(conn: &Connectivity, streams: &[Vec<u16>], lead_limit: usize) -> TileStats {
+        struct RowState<'a> {
+            stream: &'a [u16],
+            z: u64,
+            pos: usize,
+            loaded: usize,
+        }
+        impl<'a> RowState<'a> {
+            fn refill(&mut self, depth: usize) {
+                while self.loaded < depth && self.pos + self.loaded < self.stream.len() {
+                    self.z |= (self.stream[self.pos + self.loaded] as u64) << (self.loaded * LANES);
+                    self.loaded += 1;
+                }
+            }
+            fn done(&self) -> bool {
+                self.loaded == 0 && self.pos >= self.stream.len()
+            }
+        }
+        let depth = conn.depth;
+        let mut stats = TileStats::default();
+        let mut rows: Vec<RowState> = streams
+            .iter()
+            .map(|s| {
+                let mut r = RowState { stream: s.as_slice(), z: 0, pos: 0, loaded: 0 };
+                r.refill(depth);
+                r
+            })
+            .collect();
+        if rows.iter().all(|r| r.done()) {
+            return stats;
+        }
+        loop {
+            let min_pos = rows.iter().filter(|r| !r.done()).map(|r| r.pos).min().unwrap();
+            for row in rows.iter_mut() {
+                if row.done() {
+                    continue;
+                }
+                if row.pos > min_pos + lead_limit {
+                    stats.imbalance_stall_row_cycles += 1;
+                    continue;
+                }
+                let sched = schedule_cycle(conn, row.z);
+                stats.schedules += 1;
+                stats.macs += sched.picks.count_ones() as u64;
+                let adv = (sched.advance as usize).min(row.loaded);
+                debug_assert!(adv >= 1);
+                row.z = (row.z & !sched.picks) >> (adv * LANES);
+                row.pos += adv;
+                row.loaded -= adv;
+                row.refill(depth);
+            }
+            stats.cycles += 1;
+            if rows.iter().all(|r| r.done()) {
+                return stats;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn memo_index_in_range() {
+        let mut rng = Rng::new(1);
+        for _ in 0..10_000 {
+            assert!(memo_index(rng.next_u64()) < MEMO_SIZE);
+        }
+        assert!(memo_index(0) < MEMO_SIZE);
+        assert!(memo_index(u64::MAX) < MEMO_SIZE);
+    }
+
+    #[test]
+    fn cached_matches_combinational_for_random_windows() {
+        for depth in [2usize, 3] {
+            let conn = Connectivity::new(depth);
+            let mut cached = CachedScheduler::new(conn.clone());
+            let mut rng = Rng::new(0xCAFE + depth as u64);
+            for trial in 0..20_000u64 {
+                // Mix fresh windows with deliberate repeats so the memo
+                // hit path is exercised, plus forced edge windows.
+                let z = match trial % 7 {
+                    0 => 0,
+                    1 => 0xFFFF, // dense head, rest empty
+                    2 => conn.window_mask(), // fully dense
+                    3 => 0xFFFF | (rng.next_u64() & conn.window_mask() & !0xFFFF),
+                    _ => rng.next_u64() & conn.window_mask(),
+                };
+                assert_eq!(cached.schedule(z), schedule_cycle(&conn, z), "z={z:#x} depth={depth}");
+            }
+            assert!(cached.stats.hits > 0, "memo never hit");
+            assert!(cached.stats.fast_paths > 0, "fast paths never taken");
+        }
+    }
+
+    #[test]
+    fn collision_eviction_stays_correct() {
+        // Two distinct windows mapping to the same memo slot must each
+        // still get their own schedule (direct-mapped eviction, never a
+        // stale answer).
+        let conn = Connectivity::new(3);
+        let (za, zb) = memo_collision_pair();
+        assert_ne!(za, zb);
+        assert_eq!(memo_index(za), memo_index(zb));
+        let mut cached = CachedScheduler::new(conn.clone());
+        for _ in 0..4 {
+            assert_eq!(cached.schedule(za), schedule_cycle(&conn, za));
+            assert_eq!(cached.schedule(zb), schedule_cycle(&conn, zb));
+        }
+        // Direct-mapped: the alternation thrashes the slot — all walks.
+        assert_eq!(cached.stats.walks, 8);
+        assert_eq!(cached.stats.hits, 0);
+    }
+
+    #[test]
+    fn zero_run_skip_matches_iterated_loop() {
+        for depth in [2usize, 3] {
+            let mut rng = Rng::new(0x5EED + depth as u64);
+            for trial in 0..400 {
+                // Streams with engineered zero runs in random positions.
+                let mut rows: Vec<u16> = Vec::new();
+                let segs = 1 + trial % 4;
+                for _ in 0..=segs {
+                    for _ in 0..rng.below(6) {
+                        rows.push(rng.mask16(0.5));
+                    }
+                    for _ in 0..rng.below(12) {
+                        rows.push(0);
+                    }
+                }
+                let mut skip_cycles = 0u64;
+                let mut win = StreamWindow::new(&rows, depth);
+                // Iterated reference cursor (no skipping).
+                let mut rz = 0u64;
+                let mut rpos = 0usize;
+                let mut rloaded = 0usize;
+                let conn = Connectivity::new(depth);
+                let refill = |z: &mut u64, pos: usize, loaded: &mut usize| {
+                    while *loaded < depth && pos + *loaded < rows.len() {
+                        *z |= (rows[pos + *loaded] as u64) << (*loaded * LANES);
+                        *loaded += 1;
+                    }
+                };
+                refill(&mut rz, rpos, &mut rloaded);
+                while rloaded > 0 {
+                    if rz == 0 {
+                        // Step the reference one all-skip cycle; step the
+                        // skipping cursor only when it has fallen behind.
+                        if skip_cycles == 0 {
+                            skip_cycles = win.skip_zero_run();
+                            assert!(skip_cycles > 0, "empty window must skip");
+                        }
+                        skip_cycles -= 1;
+                        let adv = rloaded.min(depth);
+                        rz >>= adv * LANES;
+                        rpos += adv;
+                        rloaded -= adv;
+                        refill(&mut rz, rpos, &mut rloaded);
+                        if skip_cycles == 0 {
+                            // The skip batch is spent: both cursors must
+                            // coincide exactly.
+                            assert_eq!(win.pos(), rpos, "depth {depth}");
+                            assert_eq!(win.z(), rz);
+                            assert_eq!(win.loaded(), rloaded);
+                        }
+                    } else {
+                        assert_eq!(skip_cycles, 0, "skip overran into a scheduled cycle");
+                        assert_eq!(win.z(), rz);
+                        assert_eq!(win.pos(), rpos);
+                        let s = schedule_cycle(&conn, rz);
+                        let adv = (s.advance as usize).min(rloaded);
+                        rz = (rz & !s.picks) >> (adv * LANES);
+                        rpos += adv;
+                        rloaded -= adv;
+                        refill(&mut rz, rpos, &mut rloaded);
+                        win.apply(&s);
+                    }
+                }
+                assert_eq!(skip_cycles, 0);
+                assert!(win.done());
+            }
+        }
+    }
+
+    #[test]
+    fn all_zero_stream_retires_in_ceil_k_over_depth() {
+        for depth in [2usize, 3] {
+            for k in [1usize, 2, 3, 4, 5, 6, 7, 29, 96, 97] {
+                let rows = vec![0u16; k];
+                let mut win = StreamWindow::new(&rows, depth);
+                let cycles = win.skip_zero_run();
+                assert_eq!(cycles, (k as u64).div_ceil(depth as u64), "k={k} depth={depth}");
+                assert!(win.done());
+                assert_eq!(win.skip_zero_run(), 0, "done window must not skip again");
+            }
+        }
+    }
+}

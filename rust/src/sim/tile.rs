@@ -16,9 +16,16 @@
 //! imbalance across rows (§4.4: non-zeros cluster in a subset of
 //! feature maps) then produces exactly the stalls the paper studies in
 //! Fig. 17: speedup declines as rows are added.
+//!
+//! Each row's window state is a [`StreamWindow`] from
+//! [`crate::sim::stream`]; rows step cycle-by-cycle against the lead
+//! bound (so arithmetic zero-run skipping does not apply here — the
+//! global cycle loop must observe every cycle), but all rows share one
+//! [`CachedScheduler`], so empty windows and recurring window patterns
+//! are answered without an encoder walk.
 
-use super::connectivity::{Connectivity, LANES, MAX_DEPTH};
-use super::scheduler::schedule_cycle;
+use super::connectivity::Connectivity;
+use super::stream::{CachedScheduler, StreamWindow};
 
 /// Default lead bound in stream rows: the 3-deep staging buffer plus one
 /// scratchpad bank refill of slack on the shared A side.
@@ -34,33 +41,16 @@ pub struct TileStats {
     pub macs: u64,
     /// Row-cycles spent stalled on the shared-operand lead bound.
     pub imbalance_stall_row_cycles: u64,
-}
-
-struct RowState<'a> {
-    stream: &'a [u16],
-    /// Remaining-effectual window, packed as the scheduler's Z vector.
-    z: u64,
-    pos: usize,
-    loaded: usize,
-}
-
-impl<'a> RowState<'a> {
-    fn new(stream: &'a [u16], depth: usize) -> Self {
-        let mut s = RowState { stream, z: 0, pos: 0, loaded: 0 };
-        s.refill(depth);
-        s
-    }
-
-    fn refill(&mut self, depth: usize) {
-        while self.loaded < depth && self.pos + self.loaded < self.stream.len() {
-            self.z |= (self.stream[self.pos + self.loaded] as u64) << (self.loaded * LANES);
-            self.loaded += 1;
-        }
-    }
-
-    fn done(&self) -> bool {
-        self.loaded == 0 && self.pos >= self.stream.len()
-    }
+    /// Actual encoder walks (scheduler-cache misses) this pass cost.
+    pub schedules: u64,
+    /// Scheduler answers served from the memo table.
+    pub cache_hits: u64,
+    /// Scheduler answers served by the analytical fast paths.
+    pub fast_paths: u64,
+    /// Cycles retired by zero-run skipping (always 0 for the tile — the
+    /// lead-bound loop steps every cycle — kept so the telemetry shape
+    /// matches [`crate::sim::pe::StreamStats`]).
+    pub skipped_cycles: u64,
 }
 
 /// Simulate one tile pass: `streams[r]` is the B-side effectual mask
@@ -70,41 +60,57 @@ pub fn tile_pass_cycles(conn: &Connectivity, streams: &[Vec<u16>], lead_limit: u
     tile_pass_stats(conn, streams, lead_limit).cycles
 }
 
-/// Full-stats variant of [`tile_pass_cycles`].
+/// Full-stats variant of [`tile_pass_cycles`] (fresh scheduler cache —
+/// use [`tile_pass_stats_cached`] to amortise one across passes).
 pub fn tile_pass_stats(conn: &Connectivity, streams: &[Vec<u16>], lead_limit: usize) -> TileStats {
-    let depth = conn.depth;
+    let mut sched = CachedScheduler::new(conn.clone());
+    tile_pass_stats_cached(&mut sched, streams, lead_limit)
+}
+
+/// Tile pass through a caller-owned [`CachedScheduler`] (one per
+/// worker/pass batch, so recurring window patterns stay warm across
+/// passes while `Engine::map` cells remain independent). The returned
+/// telemetry covers this pass only (counter deltas).
+pub fn tile_pass_stats_cached(
+    sched: &mut CachedScheduler,
+    streams: &[Vec<u16>],
+    lead_limit: usize,
+) -> TileStats {
+    let before = sched.stats;
+    let depth = sched.depth();
     let mut stats = TileStats::default();
-    let mut rows: Vec<RowState> = streams.iter().map(|s| RowState::new(s, depth)).collect();
+    let mut rows: Vec<StreamWindow> = streams.iter().map(|s| StreamWindow::new(s, depth)).collect();
     if rows.iter().all(|r| r.done()) {
         return stats;
     }
     loop {
         // The slowest unfinished row pins the shared A-side window.
-        let min_pos = rows.iter().filter(|r| !r.done()).map(|r| r.pos).min().unwrap();
+        let min_pos = rows.iter().filter(|r| !r.done()).map(|r| r.pos()).min().unwrap();
         for row in rows.iter_mut() {
             if row.done() {
                 continue;
             }
-            if row.pos > min_pos + lead_limit {
+            if row.pos() > min_pos + lead_limit {
                 // Shared-operand slack exhausted: this row stalls until
                 // the laggards advance.
                 stats.imbalance_stall_row_cycles += 1;
                 continue;
             }
-            let sched = schedule_cycle(conn, row.z);
-            stats.macs += sched.picks.count_ones() as u64;
-            let adv = (sched.advance as usize).min(row.loaded);
-            debug_assert!(adv >= 1);
-            row.z = (row.z & !sched.picks) >> (adv * LANES);
-            row.pos += adv;
-            row.loaded -= adv;
-            row.refill(depth);
+            let s = sched.schedule(row.z());
+            stats.macs += s.picks.count_ones() as u64;
+            row.apply(&s);
         }
         stats.cycles += 1;
         if rows.iter().all(|r| r.done()) {
-            return stats;
+            break;
         }
     }
+    let d = sched.stats.since(&before);
+    stats.schedules = d.walks;
+    stats.cache_hits = d.hits;
+    stats.fast_paths = d.fast_paths;
+    stats.skipped_cycles = d.skipped_cycles;
+    stats
 }
 
 #[cfg(test)]
@@ -193,6 +199,34 @@ mod tests {
         let base = streams.iter().map(|s| s.len()).max().unwrap() as u64;
         assert!(stats.cycles <= base);
         assert!(stats.cycles >= (base + 2) / 3);
+    }
+
+    #[test]
+    fn tile_telemetry_accounts_for_every_scheduled_row_cycle() {
+        let streams = random_streams(4, 25, 78, true);
+        let st = tile_pass_stats(&c3(), &streams, L);
+        // Scheduled row-cycles = active row-steps that were not stalled;
+        // each is answered by exactly one of walk / hit / fast path, and
+        // the tile never bulk-skips.
+        assert_eq!(st.skipped_cycles, 0);
+        assert!(st.schedules + st.cache_hits + st.fast_paths >= st.cycles);
+    }
+
+    #[test]
+    fn shared_cache_across_passes_keeps_results_identical() {
+        let streams = random_streams(3, 40, 555, true);
+        let cold = tile_pass_stats(&c3(), &streams, L);
+        let mut sched = CachedScheduler::new(c3());
+        let first = tile_pass_stats_cached(&mut sched, &streams, L);
+        let warm = tile_pass_stats_cached(&mut sched, &streams, L);
+        for s in [&first, &warm] {
+            assert_eq!(s.cycles, cold.cycles);
+            assert_eq!(s.macs, cold.macs);
+            assert_eq!(s.imbalance_stall_row_cycles, cold.imbalance_stall_row_cycles);
+        }
+        // The warm rerun of identical streams walks strictly less.
+        assert!(warm.schedules <= first.schedules);
+        assert!(warm.cache_hits >= first.cache_hits);
     }
 
     #[test]

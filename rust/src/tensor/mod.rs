@@ -7,4 +7,6 @@ pub mod scheduled;
 
 pub use bitmap::TensorBitmap;
 pub use layout::{transpose_group, GroupLayout};
-pub use scheduled::{compress_one_side, decompress, ScheduledTensor};
+pub use scheduled::{
+    compress_one_side, compress_one_side_cached, decompress, ScheduledRow, ScheduledTensor,
+};

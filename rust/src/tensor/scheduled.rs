@@ -10,9 +10,14 @@
 //! One-side scheduling only (the stored `idx` must be interpretable
 //! without the second operand), exactly as §3.6/§3.7 describe for the
 //! back-side scheduler.
+//!
+//! The window/refill loop is [`crate::sim::stream::drive`] — shared
+//! with the PE simulator — with a sink that gathers the moved values;
+//! runs of all-zero rows become arithmetically-emitted all-skip rows.
 
 use crate::sim::connectivity::{Connectivity, LANES};
-use crate::sim::scheduler::{schedule_cycle, IDLE};
+use crate::sim::scheduler::IDLE;
+use crate::sim::stream::{drive, CachedScheduler, StreamEvent};
 
 /// One packed row of the scheduled form.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -24,6 +29,13 @@ pub struct ScheduledRow {
     /// The row's `AS`: how many dense rows the window advanced after
     /// this packed row (1..=depth).
     pub advance: u8,
+}
+
+impl ScheduledRow {
+    /// An all-skip row: no values, the window advanced `advance` rows.
+    fn skip(advance: u8) -> ScheduledRow {
+        ScheduledRow { values: [0.0; LANES], idx: [IDLE; LANES], advance }
+    }
 }
 
 /// A tensor stream compressed by one-side scheduling.
@@ -46,63 +58,64 @@ impl ScheduledTensor {
     }
 }
 
+/// Effectual mask of one dense row (bit `l` set iff lane `l` is
+/// non-zero).
+fn mask_of(row: &[f32; LANES]) -> u16 {
+    let mut m = 0u16;
+    for (l, &v) in row.iter().enumerate() {
+        if v != 0.0 {
+            m |= 1 << l;
+        }
+    }
+    m
+}
+
 /// Compress a dense stream of 16-lane rows with one-side scheduling.
 pub fn compress_one_side(conn: &Connectivity, dense: &[[f32; LANES]]) -> ScheduledTensor {
-    let depth = conn.depth;
-    let n = dense.len();
-    let mut rows = Vec::new();
-    if n == 0 {
-        return ScheduledTensor { rows, dense_rows: 0, depth };
-    }
-    // Remaining-effectual masks over the shared window, as in pe.rs.
-    let mut pos = 0usize;
-    let mut win = [0u16; crate::sim::connectivity::MAX_DEPTH];
-    let mut loaded = 0usize;
-    let mask_of = |row: &[f32; LANES]| -> u16 {
-        let mut m = 0u16;
-        for (l, &v) in row.iter().enumerate() {
-            if v != 0.0 {
-                m |= 1 << l;
+    let mut sched = CachedScheduler::new(conn.clone());
+    compress_one_side_cached(&mut sched, dense)
+}
+
+/// [`compress_one_side`] through a caller-owned [`CachedScheduler`]
+/// (amortises the memo table across tensors).
+pub fn compress_one_side_cached(
+    sched: &mut CachedScheduler,
+    dense: &[[f32; LANES]],
+) -> ScheduledTensor {
+    let depth = sched.depth();
+    let conn = sched.connectivity().clone();
+    let masks: Vec<u16> = dense.iter().map(mask_of).collect();
+    let mut rows: Vec<ScheduledRow> = Vec::new();
+    drive(sched, &masks, |ev| match ev {
+        StreamEvent::Cycle { pos, sched: s, advance } => {
+            let mut out = ScheduledRow { values: [0.0; LANES], idx: [IDLE; LANES], advance: advance as u8 };
+            for lane in 0..LANES {
+                let m = s.ms[lane];
+                if m == IDLE {
+                    continue;
+                }
+                let bit = conn.lanes[lane].bits[m as usize] as usize;
+                let (step, src_lane) = (bit / LANES, bit % LANES);
+                out.values[lane] = dense[pos + step][src_lane];
+                out.idx[lane] = m;
+            }
+            rows.push(out);
+        }
+        StreamEvent::ZeroRun { cycles, rows: zero_rows } => {
+            // A run of all-zero rows stores as all-skip rows: full-depth
+            // advances, with the remainder on the last row — exactly the
+            // sequence the iterated scheduler would emit.
+            for i in 0..cycles {
+                let adv = if i + 1 == cycles {
+                    zero_rows - (cycles as usize - 1) * depth
+                } else {
+                    depth
+                };
+                rows.push(ScheduledRow::skip(adv as u8));
             }
         }
-        m
-    };
-    while loaded < depth && pos + loaded < n {
-        win[loaded] = mask_of(&dense[pos + loaded]);
-        loaded += 1;
-    }
-    while loaded > 0 {
-        let mut z = 0u64;
-        for s in 0..loaded {
-            z |= (win[s] as u64) << (s * LANES);
-        }
-        let sched = schedule_cycle(conn, z);
-        let mut out = ScheduledRow { values: [0.0; LANES], idx: [IDLE; LANES], advance: 0 };
-        for lane in 0..LANES {
-            let m = sched.ms[lane];
-            if m == IDLE {
-                continue;
-            }
-            let bit = conn.lanes[lane].bits[m as usize] as usize;
-            let (step, src_lane) = (bit / LANES, bit % LANES);
-            out.values[lane] = dense[pos + step][src_lane];
-            out.idx[lane] = m;
-        }
-        for s in 0..loaded {
-            win[s] &= !((sched.picks >> (s * LANES)) as u16);
-        }
-        let adv = (sched.advance as usize).min(loaded);
-        out.advance = adv as u8;
-        rows.push(out);
-        win.copy_within(adv..loaded, 0);
-        pos += adv;
-        loaded -= adv;
-        while loaded < depth && pos + loaded < n {
-            win[loaded] = mask_of(&dense[pos + loaded]);
-            loaded += 1;
-        }
-    }
-    ScheduledTensor { rows, dense_rows: n, depth }
+    });
+    ScheduledTensor { rows, dense_rows: dense.len(), depth }
 }
 
 /// Decompress back to the dense stream (Fig. 12): scatter each packed
@@ -182,7 +195,34 @@ mod tests {
         let zeros = vec![[0f32; LANES]; 30];
         let st = compress_one_side(&c, &zeros);
         assert_eq!(st.rows.len(), 10); // ceil(30/3) all-skip rows
+        assert!(st.rows.iter().all(|r| r.advance == 3 && r.idx.iter().all(|&i| i == IDLE)));
         assert_eq!(decompress(&c, &st), zeros);
+    }
+
+    #[test]
+    fn partial_trailing_zero_run_keeps_advance_sum() {
+        let c = c3();
+        // 2 dense rows then 5 zeros: the second dense row's advance
+        // absorbs two zeros, the remaining run stores as all-skip rows;
+        // the advances must still sum to the dense row count.
+        let mut dense = stream(11, 2, 100);
+        dense.extend(vec![[0f32; LANES]; 5]);
+        let st = compress_one_side(&c, &dense);
+        let total: usize = st.rows.iter().map(|r| r.advance as usize).sum();
+        assert_eq!(total, 7);
+        assert_eq!(decompress(&c, &st), dense);
+    }
+
+    #[test]
+    fn shared_cache_compress_identical_to_fresh() {
+        let c = c3();
+        let mut sched = CachedScheduler::new(c.clone());
+        for (seed, density) in [(21u64, 20u64), (22, 50), (21, 20)] {
+            let dense = stream(seed, 60, density);
+            let fresh = compress_one_side(&c, &dense);
+            let warm = compress_one_side_cached(&mut sched, &dense);
+            assert_eq!(warm, fresh, "cache state must never change the schedule");
+        }
     }
 
     #[test]

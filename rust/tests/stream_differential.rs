@@ -1,0 +1,256 @@
+//! Differential property tests: the cached/skipping streaming core
+//! (`sim::stream`) must be **byte-identical** to the naive uncached
+//! reference on everything the simulator observes — cycle counts, MAC
+//! counts, stall counts and `ScheduledTensor` contents — over random
+//! streams at depths 2 and 3, densities 0–100%, and adversarial
+//! memo-table collision keys.
+//!
+//! CI refuses to pass if these tests are filtered out or skipped (the
+//! workflow counts them via `--list` before running this binary).
+
+use tensordash::sim::connectivity::{Connectivity, LANES, MAX_DEPTH};
+use tensordash::sim::pe::simulate_stream_stats;
+use tensordash::sim::scheduler::{schedule_cycle, IDLE};
+use tensordash::sim::stream::{memo_index, reference, CachedScheduler};
+use tensordash::sim::tile::tile_pass_stats;
+use tensordash::tensor::scheduled::{ScheduledRow, ScheduledTensor};
+use tensordash::tensor::{compress_one_side, decompress};
+use tensordash::util::rng::Rng;
+
+/// The pre-refactor compression loop, kept verbatim as the differential
+/// baseline for [`compress_one_side`] (the production copy now rides
+/// `sim::stream::drive`; the sim-side reference loops live in
+/// `sim::stream::reference`).
+fn compress_one_side_reference(conn: &Connectivity, dense: &[[f32; LANES]]) -> ScheduledTensor {
+    let depth = conn.depth;
+    let n = dense.len();
+    let mut rows = Vec::new();
+    if n == 0 {
+        return ScheduledTensor { rows, dense_rows: 0, depth };
+    }
+    let mut pos = 0usize;
+    let mut win = [0u16; MAX_DEPTH];
+    let mut loaded = 0usize;
+    let mask_of = |row: &[f32; LANES]| -> u16 {
+        let mut m = 0u16;
+        for (l, &v) in row.iter().enumerate() {
+            if v != 0.0 {
+                m |= 1 << l;
+            }
+        }
+        m
+    };
+    while loaded < depth && pos + loaded < n {
+        win[loaded] = mask_of(&dense[pos + loaded]);
+        loaded += 1;
+    }
+    while loaded > 0 {
+        let mut z = 0u64;
+        for (s, w) in win.iter().enumerate().take(loaded) {
+            z |= (*w as u64) << (s * LANES);
+        }
+        let sched = schedule_cycle(conn, z);
+        let mut out = ScheduledRow { values: [0.0; LANES], idx: [IDLE; LANES], advance: 0 };
+        for lane in 0..LANES {
+            let m = sched.ms[lane];
+            if m == IDLE {
+                continue;
+            }
+            let bit = conn.lanes[lane].bits[m as usize] as usize;
+            let (step, src_lane) = (bit / LANES, bit % LANES);
+            out.values[lane] = dense[pos + step][src_lane];
+            out.idx[lane] = m;
+        }
+        for (s, w) in win.iter_mut().enumerate().take(loaded) {
+            *w &= !((sched.picks >> (s * LANES)) as u16);
+        }
+        let adv = (sched.advance as usize).min(loaded);
+        out.advance = adv as u8;
+        rows.push(out);
+        win.copy_within(adv..loaded, 0);
+        pos += adv;
+        loaded -= adv;
+        while loaded < depth && pos + loaded < n {
+            win[loaded] = mask_of(&dense[pos + loaded]);
+            loaded += 1;
+        }
+    }
+    ScheduledTensor { rows, dense_rows: n, depth }
+}
+
+/// A stream with both uniform-random and engineered-run structure.
+fn mixed_stream(rng: &mut Rng, len: usize, density: f64) -> Vec<u16> {
+    let mut rows = Vec::with_capacity(len);
+    while rows.len() < len {
+        match rng.below(5) {
+            // zero run (exercises skip batching)
+            0 => {
+                for _ in 0..=rng.below(9) {
+                    rows.push(0);
+                }
+            }
+            // dense run (exercises the dense-head fast path)
+            1 => {
+                for _ in 0..=rng.below(4) {
+                    rows.push(0xFFFF);
+                }
+            }
+            // uniform random at the requested density
+            _ => rows.push(rng.mask16(density)),
+        }
+    }
+    rows.truncate(len);
+    rows
+}
+
+/// PE streams: cached/skipping core == naive reference, cycle- and
+/// MAC-exact, across depths and the full density range.
+#[test]
+fn diff_pe_streams_all_densities() {
+    for depth in [2usize, 3] {
+        let conn = Connectivity::new(depth);
+        let mut rng = Rng::new(0xD1FF + depth as u64);
+        for pct in 0..=20 {
+            let density = pct as f64 / 20.0;
+            for trial in 0..30 {
+                let len = rng.below(90) + usize::from(trial % 3 == 0) * 200;
+                let rows = mixed_stream(&mut rng, len, density);
+                let new = simulate_stream_stats(&conn, &rows);
+                let old = reference::simulate_stream_stats(&conn, &rows);
+                assert_eq!(new.cycles, old.cycles, "cycles d={depth} density={density}");
+                assert_eq!(new.macs, old.macs, "macs d={depth} density={density}");
+                // Telemetry identity: every cycle is skipped or answered
+                // exactly once, and the cache only ever *saves* walks.
+                assert_eq!(
+                    new.cycles - new.skipped_cycles,
+                    new.schedules + new.cache_hits + new.fast_paths
+                );
+                assert!(new.schedules <= old.schedules);
+            }
+        }
+    }
+}
+
+/// Tile passes: identical cycles, MACs and imbalance stalls for every
+/// lead bound, with rows of heterogeneous density.
+#[test]
+fn diff_tile_passes() {
+    for depth in [2usize, 3] {
+        let conn = Connectivity::new(depth);
+        let mut rng = Rng::new(0x711D + depth as u64);
+        for trial in 0..60 {
+            let n_rows = 1 + rng.below(6);
+            let len = 4 + rng.below(50);
+            let streams: Vec<Vec<u16>> = (0..n_rows)
+                .map(|_| {
+                    let d = rng.f64();
+                    mixed_stream(&mut rng, len, d)
+                })
+                .collect();
+            for lead in [0usize, 2, 6, 4096] {
+                let new = tile_pass_stats(&conn, &streams, lead);
+                let old = reference::tile_pass_stats(&conn, &streams, lead);
+                assert_eq!(new.cycles, old.cycles, "trial {trial} lead {lead} depth {depth}");
+                assert_eq!(new.macs, old.macs);
+                assert_eq!(new.imbalance_stall_row_cycles, old.imbalance_stall_row_cycles);
+                assert_eq!(new.skipped_cycles, 0, "the tile must not bulk-skip");
+                assert!(new.schedules <= old.schedules, "cache added walks?");
+            }
+        }
+    }
+}
+
+/// Compression: the `ScheduledTensor` is byte-identical to the
+/// reference (values, movement indices, advances) and round-trips.
+#[test]
+fn diff_compress_round_trips() {
+    for depth in [2usize, 3] {
+        let conn = Connectivity::new(depth);
+        let mut rng = Rng::new(0xC0DE + depth as u64);
+        for pct in [0u64, 5, 15, 40, 60, 85, 100] {
+            for _ in 0..12 {
+                let len = rng.below(70);
+                let dense: Vec<[f32; LANES]> = (0..len)
+                    .map(|_| {
+                        let mut row = [0f32; LANES];
+                        for v in row.iter_mut() {
+                            if (rng.next_u64() % 100) < pct {
+                                *v = (rng.next_u64() % 999 + 1) as f32;
+                            }
+                        }
+                        row
+                    })
+                    .collect();
+                let new = compress_one_side(&conn, &dense);
+                let old = compress_one_side_reference(&conn, &dense);
+                assert_eq!(new, old, "scheduled form diverged (depth {depth}, density {pct}%)");
+                assert_eq!(decompress(&conn, &new), dense, "round trip (depth {depth})");
+            }
+        }
+    }
+}
+
+/// Adversarial memo-table collisions: streams whose alternating windows
+/// hash to the same direct-mapped slot must thrash the cache without
+/// ever producing a stale schedule.
+#[test]
+fn diff_cache_collision_thrash() {
+    // Two distinct non-zero, non-dense 16-bit head masks whose
+    // single-row windows collide in the memo table.
+    let (za, zb) = tensordash::sim::stream::memo_collision_pair();
+    let (a, b) = (za as u16, zb as u16);
+    assert_eq!(memo_index(a as u64), memo_index(b as u64));
+    assert_ne!(a, b);
+    for depth in [2usize, 3] {
+        let conn = Connectivity::new(depth);
+        // [a, 0.., b, 0..] repeated: each scheduled window is exactly
+        // `a` or `b` (the zero padding rides the advance), so the two
+        // keys alternate in one slot — worst-case eviction pressure.
+        let mut rows = Vec::new();
+        for _ in 0..64 {
+            rows.push(a);
+            rows.extend(std::iter::repeat(0).take(depth - 1));
+            rows.push(b);
+            rows.extend(std::iter::repeat(0).take(depth - 1));
+        }
+        let new = simulate_stream_stats(&conn, &rows);
+        let old = reference::simulate_stream_stats(&conn, &rows);
+        assert_eq!(new.cycles, old.cycles, "depth {depth}");
+        assert_eq!(new.macs, old.macs, "depth {depth}");
+
+        // And at the scheduler level: alternating lookups of the
+        // colliding keys must each re-walk, never return the neighbour's
+        // entry.
+        let mut cached = CachedScheduler::new(conn.clone());
+        for _ in 0..3 {
+            assert_eq!(cached.schedule(a as u64), schedule_cycle(&conn, a as u64));
+            assert_eq!(cached.schedule(b as u64), schedule_cycle(&conn, b as u64));
+        }
+        assert_eq!(cached.stats.walks, 6, "direct-mapped thrash must miss every time");
+        assert_eq!(cached.stats.hits, 0);
+    }
+}
+
+/// Engineered zero runs: skipping must engage (not just match) and the
+/// cycle counts still agree exactly.
+#[test]
+fn diff_zero_runs_engage_skipping() {
+    for depth in [2usize, 3] {
+        let conn = Connectivity::new(depth);
+        let mut rng = Rng::new(0x0A11 + depth as u64);
+        for run in [8usize, 17, 31, 64] {
+            let mut rows: Vec<u16> = (0..5).map(|_| rng.mask16(0.9)).collect();
+            rows.extend(vec![0u16; run]);
+            rows.extend((0..5).map(|_| rng.mask16(0.9)));
+            rows.extend(vec![0u16; run]);
+            let new = simulate_stream_stats(&conn, &rows);
+            let old = reference::simulate_stream_stats(&conn, &rows);
+            assert_eq!(new.cycles, old.cycles, "run {run} depth {depth}");
+            assert_eq!(new.macs, old.macs);
+            assert!(
+                new.skipped_cycles > 0,
+                "a {run}-zero run must retire arithmetically (depth {depth})"
+            );
+        }
+    }
+}
