@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
         if step == 1 || step % 25 == 0 || step == steps {
             let (sa, sg) = out.trace.mean_sparsity();
             let req = SimRequest::trace(
-                "captured",
+                &trainer.meta.name,
                 shapes.clone(),
                 out.trace.layers.clone(),
                 cfg.clone(),
@@ -82,7 +82,7 @@ fn main() -> anyhow::Result<()> {
                 sim.overall_speedup()
             );
             trajectory.row(vec![
-                Cell::fmt(format!("{step}"), step as f64),
+                Cell::fmt(step.to_string(), step as f64),
                 Cell::fmt(format!("{:.4}", out.loss), out.loss as f64),
                 Cell::fmt(format!("{:.3}", out.accuracy), out.accuracy as f64),
                 Cell::num(sa),

@@ -120,6 +120,7 @@ def export_all(out_dir: str) -> None:
     ]
     meta = {
         "model": {
+            "name": cfg.name,
             "batch": n,
             "input": [n, h, w, c0],
             "classes": cfg.classes,

@@ -42,6 +42,9 @@ class ModelConfig(NamedTuple):
         (3, 2, 1, 32, 32),
         (3, 1, 1, 32, 32),
     )
+    # Model name: written to meta.json so the rust side can label the
+    # captured-trace simulation reports with the real model identity.
+    name: str = "aot-cnn"
 
     def conv_out_hw(self):
         h, w = self.height, self.width

@@ -38,6 +38,8 @@ def test_artifact_exists_and_is_hlo_text(outdir, name):
 
 def test_meta_json(outdir):
     meta = json.load(open(os.path.join(outdir, "meta.json")))
+    # The model name labels the rust side's captured-trace reports.
+    assert meta["model"]["name"] == "aot-cnn"
     assert meta["model"]["batch"] == 16
     assert len(meta["model"]["convs"]) == 3
     n_params = len(meta["params"])

@@ -5,22 +5,27 @@
 //!
 //! * **No new dependencies** — plain `std::thread::scope` workers over an
 //!   atomic work index (rayon is unavailable offline).
-//! * **Determinism** — every cell's result depends only on its own
-//!   request (config + workload + samples + seed), never on worker
+//! * **Determinism** — every work item's result depends only on its own
+//!   spec (config + workload + samples + derived seed), never on worker
 //!   count or completion order; results are re-assembled in submission
-//!   order. `--jobs 4` is byte-identical to `--jobs 1`.
-//! * **Throughput** — sweep cells are embarrassingly parallel (each is a
-//!   full cycle-simulation), so the pool scales until the hardware runs
-//!   out of cores.
+//!   order and merged per cell in unit order. `--jobs 4` is
+//!   byte-identical to `--jobs 1`.
+//! * **Throughput** — requests are expanded through
+//!   [`ModelPlan`](super::plan::ModelPlan) into per-(layer, op) units
+//!   and the *flattened* cell×unit list feeds one work-stealing pool.
+//!   A single `simulate resnet50` saturates every core (its ~160 units
+//!   spread over the workers), and a fig13-style sweep load-balances at
+//!   unit grain instead of whole-model grain.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 
-use crate::repro::{simulate_layer_op, simulate_profile, simulate_trace, ModelSim};
-use crate::trace::profiles::ModelProfile;
+use crate::repro::{simulate_layer_op, ModelSim};
+use crate::sim::unit::LayerOpSim;
 use crate::trace::synthetic::random_bitmap;
 use crate::util::rng::Rng;
 
+use super::plan::ModelPlan;
 use super::request::{SimRequest, Workload};
 
 /// Number of workers the engine uses when the caller does not say
@@ -54,15 +59,60 @@ impl Engine {
         self.jobs
     }
 
-    /// Execute one request synchronously on the calling thread.
+    /// Execute one request on the worker pool. A single model request
+    /// still fans out: its plan's units fill every worker.
     pub fn run(&self, req: &SimRequest) -> ModelSim {
-        execute(req)
+        self.run_all(std::slice::from_ref(req)).pop().expect("one request, one result")
     }
 
     /// Execute a batch of requests on the worker pool; results are in
     /// input order regardless of worker count.
+    ///
+    /// Every request that lowers to a [`ModelPlan`] contributes its
+    /// units to one flat work list (nested cell×unit work stealing);
+    /// workloads that stay monolithic (`RandomSparse`) ride the same
+    /// pool as single items. Unit results are re-assembled by index and
+    /// merged per cell in plan order, so the fold — including its f64
+    /// energy sums — is identical for any worker count.
     pub fn run_all(&self, reqs: &[SimRequest]) -> Vec<ModelSim> {
-        self.map(reqs.len(), |i| execute(&reqs[i]))
+        enum Job<'p> {
+            Unit { cell: usize, plan: &'p ModelPlan, unit: usize },
+            Whole { cell: usize },
+        }
+        enum Out {
+            Unit(LayerOpSim),
+            Whole(ModelSim),
+        }
+        let plans: Vec<Option<ModelPlan>> = reqs.iter().map(ModelPlan::for_request).collect();
+        let mut jobs: Vec<Job> = Vec::new();
+        for (cell, plan) in plans.iter().enumerate() {
+            match plan {
+                Some(p) => {
+                    jobs.extend((0..p.units.len()).map(|unit| Job::Unit { cell, plan: p, unit }))
+                }
+                None => jobs.push(Job::Whole { cell }),
+            }
+        }
+        let outs = self.map(jobs.len(), |i| match &jobs[i] {
+            Job::Unit { plan, unit, .. } => Out::Unit(plan.units[*unit].execute(&plan.cfg)),
+            Job::Whole { cell } => Out::Whole(execute_monolithic(&reqs[*cell])),
+        });
+        // Deterministic merge: jobs were emitted cell-major / unit-minor
+        // and `map` returns results in job order, so folding in sequence
+        // reproduces each plan's unit order exactly.
+        let mut sims: Vec<ModelSim> =
+            reqs.iter().map(|r| ModelSim::empty(r.label.clone())).collect();
+        for (job, out) in jobs.iter().zip(outs) {
+            match (job, out) {
+                (Job::Unit { cell, .. }, Out::Unit(u)) => sims[*cell].merge_unit(&u),
+                (Job::Whole { cell }, Out::Whole(mut s)) => {
+                    s.name = reqs[*cell].label.clone();
+                    sims[*cell] = s;
+                }
+                _ => unreachable!("job/result kind mismatch"),
+            }
+        }
+        sims
     }
 
     /// The pool primitive: compute `f(0..n)` with work stealing, return
@@ -101,58 +151,37 @@ impl Engine {
     }
 }
 
-/// Execute one request. Pure: depends only on the request contents.
-fn execute(req: &SimRequest) -> ModelSim {
+/// Execute a request that did not lower to a unit plan. Pure: depends
+/// only on the request contents.
+fn execute_monolithic(req: &SimRequest) -> ModelSim {
     match &req.workload {
-        Workload::Profile { model, epoch } => {
-            // Unknown names are rejected at request-build time; an
-            // invariant breach here should be loud.
-            let p = ModelProfile::for_model(model)
-                .unwrap_or_else(|| panic!("unknown model '{model}' reached the engine"));
-            let mut sim = simulate_profile(&req.cfg, &p, *epoch, req.samples, req.seed);
-            sim.name = req.label.clone();
-            sim
-        }
-        Workload::Trace { shapes, layers } => {
-            let mut sim = simulate_trace(&req.cfg, shapes, layers, req.samples, req.seed);
-            sim.name = req.label.clone();
-            sim
-        }
-        Workload::SingleOp { shape, op, a, g, batch_mult } => {
-            let mut rng = Rng::new(req.seed);
-            let r = simulate_layer_op(&req.cfg, shape, *op, a, g, req.samples, *batch_mult, &mut rng);
-            let mut per_op = [(0u64, 0u64); 3];
-            per_op[*op as usize] = (r.base_chip_cycles, r.td_chip_cycles);
-            ModelSim {
-                name: req.label.clone(),
-                per_op,
-                energy_base: r.energy_base,
-                energy_td: r.energy_td,
-                sched: r.sched,
-            }
-        }
         Workload::RandomSparse { shape, sparsity, samples_per_level, batch_mult } => {
             use crate::conv::TrainOp;
+            // One rolling RNG stream feeds tensor draws *and* pass
+            // sampling — the published Fig. 20 numbers depend on that
+            // sequence, which is why this workload is not unit-split.
             let mut rng = Rng::new(req.seed);
-            let mut per_op = [(0u64, 0u64); 3];
-            let mut e_base = crate::energy::EnergyBreakdown::default();
-            let mut e_td = crate::energy::EnergyBreakdown::default();
-            let mut sched = crate::sim::CacheStats::default();
-            for _ in 0..*samples_per_level {
+            let mut sim = ModelSim::empty(req.label.clone());
+            for draw in 0..*samples_per_level {
                 let a = random_bitmap((shape.n, shape.h, shape.w, shape.c), *sparsity, &mut rng);
                 let g =
                     random_bitmap((shape.n, shape.out_h(), shape.out_w(), shape.f), *sparsity, &mut rng);
                 for op in TrainOp::ALL {
-                    let r =
+                    let mut r =
                         simulate_layer_op(&req.cfg, shape, op, &a, &g, req.samples, *batch_mult, &mut rng);
-                    per_op[op as usize].0 += r.base_chip_cycles;
-                    per_op[op as usize].1 += r.td_chip_cycles;
-                    e_base.merge(&r.energy_base);
-                    e_td.merge(&r.energy_td);
-                    sched.merge(&r.sched);
+                    r.layer = draw; // unit index = tensor draw
+                    sim.merge_unit(&r);
                 }
             }
-            ModelSim { name: req.label.clone(), per_op, energy_base: e_base, energy_td: e_td, sched }
+            sim
+        }
+        // Plannable workloads never reach this path (`run_all` expands
+        // them); keep a correct fallback anyway.
+        _ => {
+            let plan = ModelPlan::for_request(req).expect("plannable workload");
+            let mut sim = plan.execute_serial();
+            sim.name = req.label.clone();
+            sim
         }
     }
 }
@@ -173,6 +202,21 @@ mod tests {
         }
         // Serial path too.
         assert_eq!(Engine::serial().map(5, |i| i), vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn single_request_fans_out_units_and_retains_them() {
+        let req = SimRequest::profile("alexnet", 0.4, ChipConfig::default(), 1, 5).unwrap();
+        let serial = Engine::serial().run(&req);
+        let parallel = Engine::new(4).run(&req);
+        // One model request is many unit jobs — and still byte-stable.
+        assert_eq!(serial, parallel);
+        assert_eq!(serial.layers.len(), 8 * 3, "alexnet: 8 layers x 3 ops");
+        // Units arrive in plan order whatever the worker interleaving.
+        for (i, u) in serial.layers.iter().enumerate() {
+            assert_eq!(u.layer, i / 3);
+            assert_eq!(u.op as usize, i % 3);
+        }
     }
 
     #[test]

@@ -19,8 +19,15 @@
 //!   expands to one request per cell with a seed derived by
 //!   [`derive_seed`], making results independent of worker count and
 //!   execution order.
-//! * [`Engine`] — executes requests on a `std::thread` pool
-//!   ([`Engine::map`] is the generic primitive the figure sweeps use).
+//! * [`ModelPlan`] / [`UnitSpec`] — a request lowered to its
+//!   deterministic parallel unit graph: one independent (layer, op)
+//!   unit per layer × {Fwd, Igrad, Wgrad}, each with its own derived
+//!   seed, merged back in plan order. The retained per-unit vector
+//!   feeds the `tensordash.layers.v1` breakdown ([`layers_report`]).
+//! * [`Engine`] — executes the *flattened* cell×unit work list on a
+//!   `std::thread` pool ([`Engine::map`] is the generic primitive the
+//!   figure sweeps use), so a single-model simulation saturates all
+//!   cores, not just multi-cell sweeps.
 //! * [`Report`] / [`ReportRow`] / [`Cell`] — the structured result:
 //!   `repro::` figure functions *return* reports; text tables, JSON and
 //!   CSV are renderers over them, so every figure regenerates
@@ -28,9 +35,13 @@
 //!   benches, examples, tests).
 
 pub mod engine;
+pub mod plan;
 pub mod report;
 pub mod request;
 
 pub use engine::{default_jobs, Engine};
-pub use report::{report_set_json, Cell, Report, ReportRow, REPORT_SCHEMA, REPORT_SET_SCHEMA};
+pub use plan::{layers_report, ModelPlan, UnitSpec, UnitTensors};
+pub use report::{
+    report_set_json, Cell, Report, ReportRow, LAYERS_SCHEMA, REPORT_SCHEMA, REPORT_SET_SCHEMA,
+};
 pub use request::{derive_seed, SimRequest, SweepSpec, Workload};

@@ -1,0 +1,407 @@
+//! Model plans: a [`SimRequest`] expanded into its deterministic
+//! parallel unit graph.
+//!
+//! A model simulation is a sum over independent (layer, training-op)
+//! *units* — the grain the paper itself reports (every figure aggregates
+//! per-(layer, op) behaviour over nine models). [`ModelPlan::for_request`]
+//! makes that structure explicit: one [`UnitSpec`] per layer ×
+//! {Fwd, Igrad, Wgrad}, each carrying
+//!
+//! * a recipe for its operand bitmaps ([`UnitTensors`]) — either
+//!   generated in-worker from the model's synthetic sparsity profile
+//!   (so tensor generation parallelises with the cycle simulation) or
+//!   explicit captured bitmaps shared via `Arc` across the op triplet;
+//! * its own pass-sampling seed, derived with [`derive_seed`] from the
+//!   request seed and the unit index. This replaces the old shared
+//!   sequential RNG that made per-layer results depend on iteration
+//!   order: units are now pure functions of their spec, so the engine
+//!   may execute them in any order, on any worker, and the merged
+//!   [`ModelSim`] is byte-identical for any `--jobs N`.
+//!
+//! The merge is a fold of [`ModelSim::merge_unit`] in unit (plan)
+//! order — a deterministic reduction: integer cycle counters commute,
+//! and the f64 energy sums are always added in the same order because
+//! the executor re-assembles unit results by index before folding.
+//!
+//! The full per-unit vector survives the merge (`ModelSim::layers`), so
+//! per-layer speedup/energy/bottleneck tables are a first-class report:
+//! [`layers_report`] renders them under the `tensordash.layers.v1`
+//! schema (CLI `--per-layer`).
+
+use std::sync::{Arc, OnceLock};
+
+use crate::config::ChipConfig;
+use crate::conv::{ConvShape, TrainOp};
+use crate::metrics::pct;
+use crate::repro::ModelSim;
+use crate::sim::unit::{simulate_unit, LayerOpSim};
+use crate::tensor::TensorBitmap;
+use crate::trace::profiles::ModelProfile;
+
+use super::report::{Cell, Report, LAYERS_SCHEMA};
+use super::request::{derive_seed, SimRequest, Workload};
+
+/// Where a unit's operand bitmaps come from.
+#[derive(Debug, Clone)]
+pub enum UnitTensors {
+    /// Generated in-worker from the model's synthetic sparsity profile —
+    /// deterministic in `(model, layer, epoch, bitmap_seed)`, so the
+    /// generation cost parallelises along with the cycle simulation.
+    /// The layer's op triplet shares one lazily-filled cache: whichever
+    /// unit runs first generates the (A, G) pair, the other two reuse
+    /// it (generation is pure, so the winner is irrelevant) — the
+    /// serial path pays one generation per layer, exactly like the
+    /// pre-plan walk.
+    Profile {
+        profile: Arc<ModelProfile>,
+        epoch: f64,
+        bitmap_seed: u64,
+        bitmaps: Arc<OnceLock<(TensorBitmap, TensorBitmap)>>,
+    },
+    /// Captured-trace bitmaps: the whole step's layer vector shared by
+    /// every unit without copying (the unit's `layer` indexes it).
+    Trace { layers: Arc<Vec<(TensorBitmap, TensorBitmap)>> },
+    /// Explicit bitmaps (single-op requests), shared across units
+    /// without copying.
+    Explicit { a: Arc<TensorBitmap>, g: Arc<TensorBitmap> },
+}
+
+/// One independent simulation unit: a (layer, op) pair with everything
+/// needed to execute it on any worker at any time.
+#[derive(Debug, Clone)]
+pub struct UnitSpec {
+    /// Layer index within the plan (also the profile layer index).
+    pub layer: usize,
+    pub op: TrainOp,
+    pub shape: ConvShape,
+    pub tensors: UnitTensors,
+    pub batch_mult: u64,
+    /// Pass-sample budget (see `repro::DEFAULT_SAMPLES`).
+    pub samples: usize,
+    /// Per-unit pass-sampling seed (derived, order-independent).
+    pub seed: u64,
+}
+
+impl UnitSpec {
+    /// Execute this unit. Pure: depends only on the spec and `cfg`.
+    pub fn execute(&self, cfg: &ChipConfig) -> LayerOpSim {
+        let (a, g): (&TensorBitmap, &TensorBitmap) = match &self.tensors {
+            UnitTensors::Profile { profile, epoch, bitmap_seed, bitmaps } => {
+                let pair = bitmaps
+                    .get_or_init(|| profile.layer_bitmaps(self.layer, *epoch, *bitmap_seed));
+                (&pair.0, &pair.1)
+            }
+            UnitTensors::Trace { layers } => {
+                let pair = &layers[self.layer];
+                (&pair.0, &pair.1)
+            }
+            UnitTensors::Explicit { a, g } => (a.as_ref(), g.as_ref()),
+        };
+        simulate_unit(cfg, &self.shape, self.op, self.layer, a, g, self.samples, self.batch_mult, self.seed)
+    }
+}
+
+/// A request lowered to its unit graph: the unit list plus the config
+/// and label shared by every unit.
+#[derive(Debug, Clone)]
+pub struct ModelPlan {
+    pub name: String,
+    pub cfg: ChipConfig,
+    pub units: Vec<UnitSpec>,
+}
+
+impl ModelPlan {
+    /// Plan a synthetic-profile model simulation: one unit per
+    /// layer × op, bitmaps generated in-worker from `profile`.
+    pub fn profile(
+        profile: &ModelProfile,
+        epoch: f64,
+        cfg: &ChipConfig,
+        samples: usize,
+        seed: u64,
+    ) -> ModelPlan {
+        let shared = Arc::new(profile.clone());
+        let batch_mult = profile.batch_mult();
+        let mut plan = ModelPlan {
+            name: profile.name().to_string(),
+            cfg: cfg.clone(),
+            units: Vec::with_capacity(profile.topology.layers.len() * TrainOp::ALL.len()),
+        };
+        for (i, layer) in profile.topology.layers.iter().enumerate() {
+            // One shared lazy cache per layer: the op triplet generates
+            // its (A, G) bitmaps once, whichever unit runs first.
+            let bitmaps = Arc::new(OnceLock::new());
+            for op in TrainOp::ALL {
+                plan.units.push(UnitSpec {
+                    layer: i,
+                    op,
+                    shape: layer.shape,
+                    tensors: UnitTensors::Profile {
+                        profile: Arc::clone(&shared),
+                        epoch,
+                        // The bitmap stream is keyed on (model, layer,
+                        // epoch, seed) exactly as before the plan
+                        // refactor — config sweeps still see identical
+                        // tensors per (model, epoch) cell.
+                        bitmap_seed: seed,
+                        bitmaps: Arc::clone(&bitmaps),
+                    },
+                    batch_mult,
+                    samples,
+                    seed: derive_seed(seed, plan_unit_key(i, op)),
+                });
+            }
+        }
+        plan
+    }
+
+    /// Plan a captured-trace simulation (the coordinator's path): one
+    /// unit per conv layer × op over the real bitmaps the training step
+    /// produced. The whole layer vector is shared by every unit via one
+    /// `Arc` — no bitmap is copied.
+    pub fn trace(
+        name: &str,
+        shapes: &[ConvShape],
+        layers: Arc<Vec<(TensorBitmap, TensorBitmap)>>,
+        cfg: &ChipConfig,
+        samples: usize,
+        seed: u64,
+    ) -> ModelPlan {
+        assert_eq!(shapes.len(), layers.len(), "trace shapes/layers mismatch");
+        let mut plan = ModelPlan {
+            name: name.to_string(),
+            cfg: cfg.clone(),
+            units: Vec::with_capacity(shapes.len() * TrainOp::ALL.len()),
+        };
+        for (i, shape) in shapes.iter().enumerate() {
+            for op in TrainOp::ALL {
+                plan.units.push(UnitSpec {
+                    layer: i,
+                    op,
+                    shape: *shape,
+                    tensors: UnitTensors::Trace { layers: Arc::clone(&layers) },
+                    batch_mult: 1,
+                    samples,
+                    seed: derive_seed(seed, plan_unit_key(i, op)),
+                });
+            }
+        }
+        plan
+    }
+
+    /// Expand a request into its unit graph. Returns `None` for
+    /// workloads that are inherently sequential (`RandomSparse` draws
+    /// its tensors and passes from one rolling RNG stream; the engine
+    /// keeps executing those as a single cell-level work item).
+    pub fn for_request(req: &SimRequest) -> Option<ModelPlan> {
+        match &req.workload {
+            Workload::Profile { model, epoch } => {
+                // Unknown names are rejected at request-build time; an
+                // invariant breach here should be loud.
+                let p = ModelProfile::for_model(model)
+                    .unwrap_or_else(|| panic!("unknown model '{model}' reached the planner"));
+                let mut plan = ModelPlan::profile(&p, *epoch, &req.cfg, req.samples, req.seed);
+                plan.name = req.label.clone();
+                Some(plan)
+            }
+            Workload::Trace { shapes, layers } => Some(ModelPlan::trace(
+                &req.label,
+                shapes,
+                Arc::clone(layers),
+                &req.cfg,
+                req.samples,
+                req.seed,
+            )),
+            Workload::SingleOp { shape, op, a, g, batch_mult } => {
+                Some(ModelPlan {
+                    name: req.label.clone(),
+                    cfg: req.cfg.clone(),
+                    units: vec![UnitSpec {
+                        layer: 0,
+                        op: *op,
+                        shape: *shape,
+                        tensors: UnitTensors::Explicit {
+                            a: Arc::new(a.clone()),
+                            g: Arc::new(g.clone()),
+                        },
+                        batch_mult: *batch_mult,
+                        samples: req.samples,
+                        // The request seed directly: a single-op request
+                        // is its own unit, and this keeps the workload
+                        // byte-identical to the pre-plan executor.
+                        seed: req.seed,
+                    }],
+                })
+            }
+            Workload::RandomSparse { .. } => None,
+        }
+    }
+
+    pub fn unit_count(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Execute every unit on the calling thread, merging in unit order —
+    /// the serial reference the determinism tests pin the pooled
+    /// executor against.
+    pub fn execute_serial(&self) -> ModelSim {
+        self.merge(self.units.iter().map(|u| u.execute(&self.cfg)))
+    }
+
+    /// Deterministically merge per-unit results produced *in plan
+    /// order* (the executor re-assembles worker results by unit index
+    /// before calling this, so f64 energy sums always fold in the same
+    /// order).
+    pub fn merge(&self, units: impl IntoIterator<Item = LayerOpSim>) -> ModelSim {
+        let mut sim = ModelSim::empty(self.name.clone());
+        for u in units {
+            sim.merge_unit(&u);
+        }
+        sim
+    }
+}
+
+/// The unit key fed to [`derive_seed`]: layer-major, op-minor — pinned,
+/// because changing it silently would change every published report.
+fn plan_unit_key(layer: usize, op: TrainOp) -> u64 {
+    (layer * TrainOp::ALL.len() + op as usize) as u64
+}
+
+/// Render the per-unit breakdown of a merged [`ModelSim`] as a
+/// `tensordash.layers.v1` report: one row per (layer, op) with cycle,
+/// speedup, sparsity, energy and bottleneck columns. Layer labels
+/// resolve through the model registry when `sim.name` is a known
+/// profile; otherwise units are labelled `layer<N>`.
+pub fn layers_report(sim: &ModelSim) -> Report {
+    let names: Option<Vec<String>> = ModelProfile::for_model(&sim.name)
+        .map(|p| p.topology.layers.iter().map(|l| l.name.clone()).collect());
+    let mut r = Report::with_schema(
+        LAYERS_SCHEMA,
+        "layers",
+        format!("{} — per-(layer, op) unit breakdown", sim.name),
+        &[
+            "layer",
+            "op",
+            "base cycles",
+            "td cycles",
+            "speedup",
+            "B sparsity",
+            "gated",
+            "bottleneck",
+            "base pJ",
+            "td pJ",
+            "energy eff",
+        ],
+    );
+    for u in &sim.layers {
+        let label = names
+            .as_ref()
+            .and_then(|n| n.get(u.layer).cloned())
+            .unwrap_or_else(|| format!("layer{}", u.layer));
+        r.row(vec![
+            Cell::text(label),
+            Cell::text(u.op.label()),
+            Cell::fmt(u.base_chip_cycles.to_string(), u.base_chip_cycles as f64),
+            Cell::fmt(u.td_chip_cycles.to_string(), u.td_chip_cycles as f64),
+            Cell::num(u.speedup()),
+            Cell::fmt(pct(u.b_sparsity), u.b_sparsity),
+            Cell::text(if u.gated { "yes" } else { "-" }),
+            Cell::text(u.bottleneck()),
+            Cell::fmt(format!("{:.3e}", u.energy_base.total_pj()), u.energy_base.total_pj()),
+            Cell::fmt(format!("{:.3e}", u.energy_td.total_pj()), u.energy_td.total_pj()),
+            Cell::num(u.energy_efficiency()),
+        ]);
+    }
+    r.meta_str("model", &sim.name);
+    r.meta_num("units", sim.layers.len() as f64);
+    r.meta_num("overall_speedup", sim.overall_speedup());
+    r.meta_num("total_efficiency", sim.total_efficiency());
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn profile_plan_expands_layer_op_grid() {
+        let p = ModelProfile::for_model("alexnet").unwrap();
+        let plan = ModelPlan::profile(&p, 0.4, &ChipConfig::default(), 2, 42);
+        assert_eq!(plan.unit_count(), p.topology.layers.len() * 3);
+        // Layer-major, op-minor, with per-unit derived seeds.
+        assert_eq!(plan.units[0].layer, 0);
+        assert_eq!(plan.units[0].op, TrainOp::Fwd);
+        assert_eq!(plan.units[4].layer, 1);
+        assert_eq!(plan.units[4].op, TrainOp::Igrad);
+        assert_eq!(plan.units[4].seed, derive_seed(42, 4));
+        let seeds: std::collections::BTreeSet<u64> =
+            plan.units.iter().map(|u| u.seed).collect();
+        assert_eq!(seeds.len(), plan.unit_count(), "unit seeds must be distinct");
+    }
+
+    #[test]
+    fn serial_execution_retains_per_unit_results() {
+        let p = ModelProfile::for_model("gcn").unwrap();
+        let plan = ModelPlan::profile(&p, 0.4, &ChipConfig::default(), 1, 7);
+        let sim = plan.execute_serial();
+        assert_eq!(sim.layers.len(), plan.unit_count());
+        // The merged per-op sums equal the fold of the retained units.
+        for op in TrainOp::ALL {
+            let base: u64 = sim
+                .layers
+                .iter()
+                .filter(|u| u.op == op)
+                .map(|u| u.base_chip_cycles)
+                .sum();
+            assert_eq!(sim.per_op[op as usize].0, base, "{op:?}");
+        }
+    }
+
+    #[test]
+    fn unit_execution_is_order_independent() {
+        let p = ModelProfile::for_model("gcn").unwrap();
+        let plan = ModelPlan::profile(&p, 0.4, &ChipConfig::default(), 1, 3);
+        // Execute in reverse order, merge in plan order: identical.
+        let forward = plan.execute_serial();
+        let mut rev: Vec<LayerOpSim> =
+            plan.units.iter().rev().map(|u| u.execute(&plan.cfg)).collect();
+        rev.reverse();
+        let merged = plan.merge(rev);
+        assert_eq!(forward.per_op, merged.per_op);
+        assert_eq!(forward.layers, merged.layers);
+        assert_eq!(
+            forward.energy_td.total_pj().to_bits(),
+            merged.energy_td.total_pj().to_bits()
+        );
+    }
+
+    #[test]
+    fn random_sparse_requests_stay_monolithic() {
+        let shape = ConvShape::conv(2, 8, 8, 32, 32, 3, 1, 1);
+        let req = SimRequest::random_sparse(shape, 0.5, 1, 1, ChipConfig::default(), 2, 5);
+        assert!(ModelPlan::for_request(&req).is_none());
+    }
+
+    #[test]
+    fn layers_report_is_schema_tagged_and_renders_everywhere() {
+        let p = ModelProfile::for_model("gcn").unwrap();
+        let sim = ModelPlan::profile(&p, 0.4, &ChipConfig::default(), 1, 9).execute_serial();
+        let r = layers_report(&sim);
+        assert_eq!(r.schema, LAYERS_SCHEMA);
+        assert_eq!(r.rows.len(), sim.layers.len());
+        // Text, JSON and CSV renderers all accept it; JSON round-trips.
+        let text = r.render_text();
+        assert!(text.contains("per-(layer, op)"));
+        let json = r.render_json();
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some(LAYERS_SCHEMA));
+        let back = Report::from_json(&parsed).unwrap();
+        assert_eq!(back, r);
+        let csv = r.render_csv();
+        assert!(csv.starts_with("layer,op,"));
+        assert_eq!(csv.lines().count(), sim.layers.len() + 1);
+        // Named layers resolve through the registry for profile sims.
+        assert!(r.rows[0].cells[0].text != "layer0");
+    }
+}

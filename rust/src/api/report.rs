@@ -62,6 +62,9 @@ pub struct ReportRow {
 /// driver returns and every renderer/serialiser consumes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Report {
+    /// Serialised schema tag: [`REPORT_SCHEMA`] for ordinary figures,
+    /// [`LAYERS_SCHEMA`] for per-(layer, op) unit breakdowns.
+    pub schema: String,
     /// Stable machine identifier, e.g. `"fig13"`, `"table3_fp32"`.
     pub id: String,
     /// Human title (the old table heading).
@@ -74,12 +77,26 @@ pub struct Report {
 
 /// Version tag written into every serialised report.
 pub const REPORT_SCHEMA: &str = "tensordash.report.v1";
+/// Version tag for the per-(layer, op) unit breakdown a model plan
+/// retains (`--per-layer`, `api::plan::layers_report`).
+pub const LAYERS_SCHEMA: &str = "tensordash.layers.v1";
 /// Version tag for a multi-report document (`repro --all --format json`).
 pub const REPORT_SET_SCHEMA: &str = "tensordash.reportset.v1";
 
 impl Report {
     pub fn new(id: impl Into<String>, title: impl Into<String>, columns: &[&str]) -> Report {
+        Report::with_schema(REPORT_SCHEMA, id, title, columns)
+    }
+
+    /// A report under a non-default schema tag (e.g. [`LAYERS_SCHEMA`]).
+    pub fn with_schema(
+        schema: impl Into<String>,
+        id: impl Into<String>,
+        title: impl Into<String>,
+        columns: &[&str],
+    ) -> Report {
         Report {
+            schema: schema.into(),
             id: id.into(),
             title: title.into(),
             columns: columns.iter().map(|c| c.to_string()).collect(),
@@ -128,10 +145,10 @@ impl Report {
         print!("{}", self.render_text());
     }
 
-    /// The `tensordash.report.v1` JSON document.
+    /// The `tensordash.report.v1` / `tensordash.layers.v1` JSON document.
     pub fn to_json(&self) -> Json {
         let mut obj = BTreeMap::new();
-        obj.insert("schema".to_string(), Json::Str(REPORT_SCHEMA.to_string()));
+        obj.insert("schema".to_string(), Json::Str(self.schema.clone()));
         obj.insert("id".to_string(), Json::Str(self.id.clone()));
         obj.insert("title".to_string(), Json::Str(self.title.clone()));
         obj.insert(
@@ -170,10 +187,12 @@ impl Report {
         self.to_json().render_pretty()
     }
 
-    /// Reconstruct a report from its `tensordash.report.v1` JSON form.
+    /// Reconstruct a report from its `tensordash.report.v1` (or
+    /// `tensordash.layers.v1`) JSON form.
     /// Lossless: `from_json(parse(render_json(r))) == r`.
     pub fn from_json(j: &Json) -> Option<Report> {
-        if j.get("schema")?.as_str()? != REPORT_SCHEMA {
+        let schema = j.get("schema")?.as_str()?;
+        if schema != REPORT_SCHEMA && schema != LAYERS_SCHEMA {
             return None;
         }
         let columns: Vec<String> =
@@ -197,6 +216,7 @@ impl Report {
             _ => BTreeMap::new(),
         };
         Some(Report {
+            schema: schema.to_string(),
             id: j.get("id")?.as_str()?.to_string(),
             title: j.get("title")?.as_str()?.to_string(),
             columns,
@@ -289,6 +309,20 @@ mod tests {
     fn row_arity_checked() {
         let mut r = Report::new("x", "t", &["a", "b"]);
         r.row(vec![Cell::empty()]);
+    }
+
+    #[test]
+    fn layers_schema_round_trips_and_foreign_schemas_are_rejected() {
+        let mut r = Report::with_schema(LAYERS_SCHEMA, "layers", "t", &["a"]);
+        r.row(vec![Cell::num(1.0)]);
+        let j = Json::parse(&r.render_json()).unwrap();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some(LAYERS_SCHEMA));
+        assert_eq!(Report::from_json(&j).unwrap(), r);
+        let mut bad = r.to_json();
+        if let Json::Obj(m) = &mut bad {
+            m.insert("schema".to_string(), Json::Str("tensordash.report.v9".into()));
+        }
+        assert!(Report::from_json(&bad).is_none(), "unknown schema must not parse");
     }
 
     #[test]

@@ -8,6 +8,8 @@
 //! results are identical whether its cells run on 1 worker or 16, and
 //! independent of execution order.
 
+use std::sync::Arc;
+
 use crate::config::ChipConfig;
 use crate::conv::{ConvShape, TrainOp};
 use crate::tensor::TensorBitmap;
@@ -20,8 +22,10 @@ pub enum Workload {
     /// fraction (the Fig. 13/14/17/18/19 workload).
     Profile { model: String, epoch: f64 },
     /// A full model from *captured* (real-training) bitmaps — the
-    /// `train` subcommand and `train_e2e` workload.
-    Trace { shapes: Vec<ConvShape>, layers: Vec<(TensorBitmap, TensorBitmap)> },
+    /// `train` subcommand and `train_e2e` workload. The layer bitmaps
+    /// sit behind one `Arc` so plan expansion and unit execution share
+    /// them without copying the step's whole trace.
+    Trace { shapes: Vec<ConvShape>, layers: Arc<Vec<(TensorBitmap, TensorBitmap)>> },
     /// Uniformly random tensors on one layer geometry at a sparsity
     /// level, all three training ops (the Fig. 20 workload).
     RandomSparse { shape: ConvShape, sparsity: f64, samples_per_level: usize, batch_mult: u64 },
@@ -82,7 +86,7 @@ impl SimRequest {
         SimRequest {
             label: label.to_string(),
             cfg,
-            workload: Workload::Trace { shapes, layers },
+            workload: Workload::Trace { shapes, layers: Arc::new(layers) },
             samples,
             seed,
         }
@@ -137,7 +141,11 @@ impl SimRequest {
 /// splitmix64-style finalizer: statistically independent streams per
 /// cell, stable across releases (pinned by a unit test), and — because
 /// it depends only on `(base, cell)` — independent of worker count and
-/// execution order.
+/// execution order. Derivation chains: the plan executor derives each
+/// (layer, op) unit's seed from its cell's seed with the same function
+/// (`derive_seed(cell_seed, layer*3 + op)`, see
+/// [`super::plan::ModelPlan`]), so the whole request → cell → unit tree
+/// is order-free.
 pub fn derive_seed(base: u64, cell: u64) -> u64 {
     let mut z = base ^ cell.wrapping_mul(0x9E37_79B9_7F4A_7C15);
     z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);

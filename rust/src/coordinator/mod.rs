@@ -20,6 +20,10 @@ use crate::util::json::Json;
 /// Model geometry parsed from `artifacts/meta.json`.
 #[derive(Debug, Clone)]
 pub struct ModelMeta {
+    /// Model name from `model.name` — labels the captured-trace
+    /// simulation reports. Older artifacts without the field fall back
+    /// to `"captured"`.
+    pub name: String,
     pub batch: usize,
     pub input: (usize, usize, usize, usize),
     pub classes: usize,
@@ -31,6 +35,11 @@ pub struct ModelMeta {
 impl ModelMeta {
     pub fn parse(meta: &Json) -> Result<ModelMeta> {
         let model = meta.get("model").context("meta.json: no model")?;
+        let name = model
+            .get("name")
+            .and_then(|v| v.as_str())
+            .unwrap_or("captured")
+            .to_string();
         let input = model
             .get("input")
             .and_then(|v| v.as_usize_vec())
@@ -66,6 +75,7 @@ impl ModelMeta {
             .map(|p| p.get("shape").and_then(|s| s.as_usize_vec()).context("param shape"))
             .collect::<Result<Vec<_>>>()?;
         Ok(ModelMeta {
+            name,
             batch,
             input: (input[0], input[1], input[2], input[3]),
             classes: model.get("classes").and_then(|v| v.as_usize()).context("classes")?,
@@ -154,7 +164,7 @@ mod tests {
     #[test]
     fn meta_parses_the_expected_document() {
         let doc = r#"{
-          "model": {"batch": 16, "input": [16,8,8,16], "classes": 10, "lr": 0.05,
+          "model": {"name": "aot-cnn", "batch": 16, "input": [16,8,8,16], "classes": 10, "lr": 0.05,
             "convs": [
               {"kernel":3,"stride":1,"padding":1,"c_in":16,"c_out":32,"out_hw":[8,8]},
               {"kernel":3,"stride":2,"padding":1,"c_in":32,"c_out":32,"out_hw":[4,4]}
@@ -162,11 +172,22 @@ mod tests {
           "params": [{"shape":[3,3,16,32],"dtype":"f32"},{"shape":[3,3,32,32],"dtype":"f32"}]
         }"#;
         let meta = ModelMeta::parse(&Json::parse(doc).unwrap()).unwrap();
+        assert_eq!(meta.name, "aot-cnn");
         assert_eq!(meta.batch, 16);
         assert_eq!(meta.convs.len(), 2);
         assert_eq!(meta.convs[1].stride, 2);
         assert_eq!(meta.convs[1].out_h(), 4);
         assert_eq!(meta.param_shapes[0], vec![3, 3, 16, 32]);
+    }
+
+    #[test]
+    fn meta_without_name_falls_back_to_captured() {
+        let doc = r#"{
+          "model": {"batch": 4, "input": [4,8,8,16], "classes": 10, "lr": 0.05, "convs": []},
+          "params": []
+        }"#;
+        let meta = ModelMeta::parse(&Json::parse(doc).unwrap()).unwrap();
+        assert_eq!(meta.name, "captured");
     }
 
     #[test]

@@ -140,7 +140,7 @@ impl AreaReport {
 }
 
 /// Energy of one simulated layer-op (or a whole model when merged).
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct EnergyBreakdown {
     pub core_pj: f64,
     /// TensorDash-specific compute overhead (schedulers, muxes,

@@ -33,8 +33,9 @@ const USAGE: &str = "usage: tensordash <repro|simulate|train|info> [options]
            | --table <3|bf16>  [--samples N] [--seed S]
   simulate --model <name> [--epoch F] [--samples N] [--seed S]
            [--rows R] [--cols C] [--depth 2|3] [--bf16] [--power-gate]
+           [--per-layer]
   train    [--steps N] [--log-every K] [--seed S] [--artifacts DIR]
-           [--samples N] [--sim-every K]
+           [--samples N] [--sim-every K] [--per-layer]
   info
 
 report options (repro, simulate, train):
@@ -43,10 +44,15 @@ report options (repro, simulate, train):
                             nest in one tensordash.reportset.v1 document
   --out FILE                write the rendering to FILE instead of stdout
   --jobs N                  engine worker threads (default: all cores);
-                            results are byte-identical for any N";
+                            results are byte-identical for any N —
+                            a single model simulation fans its
+                            (layer, op) units out over the pool
+  --per-layer               (simulate, train only) append the
+                            tensordash.layers.v1 per-(layer, op)
+                            breakdown (speedup/energy/bottleneck)";
 
 fn main() {
-    let args = Args::parse(&["all", "bf16", "power-gate", "help"]);
+    let args = Args::parse(&["all", "bf16", "power-gate", "help", "per-layer"]);
     if args.flag("help") || args.positional.is_empty() {
         println!("{USAGE}");
         return;
@@ -256,7 +262,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     r.meta_num("sched_fast_paths", sim.sched.fast_paths as f64);
     r.meta_num("sched_skipped_cycles", sim.sched.skipped_cycles as f64);
     r.meta_num("sched_hit_rate", sim.sched.hit_rate());
-    emit(&[r], args)
+    let mut reports = vec![r];
+    if args.flag("per-layer") {
+        reports.push(api::layers_report(&sim));
+    }
+    emit(&reports, args)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -287,13 +297,18 @@ fn cmd_train(args: &Args) -> Result<()> {
         trainer.meta.classes
     );
     let shapes = trainer.meta.convs.clone();
+    // The captured-trace label is the real model name from
+    // artifacts/meta.json (older artifacts fall back to "captured").
+    let model_name = trainer.meta.name.clone();
     let mut report = Report::new(
         "train_projection",
-        format!("TensorDash projection over {steps} real training steps"),
+        format!("TensorDash projection for '{model_name}' over {steps} real training steps"),
         &["step", "loss", "accuracy", "A sparsity", "G sparsity", "speedup", "compute eff", "chip eff"],
     );
+    report.meta_str("model", &model_name);
     report.meta_num("seed", seed as f64);
     report.meta_num("samples", samples as f64);
+    let mut last_sim = None;
     for step in 1..=steps {
         let (x, y) = data.batch(n);
         let out = trainer.step(&x, &y)?;
@@ -313,7 +328,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         }
         if should_sim {
             let req = SimRequest::trace(
-                "captured",
+                &model_name,
                 shapes.clone(),
                 out.trace.layers.clone(),
                 cfg.clone(),
@@ -328,7 +343,7 @@ fn cmd_train(args: &Args) -> Result<()> {
                 sim.total_efficiency()
             );
             report.row(vec![
-                Cell::fmt(format!("{step}"), step as f64),
+                Cell::fmt(step.to_string(), step as f64),
                 Cell::fmt(format!("{:.4}", out.loss), out.loss as f64),
                 Cell::fmt(format!("{:.3}", out.accuracy), out.accuracy as f64),
                 Cell::num(sa),
@@ -337,12 +352,18 @@ fn cmd_train(args: &Args) -> Result<()> {
                 Cell::num(sim.compute_efficiency()),
                 Cell::num(sim.total_efficiency()),
             ]);
+            last_sim = Some(sim);
         }
     }
     if let Some(last) = report.rows.last() {
         eprintln!("\nfinal projection: {} speedup", last.cells[5].text);
     }
-    emit(&[report], args)
+    let mut reports = vec![report];
+    // Breakdown of the final projection step's captured tensors.
+    if let (true, Some(sim)) = (args.flag("per-layer"), last_sim.as_ref()) {
+        reports.push(api::layers_report(sim));
+    }
+    emit(&reports, args)
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -16,7 +16,12 @@
 //! Like the figure drivers, every ablation returns a structured
 //! [`Report`] and fans its cells out over the [`Engine`] worker pool
 //! with per-cell derived seeds (config variants of the same workload
-//! share a seed so the comparison columns see identical tensors).
+//! share a seed so the comparison columns see identical tensors). The
+//! whole-model cells execute through the plan pipeline
+//! (`repro::simulate_profile` lowers to a serial
+//! [`crate::api::ModelPlan`] walk), so their per-unit seeds — and
+//! therefore their numbers — match the engine's parallel executor
+//! exactly.
 
 use crate::api::{derive_seed, Cell, Engine, Report};
 use crate::config::ChipConfig;

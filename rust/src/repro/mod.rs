@@ -11,49 +11,34 @@
 
 pub mod ablations;
 
-use crate::api::{derive_seed, Cell, Engine, Report, SimRequest, SweepSpec};
+use crate::api::{derive_seed, Cell, Engine, ModelPlan, Report, SimRequest, SweepSpec};
 use crate::config::{ChipConfig, DataType};
-use crate::conv::work::{
-    dram_traffic, pick_wgrad_side, sample_passes, sram_counts, transposer_work,
-};
-use crate::conv::{op_work, ConvShape, TrainOp, WgradSide};
-use crate::energy::{AreaReport, EnergyBreakdown, EnergyModel};
+use crate::conv::{ConvShape, TrainOp};
+use crate::energy::{AreaReport, EnergyBreakdown};
 use crate::metrics::{geomean, pct};
 use crate::models::FIG13_MODELS;
-use crate::sim::ChipSim;
+use crate::sim::unit::{cycle_ratio, simulate_unit_with_rng};
 use crate::tensor::TensorBitmap;
 use crate::trace::profiles::{ModelProfile, PHASES};
 use crate::util::rng::Rng;
+
+/// Re-export: the per-(layer, op) unit outcome now lives with the unit
+/// pipeline in [`crate::sim::unit`]; `repro::LayerOpSim` remains the
+/// stable path for downstream users.
+pub use crate::sim::unit::LayerOpSim;
 
 /// Default pass-sample budget per (layer, op). Validated against
 /// exhaustive simulation by [`validate_sampling`].
 pub const DEFAULT_SAMPLES: usize = 6;
 
-/// Simulation outcome of one (layer, op).
-#[derive(Debug, Clone, Copy)]
-pub struct LayerOpSim {
-    pub op: TrainOp,
-    pub base_chip_cycles: u64,
-    pub td_chip_cycles: u64,
-    pub energy_base: EnergyBreakdown,
-    pub energy_td: EnergyBreakdown,
-    /// Sparsity of the operand scheduled on the B side.
-    pub b_sparsity: f64,
-    /// Whether §3.5 power gating bypassed TensorDash for this op.
-    pub gated: bool,
-    /// Scheduler-cache telemetry of the underlying tile simulation
-    /// (walks / memo hits / fast paths / zero-run-skipped cycles).
-    pub sched: crate::sim::CacheStats,
-}
-
-impl LayerOpSim {
-    pub fn speedup(&self) -> f64 {
-        self.base_chip_cycles as f64 / self.td_chip_cycles.max(1) as f64
-    }
-}
-
 /// Simulate one training operation of one layer from its tensors' zero
 /// bitmaps.
+///
+/// Thin wrapper over the staged unit pipeline
+/// ([`crate::sim::unit::simulate_unit_with_rng`]) with a caller-owned
+/// RNG — [`validate_sampling`] and the property tests drive exhaustive
+/// and sampled runs from explicit RNG streams. Plan-based execution
+/// derives a seed per unit instead (see [`crate::api::plan`]).
 pub fn simulate_layer_op(
     cfg: &ChipConfig,
     shape: &ConvShape,
@@ -64,78 +49,12 @@ pub fn simulate_layer_op(
     batch_mult: u64,
     rng: &mut Rng,
 ) -> LayerOpSim {
-    let m = batch_mult.max(1);
-    let chip = ChipSim::new(cfg.clone());
-    let emodel = EnergyModel::new(cfg.clone());
-    let wside = match op {
-        TrainOp::Wgrad => pick_wgrad_side(a_bm, g_bm),
-        _ => WgradSide::Gradients,
-    };
-    let work = op_work(shape, op, wside);
-    let a_passes = work.a_groups.div_ceil(cfg.tile_cols as u64);
-
-    // Scale batch-dependent work to the paper's real batch size (the
-    // sparsity statistics come from the small simulated batch). Fwd and
-    // Igrad gain m-times more windows (weight multiplier); Wgrad's
-    // *reduction* runs over the batch, so its streams get m-times longer
-    // instead (a 1-row stream cannot express lookahead). Repetition is
-    // capped once streams exceed ~512 rows — the per-lane lead behaviour
-    // has converged by then — and the remaining factor scales cycles.
-    let (repeat, mm) = match op {
-        TrainOp::Wgrad => {
-            let steps = work.steps.max(1);
-            let full = 512u64.div_ceil(steps).clamp(1, m) as usize;
-            (full, m.div_ceil(full as u64))
-        }
-        _ => (1, m),
-    };
-    let passes = sample_passes(shape, op, wside, a_bm, g_bm, cfg.tile_rows, samples, repeat, rng);
-    let lc = chip.run_passes(&passes);
-    let base_tile = lc.base * a_passes * mm;
-    let b_sparsity = match op {
-        TrainOp::Fwd => a_bm.sparsity(),
-        TrainOp::Igrad => g_bm.sparsity(),
-        TrainOp::Wgrad => match wside {
-            WgradSide::Gradients => g_bm.sparsity(),
-            WgradSide::Activations => a_bm.sparsity(),
-        },
-    };
-    // §3.5: a per-tensor zero counter lets the chip power-gate the
-    // TensorDash front-end when a tensor shows (almost) no sparsity.
-    let gated = cfg.power_gate && b_sparsity < 0.025;
-    let td_tile = if gated { base_tile } else { lc.td * a_passes * mm };
-
-    let mut sram = sram_counts(shape, op, wside, cfg.tile_rows as u64, cfg.tile_cols as u64);
-    sram = sram.scaled(m);
-    let out_density = match op {
-        TrainOp::Fwd => 1.0,              // pre-activation outputs are dense
-        TrainOp::Igrad => a_bm.density(), // G_A inherits the ReLU mask
-        TrainOp::Wgrad => 1.0,            // weight gradients are dense
-    };
-    let dram = dram_traffic(shape, op, a_bm, g_bm, cfg.dtype.bytes(), out_density, m);
-    let mut trans = transposer_work(shape, op, wside);
-    if op == TrainOp::Wgrad {
-        // Wgrad transposes gradients/activations, which scale with batch;
-        // Igrad transposes the (batch-independent) weights.
-        trans.groups *= m;
-    }
-
-    let base_chip = chip.chip_cycles(base_tile, dram.total());
-    let td_chip = chip.chip_cycles(td_tile, dram.total());
-    LayerOpSim {
-        op,
-        base_chip_cycles: base_chip,
-        td_chip_cycles: td_chip,
-        energy_base: emodel.layer_energy(base_chip, &sram, &dram, &trans, false),
-        energy_td: emodel.layer_energy(td_chip, &sram, &dram, &trans, !gated),
-        b_sparsity,
-        gated,
-        sched: lc.sched,
-    }
+    simulate_unit_with_rng(cfg, shape, op, 0, a_bm, g_bm, samples, batch_mult, rng)
 }
 
-/// Whole-model aggregation.
-#[derive(Debug, Clone)]
+/// Whole-model aggregation: the deterministic fold of a plan's
+/// per-unit results, with the full unit vector retained.
+#[derive(Debug, Clone, PartialEq)]
 pub struct ModelSim {
     pub name: String,
     /// Chip cycles summed per op: (base, td).
@@ -144,31 +63,74 @@ pub struct ModelSim {
     pub energy_td: EnergyBreakdown,
     /// Scheduler-cache telemetry summed over every simulated (layer, op).
     pub sched: crate::sim::CacheStats,
+    /// Every merged unit in plan order (layer-major, op-minor) — the
+    /// per-layer speedup/energy/bottleneck breakdown the `--per-layer`
+    /// report renders; no longer thrown away by the aggregation.
+    pub layers: Vec<LayerOpSim>,
 }
 
 impl ModelSim {
+    /// An empty aggregate to fold units into.
+    pub fn empty(name: impl Into<String>) -> ModelSim {
+        ModelSim {
+            name: name.into(),
+            per_op: [(0, 0); 3],
+            energy_base: EnergyBreakdown::default(),
+            energy_td: EnergyBreakdown::default(),
+            sched: crate::sim::CacheStats::default(),
+            layers: Vec::new(),
+        }
+    }
+
+    /// Fold one unit result into the aggregate — the single accumulation
+    /// path shared by the plan merge and every monolithic workload loop
+    /// (previously four hand-rolled copies of these five updates).
+    pub fn merge_unit(&mut self, u: &LayerOpSim) {
+        self.per_op[u.op as usize].0 += u.base_chip_cycles;
+        self.per_op[u.op as usize].1 += u.td_chip_cycles;
+        self.energy_base.merge(&u.energy_base);
+        self.energy_td.merge(&u.energy_td);
+        self.sched.merge(&u.sched);
+        self.layers.push(*u);
+    }
+
     pub fn op_speedup(&self, op: TrainOp) -> f64 {
         let (b, t) = self.per_op[op as usize];
-        b as f64 / t.max(1) as f64
+        cycle_ratio(b, t)
     }
 
     pub fn overall_speedup(&self) -> f64 {
         let b: u64 = self.per_op.iter().map(|(b, _)| b).sum();
         let t: u64 = self.per_op.iter().map(|(_, t)| t).sum();
-        b as f64 / t.max(1) as f64
+        cycle_ratio(b, t)
     }
 
     pub fn compute_efficiency(&self) -> f64 {
-        self.energy_base.compute_pj() / self.energy_td.compute_pj()
+        let (b, t) = (self.energy_base.compute_pj(), self.energy_td.compute_pj());
+        if b == 0.0 || t == 0.0 {
+            1.0
+        } else {
+            b / t
+        }
     }
 
     pub fn total_efficiency(&self) -> f64 {
-        self.energy_base.total_pj() / self.energy_td.total_pj()
+        let (b, t) = (self.energy_base.total_pj(), self.energy_td.total_pj());
+        if b == 0.0 || t == 0.0 {
+            1.0
+        } else {
+            b / t
+        }
     }
 }
 
 /// Simulate a full model from its synthetic sparsity profile at epoch
 /// fraction `epoch`.
+///
+/// Thin wrapper over the plan pipeline: expands the profile into its
+/// unit graph and executes it serially on the calling thread. Use an
+/// [`Engine`] with a profile [`SimRequest`] to execute the same units
+/// on the worker pool — byte-identically.
 pub fn simulate_profile(
     cfg: &ChipConfig,
     profile: &ModelProfile,
@@ -176,49 +138,26 @@ pub fn simulate_profile(
     samples: usize,
     seed: u64,
 ) -> ModelSim {
-    let mut per_op = [(0u64, 0u64); 3];
-    let mut e_base = EnergyBreakdown::default();
-    let mut e_td = EnergyBreakdown::default();
-    let mut sched = crate::sim::CacheStats::default();
-    let mut rng = Rng::new(seed);
-    for (i, layer) in profile.topology.layers.iter().enumerate() {
-        let (a_bm, g_bm) = profile.layer_bitmaps(i, epoch, seed);
-        for op in TrainOp::ALL {
-            let r = simulate_layer_op(cfg, &layer.shape, op, &a_bm, &g_bm, samples, profile.batch_mult(), &mut rng);
-            per_op[op as usize].0 += r.base_chip_cycles;
-            per_op[op as usize].1 += r.td_chip_cycles;
-            e_base.merge(&r.energy_base);
-            e_td.merge(&r.energy_td);
-            sched.merge(&r.sched);
-        }
-    }
-    ModelSim { name: profile.name().to_string(), per_op, energy_base: e_base, energy_td: e_td, sched }
+    ModelPlan::profile(profile, epoch, cfg, samples, seed).execute_serial()
 }
 
-/// Simulate a model from *captured* (real-training) bitmaps.
+/// Simulate a model from *captured* (real-training) bitmaps. `name`
+/// labels the result (the coordinator threads the model name from
+/// `artifacts/meta.json` here).
+///
+/// Copies the slice once into the plan's shared storage; callers that
+/// already own the bitmaps should go through [`SimRequest::trace`] +
+/// [`Engine`], which shares them copy-free.
 pub fn simulate_trace(
     cfg: &ChipConfig,
+    name: &str,
     shapes: &[ConvShape],
     layers: &[(TensorBitmap, TensorBitmap)],
     samples: usize,
     seed: u64,
 ) -> ModelSim {
-    let mut per_op = [(0u64, 0u64); 3];
-    let mut e_base = EnergyBreakdown::default();
-    let mut e_td = EnergyBreakdown::default();
-    let mut sched = crate::sim::CacheStats::default();
-    let mut rng = Rng::new(seed);
-    for (shape, (a_bm, g_bm)) in shapes.iter().zip(layers) {
-        for op in TrainOp::ALL {
-            let r = simulate_layer_op(cfg, shape, op, a_bm, g_bm, samples, 1, &mut rng);
-            per_op[op as usize].0 += r.base_chip_cycles;
-            per_op[op as usize].1 += r.td_chip_cycles;
-            e_base.merge(&r.energy_base);
-            e_td.merge(&r.energy_td);
-            sched.merge(&r.sched);
-        }
-    }
-    ModelSim { name: "captured".into(), per_op, energy_base: e_base, energy_td: e_td, sched }
+    let shared = std::sync::Arc::new(layers.to_vec());
+    ModelPlan::trace(name, shapes, shared, cfg, samples, seed).execute_serial()
 }
 
 // ---------------------------------------------------------------------
@@ -404,7 +343,7 @@ fn geometry_sweep(
     title: &str,
 ) -> Report {
     let mut columns: Vec<String> = vec!["model".into()];
-    columns.extend(sizes.iter().map(|s| format!("{s}")));
+    columns.extend(sizes.iter().map(|s| s.to_string()));
     let href: Vec<&str> = columns.iter().map(|s| s.as_str()).collect();
     let mut r = Report::new(id, title, &href);
     let models: Vec<&str> = FIG13_MODELS.iter().copied().filter(|m| *m != "gcn").collect();

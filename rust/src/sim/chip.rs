@@ -112,6 +112,13 @@ impl ChipSim {
         out
     }
 
+    /// Cycles needed to stream `dram_bytes` of (compressed) off-chip
+    /// traffic at the configured bandwidth — the memory-bound floor the
+    /// optional gate and the per-unit bottleneck report compare against.
+    pub fn dram_stream_cycles(&self, dram_bytes: u64) -> u64 {
+        (dram_bytes as f64 / self.cfg.dram_bytes_per_cycle()).ceil() as u64
+    }
+
     /// Convert weighted per-tile pass cycles to whole-chip cycles. When
     /// `cfg.dram_gate` is set, a layer additionally cannot finish faster
     /// than its (compressed) off-chip traffic can stream — an extension
@@ -119,8 +126,7 @@ impl ChipSim {
     pub fn chip_cycles(&self, tile_cycles: u64, dram_bytes: u64) -> u64 {
         let compute = tile_cycles.div_ceil(self.cfg.tiles as u64);
         if self.cfg.dram_gate {
-            let mem = (dram_bytes as f64 / self.cfg.dram_bytes_per_cycle()).ceil() as u64;
-            compute.max(mem)
+            compute.max(self.dram_stream_cycles(dram_bytes))
         } else {
             compute
         }

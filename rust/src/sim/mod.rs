@@ -19,6 +19,9 @@
 //!   direct-mapped memo table) and arithmetic zero-run skipping.
 //! * [`chip`] — many tiles processing independent work chunks plus the
 //!   DRAM bandwidth gate.
+//! * [`unit`] — one (layer, training-op) simulation unit as a typed
+//!   three-stage pipeline (lower → sample → simulate/account); the
+//!   grain the [`crate::api::plan`] executor schedules in parallel.
 //! * [`memory`], [`dram`], [`transposer`] — the on-chip SRAM hierarchy
 //!   (AM/BM/CM + scratchpads), the LPDDR4 + compressing-DMA model and the
 //!   16x16 transposers of §3.4; these feed the energy model.
@@ -32,6 +35,7 @@ pub mod scheduler;
 pub mod stream;
 pub mod tile;
 pub mod transposer;
+pub mod unit;
 
 pub use chip::{ChipSim, LayerCycles, Pass};
 pub use connectivity::{Connectivity, LANES};
@@ -39,3 +43,4 @@ pub use pe::{baseline_cycles, simulate_stream};
 pub use scheduler::{schedule_cycle, Schedule, IDLE};
 pub use stream::{CacheStats, CachedScheduler, StreamWindow};
 pub use tile::{tile_pass_cycles, DEFAULT_LEAD_LIMIT};
+pub use unit::{cycle_ratio, simulate_unit, LayerOpSim};

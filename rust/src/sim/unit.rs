@@ -1,0 +1,390 @@
+//! The simulation *unit*: one (layer, training-op) pair, decomposed
+//! into a typed three-stage pipeline.
+//!
+//! The paper's aggregates (1.95x training speedup, 1.6x whole-chip
+//! energy efficiency) are sums over every (layer, op) pair of every
+//! model; this module makes that grain explicit so the executor can
+//! schedule units independently:
+//!
+//! 1. **Lower** ([`lower_unit`]) — pure geometry: resolve the Wgrad
+//!    B side, the A-side pass multiplier, the batch-scaling split
+//!    (stream repetition vs residual cycle multiplier) and the §3.5
+//!    power-gating decision. No randomness, no simulation.
+//! 2. **Sample** ([`sample_unit_passes`]) — draw the pass sample from a
+//!    unit-local RNG. Each unit owns its seed (derived by
+//!    [`crate::api::derive_seed`] from the request seed and the unit
+//!    index), so the result never depends on which other units ran
+//!    before it — the property the plan executor's work stealing and
+//!    deterministic merge rely on.
+//! 3. **Simulate + account** ([`account_unit`]) — run the sampled
+//!    passes through the cycle simulator, then fold in the analytic
+//!    SRAM/DRAM/transposer traffic and the energy model.
+//!
+//! [`simulate_unit`] composes the three stages; the legacy
+//! `repro::simulate_layer_op` is a thin wrapper that threads a
+//! caller-owned RNG through stage 2 (sampling-validation and the
+//! property tests rely on that byte-exact behaviour).
+
+use crate::config::ChipConfig;
+use crate::conv::work::{
+    dram_traffic, pick_wgrad_side, sample_passes, sram_counts, transposer_work,
+};
+use crate::conv::{op_work, ConvShape, TrainOp, WgradSide};
+use crate::energy::{EnergyBreakdown, EnergyModel};
+use crate::sim::chip::{ChipSim, LayerCycles, Pass};
+use crate::sim::stream::CacheStats;
+use crate::tensor::TensorBitmap;
+use crate::util::rng::Rng;
+
+/// Guarded cycle ratio: empty or zero-cycle units are "no work", which
+/// is a 1.0x ratio (not 0x — dividing a guarded denominator into a
+/// zero numerator used to report a bogus 0x "slowdown" for units with
+/// no sampled passes).
+pub fn cycle_ratio(base: u64, td: u64) -> f64 {
+    if base == 0 {
+        1.0
+    } else {
+        base as f64 / td.max(1) as f64
+    }
+}
+
+/// Simulation outcome of one (layer, op) unit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LayerOpSim {
+    /// Layer index within the owning plan (0 for standalone units).
+    pub layer: usize,
+    pub op: TrainOp,
+    pub base_chip_cycles: u64,
+    pub td_chip_cycles: u64,
+    /// Cycles the unit's off-chip traffic needs at the configured DRAM
+    /// bandwidth — the memory-bound floor (informational unless
+    /// `cfg.dram_gate` is set).
+    pub dram_cycles: u64,
+    /// Whether off-chip traffic needs more cycles than the TensorDash
+    /// *compute* does. Decided at accounting time against the
+    /// compute-only cycle count — comparing against `td_chip_cycles`
+    /// would mislabel every DRAM-bound unit as compute-bound when
+    /// `cfg.dram_gate` folds the memory floor into the chip cycles.
+    pub dram_bound: bool,
+    pub energy_base: EnergyBreakdown,
+    pub energy_td: EnergyBreakdown,
+    /// Sparsity of the operand scheduled on the B side.
+    pub b_sparsity: f64,
+    /// Whether §3.5 power gating bypassed TensorDash for this op.
+    pub gated: bool,
+    /// Scheduler-cache telemetry of the underlying tile simulation
+    /// (walks / memo hits / fast paths / zero-run-skipped cycles).
+    pub sched: CacheStats,
+}
+
+impl LayerOpSim {
+    pub fn speedup(&self) -> f64 {
+        cycle_ratio(self.base_chip_cycles, self.td_chip_cycles)
+    }
+
+    /// Energy efficiency (baseline energy over TensorDash energy),
+    /// guarded like [`cycle_ratio`] for empty units.
+    pub fn energy_efficiency(&self) -> f64 {
+        let (b, t) = (self.energy_base.total_pj(), self.energy_td.total_pj());
+        if b == 0.0 || t == 0.0 {
+            1.0
+        } else {
+            b / t
+        }
+    }
+
+    /// What limits this unit: `"dram"` when its off-chip traffic needs
+    /// more cycles than the (TensorDash) compute does, else `"compute"`.
+    pub fn bottleneck(&self) -> &'static str {
+        if self.dram_bound {
+            "dram"
+        } else {
+            "compute"
+        }
+    }
+}
+
+/// Stage-1 output: the dense geometry and scaling decisions of a unit.
+#[derive(Debug, Clone, Copy)]
+pub struct UnitLowering {
+    /// Which operand the Wgrad scheduler targets (paper §2: the sparser
+    /// of G_O / A; `Gradients` for Fwd/Igrad where it is unused).
+    pub wside: WgradSide,
+    /// A-side pass multiplier (dense A groups over tile columns).
+    pub a_passes: u64,
+    /// Stream repetition folded into each sampled pass (Wgrad's batch
+    /// reduction runs over the batch, so its streams get longer).
+    pub repeat: usize,
+    /// Residual batch multiplier applied to cycle counts after `repeat`
+    /// is capped (~512-row streams have converged lead behaviour).
+    pub mult: u64,
+    /// Sparsity of the operand scheduled on the B side.
+    pub b_sparsity: f64,
+    /// §3.5: per-tensor zero counters power-gate the TensorDash
+    /// front-end when the targeted tensor shows (almost) no sparsity.
+    pub gated: bool,
+}
+
+/// Stage 1 — lower one (layer, op) onto the accelerator. Pure in its
+/// inputs: no RNG, no simulation.
+pub fn lower_unit(
+    cfg: &ChipConfig,
+    shape: &ConvShape,
+    op: TrainOp,
+    a_bm: &TensorBitmap,
+    g_bm: &TensorBitmap,
+    batch_mult: u64,
+) -> UnitLowering {
+    let m = batch_mult.max(1);
+    let wside = match op {
+        TrainOp::Wgrad => pick_wgrad_side(a_bm, g_bm),
+        _ => WgradSide::Gradients,
+    };
+    let work = op_work(shape, op, wside);
+    let a_passes = work.a_groups.div_ceil(cfg.tile_cols as u64);
+
+    // Scale batch-dependent work to the paper's real batch size (the
+    // sparsity statistics come from the small simulated batch). Fwd and
+    // Igrad gain m-times more windows (weight multiplier); Wgrad's
+    // *reduction* runs over the batch, so its streams get m-times longer
+    // instead (a 1-row stream cannot express lookahead). Repetition is
+    // capped once streams exceed ~512 rows — the per-lane lead behaviour
+    // has converged by then — and the remaining factor scales cycles.
+    let (repeat, mult) = match op {
+        TrainOp::Wgrad => {
+            let steps = work.steps.max(1);
+            let full = 512u64.div_ceil(steps).clamp(1, m) as usize;
+            (full, m.div_ceil(full as u64))
+        }
+        _ => (1, m),
+    };
+    let b_sparsity = match op {
+        TrainOp::Fwd => a_bm.sparsity(),
+        TrainOp::Igrad => g_bm.sparsity(),
+        TrainOp::Wgrad => match wside {
+            WgradSide::Gradients => g_bm.sparsity(),
+            WgradSide::Activations => a_bm.sparsity(),
+        },
+    };
+    let gated = cfg.power_gate && b_sparsity < 0.025;
+    UnitLowering { wside, a_passes, repeat, mult, b_sparsity, gated }
+}
+
+/// Stage 2 — draw the unit's pass sample. The RNG is the *only* source
+/// of randomness in a unit; giving every unit its own seeded stream is
+/// what makes the plan executor order-independent.
+pub fn sample_unit_passes(
+    cfg: &ChipConfig,
+    shape: &ConvShape,
+    op: TrainOp,
+    low: &UnitLowering,
+    a_bm: &TensorBitmap,
+    g_bm: &TensorBitmap,
+    samples: usize,
+    rng: &mut Rng,
+) -> Vec<Pass> {
+    sample_passes(shape, op, low.wside, a_bm, g_bm, cfg.tile_rows, samples, low.repeat, rng)
+}
+
+/// Stage 3 — fold the simulated tile cycles together with the analytic
+/// memory traffic into the unit's chip-level cycle and energy outcome.
+pub fn account_unit(
+    cfg: &ChipConfig,
+    shape: &ConvShape,
+    op: TrainOp,
+    layer: usize,
+    low: &UnitLowering,
+    lc: &LayerCycles,
+    a_bm: &TensorBitmap,
+    g_bm: &TensorBitmap,
+    batch_mult: u64,
+) -> LayerOpSim {
+    let m = batch_mult.max(1);
+    let chip = ChipSim::new(cfg.clone());
+    let emodel = EnergyModel::new(cfg.clone());
+
+    let base_tile = lc.base * low.a_passes * low.mult;
+    let td_tile = if low.gated { base_tile } else { lc.td * low.a_passes * low.mult };
+
+    let mut sram = sram_counts(shape, op, low.wside, cfg.tile_rows as u64, cfg.tile_cols as u64);
+    sram = sram.scaled(m);
+    let out_density = match op {
+        TrainOp::Fwd => 1.0,              // pre-activation outputs are dense
+        TrainOp::Igrad => a_bm.density(), // G_A inherits the ReLU mask
+        TrainOp::Wgrad => 1.0,            // weight gradients are dense
+    };
+    let dram = dram_traffic(shape, op, a_bm, g_bm, cfg.dtype.bytes(), out_density, m);
+    let mut trans = transposer_work(shape, op, low.wside);
+    if op == TrainOp::Wgrad {
+        // Wgrad transposes gradients/activations, which scale with batch;
+        // Igrad transposes the (batch-independent) weights.
+        trans.groups *= m;
+    }
+
+    let base_chip = chip.chip_cycles(base_tile, dram.total());
+    let td_chip = chip.chip_cycles(td_tile, dram.total());
+    let dram_cycles = chip.dram_stream_cycles(dram.total());
+    // Compute-only TD cycles: what `chip_cycles` returns before the
+    // optional bandwidth gate folds the memory floor in.
+    let td_compute = td_tile.div_ceil(cfg.tiles as u64);
+    LayerOpSim {
+        layer,
+        op,
+        base_chip_cycles: base_chip,
+        td_chip_cycles: td_chip,
+        dram_cycles,
+        dram_bound: dram_cycles > td_compute,
+        energy_base: emodel.layer_energy(base_chip, &sram, &dram, &trans, false),
+        energy_td: emodel.layer_energy(td_chip, &sram, &dram, &trans, !low.gated),
+        b_sparsity: low.b_sparsity,
+        gated: low.gated,
+        sched: lc.sched,
+    }
+}
+
+/// The composed unit pipeline with a caller-owned RNG threaded through
+/// stage 2 (the legacy `simulate_layer_op` calling convention —
+/// sampling-validation draws exhaustive and sampled runs from distinct
+/// RNG streams).
+pub fn simulate_unit_with_rng(
+    cfg: &ChipConfig,
+    shape: &ConvShape,
+    op: TrainOp,
+    layer: usize,
+    a_bm: &TensorBitmap,
+    g_bm: &TensorBitmap,
+    samples: usize,
+    batch_mult: u64,
+    rng: &mut Rng,
+) -> LayerOpSim {
+    let low = lower_unit(cfg, shape, op, a_bm, g_bm, batch_mult);
+    let passes = sample_unit_passes(cfg, shape, op, &low, a_bm, g_bm, samples, rng);
+    let lc = ChipSim::new(cfg.clone()).run_passes(&passes);
+    account_unit(cfg, shape, op, layer, &low, &lc, a_bm, g_bm, batch_mult)
+}
+
+/// The composed unit pipeline from a per-unit seed — the plan
+/// executor's entry point. Pure in `(cfg, shape, op, bitmaps, samples,
+/// batch_mult, seed)`: two calls with the same arguments are
+/// byte-identical regardless of what ran in between.
+pub fn simulate_unit(
+    cfg: &ChipConfig,
+    shape: &ConvShape,
+    op: TrainOp,
+    layer: usize,
+    a_bm: &TensorBitmap,
+    g_bm: &TensorBitmap,
+    samples: usize,
+    batch_mult: u64,
+    seed: u64,
+) -> LayerOpSim {
+    let mut rng = Rng::new(seed);
+    simulate_unit_with_rng(cfg, shape, op, layer, a_bm, g_bm, samples, batch_mult, &mut rng)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::synthetic::clustered_bitmap;
+
+    fn inputs(sp: f64, seed: u64) -> (ConvShape, TensorBitmap, TensorBitmap) {
+        let s = ConvShape::conv(2, 8, 8, 32, 32, 3, 1, 1);
+        let mut rng = Rng::new(seed);
+        let a = clustered_bitmap((2, 8, 8, 32), sp, 0.35, &mut rng);
+        let g = clustered_bitmap((2, 8, 8, 32), sp, 0.35, &mut rng);
+        (s, a, g)
+    }
+
+    #[test]
+    fn cycle_ratio_guards_both_sides() {
+        // Empty units are 1.0x, not 0x (the old code only guarded the
+        // denominator and reported a bogus 0x for zero-cycle units).
+        assert_eq!(cycle_ratio(0, 0), 1.0);
+        assert_eq!(cycle_ratio(0, 5), 1.0);
+        assert_eq!(cycle_ratio(10, 0), 10.0); // denominator guard
+        assert_eq!(cycle_ratio(30, 10), 3.0);
+    }
+
+    #[test]
+    fn unit_is_order_independent() {
+        let cfg = ChipConfig::default();
+        let (s, a, g) = inputs(0.6, 1);
+        let first = simulate_unit(&cfg, &s, TrainOp::Fwd, 0, &a, &g, 4, 16, 99);
+        // Simulate something else in between — must not matter.
+        let _ = simulate_unit(&cfg, &s, TrainOp::Wgrad, 1, &a, &g, 4, 16, 7);
+        let again = simulate_unit(&cfg, &s, TrainOp::Fwd, 0, &a, &g, 4, 16, 99);
+        assert_eq!(first, again);
+        // And a different seed samples different passes (statistically).
+        let other = simulate_unit(&cfg, &s, TrainOp::Fwd, 0, &a, &g, 4, 16, 100);
+        assert_eq!(other.op, TrainOp::Fwd);
+    }
+
+    #[test]
+    fn staged_pipeline_matches_composed_wrapper() {
+        let cfg = ChipConfig::default();
+        let (s, a, g) = inputs(0.5, 2);
+        for op in TrainOp::ALL {
+            let composed = simulate_unit(&cfg, &s, op, 3, &a, &g, 4, 16, 11);
+            let low = lower_unit(&cfg, &s, op, &a, &g, 16);
+            let mut rng = Rng::new(11);
+            let passes = sample_unit_passes(&cfg, &s, op, &low, &a, &g, 4, &mut rng);
+            let lc = ChipSim::new(cfg.clone()).run_passes(&passes);
+            let staged = account_unit(&cfg, &s, op, 3, &low, &lc, &a, &g, 16);
+            assert_eq!(composed, staged, "{op:?}");
+        }
+    }
+
+    #[test]
+    fn lowering_is_pure_geometry() {
+        let cfg = ChipConfig::default();
+        let (s, a, g) = inputs(0.4, 3);
+        let l1 = lower_unit(&cfg, &s, TrainOp::Wgrad, &a, &g, 16);
+        let l2 = lower_unit(&cfg, &s, TrainOp::Wgrad, &a, &g, 16);
+        assert_eq!(l1.wside, l2.wside);
+        assert_eq!(l1.a_passes, l2.a_passes);
+        assert_eq!((l1.repeat, l1.mult), (l2.repeat, l2.mult));
+        // Fwd/Igrad keep the full multiplier on cycles.
+        let lf = lower_unit(&cfg, &s, TrainOp::Fwd, &a, &g, 16);
+        assert_eq!(lf.repeat, 1);
+        assert_eq!(lf.mult, 16);
+    }
+
+    #[test]
+    fn bottleneck_is_compute_without_a_dram_wall() {
+        let cfg = ChipConfig::default();
+        let (s, a, g) = inputs(0.6, 4);
+        let u = simulate_unit(&cfg, &s, TrainOp::Fwd, 0, &a, &g, 4, 16, 5);
+        assert!(u.dram_cycles > 0);
+        assert!(matches!(u.bottleneck(), "compute" | "dram"));
+        assert!(u.energy_efficiency() >= 1.0);
+    }
+
+    #[test]
+    fn bottleneck_reports_dram_even_when_the_gate_binds_chip_cycles() {
+        // With the bandwidth gate on, chip cycles saturate at the memory
+        // floor (td_chip == dram_cycles); the bottleneck decision must
+        // compare against the *compute-only* cycles or every DRAM-bound
+        // unit would be mislabeled "compute".
+        let mut cfg = ChipConfig::default();
+        cfg.dram_gate = true;
+        cfg.dram_gbps = 0.05; // starved bandwidth -> memory bound
+        let (s, a, g) = inputs(0.6, 6);
+        let u = simulate_unit(&cfg, &s, TrainOp::Fwd, 0, &a, &g, 4, 16, 7);
+        assert_eq!(u.td_chip_cycles, u.dram_cycles, "gate folds the floor in");
+        assert!(u.dram_bound);
+        assert_eq!(u.bottleneck(), "dram");
+    }
+
+    #[test]
+    fn high_reuse_layer_is_compute_bound_on_the_default_chip() {
+        // 128-channel 3x3 conv at batch-equivalent 32: enough MACs per
+        // transferred byte that the default 51.2 GB/s stays ahead.
+        let s = ConvShape::conv(2, 14, 14, 128, 128, 3, 1, 1);
+        let mut rng = Rng::new(8);
+        let a = clustered_bitmap((2, 14, 14, 128), 0.6, 0.35, &mut rng);
+        let g = clustered_bitmap((2, 14, 14, 128), 0.6, 0.35, &mut rng);
+        let v = simulate_unit(&ChipConfig::default(), &s, TrainOp::Fwd, 0, &a, &g, 4, 16, 7);
+        assert!(!v.dram_bound, "dram {} vs td {}", v.dram_cycles, v.td_chip_cycles);
+        assert_eq!(v.bottleneck(), "compute");
+    }
+}

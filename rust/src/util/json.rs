@@ -185,9 +185,9 @@ fn render_num(n: f64) -> String {
         return "null".to_string();
     }
     if n == n.trunc() && n.abs() < 9.0e15 {
-        format!("{}", n as i64)
+        (n as i64).to_string()
     } else {
-        format!("{n}")
+        n.to_string()
     }
 }
 

@@ -1,0 +1,147 @@
+//! Determinism contract of the plan/executor unit graph.
+//!
+//! The refactor's load-bearing property: a model simulation is a set of
+//! independent (layer, op) units with derived per-unit seeds, so the
+//! result is a pure function of the request — independent of worker
+//! count, work-stealing interleave, and unit execution order. These
+//! tests pin that contract:
+//!
+//! * `simulate` through the pooled executor is **byte-identical** across
+//!   `--jobs {1, 4, 8}` — reports (text/JSON/CSV), per-layer tables and
+//!   scheduler-cache telemetry included;
+//! * executing the units in a shuffled order and merging in plan order
+//!   reproduces the same bytes;
+//! * the pooled executor matches the serial reference walk
+//!   (`ModelPlan::execute_serial`, which also backs
+//!   `repro::simulate_profile`) on two models at two epochs — the
+//!   golden differential baseline for the executor.
+
+use tensordash::api::{layers_report, Engine, ModelPlan, SimRequest, LAYERS_SCHEMA};
+use tensordash::config::ChipConfig;
+use tensordash::repro::{simulate_profile, ModelSim};
+use tensordash::sim::unit::LayerOpSim;
+use tensordash::trace::profiles::ModelProfile;
+use tensordash::util::json::Json;
+use tensordash::util::rng::Rng;
+
+const MODELS: [&str; 2] = ["alexnet", "gcn"];
+const EPOCHS: [f64; 2] = [0.1, 0.9];
+const SEED: u64 = 42;
+const SAMPLES: usize = 1;
+
+fn profile_request(model: &str, epoch: f64) -> SimRequest {
+    SimRequest::profile(model, epoch, ChipConfig::default(), SAMPLES, SEED)
+        .expect("known model")
+}
+
+/// Byte-level equality of two merged sims: every integer counter, every
+/// f64 down to its bit pattern, every retained unit.
+fn assert_bit_identical(a: &ModelSim, b: &ModelSim, ctx: &str) {
+    assert_eq!(a.name, b.name, "{ctx}: name");
+    assert_eq!(a.per_op, b.per_op, "{ctx}: per-op cycles");
+    assert_eq!(a.sched, b.sched, "{ctx}: scheduler telemetry");
+    assert_eq!(
+        a.energy_base.total_pj().to_bits(),
+        b.energy_base.total_pj().to_bits(),
+        "{ctx}: baseline energy bits"
+    );
+    assert_eq!(
+        a.energy_td.total_pj().to_bits(),
+        b.energy_td.total_pj().to_bits(),
+        "{ctx}: TensorDash energy bits"
+    );
+    assert_eq!(a.layers.len(), b.layers.len(), "{ctx}: unit count");
+    for (i, (ua, ub)) in a.layers.iter().zip(&b.layers).enumerate() {
+        assert_eq!(ua, ub, "{ctx}: unit {i}");
+    }
+}
+
+#[test]
+fn jobs_1_4_8_are_byte_identical_including_per_layer_tables() {
+    for model in MODELS {
+        for epoch in EPOCHS {
+            let req = profile_request(model, epoch);
+            let baseline = Engine::new(1).run(&req);
+            let base_layers = layers_report(&baseline);
+            for jobs in [4usize, 8] {
+                let sim = Engine::new(jobs).run(&req);
+                assert_bit_identical(&baseline, &sim, &format!("{model}@{epoch} jobs={jobs}"));
+                // The rendered artifacts — summary and per-layer table —
+                // must agree byte for byte in every format.
+                let layers = layers_report(&sim);
+                assert_eq!(base_layers, layers);
+                assert_eq!(
+                    base_layers.render_json().into_bytes(),
+                    layers.render_json().into_bytes()
+                );
+                assert_eq!(base_layers.render_text(), layers.render_text());
+                assert_eq!(base_layers.render_csv(), layers.render_csv());
+            }
+        }
+    }
+}
+
+#[test]
+fn shuffled_unit_execution_order_reproduces_the_serial_bytes() {
+    let req = profile_request("alexnet", 0.4);
+    let plan = ModelPlan::for_request(&req).expect("profile requests lower to plans");
+    let serial = plan.execute_serial();
+
+    // Execute the units in a deterministic but scrambled order, then
+    // merge in plan order — the executor's re-assembly contract.
+    let n = plan.units.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    let mut rng = Rng::new(0xD15C0);
+    for i in (1..n).rev() {
+        order.swap(i, rng.below(i + 1));
+    }
+    assert_ne!(order, (0..n).collect::<Vec<_>>(), "shuffle must actually shuffle");
+    let mut slots: Vec<Option<LayerOpSim>> = vec![None; n];
+    for &i in &order {
+        slots[i] = Some(plan.units[i].execute(&plan.cfg));
+    }
+    let shuffled = plan.merge(slots.into_iter().map(|s| s.unwrap()));
+    assert_bit_identical(&serial, &shuffled, "shuffled execution");
+}
+
+#[test]
+fn pooled_executor_matches_the_serial_reference_on_two_models_two_epochs() {
+    // Golden differential baseline: `repro::simulate_profile` is the
+    // plain serial walk of the plan (the pre-pool execution path); the
+    // pooled executor must reproduce it exactly.
+    for model in MODELS {
+        for epoch in EPOCHS {
+            let p = ModelProfile::for_model(model).unwrap();
+            let reference = simulate_profile(&ChipConfig::default(), &p, epoch, SAMPLES, SEED);
+            let pooled = Engine::new(8).run(&profile_request(model, epoch));
+            assert_bit_identical(&reference, &pooled, &format!("{model}@{epoch}"));
+        }
+    }
+}
+
+#[test]
+fn per_layer_report_is_schema_valid_at_any_worker_count() {
+    let req = profile_request("gcn", 0.4);
+    for jobs in [1usize, 4, 8] {
+        let sim = Engine::new(jobs).run(&req);
+        let r = layers_report(&sim);
+        assert_eq!(r.schema, LAYERS_SCHEMA);
+        assert_eq!(r.rows.len(), sim.layers.len());
+        let parsed = Json::parse(&r.render_json()).expect("layers JSON parses");
+        assert_eq!(parsed.get("schema").unwrap().as_str(), Some(LAYERS_SCHEMA));
+        // Speedup column carries raw values within the structural caps.
+        for i in 0..sim.layers.len() {
+            let v = r.value(i, "speedup").expect("numeric speedup cell");
+            assert!((1.0..=3.01).contains(&v), "unit {i}: speedup {v}");
+        }
+    }
+}
+
+#[test]
+fn repeated_runs_are_stable() {
+    // Same request, same engine, run twice: nothing (thread timing,
+    // allocator state) may leak into the result.
+    let req = profile_request("gcn", 0.9);
+    let e = Engine::new(4);
+    assert_bit_identical(&e.run(&req), &e.run(&req), "repeat");
+}
