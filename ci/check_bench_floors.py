@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: check BENCH_*.json artifacts against the
+floors committed in ci/bench_floors.json.
+
+Usage:
+    python3 ci/check_bench_floors.py BENCH_scheduler.json BENCH_tile.json ...
+
+Every artifact named on the command line must exist, parse as a
+``tensordash.bench.v1`` document, and satisfy every floor registered
+for it. Floor kinds:
+
+* ``min_speedup``  — the ``speedup`` field of every record whose name
+  matches the pattern must be >= the floor;
+* ``max_median_ns`` — the ``median_ns`` field of every matching record
+  must be <= the ceiling.
+
+Patterns are ``fnmatch`` globs. A pattern that matches no record fails
+the gate: renaming a record must not silently remove its floor.
+Exit code 0 = all floors hold; 1 = any violation.
+"""
+
+import fnmatch
+import json
+import os
+import sys
+
+FLOORS_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "bench_floors.json")
+
+
+def fail(msg: str) -> None:
+    print(f"FLOOR VIOLATION: {msg}")
+    fail.count += 1
+
+
+fail.count = 0
+
+
+def records_by_name(doc: dict) -> dict:
+    if doc.get("schema") != "tensordash.bench.v1":
+        raise SystemExit(f"unexpected bench schema: {doc.get('schema')!r}")
+    out = {}
+    for rec in doc.get("records", []):
+        name = rec.get("name")
+        if name:
+            out[name] = rec
+    return out
+
+
+def matching(records: dict, pattern: str) -> list:
+    return [records[name] for name in sorted(records) if fnmatch.fnmatch(name, pattern)]
+
+
+def check_artifact(path: str, floors: dict) -> None:
+    with open(path, encoding="utf-8") as f:
+        records = records_by_name(json.load(f))
+    print(f"== {path}: {len(records)} records")
+    for pattern, floor in sorted(floors.get("min_speedup", {}).items()):
+        recs = matching(records, pattern)
+        if not recs:
+            fail(f"{path}: no record matches min_speedup pattern '{pattern}'")
+            continue
+        for rec in recs:
+            speedup = rec.get("speedup")
+            if speedup is None:
+                fail(f"{path}: record '{rec['name']}' has no 'speedup' field")
+            elif speedup < floor:
+                fail(f"{path}: {rec['name']} speedup {speedup:.3f}x < floor {floor}x")
+            else:
+                print(f"   ok  {rec['name']}: speedup {speedup:.3f}x >= {floor}x")
+    for pattern, spec in sorted(floors.get("min_speedup_per_job", {}).items()):
+        recs = matching(records, pattern)
+        if not recs:
+            fail(f"{path}: no record matches min_speedup_per_job pattern '{pattern}'")
+            continue
+        for rec in recs:
+            speedup, jobs = rec.get("speedup"), rec.get("jobs")
+            if speedup is None or jobs is None:
+                fail(f"{path}: record '{rec['name']}' needs 'speedup' and 'jobs' fields")
+                continue
+            floor = min(spec["cap"], spec["per_job"] * jobs)
+            if speedup < floor:
+                fail(
+                    f"{path}: {rec['name']} speedup {speedup:.3f}x < floor {floor:.2f}x "
+                    f"({spec['per_job']}x/job at {jobs:g} jobs, cap {spec['cap']}x)"
+                )
+            else:
+                print(f"   ok  {rec['name']}: speedup {speedup:.3f}x >= {floor:.2f}x")
+    for pattern, ceiling in sorted(floors.get("max_median_ns", {}).items()):
+        recs = matching(records, pattern)
+        if not recs:
+            fail(f"{path}: no record matches max_median_ns pattern '{pattern}'")
+            continue
+        for rec in recs:
+            median = rec.get("median_ns")
+            if median is None:
+                fail(f"{path}: record '{rec['name']}' has no 'median_ns' field")
+            elif median > ceiling:
+                fail(
+                    f"{path}: {rec['name']} median {median / 1e6:.3f} ms "
+                    f"> ceiling {ceiling / 1e6:.3f} ms"
+                )
+            else:
+                print(
+                    f"   ok  {rec['name']}: median {median / 1e6:.3f} ms "
+                    f"<= {ceiling / 1e6:.3f} ms"
+                )
+
+
+def main(argv: list) -> int:
+    if len(argv) < 2:
+        print(__doc__)
+        return 2
+    with open(FLOORS_PATH, encoding="utf-8") as f:
+        config = json.load(f)
+    if config.get("schema") != "tensordash.benchfloors.v1":
+        raise SystemExit(f"unexpected floors schema: {config.get('schema')!r}")
+    artifacts = config.get("artifacts", {})
+    for path in argv[1:]:
+        name = os.path.basename(path)
+        if not os.path.exists(path):
+            fail(f"artifact {path} is missing (bench did not run or write it)")
+            continue
+        floors = artifacts.get(name)
+        if floors is None:
+            fail(f"no floors registered for {name} in ci/bench_floors.json")
+            continue
+        check_artifact(path, floors)
+    if fail.count:
+        print(f"\n{fail.count} floor violation(s)")
+        return 1
+    print("\nall bench floors hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

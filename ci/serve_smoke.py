@@ -1,0 +1,134 @@
+#!/usr/bin/env python3
+"""Service e2e smoke test.
+
+Starts ``tensordash serve`` on a TCP port, fires overlapping duplicate
+requests from concurrent connections, and asserts:
+
+* every response is ok and the ``report`` bodies are byte-identical
+  across all duplicates (the serving layer's determinism contract);
+* a sequential repeat is served from the unit cache with nonzero
+  cache-hit telemetry;
+* a ``shutdown`` op is acknowledged, the connection closes, and the
+  server process exits cleanly (code 0).
+
+Usage: python3 ci/serve_smoke.py [path/to/tensordash]
+"""
+
+import json
+import socket
+import subprocess
+import sys
+import threading
+import time
+
+BIN = sys.argv[1] if len(sys.argv) > 1 else "target/release/tensordash"
+HOST = "127.0.0.1"
+PORT = 17871
+REQUEST = {
+    "op": "simulate",
+    "id": "dup",
+    "model": "alexnet",
+    "epoch": 0.4,
+    "samples": 1,
+    "seed": 42,
+}
+DUPLICATES = 4
+
+
+def wait_for_port(proc, timeout=60.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if proc.poll() is not None:
+            raise SystemExit(f"server exited early with code {proc.returncode}")
+        try:
+            with socket.create_connection((HOST, PORT), timeout=1.0):
+                return
+        except OSError:
+            time.sleep(0.2)
+    raise SystemExit("server never opened its port")
+
+
+def roundtrip(payload):
+    """Send one request object, return the parsed response line."""
+    with socket.create_connection((HOST, PORT), timeout=120.0) as sock:
+        sock.sendall((json.dumps(payload) + "\n").encode())
+        with sock.makefile("r", encoding="utf-8") as f:
+            line = f.readline()
+    if not line:
+        raise SystemExit("connection closed without a response")
+    return json.loads(line)
+
+
+def main():
+    proc = subprocess.Popen(
+        [BIN, "serve", "--listen", f"{HOST}:{PORT}", "--jobs", "2"],
+        stdout=subprocess.PIPE,
+        stderr=subprocess.PIPE,
+    )
+    try:
+        wait_for_port(proc)
+
+        # Overlapping duplicates from concurrent connections.
+        results = [None] * DUPLICATES
+        errors = []
+
+        def fire(i):
+            try:
+                results[i] = roundtrip(REQUEST)
+            except Exception as e:  # noqa: BLE001 - report, don't hang
+                errors.append(f"request {i}: {e}")
+
+        threads = [threading.Thread(target=fire, args=(i,)) for i in range(DUPLICATES)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=300)
+        if errors:
+            raise SystemExit("; ".join(errors))
+        for i, resp in enumerate(results):
+            assert resp is not None, f"request {i} got no response"
+            assert resp.get("ok") is True, f"request {i} not ok: {resp}"
+            assert resp.get("id") == "dup", f"request {i} lost its id: {resp}"
+
+        # Byte-identical bodies: dump preserves the server's key order.
+        bodies = [json.dumps(r["report"]) for r in results]
+        for i, body in enumerate(bodies[1:], start=1):
+            assert body == bodies[0], f"duplicate {i} diverged from duplicate 0"
+        print(f"ok: {DUPLICATES} overlapping duplicates returned identical bodies")
+
+        # A sequential repeat must be cache-served: nonzero hit delta.
+        repeat = roundtrip(REQUEST)
+        assert repeat.get("ok") is True, f"repeat not ok: {repeat}"
+        assert json.dumps(repeat["report"]) == bodies[0], "repeat body diverged"
+        cache = repeat.get("cache", {})
+        assert cache.get("hits", 0) > 0, f"repeat was not cache-served: {cache}"
+        assert cache.get("misses", 1) == 0, f"repeat recomputed units: {cache}"
+        print(f"ok: sequential repeat fully cache-served ({cache['hits']} hits)")
+
+        # Cumulative stats: every unique unit computed exactly once.
+        stats = roundtrip({"op": "stats"})
+        assert stats.get("ok") is True, f"stats not ok: {stats}"
+        total = stats["cache"]
+        assert total["inserts"] > 0, f"no units were ever computed: {total}"
+        assert total["hits"] > 0, f"no request was ever cache-served: {total}"
+        print(
+            "ok: cumulative telemetry hits={hits} misses={misses} "
+            "inserts={inserts} coalesced={coalesced}".format(**total)
+        )
+
+        # Clean shutdown: ack, then process exit 0.
+        bye = roundtrip({"op": "shutdown"})
+        assert bye.get("bye") is True, f"no shutdown ack: {bye}"
+        code = proc.wait(timeout=60)
+        assert code == 0, f"server exited with code {code}"
+        print("ok: clean shutdown (exit 0)")
+        print("serve smoke: PASS")
+        return 0
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=10)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

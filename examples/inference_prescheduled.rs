@@ -63,7 +63,8 @@ fn main() {
     let w_reads = scheduled_row_reads(dense_reads, 0.25);
     let a_reads = scheduled_row_reads(dense_reads, 0.45);
     println!(
-        "\nSRAM row reads per filter: dense {dense_reads}, scheduled weights {w_reads}, scheduled activations {a_reads}"
+        "\nSRAM row reads per filter: dense {dense_reads}, scheduled weights {w_reads}, \
+         scheduled activations {a_reads}"
     );
 
     // The structural cap: compression never exceeds the staging depth.

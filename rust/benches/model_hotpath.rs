@@ -78,7 +78,8 @@ fn main() {
     let p_sim = parallel_engine.run(&req);
     assert_identical(&s_sim, &p_sim);
     println!(
-        "  result: {:.2}x model speedup over baseline, {} units retained — byte-identical at jobs 1 and {}",
+        "  result: {:.2}x model speedup over baseline, {} units retained — \
+         byte-identical at jobs 1 and {}",
         s_sim.overall_speedup(),
         s_sim.layers.len(),
         jobs

@@ -68,7 +68,8 @@ fn main() {
     records.push(record("tile_pass_4x1024", &t));
 
     // Machine-readable perf point for the BENCH_* trajectory.
-    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_scheduler.json".to_string());
+    let out_path =
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_scheduler.json".to_string());
     let mut doc = BTreeMap::new();
     doc.insert("schema".to_string(), Json::Str("tensordash.bench.v1".to_string()));
     doc.insert("bench".to_string(), Json::Str("scheduler_hotpath".to_string()));

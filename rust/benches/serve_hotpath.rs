@@ -1,0 +1,142 @@
+//! §Perf — the serving layer's unit cache: a warm design-space sweep
+//! racing the same sweep cold.
+//!
+//! The serving workload (HASS-style design-space search) re-evaluates
+//! overlapping configurations against the same models; with the
+//! content-addressed unit cache a repeated sweep is pure lookup +
+//! merge instead of simulation. Warm and cold results are asserted
+//! **byte-identical** before anything is timed — the speedup is only
+//! meaningful if the cache returns exactly what the cold path
+//! computes.
+//!
+//! Emits medians, the warm-over-cold speedup and requests/sec as
+//! `BENCH_serve.json` (`$BENCH_OUT` overrides; `tensordash.bench.v1`),
+//! which CI archives next to the scheduler/tile/model artifacts and
+//! gates through `ci/bench_floors.json`. The bench itself exits
+//! non-zero below 2x warm-over-cold.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use tensordash::api::{default_jobs, Engine, Service, SweepSpec, UnitCache, DEFAULT_CACHE_CAP};
+use tensordash::config::ChipConfig;
+use tensordash::repro::ModelSim;
+use tensordash::util::bench::{bench, section, BenchStats};
+use tensordash::util::json::Json;
+
+fn record(name: &str, s: &BenchStats) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(name.to_string()));
+    m.insert("median_ns".to_string(), Json::Num(s.median_ns));
+    m.insert("mean_ns".to_string(), Json::Num(s.mean_ns));
+    m.insert("min_ns".to_string(), Json::Num(s.min_ns));
+    m.insert("stddev_ns".to_string(), Json::Num(s.stddev_ns));
+    m.insert("iters".to_string(), Json::Num(s.iters as f64));
+    Json::Obj(m)
+}
+
+fn assert_identical(a: &ModelSim, b: &ModelSim, ctx: &str) {
+    assert_eq!(a.per_op, b.per_op, "{ctx}: cycles diverged");
+    assert_eq!(a.sched, b.sched, "{ctx}: telemetry diverged");
+    assert_eq!(
+        a.energy_td.total_pj().to_bits(),
+        b.energy_td.total_pj().to_bits(),
+        "{ctx}: energy bits diverged"
+    );
+    assert_eq!(a.layers, b.layers, "{ctx}: per-unit results diverged");
+}
+
+fn main() {
+    let samples = 2; // keeps a bench iteration in seconds, not minutes
+    let seed = 42;
+    let models = ["alexnet", "gcn"];
+    let cfg = ChipConfig::default();
+    let cells = SweepSpec::models(&models, 0.4, &cfg, samples, seed).cells();
+    let jobs = default_jobs().clamp(2, 8);
+
+    section(&format!(
+        "serving-layer unit cache: {}-model sweep, warm vs cold (samples={samples}, jobs={jobs})",
+        models.len()
+    ));
+
+    // Byte-identity first: uncached reference == cold cached == warm.
+    let reference = Engine::new(jobs).run_all(&cells);
+    let warm_cache = Arc::new(UnitCache::new(DEFAULT_CACHE_CAP));
+    let warm_engine = Engine::new(jobs).with_cache(Arc::clone(&warm_cache));
+    let cold_sims = warm_engine.run_all(&cells);
+    let warm_sims = warm_engine.run_all(&cells);
+    for ((r, c), w) in reference.iter().zip(&cold_sims).zip(&warm_sims) {
+        assert_identical(r, c, &format!("cold {}", r.name));
+        assert_identical(c, w, &format!("warm {}", c.name));
+    }
+    let s = warm_cache.stats();
+    println!(
+        "  result: {} units/sweep, warm hit rate {:.0}% — byte-identical warm and cold",
+        cold_sims.iter().map(|m| m.layers.len()).sum::<usize>(),
+        s.hit_rate() * 100.0
+    );
+
+    // Cold: a fresh cache every iteration (first-request latency).
+    let cold = bench("serve_sweep_cold", 1, 5, || {
+        let cache = Arc::new(UnitCache::new(DEFAULT_CACHE_CAP));
+        Engine::new(jobs).with_cache(cache).run_all(&cells)
+    });
+    // Warm: the persistent service cache (steady-state latency).
+    let warm = bench("serve_sweep_warm", 1, 5, || warm_engine.run_all(&cells));
+    let speedup = cold.median_ns / warm.median_ns;
+    let rps_cold = cells.len() as f64 / (cold.median_ns / 1e9);
+    let rps_warm = cells.len() as f64 / (warm.median_ns / 1e9);
+    println!(
+        "  -> warm sweep {speedup:.2}x faster than cold ({rps_cold:.1} -> {rps_warm:.1} cells/s)"
+    );
+
+    // End-to-end serve path: a duplicate request through the protocol
+    // handler (parse + cache-served engine run + report render).
+    let service = Service::new(Engine::new(jobs), Arc::new(UnitCache::new(DEFAULT_CACHE_CAP)));
+    let line = format!(
+        r#"{{"op":"simulate","model":"alexnet","epoch":0.4,"samples":{samples},"seed":{seed}}}"#
+    );
+    let first = service.handle_line(&line);
+    assert_eq!(first.lines.len(), 1, "serve smoke: one response line");
+    let serve_warm = bench("serve_request_warm", 1, 5, || service.handle_line(&line).lines);
+
+    let mut speedup_rec = BTreeMap::new();
+    speedup_rec.insert("name".to_string(), Json::Str("warm_sweep_speedup".to_string()));
+    speedup_rec.insert("cold_median_ns".to_string(), Json::Num(cold.median_ns));
+    speedup_rec.insert("warm_median_ns".to_string(), Json::Num(warm.median_ns));
+    speedup_rec.insert("speedup".to_string(), Json::Num(speedup));
+    speedup_rec.insert("requests_per_sec_cold".to_string(), Json::Num(rps_cold));
+    speedup_rec.insert("requests_per_sec_warm".to_string(), Json::Num(rps_warm));
+    speedup_rec.insert("jobs".to_string(), Json::Num(jobs as f64));
+    let records = vec![
+        record("serve_sweep_cold", &cold),
+        record("serve_sweep_warm", &warm),
+        record("serve_request_warm", &serve_warm),
+        Json::Obj(speedup_rec),
+    ];
+
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".to_string(), Json::Str("tensordash.bench.v1".to_string()));
+    doc.insert("bench".to_string(), Json::Str("serve_hotpath".to_string()));
+    doc.insert("records".to_string(), Json::Arr(records));
+    let mut text = Json::Obj(doc).render_pretty();
+    text.push('\n');
+    match std::fs::write(&out_path, text.as_bytes()) {
+        Ok(()) => println!("\nwrote {out_path} ({} bytes)", text.len()),
+        Err(e) => eprintln!("\ncould not write {out_path}: {e}"),
+    }
+
+    // Acceptance bar (EXPERIMENTS.md §Perf), enforced after the
+    // artifact is on disk so a regressing run is still archived: a warm
+    // unit-cache sweep must be >= 2x faster than cold.
+    const WARM_SPEEDUP_GATE: f64 = 2.0;
+    if speedup < WARM_SPEEDUP_GATE {
+        eprintln!(
+            "PERF GATE: warm sweep speedup {speedup:.2}x < {WARM_SPEEDUP_GATE}x — \
+             the unit cache stopped paying for itself"
+        );
+        std::process::exit(1);
+    }
+    println!("perf gate passed: warm {speedup:.2}x >= {WARM_SPEEDUP_GATE}x");
+}

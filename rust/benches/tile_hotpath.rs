@@ -95,7 +95,10 @@ fn main() {
 
     for sparsity in [0.6f64, 0.75, 0.9] {
         let tag = format!("s{:.0}", sparsity * 100.0);
-        section(&format!("tile pass, trace-like {:.0}% sparsity (4 rows x 4096 steps)", sparsity * 100.0));
+        section(&format!(
+            "tile pass, trace-like {:.0}% sparsity (4 rows x 4096 steps)",
+            sparsity * 100.0
+        ));
         let streams: Vec<Vec<u16>> =
             (0..4).map(|_| trace_like_stream(&mut rng, 4096, sparsity)).collect();
 

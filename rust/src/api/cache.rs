@@ -1,0 +1,761 @@
+//! Content-addressed cache of per-unit simulation results.
+//!
+//! PR 3 made every (layer, op) unit a pure function of
+//! `(UnitSpec, derived seed, ChipConfig)`; this module exploits that
+//! purity. A [`UnitKey`] is the *canonical JSON* of everything a unit's
+//! result depends on — chip config, op, layer geometry, sampling
+//! budget, derived seed, and a content hash of the operand bitmaps —
+//! prefixed with a version tag and hashed with FNV-1a. Two units with
+//! equal keys are byte-interchangeable, so:
+//!
+//! * sweep cells that share units (the Fig. 17 `rows4` column *is* the
+//!   Fig. 18 `cols4` column; Fig. 19's `depth3` arm *is* the default
+//!   config) are computed once per process, not once per figure;
+//! * a serving loop ([`super::service`]) answers repeated design-space
+//!   queries (HASS-style search) from the cache instead of
+//!   re-simulating, and coalesces identical units that are in flight
+//!   concurrently.
+//!
+//! **What is deliberately *not* in the key:** the unit's `layer` index
+//! (it only labels the result; [`UnitCache`] callers re-stamp it on a
+//! hit, so two layers with identical geometry/tensors/seed share one
+//! entry) and the request `label` (presentation only). Everything else
+//! — *every* `ChipConfig` field included — must be serialized here;
+//! **adding a field to `ChipConfig` or changing any serialization
+//! detail requires bumping [`UNIT_KEY_VERSION`]**, or stale disk
+//! entries would silently alias new configurations. The golden-key
+//! test below pins the canonical bytes and the hash so accidental
+//! drift fails loudly.
+//!
+//! The store itself is a mutex-guarded LRU (`cap` entries, stamp-based
+//! eviction, counters for hit/miss/insert/evict/coalesce telemetry)
+//! with an optional on-disk mirror: one pretty-printed JSON document
+//! per unit, named by key hash, carrying the full canonical key so a
+//! (cosmically unlikely) 64-bit hash collision reads as a miss, never
+//! as a wrong answer. In-flight coalescing uses one `OnceLock` per
+//! missing key: concurrent computations of the same unit block on the
+//! first and share its result.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::config::{ChipConfig, DataType, SparsitySide};
+use crate::conv::{ConvShape, TrainOp};
+use crate::energy::EnergyBreakdown;
+use crate::sim::stream::CacheStats;
+use crate::sim::unit::LayerOpSim;
+use crate::tensor::TensorBitmap;
+use crate::util::json::Json;
+
+use super::plan::{UnitSpec, UnitTensors};
+use super::report::Report;
+
+/// Version tag embedded in every canonical key. Bump on **any** change
+/// to the key serialization, `ChipConfig`'s field set, or the unit
+/// pipeline's observable behaviour — the disk store self-invalidates
+/// because old entries hash under the old version string.
+pub const UNIT_KEY_VERSION: &str = "tensordash.unitkey.v1";
+
+/// Schema tag of the on-disk per-unit documents.
+pub const UNIT_CACHE_SCHEMA: &str = "tensordash.unitcache.v1";
+
+/// Default in-memory capacity (units, not bytes — a `LayerOpSim` is a
+/// small `Copy` struct, so 64k entries is a few MiB).
+pub const DEFAULT_CACHE_CAP: usize = 65_536;
+
+// ---------------------------------------------------------------------
+// Stable hashing
+// ---------------------------------------------------------------------
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over `bytes`, continuing from state `h`.
+fn fnv1a64_with(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// 64-bit FNV-1a — the stable, dependency-free hash behind every cache
+/// key. Pinned by test vectors; changing it invalidates every key.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_with(FNV_OFFSET, bytes)
+}
+
+/// Content hash of a bitmap: dims then packed words, little-endian.
+pub fn bitmap_hash(bm: &TensorBitmap) -> u64 {
+    let mut h = FNV_OFFSET;
+    for d in [bm.n, bm.h, bm.w, bm.c] {
+        h = fnv1a64_with(h, &(d as u64).to_le_bytes());
+    }
+    for w in bm.words() {
+        h = fnv1a64_with(h, &w.to_le_bytes());
+    }
+    h
+}
+
+// ---------------------------------------------------------------------
+// Canonical key serialization
+// ---------------------------------------------------------------------
+
+fn num(v: f64) -> Json {
+    Json::Num(v)
+}
+
+/// u64 values (seeds, content hashes) exceed f64's 2^53 integer range,
+/// so they serialize as fixed-width hex strings, never JSON numbers.
+fn hex64(v: u64) -> Json {
+    Json::Str(format!("{v:016x}"))
+}
+
+/// Canonical JSON of a chip configuration. Every field, sorted keys.
+pub fn cfg_json(cfg: &ChipConfig) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("lanes".to_string(), num(cfg.lanes as f64));
+    m.insert("staging_depth".to_string(), num(cfg.staging_depth as f64));
+    m.insert("tile_rows".to_string(), num(cfg.tile_rows as f64));
+    m.insert("tile_cols".to_string(), num(cfg.tile_cols as f64));
+    m.insert("tiles".to_string(), num(cfg.tiles as f64));
+    m.insert("freq_mhz".to_string(), num(cfg.freq_mhz as f64));
+    let dtype = match cfg.dtype {
+        DataType::Fp32 => "fp32",
+        DataType::Bf16 => "bf16",
+    };
+    m.insert("dtype".to_string(), Json::Str(dtype.to_string()));
+    let side = match cfg.side {
+        SparsitySide::BSide => "b",
+        SparsitySide::Both => "both",
+    };
+    m.insert("side".to_string(), Json::Str(side.to_string()));
+    m.insert("sram_bank_bytes".to_string(), num(cfg.sram_bank_bytes as f64));
+    m.insert("sram_banks".to_string(), num(cfg.sram_banks as f64));
+    m.insert("spad_bytes".to_string(), num(cfg.spad_bytes as f64));
+    m.insert("spad_banks".to_string(), num(cfg.spad_banks as f64));
+    m.insert("transposers".to_string(), num(cfg.transposers as f64));
+    m.insert("dram_gbps".to_string(), num(cfg.dram_gbps));
+    m.insert("power_gate".to_string(), Json::Bool(cfg.power_gate));
+    m.insert("lead_limit".to_string(), num(cfg.lead_limit as f64));
+    m.insert("dram_gate".to_string(), Json::Bool(cfg.dram_gate));
+    Json::Obj(m)
+}
+
+/// Canonical JSON of a layer geometry.
+pub fn shape_json(s: &ConvShape) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("n".to_string(), num(s.n as f64));
+    m.insert("h".to_string(), num(s.h as f64));
+    m.insert("w".to_string(), num(s.w as f64));
+    m.insert("c".to_string(), num(s.c as f64));
+    m.insert("f".to_string(), num(s.f as f64));
+    m.insert("kh".to_string(), num(s.kh as f64));
+    m.insert("kw".to_string(), num(s.kw as f64));
+    m.insert("stride".to_string(), num(s.stride as f64));
+    m.insert("pad".to_string(), num(s.pad as f64));
+    Json::Obj(m)
+}
+
+fn tensors_json(spec: &UnitSpec) -> Json {
+    let mut m = BTreeMap::new();
+    match &spec.tensors {
+        // Profile bitmaps are deterministic in (model, layer, epoch,
+        // seed) — key the *recipe*, so cache hits skip generation too.
+        UnitTensors::Profile { profile, epoch, bitmap_seed, .. } => {
+            m.insert("kind".to_string(), Json::Str("profile".to_string()));
+            m.insert("model".to_string(), Json::Str(profile.name().to_string()));
+            m.insert("layer".to_string(), num(spec.layer as f64));
+            m.insert("epoch".to_string(), num(*epoch));
+            m.insert("bitmap_seed".to_string(), hex64(*bitmap_seed));
+        }
+        // Captured/explicit bitmaps are content-addressed: equal bytes
+        // hit regardless of which request carried them.
+        UnitTensors::Trace { layers } => {
+            let (a, g) = &layers[spec.layer];
+            m.insert("kind".to_string(), Json::Str("bitmaps".to_string()));
+            m.insert("a".to_string(), hex64(bitmap_hash(a)));
+            m.insert("g".to_string(), hex64(bitmap_hash(g)));
+        }
+        UnitTensors::Explicit { a, g } => {
+            m.insert("kind".to_string(), Json::Str("bitmaps".to_string()));
+            m.insert("a".to_string(), hex64(bitmap_hash(a)));
+            m.insert("g".to_string(), hex64(bitmap_hash(g)));
+        }
+    }
+    Json::Obj(m)
+}
+
+/// The cache key of one unit under one chip configuration: the
+/// canonical JSON document plus its FNV-1a hash. The map is keyed by
+/// the hash; the canonical string rides along so lookups verify the
+/// full key and a hash collision degrades to a miss.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct UnitKey {
+    pub hash: u64,
+    pub canon: String,
+}
+
+impl UnitKey {
+    /// Build the canonical, versioned key for `spec` under `cfg`.
+    pub fn for_unit(cfg: &ChipConfig, spec: &UnitSpec) -> UnitKey {
+        let mut m = BTreeMap::new();
+        m.insert("v".to_string(), Json::Str(UNIT_KEY_VERSION.to_string()));
+        m.insert("cfg".to_string(), cfg_json(cfg));
+        m.insert("op".to_string(), Json::Str(spec.op.label().to_string()));
+        m.insert("shape".to_string(), shape_json(&spec.shape));
+        m.insert("batch_mult".to_string(), num(spec.batch_mult as f64));
+        m.insert("samples".to_string(), num(spec.samples as f64));
+        m.insert("seed".to_string(), hex64(spec.seed));
+        m.insert("tensors".to_string(), tensors_json(spec));
+        let canon = Json::Obj(m).render();
+        UnitKey { hash: fnv1a64(canon.as_bytes()), canon }
+    }
+
+    /// File name of this key's on-disk document.
+    pub fn file_name(&self) -> String {
+        format!("unit-{:016x}.json", self.hash)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Unit result (de)serialization — the on-disk store's payload
+// ---------------------------------------------------------------------
+
+fn energy_json(e: &EnergyBreakdown) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("core_pj".to_string(), num(e.core_pj));
+    m.insert("overhead_pj".to_string(), num(e.overhead_pj));
+    m.insert("sram_pj".to_string(), num(e.sram_pj));
+    m.insert("spad_pj".to_string(), num(e.spad_pj));
+    m.insert("dram_pj".to_string(), num(e.dram_pj));
+    Json::Obj(m)
+}
+
+fn energy_from_json(j: &Json) -> Option<EnergyBreakdown> {
+    Some(EnergyBreakdown {
+        core_pj: j.get("core_pj")?.as_f64()?,
+        overhead_pj: j.get("overhead_pj")?.as_f64()?,
+        sram_pj: j.get("sram_pj")?.as_f64()?,
+        spad_pj: j.get("spad_pj")?.as_f64()?,
+        dram_pj: j.get("dram_pj")?.as_f64()?,
+    })
+}
+
+/// Serialize one unit result. Cycle counters are JSON numbers — they
+/// stay far below 2^53 in any realistic simulation (the f64 round trip
+/// is exact there); energies round-trip bit-exactly through the
+/// shortest-representation float writer.
+pub fn unit_to_json(u: &LayerOpSim) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("layer".to_string(), num(u.layer as f64));
+    m.insert("op".to_string(), Json::Str(u.op.label().to_string()));
+    m.insert("base_chip_cycles".to_string(), num(u.base_chip_cycles as f64));
+    m.insert("td_chip_cycles".to_string(), num(u.td_chip_cycles as f64));
+    m.insert("dram_cycles".to_string(), num(u.dram_cycles as f64));
+    m.insert("dram_bound".to_string(), Json::Bool(u.dram_bound));
+    m.insert("energy_base".to_string(), energy_json(&u.energy_base));
+    m.insert("energy_td".to_string(), energy_json(&u.energy_td));
+    m.insert("b_sparsity".to_string(), num(u.b_sparsity));
+    m.insert("gated".to_string(), Json::Bool(u.gated));
+    let mut s = BTreeMap::new();
+    s.insert("walks".to_string(), num(u.sched.walks as f64));
+    s.insert("hits".to_string(), num(u.sched.hits as f64));
+    s.insert("fast_paths".to_string(), num(u.sched.fast_paths as f64));
+    s.insert("skipped_cycles".to_string(), num(u.sched.skipped_cycles as f64));
+    m.insert("sched".to_string(), Json::Obj(s));
+    Json::Obj(m)
+}
+
+fn op_from_label(s: &str) -> Option<TrainOp> {
+    match s {
+        "A*W" => Some(TrainOp::Fwd),
+        "A*G" => Some(TrainOp::Igrad),
+        "W*G" => Some(TrainOp::Wgrad),
+        _ => None,
+    }
+}
+
+pub fn unit_from_json(j: &Json) -> Option<LayerOpSim> {
+    let s = j.get("sched")?;
+    Some(LayerOpSim {
+        layer: j.get("layer")?.as_usize()?,
+        op: op_from_label(j.get("op")?.as_str()?)?,
+        base_chip_cycles: j.get("base_chip_cycles")?.as_f64()? as u64,
+        td_chip_cycles: j.get("td_chip_cycles")?.as_f64()? as u64,
+        dram_cycles: j.get("dram_cycles")?.as_f64()? as u64,
+        dram_bound: j.get("dram_bound")?.as_bool()?,
+        energy_base: energy_from_json(j.get("energy_base")?)?,
+        energy_td: energy_from_json(j.get("energy_td")?)?,
+        b_sparsity: j.get("b_sparsity")?.as_f64()?,
+        gated: j.get("gated")?.as_bool()?,
+        sched: CacheStats {
+            walks: s.get("walks")?.as_f64()? as u64,
+            hits: s.get("hits")?.as_f64()? as u64,
+            fast_paths: s.get("fast_paths")?.as_f64()? as u64,
+            skipped_cycles: s.get("skipped_cycles")?.as_f64()? as u64,
+        },
+    })
+}
+
+// ---------------------------------------------------------------------
+// Telemetry
+// ---------------------------------------------------------------------
+
+/// Unit-cache counters. `hits`/`misses` are counted by the engine's
+/// deterministic lookup phase (so they are identical for any `--jobs`);
+/// `coalesced` counts units that piggybacked on an identical unit
+/// already pending — in the same batch or in flight on another request.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct UnitCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    pub coalesced: u64,
+    /// Subset of `hits` that were promoted from the on-disk store.
+    pub disk_hits: u64,
+}
+
+impl UnitCacheStats {
+    /// Counter deltas accumulated since an earlier snapshot.
+    pub fn since(&self, before: &UnitCacheStats) -> UnitCacheStats {
+        UnitCacheStats {
+            hits: self.hits - before.hits,
+            misses: self.misses - before.misses,
+            inserts: self.inserts - before.inserts,
+            evictions: self.evictions - before.evictions,
+            coalesced: self.coalesced - before.coalesced,
+            disk_hits: self.disk_hits - before.disk_hits,
+        }
+    }
+
+    /// Fraction of lookups answered without computing.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("hits".to_string(), num(self.hits as f64));
+        m.insert("misses".to_string(), num(self.misses as f64));
+        m.insert("inserts".to_string(), num(self.inserts as f64));
+        m.insert("evictions".to_string(), num(self.evictions as f64));
+        m.insert("coalesced".to_string(), num(self.coalesced as f64));
+        m.insert("disk_hits".to_string(), num(self.disk_hits as f64));
+        m.insert("hit_rate".to_string(), num(self.hit_rate()));
+        Json::Obj(m)
+    }
+
+    /// Thread the counters into a report's meta block (`unit_cache_*`
+    /// keys). Presentation only: the report's rows never depend on the
+    /// cache, which is what keeps warm and cold runs byte-identical.
+    pub fn annotate(&self, r: &mut Report) {
+        r.meta_num("unit_cache_hits", self.hits as f64);
+        r.meta_num("unit_cache_misses", self.misses as f64);
+        r.meta_num("unit_cache_inserts", self.inserts as f64);
+        r.meta_num("unit_cache_evictions", self.evictions as f64);
+        r.meta_num("unit_cache_coalesced", self.coalesced as f64);
+        r.meta_num("unit_cache_hit_rate", self.hit_rate());
+    }
+}
+
+// ---------------------------------------------------------------------
+// The cache
+// ---------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+struct CachedUnit {
+    canon: String,
+    stamp: u64,
+    sim: LayerOpSim,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    /// hash -> entry; the entry's `canon` is verified on every lookup.
+    map: HashMap<u64, CachedUnit>,
+    /// LRU index: stamp -> hash. Oldest stamp evicts first.
+    lru: BTreeMap<u64, u64>,
+    clock: u64,
+    stats: UnitCacheStats,
+    /// Keys currently being computed: concurrent requests for the same
+    /// unit block on the first computation's `OnceLock`. Keyed by the
+    /// full canonical string — sharing a slot on a hash collision
+    /// would hand one unit another's result, so hashes are not enough
+    /// here.
+    inflight: HashMap<String, Arc<OnceLock<LayerOpSim>>>,
+}
+
+/// Thread-safe LRU of per-unit results with an optional disk mirror.
+/// Shared across requests (and service connections) via `Arc`.
+#[derive(Debug)]
+pub struct UnitCache {
+    cap: usize,
+    disk: Option<PathBuf>,
+    inner: Mutex<Inner>,
+}
+
+impl UnitCache {
+    pub fn new(cap: usize) -> UnitCache {
+        UnitCache { cap: cap.max(1), disk: None, inner: Mutex::new(Inner::default()) }
+    }
+
+    /// Mirror entries to one JSON document per unit under `dir`
+    /// (created if missing). Entries persist across processes; the
+    /// versioned key makes stale schemas read as misses.
+    pub fn with_disk(mut self, dir: impl Into<PathBuf>) -> std::io::Result<UnitCache> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir)?;
+        self.disk = Some(dir);
+        Ok(self)
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> UnitCacheStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// Look one key up, counting a hit or a miss. Memory first, then
+    /// the disk mirror (a disk hit is promoted into memory).
+    pub fn lookup(&self, key: &UnitKey) -> Option<LayerOpSim> {
+        {
+            let mut g = self.inner.lock().unwrap();
+            if let Some(sim) = Self::touch(&mut g, key) {
+                g.stats.hits += 1;
+                return Some(sim);
+            }
+        }
+        if let Some(sim) = self.disk_load(key) {
+            let mut g = self.inner.lock().unwrap();
+            Self::insert_locked(&mut g, key, sim, self.cap, false);
+            g.stats.hits += 1;
+            g.stats.disk_hits += 1;
+            return Some(sim);
+        }
+        self.inner.lock().unwrap().stats.misses += 1;
+        None
+    }
+
+    /// Insert a computed result (and mirror it to disk, best effort).
+    pub fn insert(&self, key: &UnitKey, sim: LayerOpSim) {
+        {
+            let mut g = self.inner.lock().unwrap();
+            Self::insert_locked(&mut g, key, sim, self.cap, true);
+        }
+        self.disk_store(key, &sim);
+    }
+
+    /// Record that a unit was served by piggybacking on an identical
+    /// pending unit (the engine's deterministic batch-level dedupe).
+    pub fn note_coalesced(&self) {
+        self.inner.lock().unwrap().stats.coalesced += 1;
+    }
+
+    /// Compute-or-wait for a key that missed the lookup phase. If an
+    /// identical unit is already in flight (another batch, another
+    /// connection), block on its `OnceLock` and share the result;
+    /// otherwise run `f`, publish, and insert. Does *not* count
+    /// hits/misses — those belong to the deterministic lookup phase.
+    pub fn compute_coalesced(&self, key: &UnitKey, f: impl FnOnce() -> LayerOpSim) -> LayerOpSim {
+        let slot = {
+            let mut g = self.inner.lock().unwrap();
+            // Re-check under the lock: another request may have
+            // completed this unit since our lookup phase ran.
+            if let Some(sim) = Self::touch(&mut g, key) {
+                return sim;
+            }
+            Arc::clone(g.inflight.entry(key.canon.clone()).or_default())
+        };
+        let mut ran = false;
+        let sim = *slot.get_or_init(|| {
+            ran = true;
+            f()
+        });
+        {
+            let mut g = self.inner.lock().unwrap();
+            if ran {
+                Self::insert_locked(&mut g, key, sim, self.cap, true);
+                g.inflight.remove(&key.canon);
+            } else {
+                g.stats.coalesced += 1;
+            }
+        }
+        if ran {
+            self.disk_store(key, &sim);
+        }
+        sim
+    }
+
+    // -- internals ----------------------------------------------------
+
+    /// Map lookup + LRU touch. Verifies the full canonical key, so a
+    /// 64-bit collision reads as a miss.
+    fn touch(g: &mut Inner, key: &UnitKey) -> Option<LayerOpSim> {
+        let (old, sim) = match g.map.get(&key.hash) {
+            Some(e) if e.canon == key.canon => (e.stamp, e.sim),
+            _ => return None,
+        };
+        g.clock += 1;
+        let fresh = g.clock;
+        g.map.get_mut(&key.hash).expect("entry present").stamp = fresh;
+        g.lru.remove(&old);
+        g.lru.insert(fresh, key.hash);
+        Some(sim)
+    }
+
+    fn insert_locked(g: &mut Inner, key: &UnitKey, sim: LayerOpSim, cap: usize, count: bool) {
+        g.clock += 1;
+        let stamp = g.clock;
+        let entry = CachedUnit { canon: key.canon.clone(), stamp, sim };
+        if let Some(prev) = g.map.insert(key.hash, entry) {
+            g.lru.remove(&prev.stamp);
+        }
+        g.lru.insert(stamp, key.hash);
+        if count {
+            g.stats.inserts += 1;
+        }
+        while g.map.len() > cap {
+            let (old, hash) = {
+                let (k, v) = g.lru.iter().next().expect("lru tracks every entry");
+                (*k, *v)
+            };
+            g.lru.remove(&old);
+            g.map.remove(&hash);
+            g.stats.evictions += 1;
+        }
+    }
+
+    fn disk_load(&self, key: &UnitKey) -> Option<LayerOpSim> {
+        let dir = self.disk.as_ref()?;
+        let text = std::fs::read_to_string(dir.join(key.file_name())).ok()?;
+        let j = Json::parse(&text).ok()?;
+        if j.get("schema")?.as_str()? != UNIT_CACHE_SCHEMA {
+            return None;
+        }
+        if j.get("key")?.as_str()? != key.canon {
+            return None;
+        }
+        unit_from_json(j.get("unit")?)
+    }
+
+    fn disk_store(&self, key: &UnitKey, sim: &LayerOpSim) {
+        let Some(dir) = &self.disk else { return };
+        let mut m = BTreeMap::new();
+        m.insert("schema".to_string(), Json::Str(UNIT_CACHE_SCHEMA.to_string()));
+        m.insert("key".to_string(), Json::Str(key.canon.clone()));
+        m.insert("unit".to_string(), unit_to_json(sim));
+        let mut text = Json::Obj(m).render_pretty();
+        text.push('\n');
+        // Best effort: a full disk degrades to a memory-only cache.
+        let _ = std::fs::write(dir.join(key.file_name()), text.as_bytes());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    fn explicit_spec(seed: u64, samples: usize, layer: usize) -> UnitSpec {
+        let a = TensorBitmap::from_raw((1, 1, 1, 16), vec![0x00FF]);
+        let g = TensorBitmap::from_raw((1, 1, 1, 16), vec![0x0F0F]);
+        UnitSpec {
+            layer,
+            op: TrainOp::Fwd,
+            shape: ConvShape::conv(1, 4, 4, 16, 16, 3, 1, 1),
+            tensors: UnitTensors::Explicit { a: Arc::new(a), g: Arc::new(g) },
+            batch_mult: 1,
+            samples,
+            seed,
+        }
+    }
+
+    /// A real (small) unit result to cache in the tests below.
+    fn small_unit(seed: u64) -> (UnitKey, LayerOpSim) {
+        let cfg = ChipConfig::default();
+        let spec = explicit_spec(seed, 2, 0);
+        let key = UnitKey::for_unit(&cfg, &spec);
+        (key, spec.execute(&cfg))
+    }
+
+    #[test]
+    fn fnv1a64_matches_published_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn golden_key_pins_canonical_bytes_and_hash() {
+        // Any change to the key schema, the canonical JSON writer, the
+        // hex encoding, `ChipConfig`'s defaults or its field
+        // serialization shows up here first. If this test fails and
+        // the change is intentional, bump UNIT_KEY_VERSION.
+        let key = UnitKey::for_unit(&ChipConfig::default(), &explicit_spec(42, 2, 0));
+        let golden = concat!(
+            "{\"batch_mult\":1,\"cfg\":{\"dram_gate\":false,\"dram_gbps\":51.2,",
+            "\"dtype\":\"fp32\",\"freq_mhz\":500,\"lanes\":16,\"lead_limit\":6,",
+            "\"power_gate\":false,\"side\":\"b\",\"spad_banks\":3,\"spad_bytes\":1024,",
+            "\"sram_bank_bytes\":262144,\"sram_banks\":4,\"staging_depth\":3,",
+            "\"tile_cols\":4,\"tile_rows\":4,\"tiles\":16,\"transposers\":15},",
+            "\"op\":\"A*W\",\"samples\":2,\"seed\":\"000000000000002a\",",
+            "\"shape\":{\"c\":16,\"f\":16,\"h\":4,\"kh\":3,\"kw\":3,\"n\":1,",
+            "\"pad\":1,\"stride\":1,\"w\":4},",
+            "\"tensors\":{\"a\":\"cab5d030f0dd4d63\",\"g\":\"c9a5fd30eff666aa\",",
+            "\"kind\":\"bitmaps\"},\"v\":\"tensordash.unitkey.v1\"}",
+        );
+        assert_eq!(key.canon, golden);
+        assert_eq!(key.hash, fnv1a64(golden.as_bytes()));
+    }
+
+    #[test]
+    fn key_ignores_layer_but_tracks_everything_else() {
+        let cfg = ChipConfig::default();
+        let base = UnitKey::for_unit(&cfg, &explicit_spec(42, 2, 0));
+        // The layer index only labels the result; identical geometry +
+        // tensors + seed share one entry.
+        assert_eq!(base, UnitKey::for_unit(&cfg, &explicit_spec(42, 2, 7)));
+        // Everything result-relevant changes the key.
+        assert_ne!(base.canon, UnitKey::for_unit(&cfg, &explicit_spec(43, 2, 0)).canon);
+        assert_ne!(base.canon, UnitKey::for_unit(&cfg, &explicit_spec(42, 3, 0)).canon);
+        let depth2 = ChipConfig::default().with_depth(2);
+        assert_ne!(base.canon, UnitKey::for_unit(&depth2, &explicit_spec(42, 2, 0)).canon);
+    }
+
+    #[test]
+    fn bitmap_hash_tracks_contents_and_dims() {
+        let mut rng = Rng::new(1);
+        let a = crate::trace::synthetic::random_bitmap((2, 4, 4, 16), 0.5, &mut rng);
+        let same = TensorBitmap::from_raw((2, 4, 4, 16), a.words().to_vec());
+        assert_eq!(bitmap_hash(&a), bitmap_hash(&same));
+        let reshaped = TensorBitmap::from_raw((4, 2, 4, 16), a.words().to_vec());
+        assert_ne!(bitmap_hash(&a), bitmap_hash(&reshaped));
+        let mut words = a.words().to_vec();
+        words[0] ^= 1;
+        let flipped = TensorBitmap::from_raw((2, 4, 4, 16), words);
+        assert_ne!(bitmap_hash(&a), bitmap_hash(&flipped));
+    }
+
+    #[test]
+    fn unit_result_json_round_trips_bit_exactly() {
+        let (_, sim) = small_unit(11);
+        let text = unit_to_json(&sim).render_pretty();
+        let back = unit_from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, sim);
+        assert_eq!(back.energy_td.total_pj().to_bits(), sim.energy_td.total_pj().to_bits());
+        assert_eq!(back.sched, sim.sched);
+    }
+
+    #[test]
+    fn lookup_hits_after_insert_and_counts_stats() {
+        let cache = UnitCache::new(8);
+        let (key, sim) = small_unit(1);
+        assert!(cache.lookup(&key).is_none());
+        cache.insert(&key, sim);
+        assert_eq!(cache.lookup(&key), Some(sim));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.inserts), (1, 1, 1));
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used_first() {
+        let cache = UnitCache::new(2);
+        let (k1, s1) = small_unit(1);
+        let (k2, s2) = small_unit(2);
+        let (k3, s3) = small_unit(3);
+        cache.insert(&k1, s1);
+        cache.insert(&k2, s2);
+        // Touch k1 so k2 becomes the LRU victim.
+        assert!(cache.lookup(&k1).is_some());
+        cache.insert(&k3, s3);
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.stats().evictions, 1);
+        assert!(cache.lookup(&k2).is_none(), "LRU entry must be evicted");
+        assert!(cache.lookup(&k1).is_some());
+        assert!(cache.lookup(&k3).is_some());
+    }
+
+    #[test]
+    fn capacity_is_enforced_under_bulk_inserts() {
+        let cache = UnitCache::new(4);
+        for seed in 0..10u64 {
+            let (k, s) = small_unit(seed);
+            cache.insert(&k, s);
+        }
+        assert_eq!(cache.len(), 4);
+        assert_eq!(cache.stats().evictions, 6);
+        // The four most recent survive.
+        for seed in 6..10u64 {
+            let (k, _) = small_unit(seed);
+            assert!(cache.lookup(&k).is_some(), "seed {seed} should be resident");
+        }
+    }
+
+    #[test]
+    fn compute_coalesced_runs_each_key_once() {
+        let cache = UnitCache::new(8);
+        let (key, _) = small_unit(5);
+        let mut runs = 0usize;
+        let first = cache.compute_coalesced(&key, || {
+            runs += 1;
+            small_unit(5).1
+        });
+        let second = cache.compute_coalesced(&key, || {
+            runs += 1;
+            small_unit(5).1
+        });
+        assert_eq!(runs, 1, "second call must be served from the cache");
+        assert_eq!(first, second);
+        assert_eq!(cache.stats().inserts, 1);
+    }
+
+    #[test]
+    fn disk_store_round_trips_across_cache_instances() {
+        let dir = std::env::temp_dir().join(format!("td_unitcache_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (key, sim) = small_unit(9);
+        {
+            let cache = UnitCache::new(8).with_disk(&dir).unwrap();
+            cache.insert(&key, sim);
+        }
+        let cache = UnitCache::new(8).with_disk(&dir).unwrap();
+        assert_eq!(cache.lookup(&key), Some(sim), "disk mirror must survive the process");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.disk_hits), (1, 1));
+        // Promoted into memory: the second lookup is a pure memory hit.
+        assert_eq!(cache.lookup(&key), Some(sim));
+        assert_eq!(cache.stats().disk_hits, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stats_since_subtracts_snapshots() {
+        let cache = UnitCache::new(8);
+        let (key, sim) = small_unit(3);
+        cache.insert(&key, sim);
+        let before = cache.stats();
+        assert!(cache.lookup(&key).is_some());
+        let delta = cache.stats().since(&before);
+        assert_eq!((delta.hits, delta.misses, delta.inserts), (1, 0, 0));
+        assert!((delta.hit_rate() - 1.0).abs() < 1e-12);
+    }
+}

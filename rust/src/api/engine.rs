@@ -1,5 +1,5 @@
 //! The experiment engine: executes [`SimRequest`]s on a `std::thread`
-//! worker pool.
+//! worker pool, optionally through a shared [`UnitCache`].
 //!
 //! Design constraints:
 //!
@@ -9,22 +9,31 @@
 //!   spec (config + workload + samples + derived seed), never on worker
 //!   count or completion order; results are re-assembled in submission
 //!   order and merged per cell in unit order. `--jobs 4` is
-//!   byte-identical to `--jobs 1`.
+//!   byte-identical to `--jobs 1`. With a cache attached the same holds
+//!   — a cache hit returns the byte-identical result the cold path
+//!   would have computed (units are pure functions of their key), and
+//!   hit/miss/coalesce telemetry is counted in a serial lookup phase so
+//!   it too is independent of worker count.
 //! * **Throughput** — requests are expanded through
 //!   [`ModelPlan`](super::plan::ModelPlan) into per-(layer, op) units
 //!   and the *flattened* cell×unit list feeds one work-stealing pool.
 //!   A single `simulate resnet50` saturates every core (its ~160 units
 //!   spread over the workers), and a fig13-style sweep load-balances at
-//!   unit grain instead of whole-model grain.
+//!   unit grain instead of whole-model grain. Under a cache, identical
+//!   units across a batch's cells are coalesced onto one job (the
+//!   dense-baseline cell of a TensorDash-vs-baseline sweep simulates
+//!   once), and repeated requests skip simulation entirely.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::repro::{simulate_layer_op, ModelSim};
 use crate::sim::unit::LayerOpSim;
 use crate::trace::synthetic::random_bitmap;
 use crate::util::rng::Rng;
 
+use super::cache::{UnitCache, UnitKey};
 use super::plan::ModelPlan;
 use super::request::{SimRequest, Workload};
 
@@ -38,11 +47,12 @@ pub fn default_jobs() -> usize {
 #[derive(Debug, Clone)]
 pub struct Engine {
     jobs: usize,
+    cache: Option<Arc<UnitCache>>,
 }
 
 impl Engine {
     pub fn new(jobs: usize) -> Engine {
-        Engine { jobs: jobs.max(1) }
+        Engine { jobs: jobs.max(1), cache: None }
     }
 
     /// A single-threaded engine (tests, tiny workloads).
@@ -55,8 +65,20 @@ impl Engine {
         Engine::new(default_jobs())
     }
 
+    /// Attach a shared unit cache: plan units are served from it when
+    /// their canonical key matches, computed-and-inserted otherwise.
+    /// Results are byte-identical with and without the cache.
+    pub fn with_cache(mut self, cache: Arc<UnitCache>) -> Engine {
+        self.cache = Some(cache);
+        self
+    }
+
     pub fn jobs(&self) -> usize {
         self.jobs
+    }
+
+    pub fn cache(&self) -> Option<&Arc<UnitCache>> {
+        self.cache.as_ref()
     }
 
     /// Execute one request on the worker pool. A single model request
@@ -75,6 +97,13 @@ impl Engine {
     /// merged per cell in plan order, so the fold — including its f64
     /// energy sums — is identical for any worker count.
     pub fn run_all(&self, reqs: &[SimRequest]) -> Vec<ModelSim> {
+        match &self.cache {
+            Some(cache) => self.run_all_cached(reqs, cache),
+            None => self.run_all_uncached(reqs),
+        }
+    }
+
+    fn run_all_uncached(&self, reqs: &[SimRequest]) -> Vec<ModelSim> {
         enum Job<'p> {
             Unit { cell: usize, plan: &'p ModelPlan, unit: usize },
             Whole { cell: usize },
@@ -110,6 +139,114 @@ impl Engine {
                     sims[*cell] = s;
                 }
                 _ => unreachable!("job/result kind mismatch"),
+            }
+        }
+        sims
+    }
+
+    /// The cached execution path. Three deterministic phases:
+    ///
+    /// 1. **Lookup** (serial): every plan unit's canonical key is
+    ///    probed against the cache; hits are collected, and misses are
+    ///    deduplicated — the *first* occurrence of a key becomes a pool
+    ///    job, later occurrences (other cells of the batch wanting the
+    ///    same unit) coalesce onto it. Because this phase runs on the
+    ///    calling thread in request order, the hit/miss/coalesce
+    ///    telemetry is identical for any `--jobs N`.
+    /// 2. **Compute** (pooled): unique missing units execute on the
+    ///    work-stealing pool through
+    ///    [`UnitCache::compute_coalesced`], which also folds in units
+    ///    identical to ones in flight on *other* concurrent batches
+    ///    (the serving path).
+    /// 3. **Merge** (serial): per cell, in plan order, from hit or job
+    ///    result — the same fold as the uncached path, so the merged
+    ///    sims are byte-identical warm or cold. Cached entries are
+    ///    shared across layers with identical geometry, so the unit's
+    ///    `layer` label is re-stamped from the plan before merging.
+    fn run_all_cached(&self, reqs: &[SimRequest], cache: &UnitCache) -> Vec<ModelSim> {
+        enum Job<'p> {
+            Unit { plan: &'p ModelPlan, unit: usize, key: UnitKey },
+            Whole { cell: usize },
+        }
+        enum Out {
+            Unit(LayerOpSim),
+            Whole(ModelSim),
+        }
+        enum Source {
+            Hit(LayerOpSim),
+            Job(usize),
+        }
+        let plans: Vec<Option<ModelPlan>> = reqs.iter().map(ModelPlan::for_request).collect();
+        let mut jobs: Vec<Job> = Vec::new();
+        let mut cells: Vec<Vec<Source>> = Vec::with_capacity(reqs.len());
+        let mut whole_job: Vec<Option<usize>> = vec![None; reqs.len()];
+        // Batch-level coalescing: canonical key -> job index of the
+        // first (authoritative) occurrence.
+        let mut pending: HashMap<String, usize> = HashMap::new();
+        for (cell, plan) in plans.iter().enumerate() {
+            match plan {
+                Some(p) => {
+                    let mut srcs = Vec::with_capacity(p.units.len());
+                    for (ui, u) in p.units.iter().enumerate() {
+                        let key = UnitKey::for_unit(&p.cfg, u);
+                        if let Some(hit) = cache.lookup(&key) {
+                            srcs.push(Source::Hit(hit));
+                        } else if let Some(&j) = pending.get(&key.canon) {
+                            cache.note_coalesced();
+                            srcs.push(Source::Job(j));
+                        } else {
+                            let j = jobs.len();
+                            pending.insert(key.canon.clone(), j);
+                            jobs.push(Job::Unit { plan: p, unit: ui, key });
+                            srcs.push(Source::Job(j));
+                        }
+                    }
+                    cells.push(srcs);
+                }
+                None => {
+                    whole_job[cell] = Some(jobs.len());
+                    jobs.push(Job::Whole { cell });
+                    cells.push(Vec::new());
+                }
+            }
+        }
+        let mut outs: Vec<Option<Out>> = self
+            .map(jobs.len(), |i| match &jobs[i] {
+                Job::Unit { plan, unit, key } => Out::Unit(
+                    cache.compute_coalesced(key, || plan.units[*unit].execute(&plan.cfg)),
+                ),
+                Job::Whole { cell } => Out::Whole(execute_monolithic(&reqs[*cell])),
+            })
+            .into_iter()
+            .map(Some)
+            .collect();
+        let mut sims: Vec<ModelSim> =
+            reqs.iter().map(|r| ModelSim::empty(r.label.clone())).collect();
+        for (cell, plan) in plans.iter().enumerate() {
+            match plan {
+                Some(p) => {
+                    for (ui, src) in cells[cell].iter().enumerate() {
+                        let mut u = match src {
+                            Source::Hit(u) => *u,
+                            Source::Job(j) => match outs[*j].as_ref() {
+                                Some(Out::Unit(u)) => *u,
+                                _ => unreachable!("unit job produced a unit result"),
+                            },
+                        };
+                        u.layer = p.units[ui].layer;
+                        sims[cell].merge_unit(&u);
+                    }
+                }
+                None => {
+                    let j = whole_job[cell].expect("monolithic cell has a job");
+                    match outs[j].take() {
+                        Some(Out::Whole(mut s)) => {
+                            s.name = reqs[cell].label.clone();
+                            sims[cell] = s;
+                        }
+                        _ => unreachable!("whole job produced a whole result"),
+                    }
+                }
             }
         }
         sims
@@ -164,11 +301,22 @@ fn execute_monolithic(req: &SimRequest) -> ModelSim {
             let mut sim = ModelSim::empty(req.label.clone());
             for draw in 0..*samples_per_level {
                 let a = random_bitmap((shape.n, shape.h, shape.w, shape.c), *sparsity, &mut rng);
-                let g =
-                    random_bitmap((shape.n, shape.out_h(), shape.out_w(), shape.f), *sparsity, &mut rng);
+                let g = random_bitmap(
+                    (shape.n, shape.out_h(), shape.out_w(), shape.f),
+                    *sparsity,
+                    &mut rng,
+                );
                 for op in TrainOp::ALL {
-                    let mut r =
-                        simulate_layer_op(&req.cfg, shape, op, &a, &g, req.samples, *batch_mult, &mut rng);
+                    let mut r = simulate_layer_op(
+                        &req.cfg,
+                        shape,
+                        op,
+                        &a,
+                        &g,
+                        req.samples,
+                        *batch_mult,
+                        &mut rng,
+                    );
                     r.layer = draw; // unit index = tensor draw
                     sim.merge_unit(&r);
                 }
@@ -236,5 +384,52 @@ mod tests {
             // run_passes call), so it too must not depend on workers.
             assert_eq!(a.sched, b.sched);
         }
+    }
+
+    #[test]
+    fn cached_engine_matches_uncached_bytes_and_coalesces_duplicates() {
+        let cfg = ChipConfig::default();
+        let req = SimRequest::profile("gcn", 0.4, cfg.clone(), 1, 11).unwrap();
+        let plain = Engine::new(2).run(&req);
+
+        let cache = Arc::new(UnitCache::new(1024));
+        let cached_engine = Engine::new(2).with_cache(Arc::clone(&cache));
+        // Cold: every unit misses, computes, inserts.
+        let cold = cached_engine.run(&req);
+        assert_eq!(plain, cold, "cold cached run must equal the uncached run");
+        let s = cache.stats();
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.misses as usize, plain.layers.len());
+        // Warm: every unit hits; bytes identical.
+        let warm = cached_engine.run(&req);
+        assert_eq!(plain, warm, "warm run must be byte-identical to cold");
+        let s = cache.stats();
+        assert_eq!(s.hits as usize, plain.layers.len());
+
+        // A batch with a duplicated cell coalesces instead of recomputing.
+        let cache2 = Arc::new(UnitCache::new(1024));
+        let e2 = Engine::new(2).with_cache(Arc::clone(&cache2));
+        let pair = e2.run_all(&[req.clone(), req.clone()]);
+        assert_eq!(pair[0], pair[1]);
+        assert_eq!(pair[0].per_op, plain.per_op);
+        let s2 = cache2.stats();
+        assert_eq!(s2.coalesced as usize, plain.layers.len(), "second cell rides the first");
+        assert_eq!(s2.inserts as usize, plain.layers.len(), "each unique unit computed once");
+    }
+
+    #[test]
+    fn shared_profile_requests_match_named_requests() {
+        use crate::trace::profiles::ModelProfile;
+        let cfg = ChipConfig::default();
+        let named = SimRequest::profile("gcn", 0.4, cfg.clone(), 1, 3).unwrap();
+        let shared = SimRequest::profile_shared(
+            Arc::new(ModelProfile::for_model("gcn").unwrap()),
+            0.4,
+            cfg,
+            1,
+            3,
+        );
+        let e = Engine::new(2);
+        assert_eq!(e.run(&named), e.run(&shared));
     }
 }

@@ -33,15 +33,28 @@
 //!   CSV are renderers over them, so every figure regenerates
 //!   identically — and machine-readably — from every entry point (CLI,
 //!   benches, examples, tests).
+//! * [`UnitCache`] — a content-addressed store of per-unit results
+//!   keyed by the canonical, versioned [`UnitKey`]; attach one to an
+//!   [`Engine`] with [`Engine::with_cache`] and sweep cells, repeated
+//!   requests and multi-figure runs stop recomputing shared units.
+//!   Byte-identity between warm and cold runs is a tested invariant.
+//! * [`Service`] — the persistent JSON-lines serving loop
+//!   (stdin/stdout and TCP, `serve` subcommand) over a shared cache
+//!   and an `Arc`-backed [`ArtifactStore`], with batched request
+//!   coalescing.
 
+pub mod cache;
 pub mod engine;
 pub mod plan;
 pub mod report;
 pub mod request;
+pub mod service;
 
+pub use cache::{UnitCache, UnitCacheStats, UnitKey, DEFAULT_CACHE_CAP, UNIT_KEY_VERSION};
 pub use engine::{default_jobs, Engine};
 pub use plan::{layers_report, ModelPlan, UnitSpec, UnitTensors};
 pub use report::{
     report_set_json, Cell, Report, ReportRow, LAYERS_SCHEMA, REPORT_SCHEMA, REPORT_SET_SCHEMA,
 };
 pub use request::{derive_seed, SimRequest, SweepSpec, Workload};
+pub use service::{ArtifactStore, Service, TraceArtifact, SERVE_SCHEMA, TRACE_SCHEMA};

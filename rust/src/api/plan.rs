@@ -97,7 +97,17 @@ impl UnitSpec {
             }
             UnitTensors::Explicit { a, g } => (a.as_ref(), g.as_ref()),
         };
-        simulate_unit(cfg, &self.shape, self.op, self.layer, a, g, self.samples, self.batch_mult, self.seed)
+        simulate_unit(
+            cfg,
+            &self.shape,
+            self.op,
+            self.layer,
+            a,
+            g,
+            self.samples,
+            self.batch_mult,
+            self.seed,
+        )
     }
 }
 
@@ -120,7 +130,20 @@ impl ModelPlan {
         samples: usize,
         seed: u64,
     ) -> ModelPlan {
-        let shared = Arc::new(profile.clone());
+        Self::profile_shared(Arc::new(profile.clone()), epoch, cfg, samples, seed)
+    }
+
+    /// [`ModelPlan::profile`] over an already-shared profile: the
+    /// serving layer's artifact store resolves each model once and
+    /// every request's plan clones only the `Arc`.
+    pub fn profile_shared(
+        shared: Arc<ModelProfile>,
+        epoch: f64,
+        cfg: &ChipConfig,
+        samples: usize,
+        seed: u64,
+    ) -> ModelPlan {
+        let profile = shared.as_ref();
         let batch_mult = profile.batch_mult();
         let mut plan = ModelPlan {
             name: profile.name().to_string(),
@@ -201,6 +224,17 @@ impl ModelPlan {
                 let p = ModelProfile::for_model(model)
                     .unwrap_or_else(|| panic!("unknown model '{model}' reached the planner"));
                 let mut plan = ModelPlan::profile(&p, *epoch, &req.cfg, req.samples, req.seed);
+                plan.name = req.label.clone();
+                Some(plan)
+            }
+            Workload::ProfileShared { profile, epoch } => {
+                let mut plan = ModelPlan::profile_shared(
+                    Arc::clone(profile),
+                    *epoch,
+                    &req.cfg,
+                    req.samples,
+                    req.seed,
+                );
                 plan.name = req.label.clone();
                 Some(plan)
             }

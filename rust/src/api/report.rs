@@ -195,8 +195,12 @@ impl Report {
         if schema != REPORT_SCHEMA && schema != LAYERS_SCHEMA {
             return None;
         }
-        let columns: Vec<String> =
-            j.get("columns")?.as_arr()?.iter().map(|c| c.as_str().map(str::to_string)).collect::<Option<_>>()?;
+        let columns: Vec<String> = j
+            .get("columns")?
+            .as_arr()?
+            .iter()
+            .map(|c| c.as_str().map(str::to_string))
+            .collect::<Option<_>>()?;
         let mut rows = Vec::new();
         for r in j.get("rows")?.as_arr()? {
             let mut cells = Vec::new();

@@ -21,6 +21,10 @@ pub enum Workload {
     /// A full model from its synthetic sparsity profile at an epoch
     /// fraction (the Fig. 13/14/17/18/19 workload).
     Profile { model: String, epoch: f64 },
+    /// Like `Profile`, but carrying a pre-resolved profile behind an
+    /// `Arc` — the serving layer's artifact store loads each model once
+    /// and every request shares it without re-building the topology.
+    ProfileShared { profile: Arc<ModelProfile>, epoch: f64 },
     /// A full model from *captured* (real-training) bitmaps — the
     /// `train` subcommand and `train_e2e` workload. The layer bitmaps
     /// sit behind one `Arc` so plan expansion and unit execution share
@@ -73,6 +77,24 @@ impl SimRequest {
             samples,
             seed,
         })
+    }
+
+    /// A model-profile request over an already-loaded (`Arc`-shared)
+    /// profile — the zero-copy path the serving layer uses.
+    pub fn profile_shared(
+        profile: Arc<ModelProfile>,
+        epoch: f64,
+        cfg: ChipConfig,
+        samples: usize,
+        seed: u64,
+    ) -> SimRequest {
+        SimRequest {
+            label: profile.name().to_string(),
+            cfg,
+            workload: Workload::ProfileShared { profile, epoch },
+            samples,
+            seed,
+        }
     }
 
     pub fn trace(
@@ -171,7 +193,13 @@ pub struct SweepSpec {
 
 impl SweepSpec {
     /// A single-config, single-epoch sweep over `models`.
-    pub fn models(models: &[&str], epoch: f64, cfg: &ChipConfig, samples: usize, seed: u64) -> SweepSpec {
+    pub fn models(
+        models: &[&str],
+        epoch: f64,
+        cfg: &ChipConfig,
+        samples: usize,
+        seed: u64,
+    ) -> SweepSpec {
         SweepSpec {
             configs: vec![("default".to_string(), cfg.clone())],
             epochs: vec![epoch],
@@ -256,7 +284,8 @@ mod tests {
         assert_ne!(derive_seed(42, 0), derive_seed(42, 1));
         assert_ne!(derive_seed(42, 0), derive_seed(43, 0));
         // Distinct cells never collide in a realistic grid.
-        let seeds: std::collections::BTreeSet<u64> = (0..10_000).map(|i| derive_seed(7, i)).collect();
+        let seeds: std::collections::BTreeSet<u64> =
+            (0..10_000).map(|i| derive_seed(7, i)).collect();
         assert_eq!(seeds.len(), 10_000);
     }
 

@@ -1,0 +1,819 @@
+//! The persistent simulation service: a JSON-lines request loop over
+//! stdin/stdout or TCP, answering simulation requests from the shared
+//! [`UnitCache`] wherever possible.
+//!
+//! The dominant real workload for a simulator like this is
+//! design-space search: thousands of overlapping configuration queries
+//! against one model set, where successive requests share most of
+//! their (layer × op) units. The service keeps one process resident so
+//! those requests stop paying process startup, artifact reload and
+//! unit recomputation:
+//!
+//! * **Protocol** — one JSON object per line in, one JSON object per
+//!   line out (`tensordash.serve.v1`), responses streamed strictly in
+//!   request order. Ops: `simulate`, `sweep`, `trace`, `batch`,
+//!   `stats`, `shutdown`. Unknown fields are ignored; malformed lines
+//!   answer `{"ok":false,...}` without killing the loop.
+//! * **Coalescing** — a `batch` op runs all of its sub-requests
+//!   through *one* engine invocation, so identical units across the
+//!   batch's cells simulate once (deterministically, in the engine's
+//!   serial lookup phase); units identical to ones in flight on other
+//!   concurrent connections block on the first computation instead of
+//!   repeating it ([`UnitCache::compute_coalesced`]).
+//! * **Artifact store** — model profiles and captured-trace bitmap
+//!   files are loaded once and shared by `Arc` across every request
+//!   and connection ([`ArtifactStore`]); a trace request never copies
+//!   a bitmap.
+//! * **Determinism** — the `report` field of a response is computed
+//!   from the merged simulation only: a cache-served response is
+//!   byte-identical to a cold-computed one. Cache telemetry rides in
+//!   the separate `cache` envelope field (counters move between runs
+//!   by design, so they must not — and do not — touch the report).
+
+use std::collections::{BTreeMap, HashMap};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::config::{ChipConfig, DataType};
+use crate::conv::{ConvShape, TrainOp};
+use crate::repro::{self, ModelSim};
+use crate::tensor::TensorBitmap;
+use crate::trace::profiles::ModelProfile;
+use crate::util::json::Json;
+
+use super::cache::{shape_json, UnitCache};
+use super::engine::Engine;
+use super::plan::layers_report;
+use super::report::{report_set_json, Cell, Report};
+use super::request::{SimRequest, SweepSpec, Workload};
+
+/// Schema tag of every response line.
+pub const SERVE_SCHEMA: &str = "tensordash.serve.v1";
+/// Schema tag of on-disk trace artifacts ([`TraceArtifact`]).
+pub const TRACE_SCHEMA: &str = "tensordash.trace.v1";
+
+// ---------------------------------------------------------------------
+// Trace artifacts + the Arc-backed artifact store
+// ---------------------------------------------------------------------
+
+/// A captured training trace: per-layer geometry plus (A, G) zero
+/// bitmaps, loaded once and shared by `Arc` across every request that
+/// references it.
+#[derive(Debug, Clone)]
+pub struct TraceArtifact {
+    pub name: String,
+    pub shapes: Vec<ConvShape>,
+    pub layers: Arc<Vec<(TensorBitmap, TensorBitmap)>>,
+}
+
+fn shape_from_json(j: &Json) -> Option<ConvShape> {
+    Some(ConvShape {
+        n: j.get("n")?.as_usize()?,
+        h: j.get("h")?.as_usize()?,
+        w: j.get("w")?.as_usize()?,
+        c: j.get("c")?.as_usize()?,
+        f: j.get("f")?.as_usize()?,
+        kh: j.get("kh")?.as_usize()?,
+        kw: j.get("kw")?.as_usize()?,
+        stride: j.get("stride")?.as_usize()?,
+        pad: j.get("pad")?.as_usize()?,
+    })
+}
+
+impl TraceArtifact {
+    pub fn new(
+        name: impl Into<String>,
+        shapes: Vec<ConvShape>,
+        layers: Vec<(TensorBitmap, TensorBitmap)>,
+    ) -> TraceArtifact {
+        assert_eq!(shapes.len(), layers.len(), "trace shapes/layers mismatch");
+        TraceArtifact { name: name.into(), shapes, layers: Arc::new(layers) }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let layers = self
+            .shapes
+            .iter()
+            .zip(self.layers.iter())
+            .map(|(s, (a, g))| {
+                let mut m = BTreeMap::new();
+                m.insert("shape".to_string(), shape_json(s));
+                m.insert("a".to_string(), a.to_json());
+                m.insert("g".to_string(), g.to_json());
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert("schema".to_string(), Json::Str(TRACE_SCHEMA.to_string()));
+        m.insert("model".to_string(), Json::Str(self.name.clone()));
+        m.insert("layers".to_string(), Json::Arr(layers));
+        Json::Obj(m)
+    }
+
+    pub fn from_json(j: &Json) -> Option<TraceArtifact> {
+        if j.get("schema")?.as_str()? != TRACE_SCHEMA {
+            return None;
+        }
+        let name = j.get("model")?.as_str()?.to_string();
+        let mut shapes = Vec::new();
+        let mut layers = Vec::new();
+        for l in j.get("layers")?.as_arr()? {
+            shapes.push(shape_from_json(l.get("shape")?)?);
+            let a = TensorBitmap::from_json(l.get("a")?)?;
+            let g = TensorBitmap::from_json(l.get("g")?)?;
+            layers.push((a, g));
+        }
+        Some(TraceArtifact { name, shapes, layers: Arc::new(layers) })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> std::io::Result<()> {
+        let mut text = self.to_json().render_pretty();
+        text.push('\n');
+        std::fs::write(path, text.as_bytes())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<TraceArtifact, String> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| format!("parsing {}: {e}", path.display()))?;
+        TraceArtifact::from_json(&j)
+            .ok_or_else(|| format!("{} is not a {TRACE_SCHEMA} document", path.display()))
+    }
+
+    /// Build a request over this trace; the bitmap vector is shared by
+    /// `Arc`, never copied.
+    pub fn request(&self, cfg: ChipConfig, samples: usize, seed: u64) -> SimRequest {
+        SimRequest {
+            label: self.name.clone(),
+            cfg,
+            workload: Workload::Trace {
+                shapes: self.shapes.clone(),
+                layers: Arc::clone(&self.layers),
+            },
+            samples,
+            seed,
+        }
+    }
+}
+
+/// Memoizing artifact store: model profiles and trace files resolve
+/// once per service lifetime and are shared by `Arc` thereafter.
+#[derive(Debug, Default)]
+pub struct ArtifactStore {
+    profiles: Mutex<HashMap<String, Arc<ModelProfile>>>,
+    traces: Mutex<HashMap<String, Arc<TraceArtifact>>>,
+}
+
+impl ArtifactStore {
+    /// Resolve a model profile, loading it on first use.
+    pub fn profile(&self, name: &str) -> Option<Arc<ModelProfile>> {
+        let mut g = self.profiles.lock().unwrap();
+        if let Some(p) = g.get(name) {
+            return Some(Arc::clone(p));
+        }
+        let p = Arc::new(ModelProfile::for_model(name)?);
+        g.insert(name.to_string(), Arc::clone(&p));
+        Some(p)
+    }
+
+    /// Resolve a trace artifact by path, loading the file on first use.
+    pub fn trace(&self, path: &str) -> Result<Arc<TraceArtifact>, String> {
+        {
+            let g = self.traces.lock().unwrap();
+            if let Some(t) = g.get(path) {
+                return Ok(Arc::clone(t));
+            }
+        }
+        // Load outside the lock: a slow disk must not block other
+        // connections' already-resident artifacts.
+        let t = Arc::new(TraceArtifact::load(path)?);
+        let mut g = self.traces.lock().unwrap();
+        let entry = g.entry(path.to_string()).or_insert_with(|| Arc::clone(&t));
+        Ok(Arc::clone(entry))
+    }
+
+    /// Register an in-memory trace under a key (tests, embedded use).
+    pub fn register_trace(&self, key: &str, t: TraceArtifact) -> Arc<TraceArtifact> {
+        let t = Arc::new(t);
+        self.traces.lock().unwrap().insert(key.to_string(), Arc::clone(&t));
+        t
+    }
+
+    /// (profiles, traces) currently resident.
+    pub fn loaded(&self) -> (usize, usize) {
+        (self.profiles.lock().unwrap().len(), self.traces.lock().unwrap().len())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Request parsing
+// ---------------------------------------------------------------------
+
+/// One parsed sub-request: its response id, the engine cells it
+/// expands to, and how to shape the resulting sims into reports.
+struct SubReq {
+    id: Option<Json>,
+    per_layer: bool,
+    kind: SubKind,
+    cells: Vec<SimRequest>,
+}
+
+enum SubKind {
+    Simulate { model: String, epoch: f64, cfg: ChipConfig, samples: usize, seed: u64 },
+    Sweep,
+    Trace { name: String },
+}
+
+fn parse_cfg(j: &Json) -> Result<ChipConfig, String> {
+    let mut cfg = ChipConfig::default();
+    // Zero geometry would divide-by-zero deep inside a worker; reject
+    // it here so the error stays in-band instead of killing the loop.
+    if let Some(v) = j.get("rows") {
+        cfg.tile_rows = match v.as_usize() {
+            Some(r) if r >= 1 => r,
+            _ => return Err("'rows' must be a positive number".to_string()),
+        };
+    }
+    if let Some(v) = j.get("cols") {
+        cfg.tile_cols = match v.as_usize() {
+            Some(c) if c >= 1 => c,
+            _ => return Err("'cols' must be a positive number".to_string()),
+        };
+    }
+    if let Some(v) = j.get("depth") {
+        let d = v.as_usize().ok_or("'depth' must be a number")?;
+        if d != 2 && d != 3 {
+            return Err("'depth' must be 2 or 3".to_string());
+        }
+        cfg.staging_depth = d;
+    }
+    if let Some(v) = j.get("bf16") {
+        if v.as_bool().ok_or("'bf16' must be a boolean")? {
+            cfg.dtype = DataType::Bf16;
+        }
+    }
+    if let Some(v) = j.get("power_gate") {
+        cfg.power_gate = v.as_bool().ok_or("'power_gate' must be a boolean")?;
+    }
+    Ok(cfg)
+}
+
+fn get_usize(j: &Json, key: &str, default: usize) -> Result<usize, String> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_usize().ok_or_else(|| format!("'{key}' must be a number")),
+    }
+}
+
+fn get_f64(j: &Json, key: &str, default: f64) -> Result<f64, String> {
+    match j.get(key) {
+        None => Ok(default),
+        Some(v) => v.as_f64().ok_or_else(|| format!("'{key}' must be a number")),
+    }
+}
+
+/// Seeds are u64 and must survive the protocol exactly — JSON numbers
+/// ride through f64, which is only exact up to 2^53, so numbers are
+/// accepted in that range only and larger seeds travel as decimal
+/// strings (the same reason cache keys hex-encode their seeds).
+fn get_seed(j: &Json, default: u64) -> Result<u64, String> {
+    match j.get("seed") {
+        None => Ok(default),
+        Some(Json::Num(v)) => {
+            if *v >= 0.0 && *v <= 9.0e15 && v.trunc() == *v {
+                Ok(*v as u64)
+            } else {
+                Err("'seed' as a JSON number must be a non-negative integer <= 2^53; \
+                     pass larger seeds as a decimal string"
+                    .to_string())
+            }
+        }
+        Some(Json::Str(s)) => {
+            s.parse::<u64>().map_err(|_| format!("'seed' string '{s}' is not a u64"))
+        }
+        Some(_) => Err("'seed' must be a number or a decimal string".to_string()),
+    }
+}
+
+// ---------------------------------------------------------------------
+// The service
+// ---------------------------------------------------------------------
+
+/// Result of handling one input line: the response lines (one per
+/// sub-request) and whether the service should shut down.
+pub struct Handled {
+    pub lines: Vec<String>,
+    pub shutdown: bool,
+}
+
+/// The persistent simulation service. Share by reference across
+/// connection-handler threads; all interior state is synchronized.
+#[derive(Debug)]
+pub struct Service {
+    engine: Engine,
+    cache: Arc<UnitCache>,
+    artifacts: ArtifactStore,
+    stop: AtomicBool,
+}
+
+impl Service {
+    /// Build a service over `engine`, attaching `cache` to it (every
+    /// request the service runs is cache-aware).
+    pub fn new(engine: Engine, cache: Arc<UnitCache>) -> Service {
+        Service {
+            engine: engine.with_cache(Arc::clone(&cache)),
+            cache,
+            artifacts: ArtifactStore::default(),
+            stop: AtomicBool::new(false),
+        }
+    }
+
+    pub fn artifacts(&self) -> &ArtifactStore {
+        &self.artifacts
+    }
+
+    pub fn cache(&self) -> &Arc<UnitCache> {
+        &self.cache
+    }
+
+    /// Handle one protocol line. Never panics on malformed input; the
+    /// error is reported in-band.
+    pub fn handle_line(&self, line: &str) -> Handled {
+        let j = match Json::parse(line) {
+            Ok(j) => j,
+            Err(e) => {
+                return Handled {
+                    lines: vec![error_line(None, &format!("bad json: {e}"))],
+                    shutdown: false,
+                }
+            }
+        };
+        let id = j.get("id").cloned();
+        match j.get("op").and_then(Json::as_str) {
+            Some("shutdown") => {
+                let mut m = envelope(id);
+                m.insert("ok".to_string(), Json::Bool(true));
+                m.insert("bye".to_string(), Json::Bool(true));
+                Handled { lines: vec![Json::Obj(m).render()], shutdown: true }
+            }
+            Some("stats") => Handled { lines: vec![self.stats_line(id)], shutdown: false },
+            Some("batch") => {
+                let subs = match j.get("requests").and_then(Json::as_arr) {
+                    Some(reqs) => reqs.iter().collect::<Vec<_>>(),
+                    None => {
+                        return Handled {
+                            lines: vec![error_line(id, "'batch' needs a 'requests' array")],
+                            shutdown: false,
+                        }
+                    }
+                };
+                Handled { lines: self.run_batch(&subs), shutdown: false }
+            }
+            _ => Handled { lines: self.run_batch(&[&j]), shutdown: false },
+        }
+    }
+
+    /// Parse, execute (one engine invocation for the whole batch, so
+    /// identical units across sub-requests coalesce) and render
+    /// responses in request order.
+    fn run_batch(&self, subs: &[&Json]) -> Vec<String> {
+        let parsed: Vec<Result<SubReq, (Option<Json>, String)>> =
+            subs.iter().map(|j| self.parse_request(j)).collect();
+        let mut all_cells: Vec<SimRequest> = Vec::new();
+        for sub in parsed.iter().flatten() {
+            all_cells.extend(sub.cells.iter().cloned());
+        }
+        let before = self.cache.stats();
+        let sims = self.engine.run_all(&all_cells);
+        let delta = self.cache.stats().since(&before);
+        let mut out = Vec::with_capacity(parsed.len());
+        let mut cursor = 0usize;
+        for sub in parsed {
+            match sub {
+                Err((id, msg)) => out.push(error_line(id, &msg)),
+                Ok(sub) => {
+                    let slice = &sims[cursor..cursor + sub.cells.len()];
+                    cursor += sub.cells.len();
+                    let reports = self.build_reports(&sub, slice);
+                    let mut m = envelope(sub.id);
+                    m.insert("ok".to_string(), Json::Bool(true));
+                    m.insert("report".to_string(), report_set_json(&reports));
+                    m.insert("cache".to_string(), delta.to_json());
+                    out.push(Json::Obj(m).render());
+                }
+            }
+        }
+        out
+    }
+
+    fn parse_request(&self, j: &Json) -> Result<SubReq, (Option<Json>, String)> {
+        let id = j.get("id").cloned();
+        match self.parse_request_inner(j) {
+            Ok((kind, per_layer, cells)) => Ok(SubReq { id, per_layer, kind, cells }),
+            Err(msg) => Err((id, msg)),
+        }
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn parse_request_inner(&self, j: &Json) -> Result<(SubKind, bool, Vec<SimRequest>), String> {
+        let per_layer = match j.get("per_layer") {
+            None => false,
+            Some(v) => v.as_bool().ok_or("'per_layer' must be a boolean")?,
+        };
+        let samples = get_usize(j, "samples", repro::DEFAULT_SAMPLES)?;
+        let seed = get_seed(j, 42)?;
+        match j.get("op").and_then(Json::as_str) {
+            Some("simulate") | None => {
+                let model = j
+                    .get("model")
+                    .and_then(Json::as_str)
+                    .ok_or("'simulate' needs a 'model'")?
+                    .to_string();
+                let epoch = get_f64(j, "epoch", repro::MID_EPOCH)?;
+                let cfg = parse_cfg(j)?;
+                let profile = self
+                    .artifacts
+                    .profile(&model)
+                    .ok_or_else(|| format!("unknown model '{model}'"))?;
+                let req = SimRequest::profile_shared(profile, epoch, cfg.clone(), samples, seed);
+                Ok((SubKind::Simulate { model, epoch, cfg, samples, seed }, per_layer, vec![req]))
+            }
+            Some("sweep") => {
+                let models: Vec<String> = j
+                    .get("models")
+                    .and_then(Json::as_arr)
+                    .ok_or("'sweep' needs a 'models' array")?
+                    .iter()
+                    .map(|m| m.as_str().map(str::to_string))
+                    .collect::<Option<_>>()
+                    .ok_or("'models' must contain strings")?;
+                for m in &models {
+                    if self.artifacts.profile(m).is_none() {
+                        return Err(format!("unknown model '{m}'"));
+                    }
+                }
+                let epochs: Vec<f64> = match j.get("epochs") {
+                    None => vec![repro::MID_EPOCH],
+                    Some(v) => v
+                        .as_arr()
+                        .ok_or("'epochs' must be an array")?
+                        .iter()
+                        .map(Json::as_f64)
+                        .collect::<Option<_>>()
+                        .ok_or("'epochs' must contain numbers")?,
+                };
+                let cfg = parse_cfg(j)?;
+                let names: Vec<&str> = models.iter().map(String::as_str).collect();
+                let spec = SweepSpec::models(&names, repro::MID_EPOCH, &cfg, samples, seed)
+                    .with_epochs(&epochs);
+                // Keep SweepSpec's label/seed semantics, then swap
+                // each cell onto the store's Arc'd profile so plan
+                // expansion stops re-building topologies per request.
+                let mut cells = spec.cells();
+                for cell in &mut cells {
+                    let shared = match &cell.workload {
+                        Workload::Profile { model, epoch } => {
+                            self.artifacts.profile(model).map(|p| (p, *epoch))
+                        }
+                        _ => None,
+                    };
+                    if let Some((profile, epoch)) = shared {
+                        cell.workload = Workload::ProfileShared { profile, epoch };
+                    }
+                }
+                Ok((SubKind::Sweep, per_layer, cells))
+            }
+            Some("trace") => {
+                let path = j
+                    .get("path")
+                    .and_then(Json::as_str)
+                    .ok_or("'trace' needs a 'path'")?;
+                let artifact = self.artifacts.trace(path)?;
+                let cfg = parse_cfg(j)?;
+                let req = artifact.request(cfg, samples, seed);
+                Ok((SubKind::Trace { name: artifact.name.clone() }, per_layer, vec![req]))
+            }
+            Some(other) => Err(format!("unknown op '{other}'")),
+        }
+    }
+
+    fn build_reports(&self, sub: &SubReq, sims: &[ModelSim]) -> Vec<Report> {
+        match &sub.kind {
+            SubKind::Simulate { model, epoch, cfg, samples, seed } => {
+                let sim = &sims[0];
+                let mut reports =
+                    vec![repro::simulate_report(model, *epoch, cfg, *samples, *seed, sim)];
+                if sub.per_layer {
+                    reports.push(layers_report(sim));
+                }
+                reports
+            }
+            SubKind::Sweep => {
+                let mut r = Report::new(
+                    "sweep",
+                    "Sweep — overall speedup and efficiency per cell",
+                    &["cell", "speedup", "compute eff", "chip eff"],
+                );
+                for sim in sims {
+                    r.row(vec![
+                        Cell::text(sim.name.clone()),
+                        Cell::num(sim.overall_speedup()),
+                        Cell::num(sim.compute_efficiency()),
+                        Cell::num(sim.total_efficiency()),
+                    ]);
+                }
+                r.meta_num("cells", sims.len() as f64);
+                let mut reports = vec![r];
+                if sub.per_layer {
+                    reports.extend(sims.iter().map(layers_report));
+                }
+                reports
+            }
+            SubKind::Trace { name } => {
+                let sim = &sims[0];
+                let mut r = Report::new(
+                    "trace",
+                    format!("{name} — projection from captured bitmaps"),
+                    &["metric", "A*W", "A*G", "W*G", "overall"],
+                );
+                r.row(vec![
+                    Cell::text("speedup"),
+                    Cell::num(sim.op_speedup(TrainOp::Fwd)),
+                    Cell::num(sim.op_speedup(TrainOp::Igrad)),
+                    Cell::num(sim.op_speedup(TrainOp::Wgrad)),
+                    Cell::num(sim.overall_speedup()),
+                ]);
+                r.row(vec![
+                    Cell::text("whole-chip efficiency"),
+                    Cell::empty(),
+                    Cell::empty(),
+                    Cell::empty(),
+                    Cell::num(sim.total_efficiency()),
+                ]);
+                r.meta_str("model", name);
+                let mut reports = vec![r];
+                if sub.per_layer {
+                    reports.push(layers_report(sim));
+                }
+                reports
+            }
+        }
+    }
+
+    fn stats_line(&self, id: Option<Json>) -> String {
+        let (profiles, traces) = self.artifacts.loaded();
+        let mut m = envelope(id);
+        m.insert("ok".to_string(), Json::Bool(true));
+        m.insert("cache".to_string(), self.cache.stats().to_json());
+        m.insert("cache_entries".to_string(), Json::Num(self.cache.len() as f64));
+        m.insert("profiles_loaded".to_string(), Json::Num(profiles as f64));
+        m.insert("traces_loaded".to_string(), Json::Num(traces as f64));
+        Json::Obj(m).render()
+    }
+
+    /// The blocking line loop: read requests from `reader`, stream
+    /// responses to `writer` (flushed per line), return on EOF or a
+    /// `shutdown` op. This is both the stdin/stdout mode and the
+    /// per-connection TCP loop.
+    pub fn serve_lines<R: BufRead, W: Write>(
+        &self,
+        reader: R,
+        mut writer: W,
+    ) -> std::io::Result<()> {
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let h = self.handle_line(&line);
+            for l in &h.lines {
+                writer.write_all(l.as_bytes())?;
+                writer.write_all(b"\n")?;
+            }
+            writer.flush()?;
+            if h.shutdown {
+                self.stop.store(true, Ordering::SeqCst);
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Accept TCP connections on `addr` until a `shutdown` op arrives
+    /// on any connection; each connection runs [`Self::serve_lines`]
+    /// on its own thread over the shared cache and artifact store.
+    /// On shutdown every open connection is half-closed so handler
+    /// threads blocked in a read drain promptly — otherwise one idle
+    /// client would keep the scope join (and the process) alive
+    /// forever.
+    pub fn serve_tcp(&self, addr: &str) -> std::io::Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        eprintln!("tensordash serve: listening on {}", listener.local_addr()?);
+        // Live connections, tracked so shutdown can half-close them.
+        // Each handler reaps its own entry on exit — a resident
+        // service must not accumulate one fd per past connection.
+        let conns: Mutex<Vec<(u64, TcpStream)>> = Mutex::new(Vec::new());
+        let conns_ref = &conns;
+        let mut next_id = 0u64;
+        std::thread::scope(|s| -> std::io::Result<()> {
+            loop {
+                if self.stop.load(Ordering::SeqCst) {
+                    // Half-close the read side only: idle readers see
+                    // EOF and exit, while handlers mid-computation can
+                    // still write their in-flight response before the
+                    // scope joins them.
+                    for (_, c) in conns.lock().unwrap().iter() {
+                        let _ = c.shutdown(std::net::Shutdown::Read);
+                    }
+                    return Ok(());
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let id = next_id;
+                        next_id += 1;
+                        match stream.try_clone() {
+                            Ok(clone) => conns.lock().unwrap().push((id, clone)),
+                            Err(e) => eprintln!("serve: connection untracked: {e}"),
+                        }
+                        s.spawn(move || {
+                            let _ = self.handle_conn(stream);
+                            conns_ref.lock().unwrap().retain(|(i, _)| *i != id);
+                        });
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                    }
+                    // Transient accept failures (ECONNABORTED, EMFILE
+                    // pressure, ...) must not take the service down —
+                    // only the shutdown op ends the loop.
+                    Err(e) => {
+                        eprintln!("serve: accept failed (retrying): {e}");
+                        std::thread::sleep(std::time::Duration::from_millis(100));
+                    }
+                }
+            }
+        })
+    }
+
+    fn handle_conn(&self, stream: TcpStream) -> std::io::Result<()> {
+        stream.set_nonblocking(false)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        let writer = BufWriter::new(stream);
+        self.serve_lines(reader, writer)
+    }
+}
+
+fn envelope(id: Option<Json>) -> BTreeMap<String, Json> {
+    let mut m = BTreeMap::new();
+    m.insert("schema".to_string(), Json::Str(SERVE_SCHEMA.to_string()));
+    if let Some(id) = id {
+        m.insert("id".to_string(), id);
+    }
+    m
+}
+
+fn error_line(id: Option<Json>, msg: &str) -> String {
+    let mut m = envelope(id);
+    m.insert("ok".to_string(), Json::Bool(false));
+    m.insert("error".to_string(), Json::Str(msg.to_string()));
+    Json::Obj(m).render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::cache::DEFAULT_CACHE_CAP;
+    use crate::trace::synthetic::clustered_bitmap;
+    use crate::util::rng::Rng;
+
+    fn service(jobs: usize) -> Service {
+        Service::new(Engine::new(jobs), Arc::new(UnitCache::new(DEFAULT_CACHE_CAP)))
+    }
+
+    fn report_field(line: &str) -> Json {
+        let j = Json::parse(line).expect("response parses");
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "response not ok: {line}");
+        j.get("report").expect("response carries a report").clone()
+    }
+
+    #[test]
+    fn simulate_response_is_deterministic_and_cache_served() {
+        let s = service(2);
+        let req = r#"{"op":"simulate","id":"r1","model":"gcn","epoch":0.4,"samples":1,"seed":7}"#;
+        let first = s.handle_line(req);
+        assert_eq!(first.lines.len(), 1);
+        assert!(!first.shutdown);
+        let second = s.handle_line(req);
+        // The report body is byte-identical warm vs cold; only the
+        // cache envelope moves.
+        assert_eq!(
+            report_field(&first.lines[0]).render(),
+            report_field(&second.lines[0]).render()
+        );
+        let stats = s.cache().stats();
+        assert!(stats.hits > 0, "second request must be cache-served: {stats:?}");
+        assert_eq!(stats.misses, stats.inserts);
+    }
+
+    #[test]
+    fn batch_coalesces_duplicate_requests_into_one_computation() {
+        let s = service(2);
+        let line = concat!(
+            r#"{"op":"batch","requests":["#,
+            r#"{"op":"simulate","id":"a","model":"gcn","samples":1,"seed":7},"#,
+            r#"{"op":"simulate","id":"b","model":"gcn","samples":1,"seed":7}"#,
+            r#"]}"#,
+        );
+        let h = s.handle_line(line);
+        assert_eq!(h.lines.len(), 2, "one response line per sub-request");
+        assert_eq!(
+            report_field(&h.lines[0]).render(),
+            report_field(&h.lines[1]).render(),
+            "duplicate sub-requests must be byte-identical"
+        );
+        let stats = s.cache().stats();
+        assert!(stats.coalesced > 0, "duplicates must coalesce: {stats:?}");
+        // Responses carry their ids in order.
+        assert_eq!(Json::parse(&h.lines[0]).unwrap().get("id").unwrap().as_str(), Some("a"));
+        assert_eq!(Json::parse(&h.lines[1]).unwrap().get("id").unwrap().as_str(), Some("b"));
+    }
+
+    #[test]
+    fn malformed_lines_answer_in_band_errors() {
+        let s = service(1);
+        let bad = s.handle_line("{nope");
+        assert_eq!(bad.lines.len(), 1);
+        let j = Json::parse(&bad.lines[0]).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        let unknown = s.handle_line(r#"{"op":"simulate","id":9,"model":"resnet5O"}"#);
+        let j = Json::parse(&unknown.lines[0]).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        assert_eq!(j.get("id").unwrap().as_f64(), Some(9.0));
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("unknown model"));
+    }
+
+    #[test]
+    fn sweep_reports_one_row_per_cell_in_request_order() {
+        let s = service(2);
+        let line = r#"{"op":"sweep","models":["alexnet","gcn"],"samples":1,"seed":5}"#;
+        let h = s.handle_line(line);
+        let report = report_field(&h.lines[0]);
+        let r = Report::from_json(&report).expect("sweep report reconstructs");
+        assert_eq!(r.rows.len(), 2);
+        assert_eq!(r.rows[0].cells[0].text, "alexnet");
+        assert_eq!(r.rows[1].cells[0].text, "gcn");
+        // Profiles were loaded once into the artifact store.
+        assert_eq!(s.artifacts().loaded().0, 2);
+        let again = s.handle_line(line);
+        assert_eq!(report_field(&again.lines[0]).render(), report.render());
+        assert_eq!(s.artifacts().loaded().0, 2, "profiles load once per model");
+    }
+
+    #[test]
+    fn trace_artifact_round_trips_and_serves() {
+        let mut rng = Rng::new(3);
+        let shape = ConvShape::conv(1, 4, 4, 16, 16, 3, 1, 1);
+        let a = clustered_bitmap((1, 4, 4, 16), 0.6, 0.35, &mut rng);
+        let g = clustered_bitmap((1, 4, 4, 16), 0.6, 0.35, &mut rng);
+        let artifact = TraceArtifact::new("tiny", vec![shape], vec![(a, g)]);
+        // JSON round trip.
+        let back = TraceArtifact::from_json(&artifact.to_json()).expect("trace reconstructs");
+        assert_eq!(back.name, "tiny");
+        assert_eq!(back.shapes, artifact.shapes);
+        assert_eq!(back.layers, artifact.layers);
+        // Disk round trip through the store (loaded once).
+        let path = std::env::temp_dir().join(format!("td_trace_{}.json", std::process::id()));
+        artifact.save(&path).unwrap();
+        let s = service(1);
+        let line = format!(
+            r#"{{"op":"trace","id":"t","path":"{}","samples":1,"seed":3}}"#,
+            path.display()
+        );
+        let h1 = s.handle_line(&line);
+        let h2 = s.handle_line(&line);
+        assert_eq!(
+            report_field(&h1.lines[0]).render(),
+            report_field(&h2.lines[0]).render()
+        );
+        assert_eq!(s.artifacts().loaded().1, 1, "trace file loads once");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn shutdown_acks_and_stops_the_line_loop() {
+        let s = service(1);
+        let input = b"{\"op\":\"stats\"}\n{\"op\":\"shutdown\"}\n{\"op\":\"stats\"}\n" as &[u8];
+        let mut out = Vec::new();
+        s.serve_lines(input, &mut out).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2, "nothing after the shutdown ack: {text}");
+        let ack = Json::parse(lines[1]).unwrap();
+        assert_eq!(ack.get("bye"), Some(&Json::Bool(true)));
+    }
+}

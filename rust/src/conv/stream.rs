@@ -66,7 +66,12 @@ pub fn igrad_stream(g: &TensorBitmap, s: &ConvShape, n: usize, y: usize, x: usiz
                 && (dx / s.stride as isize) < ow as isize;
             for fb in 0..s.f_blocks() {
                 rows.push(if valid {
-                    g.lane_word(n, (dy / s.stride as isize) as usize, (dx / s.stride as isize) as usize, fb)
+                    g.lane_word(
+                        n,
+                        (dy / s.stride as isize) as usize,
+                        (dx / s.stride as isize) as usize,
+                        fb,
+                    )
                 } else {
                     0
                 });

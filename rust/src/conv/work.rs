@@ -173,7 +173,13 @@ pub fn sample_passes(
 }
 
 /// Analytic SRAM access counts for one (layer, op).
-pub fn sram_counts(s: &ConvShape, op: TrainOp, wside: WgradSide, tile_rows: u64, tile_cols: u64) -> SramCounts {
+pub fn sram_counts(
+    s: &ConvShape,
+    op: TrainOp,
+    wside: WgradSide,
+    tile_rows: u64,
+    tile_cols: u64,
+) -> SramCounts {
     let w = op_work(s, op, wside);
     dense_counts(w.steps, w.b_groups, w.a_groups, tile_rows, tile_cols)
 }
@@ -282,7 +288,8 @@ mod tests {
         let s = layer();
         let (a, g) = (bitmap((2, 8, 8, 32), 0.5, 1), bitmap((2, 8, 8, 32), 0.5, 2));
         let mut rng = Rng::new(3);
-        let passes = sample_passes(&s, TrainOp::Fwd, WgradSide::Gradients, &a, &g, 4, 7, 1, &mut rng);
+        let passes =
+            sample_passes(&s, TrainOp::Fwd, WgradSide::Gradients, &a, &g, 4, 7, 1, &mut rng);
         assert_eq!(passes.len(), 7);
         let total_weight: u64 = passes.iter().map(|p| p.weight).sum();
         assert_eq!(total_weight, (2u64 * 64).div_ceil(4));
@@ -294,7 +301,8 @@ mod tests {
         let (a, g) = (bitmap((4, 1, 1, 64), 0.5, 4), bitmap((4, 1, 1, 32), 0.5, 5));
         let mut rng = Rng::new(6);
         // b_groups = 4 -> 1 pass with 4 rows.
-        let passes = sample_passes(&s, TrainOp::Fwd, WgradSide::Gradients, &a, &g, 4, 100, 1, &mut rng);
+        let passes =
+            sample_passes(&s, TrainOp::Fwd, WgradSide::Gradients, &a, &g, 4, 100, 1, &mut rng);
         assert_eq!(passes.len(), 1);
         assert_eq!(passes[0].streams.len(), 4);
         assert_eq!(passes[0].weight, 1);

@@ -13,7 +13,9 @@ pub mod data;
 use anyhow::{Context, Result};
 
 use crate::conv::ConvShape;
-use crate::runtime::{literal_f32, literal_i32, literal_i32_scalar, scalar_f32, to_i32, Executable, Runtime};
+use crate::runtime::{
+    literal_f32, literal_i32, literal_i32_scalar, scalar_f32, to_i32, Executable, Runtime,
+};
 use crate::trace::capture::StepTrace;
 use crate::util::json::Json;
 

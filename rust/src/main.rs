@@ -5,6 +5,9 @@
 //!   simulate  run one model profile through the cycle simulator
 //!   train     run REAL training steps through the AOT artifacts and
 //!             project TensorDash speedup from the captured sparsity
+//!   serve     persistent JSON-lines simulation service (stdin/stdout
+//!             or --listen TCP) over a shared content-addressed unit
+//!             cache with batched request coalescing
 //!   info      print configuration + area model summary
 //!
 //! Every result is built as a structured `api::Report` first; `--format`
@@ -19,8 +22,10 @@
 //!   tensordash simulate --model resnet50 --epoch 0.4
 //!   tensordash train --steps 50 --log-every 10
 
+use std::sync::Arc;
+
 use anyhow::Result;
-use tensordash::api::{self, Cell, Engine, Report, SimRequest};
+use tensordash::api::{self, Cell, Engine, Report, Service, SimRequest, UnitCache};
 use tensordash::config::{ChipConfig, DataType};
 use tensordash::coordinator::data::DataGen;
 use tensordash::coordinator::Trainer;
@@ -28,7 +33,7 @@ use tensordash::repro;
 use tensordash::runtime::Runtime;
 use tensordash::util::cli::Args;
 
-const USAGE: &str = "usage: tensordash <repro|simulate|train|info> [options]
+const USAGE: &str = "usage: tensordash <repro|simulate|train|serve|info> [options]
   repro    --all | --fig <1|13|14|15|16|17|18|19|20|gcn|ablations>
            | --table <3|bf16>  [--samples N] [--seed S]
   simulate --model <name> [--epoch F] [--samples N] [--seed S]
@@ -36,6 +41,13 @@ const USAGE: &str = "usage: tensordash <repro|simulate|train|info> [options]
            [--per-layer]
   train    [--steps N] [--log-every K] [--seed S] [--artifacts DIR]
            [--samples N] [--sim-every K] [--per-layer]
+  serve    [--listen ADDR] [--jobs N] [--cache-cap N] [--cache-dir DIR]
+           [--preload m1,m2,...]
+           JSON-lines loop (tensordash.serve.v1): one request object per
+           line on stdin (or per TCP connection with --listen), one
+           response per line in request order. Ops: simulate, sweep,
+           trace, batch, stats, shutdown. Identical units across a
+           batch coalesce onto one computation.
   info
 
 report options (repro, simulate, train):
@@ -49,10 +61,19 @@ report options (repro, simulate, train):
                             (layer, op) units out over the pool
   --per-layer               (simulate, train only) append the
                             tensordash.layers.v1 per-(layer, op)
-                            breakdown (speedup/energy/bottleneck)";
+                            breakdown (speedup/energy/bottleneck)
+  --cache                   serve units from an in-memory
+                            content-addressed cache: repeated and
+                            overlapping sweep cells (multi-figure runs
+                            share dense baselines) compute once.
+                            Results are byte-identical; unit_cache_*
+                            meta keys record the telemetry
+  --cache-cap N             cache capacity in units (default 65536)
+  --cache-dir DIR           also mirror cached units to DIR (implies
+                            --cache; persists across runs)";
 
 fn main() {
-    let args = Args::parse(&["all", "bf16", "power-gate", "help", "per-layer"]);
+    let args = Args::parse(&["all", "bf16", "power-gate", "help", "per-layer", "cache"]);
     if args.flag("help") || args.positional.is_empty() {
         println!("{USAGE}");
         return;
@@ -62,6 +83,7 @@ fn main() {
         "repro" => cmd_repro(&args),
         "simulate" => cmd_simulate(&args),
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "info" => cmd_info(&args),
         other => {
             eprintln!("unknown command '{other}'\n{USAGE}");
@@ -88,8 +110,53 @@ fn chip_from_args(args: &Args) -> Result<ChipConfig> {
     Ok(cfg)
 }
 
-fn engine_from_args(args: &Args) -> Result<Engine> {
-    Ok(Engine::new(args.get_usize("jobs", api::default_jobs())?))
+/// Build a unit cache of `cap` entries, disk-mirrored when `dir` is
+/// given. Shared by the `--cache*` flags and the `serve` subcommand.
+fn build_cache(cap: usize, dir: Option<&str>) -> Result<UnitCache> {
+    Ok(match dir {
+        Some(d) => UnitCache::new(cap)
+            .with_disk(d)
+            .map_err(|e| anyhow::anyhow!("opening cache dir {d}: {e}"))?,
+        None => UnitCache::new(cap),
+    })
+}
+
+/// Build the cache `--cache`/`--cache-cap`/`--cache-dir` ask for
+/// (`--cache-dir` implies `--cache`); `None` when caching is off.
+fn cache_from_args(args: &Args) -> Result<Option<Arc<UnitCache>>> {
+    let dir = args.get("cache-dir");
+    if !args.flag("cache") && dir.is_none() {
+        return Ok(None);
+    }
+    let cap = args.get_usize("cache-cap", api::DEFAULT_CACHE_CAP)?;
+    Ok(Some(Arc::new(build_cache(cap, dir)?)))
+}
+
+fn engine_from_args(args: &Args) -> Result<(Engine, Option<Arc<UnitCache>>)> {
+    let mut engine = Engine::new(args.get_usize("jobs", api::default_jobs())?);
+    let cache = cache_from_args(args)?;
+    if let Some(c) = &cache {
+        engine = engine.with_cache(Arc::clone(c));
+    }
+    Ok((engine, cache))
+}
+
+/// Print the unit-cache session summary to stderr (stdout belongs to
+/// the report).
+fn report_cache_use(cache: &Option<Arc<UnitCache>>) {
+    if let Some(c) = cache {
+        let s = c.stats();
+        eprintln!(
+            "unit cache: {} hits / {} misses ({:.0}% hit rate), {} coalesced, \
+             {} evictions, {} resident",
+            s.hits,
+            s.misses,
+            s.hit_rate() * 100.0,
+            s.coalesced,
+            s.evictions,
+            c.len()
+        );
+    }
 }
 
 /// Validate `--format` up front, before any simulation runs — a typo
@@ -135,7 +202,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
     if !all && fig.is_none() && table.is_none() {
         anyhow::bail!("repro needs --all, --fig N or --table 3|bf16");
     }
-    let engine = engine_from_args(args)?;
+    let (engine, cache) = engine_from_args(args)?;
     let cfg = ChipConfig::default();
     let want = |f: &str| all || fig.as_deref() == Some(f);
     let mut reports: Vec<Report> = Vec::new();
@@ -143,7 +210,13 @@ fn cmd_repro(args: &Args) -> Result<()> {
     // each figure prints as soon as it completes (a full --all run
     // takes minutes); file/JSON/CSV deliveries stay whole-document.
     let progressive = format == "table" && args.get("out").is_none();
-    let mut add = |r: Report| {
+    let mut add = |mut r: Report| {
+        // With the unit cache on, each figure records the cumulative
+        // cache telemetry at the moment it was produced — the rows
+        // themselves never depend on the cache (tested invariant).
+        if let Some(c) = &cache {
+            c.stats().annotate(&mut r);
+        }
         if progressive {
             r.print();
         }
@@ -203,6 +276,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
     if all {
         add(repro::sampling_report(seed));
     }
+    report_cache_use(&cache);
     if progressive {
         return Ok(());
     }
@@ -216,52 +290,16 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let samples = args.get_usize("samples", repro::DEFAULT_SAMPLES)?;
     let seed = args.get_u64("seed", 42)?;
     let cfg = chip_from_args(args)?;
-    let engine = engine_from_args(args)?;
+    let (engine, cache) = engine_from_args(args)?;
     let req = SimRequest::profile(&model, epoch, cfg.clone(), samples, seed)
         .map_err(|e| anyhow::anyhow!(e))?;
     let sim = engine.run(&req);
 
-    use tensordash::conv::TrainOp;
-    let mut r = Report::new(
-        "simulate",
-        format!(
-            "{model} @ epoch {epoch} ({}x{} tile, depth {})",
-            cfg.tile_rows, cfg.tile_cols, cfg.staging_depth
-        ),
-        &["metric", "A*W", "A*G", "W*G", "overall"],
-    );
-    r.row(vec![
-        Cell::text("speedup"),
-        Cell::num(sim.op_speedup(TrainOp::Fwd)),
-        Cell::num(sim.op_speedup(TrainOp::Igrad)),
-        Cell::num(sim.op_speedup(TrainOp::Wgrad)),
-        Cell::num(sim.overall_speedup()),
-    ]);
-    r.row(vec![
-        Cell::text("compute efficiency"),
-        Cell::empty(),
-        Cell::empty(),
-        Cell::empty(),
-        Cell::num(sim.compute_efficiency()),
-    ]);
-    r.row(vec![
-        Cell::text("whole-chip efficiency"),
-        Cell::empty(),
-        Cell::empty(),
-        Cell::empty(),
-        Cell::num(sim.total_efficiency()),
-    ]);
-    r.meta_str("model", &model);
-    r.meta_num("epoch", epoch);
-    r.meta_num("seed", seed as f64);
-    r.meta_num("samples", samples as f64);
-    // Scheduler-cache telemetry of the underlying cycle simulation
-    // (walks = actual encoder walks, i.e. memo misses).
-    r.meta_num("sched_walks", sim.sched.walks as f64);
-    r.meta_num("sched_cache_hits", sim.sched.hits as f64);
-    r.meta_num("sched_fast_paths", sim.sched.fast_paths as f64);
-    r.meta_num("sched_skipped_cycles", sim.sched.skipped_cycles as f64);
-    r.meta_num("sched_hit_rate", sim.sched.hit_rate());
+    let mut r = repro::simulate_report(&model, epoch, &cfg, samples, seed, &sim);
+    if let Some(c) = &cache {
+        c.stats().annotate(&mut r);
+    }
+    report_cache_use(&cache);
     let mut reports = vec![r];
     if args.flag("per-layer") {
         reports.push(api::layers_report(&sim));
@@ -278,7 +316,10 @@ fn cmd_train(args: &Args) -> Result<()> {
     let seed = args.get_u64("seed", 42)?;
     let dir = args.get_or("artifacts", "artifacts");
     let cfg = chip_from_args(args)?;
-    let engine = engine_from_args(args)?;
+    // Captured bitmaps change every step, but the cache still helps
+    // when --sim-every re-projects overlapping steps or when a sweep
+    // shares the projection config.
+    let (engine, cache) = engine_from_args(args)?;
 
     let rt = Runtime::new(dir)?;
     // Progress goes to stderr: stdout belongs to the report, so
@@ -303,7 +344,16 @@ fn cmd_train(args: &Args) -> Result<()> {
     let mut report = Report::new(
         "train_projection",
         format!("TensorDash projection for '{model_name}' over {steps} real training steps"),
-        &["step", "loss", "accuracy", "A sparsity", "G sparsity", "speedup", "compute eff", "chip eff"],
+        &[
+            "step",
+            "loss",
+            "accuracy",
+            "A sparsity",
+            "G sparsity",
+            "speedup",
+            "compute eff",
+            "chip eff",
+        ],
     );
     report.meta_str("model", &model_name);
     report.meta_num("seed", seed as f64);
@@ -358,12 +408,49 @@ fn cmd_train(args: &Args) -> Result<()> {
     if let Some(last) = report.rows.last() {
         eprintln!("\nfinal projection: {} speedup", last.cells[5].text);
     }
+    if let Some(c) = &cache {
+        c.stats().annotate(&mut report);
+    }
+    report_cache_use(&cache);
     let mut reports = vec![report];
     // Breakdown of the final projection step's captured tensors.
     if let (true, Some(sim)) = (args.flag("per-layer"), last_sim.as_ref()) {
         reports.push(api::layers_report(sim));
     }
     emit(&reports, args)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let jobs = args.get_usize("jobs", api::default_jobs())?;
+    let cap = args.get_usize("cache-cap", api::DEFAULT_CACHE_CAP)?;
+    let cache = Arc::new(build_cache(cap, args.get("cache-dir"))?);
+    let service = Service::new(Engine::new(jobs), Arc::clone(&cache));
+    // Pre-resolve profiles into the artifact store so first requests
+    // skip the load too.
+    if let Some(models) = args.get_list("preload") {
+        for m in &models {
+            if service.artifacts().profile(m).is_none() {
+                anyhow::bail!("--preload: unknown model '{m}'");
+            }
+        }
+    }
+    match args.get("listen") {
+        Some(addr) => service.serve_tcp(addr)?,
+        None => {
+            let stdin = std::io::stdin();
+            let stdout = std::io::stdout();
+            service.serve_lines(stdin.lock(), stdout.lock())?;
+        }
+    }
+    let s = cache.stats();
+    eprintln!(
+        "serve: session ended — {} hits / {} misses ({:.0}% hit rate), {} coalesced",
+        s.hits,
+        s.misses,
+        s.hit_rate() * 100.0,
+        s.coalesced
+    );
+    Ok(())
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

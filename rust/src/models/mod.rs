@@ -33,7 +33,16 @@ fn r16(c: usize) -> usize {
     c.div_ceil(16) * 16
 }
 
-fn conv(name: impl Into<String>, n: usize, hw: usize, c: usize, f: usize, k: usize, s: usize, p: usize) -> Layer {
+fn conv(
+    name: impl Into<String>,
+    n: usize,
+    hw: usize,
+    c: usize,
+    f: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+) -> Layer {
     Layer { name: name.into(), shape: ConvShape::conv(n, hw, hw, r16(c), r16(f), k, s, p) }
 }
 
@@ -132,7 +141,8 @@ pub fn densenet121(n: usize) -> Topology {
     for (bi, nlayers) in [6usize, 12, 24, 16].iter().enumerate() {
         for l in 0..*nlayers {
             layers.push(conv(format!("b{}l{}_1x1", bi + 1, l + 1), n, hw, ch, 4 * growth, 1, 1, 0));
-            layers.push(conv(format!("b{}l{}_3x3", bi + 1, l + 1), n, hw, 4 * growth, growth, 3, 1, 1));
+            let name = format!("b{}l{}_3x3", bi + 1, l + 1);
+            layers.push(conv(name, n, hw, 4 * growth, growth, 3, 1, 1));
             ch += growth;
         }
         if bi < 3 {

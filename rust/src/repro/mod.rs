@@ -210,7 +210,12 @@ pub fn fig1() -> Report {
 /// Run the Fig. 13 simulation set once (also feeds Figs. 15/16): a
 /// single-config sweep over the nine evaluation models, executed on the
 /// engine's worker pool.
-pub fn run_fig13_sims(engine: &Engine, cfg: &ChipConfig, samples: usize, seed: u64) -> Vec<ModelSim> {
+pub fn run_fig13_sims(
+    engine: &Engine,
+    cfg: &ChipConfig,
+    samples: usize,
+    seed: u64,
+) -> Vec<ModelSim> {
     let spec = SweepSpec::models(&FIG13_MODELS, MID_EPOCH, cfg, samples, seed);
     engine.run_all(&spec.cells())
 }
@@ -302,7 +307,16 @@ pub fn fig16(sims: &[ModelSim]) -> Report {
     let mut r = Report::new(
         "fig16",
         "Fig. 16 — energy breakdown, TensorDash relative to its baseline",
-        &["model", "TD/base", "base core%", "base SRAM%", "base DRAM%", "TD core%", "TD SRAM%", "TD DRAM%"],
+        &[
+            "model",
+            "TD/base",
+            "base core%",
+            "base SRAM%",
+            "base DRAM%",
+            "TD core%",
+            "TD SRAM%",
+            "TD DRAM%",
+        ],
     );
     for s in sims {
         let b = &s.energy_base;
@@ -326,11 +340,27 @@ pub fn fig16(sims: &[ModelSim]) -> Report {
 
 /// Fig. 17 / Fig. 18 — tile geometry sweeps.
 pub fn fig17_rows(engine: &Engine, samples: usize, seed: u64) -> Report {
-    geometry_sweep(engine, &[1, 2, 4, 8, 16], true, samples, seed, "fig17", "Fig. 17 — speedup vs PE rows (cols=4)")
+    geometry_sweep(
+        engine,
+        &[1, 2, 4, 8, 16],
+        true,
+        samples,
+        seed,
+        "fig17",
+        "Fig. 17 — speedup vs PE rows (cols=4)",
+    )
 }
 
 pub fn fig18_cols(engine: &Engine, samples: usize, seed: u64) -> Report {
-    geometry_sweep(engine, &[4, 8, 16], false, samples, seed, "fig18", "Fig. 18 — speedup vs PE columns (rows=4)")
+    geometry_sweep(
+        engine,
+        &[4, 8, 16],
+        false,
+        samples,
+        seed,
+        "fig18",
+        "Fig. 18 — speedup vs PE columns (rows=4)",
+    )
 }
 
 fn geometry_sweep(
@@ -467,17 +497,30 @@ pub fn table3(dtype: DataType) -> Report {
         DataType::Bf16 => ("table3_bf16", "Table 3 variant — bfloat16 (§4.4)"),
     };
     let mut r = Report::new(id, label, &["component", "area mm2", "power mW"]);
-    let td_power = st.core_power_mw + st.transposer_power_mw + st.sched_bmux_power_mw + st.amux_power_mw;
+    let td_power =
+        st.core_power_mw + st.transposer_power_mw + st.sched_bmux_power_mw + st.amux_power_mw;
     r.row(vec![Cell::text("compute cores"), Cell::num(a.core_mm2), Cell::num(st.core_power_mw)]);
-    r.row(vec![Cell::text("transposers"), Cell::num(a.transposer_mm2), Cell::num(st.transposer_power_mw)]);
-    r.row(vec![Cell::text("schedulers+B-muxes"), Cell::num(a.sched_bmux_mm2), Cell::num(st.sched_bmux_power_mw)]);
+    r.row(vec![
+        Cell::text("transposers"),
+        Cell::num(a.transposer_mm2),
+        Cell::num(st.transposer_power_mw),
+    ]);
+    r.row(vec![
+        Cell::text("schedulers+B-muxes"),
+        Cell::num(a.sched_bmux_mm2),
+        Cell::num(st.sched_bmux_power_mw),
+    ]);
     r.row(vec![Cell::text("A-side muxes"), Cell::num(a.amux_mm2), Cell::num(st.amux_power_mw)]);
     r.row(vec![
         Cell::text("TensorDash total"),
         Cell::num(a.tensordash_compute()),
         Cell::num(td_power),
     ]);
-    r.row(vec![Cell::text("baseline total"), Cell::num(a.baseline_compute()), Cell::num(st.core_power_mw)]);
+    r.row(vec![
+        Cell::text("baseline total"),
+        Cell::num(a.baseline_compute()),
+        Cell::num(st.core_power_mw),
+    ]);
     r.row(vec![
         Cell::text("compute overhead"),
         Cell::fmt(format!("{:.3}x", a.compute_overhead()), a.compute_overhead()),
@@ -519,6 +562,62 @@ pub fn gcn_control(engine: &Engine, samples: usize, seed: u64) -> Report {
     r
 }
 
+/// The `simulate` summary report: per-op and overall speedups plus
+/// efficiency rows for one model simulation, with provenance and
+/// scheduler-cache telemetry in the meta block. Shared by the CLI
+/// `simulate` subcommand and the serving layer, so both render the
+/// identical artifact for identical requests.
+pub fn simulate_report(
+    model: &str,
+    epoch: f64,
+    cfg: &ChipConfig,
+    samples: usize,
+    seed: u64,
+    sim: &ModelSim,
+) -> Report {
+    let mut r = Report::new(
+        "simulate",
+        format!(
+            "{model} @ epoch {epoch} ({}x{} tile, depth {})",
+            cfg.tile_rows, cfg.tile_cols, cfg.staging_depth
+        ),
+        &["metric", "A*W", "A*G", "W*G", "overall"],
+    );
+    r.row(vec![
+        Cell::text("speedup"),
+        Cell::num(sim.op_speedup(TrainOp::Fwd)),
+        Cell::num(sim.op_speedup(TrainOp::Igrad)),
+        Cell::num(sim.op_speedup(TrainOp::Wgrad)),
+        Cell::num(sim.overall_speedup()),
+    ]);
+    r.row(vec![
+        Cell::text("compute efficiency"),
+        Cell::empty(),
+        Cell::empty(),
+        Cell::empty(),
+        Cell::num(sim.compute_efficiency()),
+    ]);
+    r.row(vec![
+        Cell::text("whole-chip efficiency"),
+        Cell::empty(),
+        Cell::empty(),
+        Cell::empty(),
+        Cell::num(sim.total_efficiency()),
+    ]);
+    r.meta_str("model", model);
+    r.meta_num("epoch", epoch);
+    r.meta_num("seed", seed as f64);
+    r.meta_num("samples", samples as f64);
+    // Scheduler-cache telemetry of the underlying cycle simulation
+    // (walks = actual encoder walks, i.e. memo misses).
+    r.meta_num("sched_walks", sim.sched.walks as f64);
+    r.meta_num("sched_cache_hits", sim.sched.hits as f64);
+    r.meta_num("sched_fast_paths", sim.sched.fast_paths as f64);
+    r.meta_num("sched_skipped_cycles", sim.sched.skipped_cycles as f64);
+    r.meta_num("sched_hit_rate", sim.sched.hit_rate());
+    r
+}
+
 /// Methodology check: sampled pass simulation vs exhaustive on a small
 /// layer (keeps `DEFAULT_SAMPLES` honest).
 pub fn validate_sampling(seed: u64) -> (f64, f64) {
@@ -528,9 +627,11 @@ pub fn validate_sampling(seed: u64) -> (f64, f64) {
     let g = crate::trace::synthetic::clustered_bitmap((2, 10, 10, 32), 0.6, 0.35, &mut rng);
     let cfg = ChipConfig::default();
     let mut r1 = Rng::new(seed ^ 1);
-    let exact = simulate_layer_op(&cfg, &shape, TrainOp::Fwd, &a, &g, usize::MAX >> 1, 16, &mut r1);
+    let exact =
+        simulate_layer_op(&cfg, &shape, TrainOp::Fwd, &a, &g, usize::MAX >> 1, 16, &mut r1);
     let mut r2 = Rng::new(seed ^ 2);
-    let sampled = simulate_layer_op(&cfg, &shape, TrainOp::Fwd, &a, &g, DEFAULT_SAMPLES, 16, &mut r2);
+    let sampled =
+        simulate_layer_op(&cfg, &shape, TrainOp::Fwd, &a, &g, DEFAULT_SAMPLES, 16, &mut r2);
     (exact.speedup(), sampled.speedup())
 }
 
@@ -578,7 +679,8 @@ mod tests {
     fn dense_tensors_no_slowdown() {
         let (s, a, g) = small_bitmaps(0.0, 3);
         let mut rng = Rng::new(4);
-        let r = simulate_layer_op(&ChipConfig::default(), &s, TrainOp::Fwd, &a, &g, 8, 16, &mut rng);
+        let r =
+            simulate_layer_op(&ChipConfig::default(), &s, TrainOp::Fwd, &a, &g, 8, 16, &mut rng);
         // Even with fully dense tensors TensorDash may skip the *padding*
         // zeros at window halos — a small real gain, never a slowdown.
         assert!(

@@ -136,7 +136,9 @@ mod tests {
             let len = 1 + (trial % 37);
             let rows: Vec<u16> = (0..len)
                 .map(|_| {
-                    state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                    state = state
+                        .wrapping_mul(6364136223846793005)
+                        .wrapping_add(1442695040888963407);
                     (state >> 33) as u16
                 })
                 .collect();

@@ -392,7 +392,11 @@ pub mod reference {
 
     /// Naive tile pass: the old per-row window state machine with one
     /// scheduler walk per active row per cycle.
-    pub fn tile_pass_stats(conn: &Connectivity, streams: &[Vec<u16>], lead_limit: usize) -> TileStats {
+    pub fn tile_pass_stats(
+        conn: &Connectivity,
+        streams: &[Vec<u16>],
+        lead_limit: usize,
+    ) -> TileStats {
         struct RowState<'a> {
             stream: &'a [u16],
             z: u64,

@@ -140,6 +140,48 @@ impl TensorBitmap {
     pub fn words(&self) -> &[u16] {
         &self.words
     }
+
+    /// Serialize to JSON: dims plus the packed words as one hex string
+    /// (4 lowercase hex digits per `u16` word) — the trace-artifact
+    /// interchange form the serving layer loads once per model.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut hex = String::with_capacity(self.words.len() * 4);
+        for w in &self.words {
+            hex.push_str(&format!("{w:04x}"));
+        }
+        let mut m = std::collections::BTreeMap::new();
+        m.insert(
+            "dims".to_string(),
+            Json::Arr(
+                [self.n, self.h, self.w, self.c]
+                    .iter()
+                    .map(|&d| Json::Num(d as f64))
+                    .collect(),
+            ),
+        );
+        m.insert("words".to_string(), Json::Str(hex));
+        Json::Obj(m)
+    }
+
+    /// Reconstruct from [`Self::to_json`]'s form. `None` on any shape
+    /// or encoding mismatch.
+    pub fn from_json(j: &crate::util::json::Json) -> Option<TensorBitmap> {
+        let dims = j.get("dims")?.as_usize_vec()?;
+        let &[n, h, w, c] = dims.as_slice() else { return None };
+        if c % 16 != 0 {
+            return None;
+        }
+        let hex = j.get("words")?.as_str()?;
+        if hex.len() % 4 != 0 || hex.len() / 4 != n * h * w * c / 16 {
+            return None;
+        }
+        let mut words = Vec::with_capacity(hex.len() / 4);
+        for i in (0..hex.len()).step_by(4) {
+            words.push(u16::from_str_radix(hex.get(i..i + 4)?, 16).ok()?);
+        }
+        Some(TensorBitmap { n, h, w, c, words })
+    }
 }
 
 #[cfg(test)]
@@ -189,6 +231,23 @@ mod tests {
         let words: Vec<i32> = bm1.words().iter().map(|&w| w as i32).collect();
         let bm2 = TensorBitmap::from_words_i32((1, 1, 4, 16), &words);
         assert_eq!(bm1, bm2);
+    }
+
+    #[test]
+    fn json_round_trip_preserves_every_word() {
+        let data: Vec<f32> = (0..256).map(|i| if i % 5 == 0 { 0.0 } else { 0.5 }).collect();
+        let bm = TensorBitmap::from_f32((2, 2, 2, 32), &data);
+        let j = bm.to_json();
+        let text = j.render_pretty();
+        let parsed = crate::util::json::Json::parse(&text).unwrap();
+        let back = TensorBitmap::from_json(&parsed).expect("bitmap json reconstructs");
+        assert_eq!(back, bm);
+        // Corruption is rejected, not mis-read.
+        let mut bad = bm.to_json();
+        if let crate::util::json::Json::Obj(m) = &mut bad {
+            m.insert("words".to_string(), crate::util::json::Json::Str("zz".into()));
+        }
+        assert!(TensorBitmap::from_json(&bad).is_none());
     }
 
     #[test]

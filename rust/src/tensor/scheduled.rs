@@ -88,7 +88,11 @@ pub fn compress_one_side_cached(
     let mut rows: Vec<ScheduledRow> = Vec::new();
     drive(sched, &masks, |ev| match ev {
         StreamEvent::Cycle { pos, sched: s, advance } => {
-            let mut out = ScheduledRow { values: [0.0; LANES], idx: [IDLE; LANES], advance: advance as u8 };
+            let mut out = ScheduledRow {
+                values: [0.0; LANES],
+                idx: [IDLE; LANES],
+                advance: advance as u8,
+            };
             for lane in 0..LANES {
                 let m = s.ms[lane];
                 if m == IDLE {

@@ -100,8 +100,14 @@ mod tests {
         assert!(StepTrace::from_words(&s, &[vec![0; 4]], &[vec![], vec![]], 0.0, 0.0).is_err());
         // wrong word count for layer 0
         assert!(
-            StepTrace::from_words(&s, &[vec![0; 3], vec![0; 64]], &[vec![0; 64], vec![0; 16]], 0.0, 0.0)
-                .is_err()
+            StepTrace::from_words(
+                &s,
+                &[vec![0; 3], vec![0; 64]],
+                &[vec![0; 64], vec![0; 16]],
+                0.0,
+                0.0,
+            )
+            .is_err()
         );
     }
 }

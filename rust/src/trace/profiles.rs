@@ -102,8 +102,12 @@ impl ModelProfile {
             "vgg16" => (0.63, 0.78, EpochCurve::DenseU { swing: 0.32 }, 0.35, 0.35, 64),
             "squeezenet" => (0.52, 0.68, EpochCurve::DenseU { swing: 0.18 }, 0.40, 0.25, 143),
             "resnet50" => (0.52, 0.66, EpochCurve::DenseU { swing: 0.15 }, 0.40, 0.30, 96),
-            "resnet50_DS90" => (0.55, 0.59, EpochCurve::PrunedReclaim { start_boost: 0.10 }, 0.35, 0.15, 96),
-            "resnet50_SM90" => (0.40, 0.43, EpochCurve::PrunedReclaim { start_boost: 0.22 }, 0.35, 0.15, 96),
+            "resnet50_DS90" => {
+                (0.55, 0.59, EpochCurve::PrunedReclaim { start_boost: 0.10 }, 0.35, 0.15, 96)
+            }
+            "resnet50_SM90" => {
+                (0.40, 0.43, EpochCurve::PrunedReclaim { start_boost: 0.22 }, 0.35, 0.15, 96)
+            }
             "densenet121" => (0.48, 0.03, EpochCurve::DenseU { swing: 0.12 }, 0.45, 0.20, 64),
             "img2txt" => (0.60, 0.74, EpochCurve::DenseU { swing: 0.20 }, 0.40, 0.20, 64),
             "snli" => (0.50, 0.62, EpochCurve::DenseU { swing: 0.18 }, 0.45, 0.10, 143),
@@ -163,7 +167,12 @@ impl ModelProfile {
                 ^ ((e * 1000.0) as u64).wrapping_mul(0xD1B54A32D192ED03)
                 ^ self.name().bytes().fold(0u64, |h, b| h.wrapping_mul(31).wrapping_add(b as u64)),
         );
-        let a = clustered_bitmap((s.n, s.h, s.w, s.c), self.a_sparsity_at(i, e), self.cluster, &mut rng);
+        let a = clustered_bitmap(
+            (s.n, s.h, s.w, s.c),
+            self.a_sparsity_at(i, e),
+            self.cluster,
+            &mut rng,
+        );
         let g = clustered_bitmap(
             (s.n, s.out_h(), s.out_w(), s.f),
             self.g_sparsity_at(i, e),

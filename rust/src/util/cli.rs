@@ -74,6 +74,18 @@ impl Args {
         }
     }
 
+    /// Comma-separated list option: `--preload a,b` -> `["a", "b"]`.
+    /// Segments are trimmed and empties dropped; `None` when absent.
+    pub fn get_list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name).map(|v| {
+            v.split(',')
+                .map(str::trim)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .collect()
+        })
+    }
+
     pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
         match self.get(name) {
             None => Ok(default),
@@ -112,6 +124,16 @@ mod tests {
         assert_eq!(a.get_f64("x", 0.0).unwrap(), 2.5);
         assert_eq!(a.get_usize("missing", 9).unwrap(), 9);
         assert!(args(&["--n", "zz"], &[]).get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn list_option_splits_and_trims() {
+        let a = args(&["--preload", "alexnet, gcn,,resnet50"], &[]);
+        assert_eq!(
+            a.get_list("preload"),
+            Some(vec!["alexnet".to_string(), "gcn".to_string(), "resnet50".to_string()])
+        );
+        assert_eq!(a.get_list("missing"), None);
     }
 
     #[test]

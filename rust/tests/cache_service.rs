@@ -1,0 +1,166 @@
+//! Determinism contract of the unit cache and the serving layer.
+//!
+//! The cache's load-bearing property: a unit result served from the
+//! cache is the byte-identical result the cold path would have
+//! computed — units are pure functions of their canonical key, and the
+//! key captures everything the result depends on. These tests pin:
+//!
+//! * warm-cache runs are **byte-identical** to cold runs on two models
+//!   at `--jobs {1, 4, 8}` — merged sims, per-layer tables, rendered
+//!   reports;
+//! * one warm cache serves every worker count interchangeably;
+//! * the service returns byte-identical `report` bodies for duplicate
+//!   *concurrent* requests, computes each unique unit exactly once,
+//!   and reports nonzero cache-hit telemetry on a repeat;
+//! * overlapping sweep requests (the Fig. 17 `rows4` column is the
+//!   Fig. 18 `cols4` column) reuse units across requests.
+
+use std::sync::Arc;
+
+use tensordash::api::{layers_report, Engine, Service, SimRequest, SweepSpec, UnitCache};
+use tensordash::config::ChipConfig;
+use tensordash::repro::ModelSim;
+use tensordash::util::json::Json;
+
+const MODELS: [&str; 2] = ["alexnet", "gcn"];
+const SEED: u64 = 42;
+const SAMPLES: usize = 1;
+
+fn profile_request(model: &str) -> SimRequest {
+    SimRequest::profile(model, 0.4, ChipConfig::default(), SAMPLES, SEED)
+        .expect("known model")
+}
+
+/// Byte-level equality of two merged sims: every integer counter, every
+/// f64 down to its bit pattern, every retained unit.
+fn assert_bit_identical(a: &ModelSim, b: &ModelSim, ctx: &str) {
+    assert_eq!(a.name, b.name, "{ctx}: name");
+    assert_eq!(a.per_op, b.per_op, "{ctx}: per-op cycles");
+    assert_eq!(a.sched, b.sched, "{ctx}: scheduler telemetry");
+    assert_eq!(
+        a.energy_base.total_pj().to_bits(),
+        b.energy_base.total_pj().to_bits(),
+        "{ctx}: baseline energy bits"
+    );
+    assert_eq!(
+        a.energy_td.total_pj().to_bits(),
+        b.energy_td.total_pj().to_bits(),
+        "{ctx}: TensorDash energy bits"
+    );
+    assert_eq!(a.layers, b.layers, "{ctx}: per-unit results");
+}
+
+#[test]
+fn warm_cache_is_byte_identical_to_cold_at_jobs_1_4_8() {
+    for model in MODELS {
+        let req = profile_request(model);
+        // The uncached engine is the ground truth.
+        let reference = Engine::new(1).run(&req);
+        for jobs in [1usize, 4, 8] {
+            let cache = Arc::new(UnitCache::new(4096));
+            let engine = Engine::new(jobs).with_cache(Arc::clone(&cache));
+            let cold = engine.run(&req);
+            let warm = engine.run(&req);
+            let ctx = format!("{model} jobs={jobs}");
+            assert_bit_identical(&reference, &cold, &format!("{ctx} cold"));
+            assert_bit_identical(&cold, &warm, &format!("{ctx} warm"));
+            // Rendered artifacts agree byte for byte too.
+            assert_eq!(
+                layers_report(&cold).render_json().into_bytes(),
+                layers_report(&warm).render_json().into_bytes(),
+                "{ctx}: per-layer report bytes"
+            );
+            // The warm run hit exactly what the cold run missed, and
+            // the counters are worker-count independent.
+            let s = cache.stats();
+            assert_eq!(s.misses as usize, reference.layers.len(), "{ctx}: misses");
+            assert_eq!(s.hits, s.misses, "{ctx}: warm hits == cold misses");
+            assert_eq!(s.inserts, s.misses, "{ctx}: each miss computed once");
+        }
+    }
+}
+
+#[test]
+fn one_warm_cache_serves_every_worker_count() {
+    let cache = Arc::new(UnitCache::new(4096));
+    let req = profile_request("alexnet");
+    let cold = Engine::new(1).with_cache(Arc::clone(&cache)).run(&req);
+    for jobs in [4usize, 8] {
+        let warm = Engine::new(jobs).with_cache(Arc::clone(&cache)).run(&req);
+        assert_bit_identical(&cold, &warm, &format!("shared cache, jobs={jobs}"));
+    }
+    let s = cache.stats();
+    assert_eq!(s.inserts as usize, cold.layers.len(), "units computed once ever");
+    assert_eq!(s.hits as usize, 2 * cold.layers.len());
+}
+
+#[test]
+fn serve_duplicate_concurrent_requests_return_byte_identical_bodies() {
+    let service = Service::new(Engine::new(4), Arc::new(UnitCache::new(65_536)));
+    let line = concat!(
+        r#"{"op":"simulate","id":"dup","model":"alexnet","#,
+        r#""epoch":0.4,"samples":1,"seed":42}"#,
+    );
+    let unit_count = Engine::new(1).run(&profile_request("alexnet")).layers.len() as u64;
+
+    // Four overlapping duplicates on four threads.
+    let responses: Vec<String> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut h = service.handle_line(line);
+                    assert_eq!(h.lines.len(), 1);
+                    h.lines.pop().unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let bodies: Vec<String> = responses
+        .iter()
+        .map(|l| {
+            let j = Json::parse(l).expect("response parses");
+            assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "not ok: {l}");
+            j.get("report").expect("report present").render()
+        })
+        .collect();
+    for b in &bodies[1..] {
+        assert_eq!(b, &bodies[0], "concurrent duplicates must return identical bodies");
+    }
+    // Whatever the interleaving, each unique unit was computed exactly
+    // once — duplicates were served by cache hit or coalescing.
+    let s = service.cache().stats();
+    assert_eq!(s.inserts, unit_count, "each unit computed once: {s:?}");
+    assert_eq!(s.hits + s.misses, 4 * unit_count, "every lookup accounted: {s:?}");
+
+    // A sequential repeat is a pure cache hit with an identical body.
+    let before = service.cache().stats();
+    let mut repeat = service.handle_line(line);
+    let repeat_line = repeat.lines.pop().unwrap();
+    let repeat_body = Json::parse(&repeat_line).unwrap().get("report").unwrap().render();
+    assert_eq!(repeat_body, bodies[0]);
+    let delta = service.cache().stats().since(&before);
+    assert_eq!(delta.hits, unit_count, "repeat must be fully cache-served");
+    assert_eq!(delta.misses, 0);
+}
+
+#[test]
+fn overlapping_sweeps_share_units_across_requests() {
+    // Fig. 17 sweeps rows x {.., 4} at cols=4; Fig. 18 sweeps cols x
+    // {4, ..} at rows=4 — the (4, 4) cell is shared. Model-level
+    // version of the same effect: two sweeps overlapping on one model.
+    let cache = Arc::new(UnitCache::new(65_536));
+    let engine = Engine::new(4).with_cache(Arc::clone(&cache));
+    let cfg = ChipConfig::default();
+    let first = SweepSpec::models(&["alexnet", "gcn"], 0.4, &cfg, SAMPLES, SEED).cells();
+    let second = SweepSpec::models(&["alexnet"], 0.4, &cfg, SAMPLES, SEED).cells();
+    let a = engine.run_all(&first);
+    let before = cache.stats();
+    let b = engine.run_all(&second);
+    // The alexnet cell of the second sweep derives the same cell seed
+    // (cell index 0 in both grids), so every unit is cache-served.
+    let delta = cache.stats().since(&before);
+    assert_eq!(delta.misses, 0, "second sweep recomputed units: {delta:?}");
+    assert_eq!(delta.hits as usize, b[0].layers.len());
+    assert_bit_identical(&a[0], &b[0], "shared sweep cell");
+}

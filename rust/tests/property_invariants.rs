@@ -195,8 +195,9 @@ fn prop_igrad_fanout() {
     let s = ConvShape::conv(1, 6, 6, 16, 16, 3, 1, 1);
     let g = random_bitmap((1, 6, 6, 16), 0.4, &mut rng);
     let mut bits = 0u64;
+    let empty = TensorBitmap::from_f32((1, 6, 6, 16), &vec![0.0; 6 * 6 * 16]);
     for b in 0..(s.n * s.h * s.w) as u64 {
-        bits += build_stream(&s, TrainOp::Igrad, WgradSide::Gradients, &TensorBitmap::from_f32((1, 6, 6, 16), &vec![0.0; 6 * 6 * 16]), &g, b)
+        bits += build_stream(&s, TrainOp::Igrad, WgradSide::Gradients, &empty, &g, b)
             .iter()
             .map(|r| r.count_ones() as u64)
             .sum::<u64>();
@@ -230,7 +231,17 @@ fn prop_sampling_weights_exact() {
         let g = random_bitmap((s.n, s.out_h(), s.out_w(), 16), 0.5, &mut rng);
         let rows = 1 + rng.below(8);
         let budget = 1 + rng.below(10);
-        let passes = sample_passes(&s, TrainOp::Fwd, WgradSide::Gradients, &a, &g, rows, budget, 1, &mut rng);
+        let passes = sample_passes(
+            &s,
+            TrainOp::Fwd,
+            WgradSide::Gradients,
+            &a,
+            &g,
+            rows,
+            budget,
+            1,
+            &mut rng,
+        );
         let total: u64 = passes.iter().map(|p| p.weight).sum();
         let want = ((s.n * s.out_h() * s.out_w()) as u64).div_ceil(rows as u64);
         assert_eq!(total, want);

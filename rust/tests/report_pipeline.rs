@@ -56,7 +56,8 @@ fn fig13_json_round_trips_and_matches_text_rendering() {
 /// completion order.
 #[test]
 fn multi_cell_sweep_byte_identical_across_worker_counts() {
-    let spec = SweepSpec::models(&["alexnet", "squeezenet", "gcn"], 0.4, &ChipConfig::default(), 1, 7)
+    let models = ["alexnet", "squeezenet", "gcn"];
+    let spec = SweepSpec::models(&models, 0.4, &ChipConfig::default(), 1, 7)
         .with_configs(vec![
             ("depth2".to_string(), ChipConfig::default().with_depth(2)),
             ("depth3".to_string(), ChipConfig::default()),
@@ -89,7 +90,9 @@ fn table3_report_json_golden() {
     assert!(compact.contains(r#""id":"table3_fp32""#));
     assert!(compact.contains(r#""schema":"tensordash.report.v1""#));
     // First row: the paper's Table 3 core area, text + raw value.
-    assert!(compact.contains(r#"{"cells":[{"text":"compute cores"},{"text":"30.41","value":30.41}"#));
+    assert!(
+        compact.contains(r#"{"cells":[{"text":"compute cores"},{"text":"30.41","value":30.41}"#)
+    );
     // Non-numeric cells carry no "value" key.
     assert!(compact.contains(r#"{"text":"-"}"#));
 
@@ -110,5 +113,8 @@ fn table3_csv_has_header_and_rows() {
     assert!(csv.lines().count() >= 8);
     assert!(csv.contains("compute cores,30.41"));
     // The overhead row's comma-free cells need no quoting.
-    assert!(csv.contains("\"whole-chip overhead (incl. AM/BM/CM+SP)\"") || csv.contains("whole-chip overhead (incl. AM/BM/CM+SP)"));
+    assert!(
+        csv.contains("\"whole-chip overhead (incl. AM/BM/CM+SP)\"")
+            || csv.contains("whole-chip overhead (incl. AM/BM/CM+SP)")
+    );
 }

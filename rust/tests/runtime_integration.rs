@@ -148,11 +148,16 @@ fn conv_gradient_artifacts_satisfy_dot_product_identity() {
     let w = rand_vec(ws.iter().product(), &mut rng, 0.0);
     let g = rand_vec(gs.iter().product(), &mut rng, 0.4);
 
-    let o = to_f32(&fwd.run(&[literal_f32(&xs, &x).unwrap(), literal_f32(&ws, &w).unwrap()]).unwrap()[0]).unwrap();
-    let gx = to_f32(&igrad.run(&[literal_f32(&gs, &g).unwrap(), literal_f32(&ws, &w).unwrap()]).unwrap()[0]).unwrap();
-    let gw = to_f32(&wgrad.run(&[literal_f32(&xs, &x).unwrap(), literal_f32(&gs, &g).unwrap()]).unwrap()[0]).unwrap();
+    let run1 = fwd.run(&[literal_f32(&xs, &x).unwrap(), literal_f32(&ws, &w).unwrap()]).unwrap();
+    let o = to_f32(&run1[0]).unwrap();
+    let run2 = igrad.run(&[literal_f32(&gs, &g).unwrap(), literal_f32(&ws, &w).unwrap()]).unwrap();
+    let gx = to_f32(&run2[0]).unwrap();
+    let run3 = wgrad.run(&[literal_f32(&xs, &x).unwrap(), literal_f32(&gs, &g).unwrap()]).unwrap();
+    let gw = to_f32(&run3[0]).unwrap();
 
-    let dot = |a: &[f32], b: &[f32]| a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum::<f64>();
+    let dot = |a: &[f32], b: &[f32]| {
+        a.iter().zip(b).map(|(x, y)| (*x as f64) * (*y as f64)).sum::<f64>()
+    };
     let og = dot(&o, &g);
     let xgx = dot(&x, &gx);
     let wgw = dot(&w, &gw);
