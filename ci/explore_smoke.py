@@ -1,0 +1,94 @@
+#!/usr/bin/env python3
+"""Explore e2e smoke test.
+
+Runs ``tensordash explore`` with a tiny budget over a small space and
+asserts, from the emitted ``tensordash.frontier.v1`` JSON:
+
+* the frontier is non-empty and every row carries the expected columns;
+* the explorer generated more than one generation and its survivor
+  re-evaluations produced **nonzero unit-cache hits** (the cache-driven
+  search contract);
+* the staging-depth slice reproduced the fig-19 ordering
+  (``depth_ordered`` meta flag — the binary itself also exits non-zero
+  when the gate fails);
+* a repeat run with the same seed produces a byte-identical report
+  (fixed-seed determinism across processes).
+
+Usage: python3 ci/explore_smoke.py [path/to/tensordash]
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+BIN = sys.argv[1] if len(sys.argv) > 1 else "target/release/tensordash"
+
+ARGS = [
+    "explore",
+    "--models", "alexnet",
+    "--budget", "5",
+    "--samples", "1",
+    "--seed", "7",
+    "--axis", "staging_depth=2,3",
+    "--axis", "tile_rows=2,4",
+    "--axis", "tile_cols=4,8",
+    "--format", "json",
+]
+
+
+def run_explore(out_path):
+    cmd = [BIN, *ARGS, "--out", out_path]
+    proc = subprocess.run(cmd, capture_output=True, text=True, timeout=600)
+    sys.stdout.write(proc.stderr)
+    if proc.returncode != 0:
+        raise SystemExit(f"explore exited with code {proc.returncode}")
+    with open(out_path, encoding="utf-8") as f:
+        return f.read()
+
+
+def main():
+    with tempfile.TemporaryDirectory() as tmp:
+        first_path = os.path.join(tmp, "frontier_a.json")
+        second_path = os.path.join(tmp, "frontier_b.json")
+        first = run_explore(first_path)
+        doc = json.loads(first)
+
+        if doc.get("schema") != "tensordash.frontier.v1":
+            raise SystemExit(f"unexpected schema: {doc.get('schema')!r}")
+        rows = doc.get("rows", [])
+        if not rows:
+            raise SystemExit("frontier is empty")
+        columns = doc.get("columns", [])
+        if columns[:2] != ["config", "td cycles"]:
+            raise SystemExit(f"unexpected columns: {columns!r}")
+        meta = doc.get("meta", {})
+
+        evaluations = meta.get("evaluations", 0)
+        generations = meta.get("generations", 0)
+        hits = meta.get("unit_cache_hits", 0)
+        if evaluations < 5:
+            raise SystemExit(f"expected 5 evaluations, got {evaluations}")
+        if generations < 2:
+            raise SystemExit(f"expected multiple generations, got {generations}")
+        if hits <= 0:
+            raise SystemExit(
+                "expected nonzero unit-cache hits across generations "
+                f"(survivor re-evaluation), got {hits}"
+            )
+        if meta.get("depth_ordered") != 1:
+            raise SystemExit("fig-19 depth ordering gate not satisfied")
+        print(
+            f"ok: frontier of {len(rows)} rows from {evaluations} evaluations "
+            f"over {generations} generations, {hits:g} cache hits, depth slice ordered"
+        )
+
+        second = run_explore(second_path)
+        if first != second:
+            raise SystemExit("repeated explore with the same seed is not byte-identical")
+        print("ok: repeat run byte-identical")
+
+
+if __name__ == "__main__":
+    main()

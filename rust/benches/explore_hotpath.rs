@@ -1,0 +1,122 @@
+//! §Perf — the design-space explorer: a warm (cache-shared) explore
+//! run racing the same run cold.
+//!
+//! Exploration is the workload the unit cache was built for: every
+//! generation re-evaluates its survivors, and a repeated search (the
+//! serving pattern — HASS-style clients iterating on a space) replays
+//! whole candidate sets. Warm and cold frontiers are asserted
+//! **byte-identical** before anything is timed — the speedup is only
+//! meaningful if the cache returns exactly what the cold path computes.
+//!
+//! Emits medians and the warm-over-cold speedup as
+//! `BENCH_explore.json` (`$BENCH_OUT` overrides; `tensordash.bench.v1`),
+//! gated by `ci/bench_floors.json` next to the other BENCH artifacts.
+//! The bench itself exits non-zero below 2x warm-over-cold.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use tensordash::api::{default_jobs, Engine, UnitCache, DEFAULT_CACHE_CAP};
+use tensordash::search::{explore, frontier_report, ExploreSpec, SearchSpace};
+use tensordash::util::bench::{bench, section, BenchStats};
+use tensordash::util::json::Json;
+
+fn record(name: &str, s: &BenchStats) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(name.to_string()));
+    m.insert("median_ns".to_string(), Json::Num(s.median_ns));
+    m.insert("mean_ns".to_string(), Json::Num(s.mean_ns));
+    m.insert("min_ns".to_string(), Json::Num(s.min_ns));
+    m.insert("stddev_ns".to_string(), Json::Num(s.stddev_ns));
+    m.insert("iters".to_string(), Json::Num(s.iters as f64));
+    Json::Obj(m)
+}
+
+fn main() {
+    let mut space = SearchSpace::trivial();
+    space.set_axis("staging_depth", &["2", "3"]).expect("static axis values");
+    space.set_axis("tile_rows", &["2", "4", "8"]).expect("static axis values");
+    let spec = ExploreSpec::new(space, &["alexnet"], 0.4, 2, 42, 4).expect("known model");
+    let jobs = default_jobs().clamp(2, 8);
+
+    section(&format!(
+        "design-space explorer: budget {} over alexnet, warm vs cold (jobs={jobs})",
+        spec.budget
+    ));
+
+    // Byte-identity first: cold cached == warm == uncached reference.
+    let reference = frontier_report(&spec, &explore(&Engine::new(jobs), &spec));
+    let warm_cache = Arc::new(UnitCache::new(DEFAULT_CACHE_CAP));
+    let warm_engine = Engine::new(jobs).with_cache(Arc::clone(&warm_cache));
+    let cold_res = explore(&warm_engine, &spec);
+    let warm_res = explore(&warm_engine, &spec);
+    let cold_report = frontier_report(&spec, &cold_res);
+    let warm_report = frontier_report(&spec, &warm_res);
+    assert_eq!(
+        reference.render_json(),
+        cold_report.render_json(),
+        "cold cached explore must equal the uncached run"
+    );
+    assert_eq!(
+        cold_report.render_json(),
+        warm_report.render_json(),
+        "warm explore must be byte-identical to cold"
+    );
+    let s = warm_cache.stats();
+    println!(
+        "  result: {} evaluations, frontier {} — byte-identical warm and cold \
+         (cache {} hits / {} misses)",
+        cold_res.evaluated.len(),
+        cold_res.frontier.len(),
+        s.hits,
+        s.misses
+    );
+
+    // Cold: a fresh cache every iteration (first-search latency).
+    let cold = bench("explore_cold", 1, 5, || {
+        let cache = Arc::new(UnitCache::new(DEFAULT_CACHE_CAP));
+        explore(&Engine::new(jobs).with_cache(cache), &spec).evaluated.len()
+    });
+    // Warm: the persistent cache (steady-state / repeated-search latency).
+    let warm = bench("explore_warm", 1, 5, || explore(&warm_engine, &spec).evaluated.len());
+    let speedup = cold.median_ns / warm.median_ns;
+    println!("  -> warm explore {speedup:.2}x faster than cold");
+
+    let mut speedup_rec = BTreeMap::new();
+    speedup_rec.insert("name".to_string(), Json::Str("warm_explore_speedup".to_string()));
+    speedup_rec.insert("cold_median_ns".to_string(), Json::Num(cold.median_ns));
+    speedup_rec.insert("warm_median_ns".to_string(), Json::Num(warm.median_ns));
+    speedup_rec.insert("speedup".to_string(), Json::Num(speedup));
+    speedup_rec.insert("jobs".to_string(), Json::Num(jobs as f64));
+    let records = vec![
+        record("explore_cold", &cold),
+        record("explore_warm", &warm),
+        Json::Obj(speedup_rec),
+    ];
+
+    let out_path =
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_explore.json".to_string());
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".to_string(), Json::Str("tensordash.bench.v1".to_string()));
+    doc.insert("bench".to_string(), Json::Str("explore_hotpath".to_string()));
+    doc.insert("records".to_string(), Json::Arr(records));
+    let mut text = Json::Obj(doc).render_pretty();
+    text.push('\n');
+    match std::fs::write(&out_path, text.as_bytes()) {
+        Ok(()) => println!("\nwrote {out_path} ({} bytes)", text.len()),
+        Err(e) => eprintln!("\ncould not write {out_path}: {e}"),
+    }
+
+    // Acceptance bar (EXPERIMENTS.md §Perf), enforced after the
+    // artifact is on disk so a regressing run is still archived: a
+    // warm (cache-shared) explore must be >= 2x faster than cold.
+    const WARM_SPEEDUP_GATE: f64 = 2.0;
+    if speedup < WARM_SPEEDUP_GATE {
+        eprintln!(
+            "PERF GATE: warm explore speedup {speedup:.2}x < {WARM_SPEEDUP_GATE}x — \
+             the unit cache stopped paying for the search workload"
+        );
+        std::process::exit(1);
+    }
+    println!("perf gate passed: warm {speedup:.2}x >= {WARM_SPEEDUP_GATE}x");
+}

@@ -45,7 +45,6 @@ use crate::conv::{ConvShape, TrainOp};
 use crate::energy::EnergyBreakdown;
 use crate::sim::stream::CacheStats;
 use crate::sim::unit::LayerOpSim;
-use crate::tensor::TensorBitmap;
 use crate::util::json::Json;
 
 use super::plan::{UnitSpec, UnitTensors};
@@ -65,38 +64,13 @@ pub const UNIT_CACHE_SCHEMA: &str = "tensordash.unitcache.v1";
 pub const DEFAULT_CACHE_CAP: usize = 65_536;
 
 // ---------------------------------------------------------------------
-// Stable hashing
+// Stable hashing — shared with the search candidate encoder
 // ---------------------------------------------------------------------
 
-const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
-
-/// FNV-1a over `bytes`, continuing from state `h`.
-fn fnv1a64_with(mut h: u64, bytes: &[u8]) -> u64 {
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(FNV_PRIME);
-    }
-    h
-}
-
-/// 64-bit FNV-1a — the stable, dependency-free hash behind every cache
-/// key. Pinned by test vectors; changing it invalidates every key.
-pub fn fnv1a64(bytes: &[u8]) -> u64 {
-    fnv1a64_with(FNV_OFFSET, bytes)
-}
-
-/// Content hash of a bitmap: dims then packed words, little-endian.
-pub fn bitmap_hash(bm: &TensorBitmap) -> u64 {
-    let mut h = FNV_OFFSET;
-    for d in [bm.n, bm.h, bm.w, bm.c] {
-        h = fnv1a64_with(h, &(d as u64).to_le_bytes());
-    }
-    for w in bm.words() {
-        h = fnv1a64_with(h, &w.to_le_bytes());
-    }
-    h
-}
+/// Re-exported from [`crate::util::hash`]: the cache keys and the
+/// design-space search candidate ids hash through one module, so the
+/// two content-addressing schemes can never drift apart.
+pub use crate::util::hash::{bitmap_hash, fnv1a64};
 
 // ---------------------------------------------------------------------
 // Canonical key serialization
@@ -316,6 +290,10 @@ pub struct UnitCacheStats {
     pub coalesced: u64,
     /// Subset of `hits` that were promoted from the on-disk store.
     pub disk_hits: u64,
+    /// Lookups that probed a configured disk mirror and found nothing
+    /// (always 0 for a memory-only cache) — `misses` alone cannot tell
+    /// a cold disk from no disk at all.
+    pub disk_misses: u64,
 }
 
 impl UnitCacheStats {
@@ -328,6 +306,7 @@ impl UnitCacheStats {
             evictions: self.evictions - before.evictions,
             coalesced: self.coalesced - before.coalesced,
             disk_hits: self.disk_hits - before.disk_hits,
+            disk_misses: self.disk_misses - before.disk_misses,
         }
     }
 
@@ -349,6 +328,7 @@ impl UnitCacheStats {
         m.insert("evictions".to_string(), num(self.evictions as f64));
         m.insert("coalesced".to_string(), num(self.coalesced as f64));
         m.insert("disk_hits".to_string(), num(self.disk_hits as f64));
+        m.insert("disk_misses".to_string(), num(self.disk_misses as f64));
         m.insert("hit_rate".to_string(), num(self.hit_rate()));
         Json::Obj(m)
     }
@@ -362,6 +342,8 @@ impl UnitCacheStats {
         r.meta_num("unit_cache_inserts", self.inserts as f64);
         r.meta_num("unit_cache_evictions", self.evictions as f64);
         r.meta_num("unit_cache_coalesced", self.coalesced as f64);
+        r.meta_num("unit_cache_disk_hits", self.disk_hits as f64);
+        r.meta_num("unit_cache_disk_misses", self.disk_misses as f64);
         r.meta_num("unit_cache_hit_rate", self.hit_rate());
     }
 }
@@ -450,7 +432,11 @@ impl UnitCache {
             g.stats.disk_hits += 1;
             return Some(sim);
         }
-        self.inner.lock().unwrap().stats.misses += 1;
+        let mut g = self.inner.lock().unwrap();
+        g.stats.misses += 1;
+        if self.disk.is_some() {
+            g.stats.disk_misses += 1;
+        }
         None
     }
 
@@ -572,7 +558,7 @@ impl UnitCache {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::rng::Rng;
+    use crate::tensor::TensorBitmap;
     use std::sync::Arc;
 
     fn explicit_spec(seed: u64, samples: usize, layer: usize) -> UnitSpec {
@@ -595,13 +581,6 @@ mod tests {
         let spec = explicit_spec(seed, 2, 0);
         let key = UnitKey::for_unit(&cfg, &spec);
         (key, spec.execute(&cfg))
-    }
-
-    #[test]
-    fn fnv1a64_matches_published_vectors() {
-        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
-        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
-        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
     }
 
     #[test]
@@ -639,20 +618,6 @@ mod tests {
         assert_ne!(base.canon, UnitKey::for_unit(&cfg, &explicit_spec(42, 3, 0)).canon);
         let depth2 = ChipConfig::default().with_depth(2);
         assert_ne!(base.canon, UnitKey::for_unit(&depth2, &explicit_spec(42, 2, 0)).canon);
-    }
-
-    #[test]
-    fn bitmap_hash_tracks_contents_and_dims() {
-        let mut rng = Rng::new(1);
-        let a = crate::trace::synthetic::random_bitmap((2, 4, 4, 16), 0.5, &mut rng);
-        let same = TensorBitmap::from_raw((2, 4, 4, 16), a.words().to_vec());
-        assert_eq!(bitmap_hash(&a), bitmap_hash(&same));
-        let reshaped = TensorBitmap::from_raw((4, 2, 4, 16), a.words().to_vec());
-        assert_ne!(bitmap_hash(&a), bitmap_hash(&reshaped));
-        let mut words = a.words().to_vec();
-        words[0] ^= 1;
-        let flipped = TensorBitmap::from_raw((2, 4, 4, 16), words);
-        assert_ne!(bitmap_hash(&a), bitmap_hash(&flipped));
     }
 
     #[test]
@@ -735,15 +700,23 @@ mod tests {
         let (key, sim) = small_unit(9);
         {
             let cache = UnitCache::new(8).with_disk(&dir).unwrap();
+            // A cold disk-backed cache records the disk probe failure.
+            assert!(cache.lookup(&key).is_none());
+            let s = cache.stats();
+            assert_eq!((s.misses, s.disk_misses), (1, 1));
             cache.insert(&key, sim);
         }
         let cache = UnitCache::new(8).with_disk(&dir).unwrap();
         assert_eq!(cache.lookup(&key), Some(sim), "disk mirror must survive the process");
         let s = cache.stats();
-        assert_eq!((s.hits, s.disk_hits), (1, 1));
+        assert_eq!((s.hits, s.disk_hits, s.disk_misses), (1, 1, 0));
         // Promoted into memory: the second lookup is a pure memory hit.
         assert_eq!(cache.lookup(&key), Some(sim));
         assert_eq!(cache.stats().disk_hits, 1);
+        // Memory-only caches never count disk misses.
+        let mem = UnitCache::new(8);
+        assert!(mem.lookup(&key).is_none());
+        assert_eq!(mem.stats().disk_misses, 0);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -54,7 +54,8 @@ pub use cache::{UnitCache, UnitCacheStats, UnitKey, DEFAULT_CACHE_CAP, UNIT_KEY_
 pub use engine::{default_jobs, Engine};
 pub use plan::{layers_report, ModelPlan, UnitSpec, UnitTensors};
 pub use report::{
-    report_set_json, Cell, Report, ReportRow, LAYERS_SCHEMA, REPORT_SCHEMA, REPORT_SET_SCHEMA,
+    report_set_json, Cell, Report, ReportRow, FRONTIER_SCHEMA, LAYERS_SCHEMA, REPORT_SCHEMA,
+    REPORT_SET_SCHEMA,
 };
 pub use request::{derive_seed, SimRequest, SweepSpec, Workload};
 pub use service::{ArtifactStore, Service, TraceArtifact, SERVE_SCHEMA, TRACE_SCHEMA};

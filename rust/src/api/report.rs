@@ -82,6 +82,9 @@ pub const REPORT_SCHEMA: &str = "tensordash.report.v1";
 pub const LAYERS_SCHEMA: &str = "tensordash.layers.v1";
 /// Version tag for a multi-report document (`repro --all --format json`).
 pub const REPORT_SET_SCHEMA: &str = "tensordash.reportset.v1";
+/// Version tag for a design-space Pareto frontier
+/// (`explore` subcommand / service op, [`crate::search`]).
+pub const FRONTIER_SCHEMA: &str = "tensordash.frontier.v1";
 
 impl Report {
     pub fn new(id: impl Into<String>, title: impl Into<String>, columns: &[&str]) -> Report {
@@ -188,11 +191,11 @@ impl Report {
     }
 
     /// Reconstruct a report from its `tensordash.report.v1` (or
-    /// `tensordash.layers.v1`) JSON form.
+    /// `tensordash.layers.v1` / `tensordash.frontier.v1`) JSON form.
     /// Lossless: `from_json(parse(render_json(r))) == r`.
     pub fn from_json(j: &Json) -> Option<Report> {
         let schema = j.get("schema")?.as_str()?;
-        if schema != REPORT_SCHEMA && schema != LAYERS_SCHEMA {
+        if schema != REPORT_SCHEMA && schema != LAYERS_SCHEMA && schema != FRONTIER_SCHEMA {
             return None;
         }
         let columns: Vec<String> = j

@@ -11,9 +11,10 @@
 //!
 //! * **Protocol** — one JSON object per line in, one JSON object per
 //!   line out (`tensordash.serve.v1`), responses streamed strictly in
-//!   request order. Ops: `simulate`, `sweep`, `trace`, `batch`,
-//!   `stats`, `shutdown`. Unknown fields are ignored; malformed lines
-//!   answer `{"ok":false,...}` without killing the loop.
+//!   request order. Ops: `simulate`, `sweep`, `trace`, `explore`,
+//!   `batch`, `stats`, `shutdown`. Unknown fields are ignored;
+//!   malformed lines answer `{"ok":false,...}` without killing the
+//!   loop.
 //! * **Coalescing** — a `batch` op runs all of its sub-requests
 //!   through *one* engine invocation, so identical units across the
 //!   batch's cells simulate once (deterministically, in the engine's
@@ -40,6 +41,7 @@ use std::sync::{Arc, Mutex};
 use crate::config::{ChipConfig, DataType};
 use crate::conv::{ConvShape, TrainOp};
 use crate::repro::{self, ModelSim};
+use crate::search::{self, ExploreSpec, SearchSpace, SPACE_SCHEMA};
 use crate::tensor::TensorBitmap;
 use crate::trace::profiles::ModelProfile;
 use crate::util::json::Json;
@@ -287,7 +289,7 @@ fn get_seed(j: &Json, default: u64) -> Result<u64, String> {
             if *v >= 0.0 && *v <= 9.0e15 && v.trunc() == *v {
                 Ok(*v as u64)
             } else {
-                Err("'seed' as a JSON number must be a non-negative integer <= 2^53; \
+                Err("'seed' as a JSON number must be a non-negative integer <= 9e15; \
                      pass larger seeds as a decimal string"
                     .to_string())
             }
@@ -361,6 +363,7 @@ impl Service {
                 Handled { lines: vec![Json::Obj(m).render()], shutdown: true }
             }
             Some("stats") => Handled { lines: vec![self.stats_line(id)], shutdown: false },
+            Some("explore") => Handled { lines: vec![self.explore_line(&j, id)], shutdown: false },
             Some("batch") => {
                 let subs = match j.get("requests").and_then(Json::as_arr) {
                     Some(reqs) => reqs.iter().collect::<Vec<_>>(),
@@ -443,19 +446,7 @@ impl Service {
                 Ok((SubKind::Simulate { model, epoch, cfg, samples, seed }, per_layer, vec![req]))
             }
             Some("sweep") => {
-                let models: Vec<String> = j
-                    .get("models")
-                    .and_then(Json::as_arr)
-                    .ok_or("'sweep' needs a 'models' array")?
-                    .iter()
-                    .map(|m| m.as_str().map(str::to_string))
-                    .collect::<Option<_>>()
-                    .ok_or("'models' must contain strings")?;
-                for m in &models {
-                    if self.artifacts.profile(m).is_none() {
-                        return Err(format!("unknown model '{m}'"));
-                    }
-                }
+                let models = self.resolve_models(j, "sweep")?;
                 let epochs: Vec<f64> = match j.get("epochs") {
                     None => vec![repro::MID_EPOCH],
                     Some(v) => v
@@ -467,7 +458,7 @@ impl Service {
                         .ok_or("'epochs' must contain numbers")?,
                 };
                 let cfg = parse_cfg(j)?;
-                let names: Vec<&str> = models.iter().map(String::as_str).collect();
+                let names: Vec<&str> = models.iter().map(|(m, _)| m.as_str()).collect();
                 let spec = SweepSpec::models(&names, repro::MID_EPOCH, &cfg, samples, seed)
                     .with_epochs(&epochs);
                 // Keep SweepSpec's label/seed semantics, then swap
@@ -476,9 +467,10 @@ impl Service {
                 let mut cells = spec.cells();
                 for cell in &mut cells {
                     let shared = match &cell.workload {
-                        Workload::Profile { model, epoch } => {
-                            self.artifacts.profile(model).map(|p| (p, *epoch))
-                        }
+                        Workload::Profile { model, epoch } => models
+                            .iter()
+                            .find(|(m, _)| m == model)
+                            .map(|(_, p)| (Arc::clone(p), *epoch)),
                         _ => None,
                     };
                     if let Some((profile, epoch)) = shared {
@@ -564,6 +556,80 @@ impl Service {
         }
     }
 
+    /// The `explore` op: a cache-driven design-space search
+    /// ([`crate::search`]) over this service's shared engine + cache.
+    /// Overlapping requests share units across connections exactly like
+    /// simulate/sweep do. The report (frontier rows *and* provenance
+    /// meta) is deterministic in the request, so a warm response is
+    /// byte-identical to a cold one; cache telemetry rides in the
+    /// separate `cache` envelope field.
+    fn explore_line(&self, j: &Json, id: Option<Json>) -> String {
+        match self.parse_and_run_explore(j) {
+            Ok((report, cache)) => {
+                let mut m = envelope(id);
+                m.insert("ok".to_string(), Json::Bool(true));
+                m.insert("report".to_string(), report.to_json());
+                m.insert("cache".to_string(), cache);
+                Json::Obj(m).render()
+            }
+            Err(msg) => error_line(id, &msg),
+        }
+    }
+
+    /// Parse a request's `models` array and resolve every name through
+    /// the artifact store (profiles load once per service lifetime).
+    /// Shared by the sweep and explore ops so validation and error
+    /// wording cannot drift between them.
+    fn resolve_models(
+        &self,
+        j: &Json,
+        op: &str,
+    ) -> Result<Vec<(String, Arc<ModelProfile>)>, String> {
+        let names: Vec<String> = j
+            .get("models")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("'{op}' needs a 'models' array"))?
+            .iter()
+            .map(|m| m.as_str().map(str::to_string))
+            .collect::<Option<_>>()
+            .ok_or("'models' must contain strings")?;
+        if names.is_empty() {
+            return Err(format!("'{op}' needs at least one model"));
+        }
+        let mut out = Vec::with_capacity(names.len());
+        for m in names {
+            let p = self.artifacts.profile(&m).ok_or_else(|| format!("unknown model '{m}'"))?;
+            out.push((m, p));
+        }
+        Ok(out)
+    }
+
+    fn parse_and_run_explore(&self, j: &Json) -> Result<(Report, Json), String> {
+        let models = self.resolve_models(j, "explore")?;
+        let space = match j.get("axes") {
+            None => SearchSpace::default_space(),
+            Some(axes @ Json::Obj(_)) => {
+                let mut doc = BTreeMap::new();
+                doc.insert("schema".to_string(), Json::Str(SPACE_SCHEMA.to_string()));
+                doc.insert("axes".to_string(), axes.clone());
+                SearchSpace::from_json(&Json::Obj(doc))?
+            }
+            Some(_) => return Err("'axes' must be an object of axis -> value arrays".to_string()),
+        };
+        let epoch = get_f64(j, "epoch", repro::MID_EPOCH)?;
+        let samples = get_usize(j, "samples", repro::DEFAULT_SAMPLES)?;
+        let seed = get_seed(j, 42)?;
+        let budget = get_usize(j, "budget", 8)?.max(1);
+        let population =
+            get_usize(j, "population", search::default_population(budget))?.max(1);
+        let spec = ExploreSpec::with_profiles(space, models, epoch, samples, seed, budget)
+            .with_population(population);
+        let before = self.cache.stats();
+        let res = search::explore(&self.engine, &spec);
+        let delta = self.cache.stats().since(&before);
+        Ok((search::frontier_report(&spec, &res), delta.to_json()))
+    }
+
     fn stats_line(&self, id: Option<Json>) -> String {
         let (profiles, traces) = self.artifacts.loaded();
         let mut m = envelope(id);
@@ -636,9 +702,19 @@ impl Service {
                     Ok((stream, _)) => {
                         let id = next_id;
                         next_id += 1;
+                        // An untracked connection could not be
+                        // half-closed on shutdown, so an idle client
+                        // would hang the scope join forever — refuse
+                        // the connection instead of serving it
+                        // untracked (try_clone fails under fd
+                        // pressure, where shedding is the right move
+                        // anyway).
                         match stream.try_clone() {
                             Ok(clone) => conns.lock().unwrap().push((id, clone)),
-                            Err(e) => eprintln!("serve: connection untracked: {e}"),
+                            Err(e) => {
+                                eprintln!("serve: refusing untrackable connection: {e}");
+                                continue;
+                            }
                         }
                         s.spawn(move || {
                             let _ = self.handle_conn(stream);
@@ -802,6 +878,35 @@ mod tests {
         );
         assert_eq!(s.artifacts().loaded().1, 1, "trace file loads once");
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn explore_op_returns_a_deterministic_frontier_and_shares_the_cache() {
+        use crate::api::FRONTIER_SCHEMA;
+        let s = service(2);
+        // alexnet: fig 19's sparsity regime, so the depth_ordered gate
+        // has a real margin (gcn is the no-sparsity control).
+        let line = concat!(
+            r#"{"op":"explore","id":"e","models":["alexnet"],"budget":3,"samples":1,"seed":7,"#,
+            r#""axes":{"staging_depth":[2,3],"tile_rows":[2,4]}}"#,
+        );
+        let h1 = s.handle_line(line);
+        assert_eq!(h1.lines.len(), 1);
+        let r1 = report_field(&h1.lines[0]);
+        let rep = Report::from_json(&r1).expect("frontier report reconstructs");
+        assert_eq!(rep.schema, FRONTIER_SCHEMA);
+        assert!(!rep.rows.is_empty(), "frontier must not be empty");
+        assert_eq!(rep.meta.get("depth_ordered").and_then(Json::as_f64), Some(1.0));
+        // Warm repeat: the whole report (rows + meta) is byte-identical;
+        // only the cache envelope moves.
+        let h2 = s.handle_line(line);
+        assert_eq!(report_field(&h2.lines[0]).render(), r1.render());
+        let stats = s.cache().stats();
+        assert!(stats.hits > 0, "explore must share units through the cache: {stats:?}");
+        // Bad requests answer in-band.
+        let bad = s.handle_line(r#"{"op":"explore","id":9}"#);
+        let j = Json::parse(&bad.lines[0]).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
     }
 
     #[test]

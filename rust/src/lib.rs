@@ -51,6 +51,7 @@ pub mod metrics;
 pub mod models;
 pub mod repro;
 pub mod runtime;
+pub mod search;
 pub mod sim;
 pub mod tensor;
 pub mod trace;

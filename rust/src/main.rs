@@ -31,9 +31,11 @@ use tensordash::coordinator::data::DataGen;
 use tensordash::coordinator::Trainer;
 use tensordash::repro;
 use tensordash::runtime::Runtime;
+use tensordash::search::{self, ExploreSpec, SearchSpace};
 use tensordash::util::cli::Args;
+use tensordash::util::json::Json;
 
-const USAGE: &str = "usage: tensordash <repro|simulate|train|serve|info> [options]
+const USAGE: &str = "usage: tensordash <repro|simulate|train|explore|serve|info> [options]
   repro    --all | --fig <1|13|14|15|16|17|18|19|20|gcn|ablations>
            | --table <3|bf16>  [--samples N] [--seed S]
   simulate --model <name> [--epoch F] [--samples N] [--seed S]
@@ -41,16 +43,25 @@ const USAGE: &str = "usage: tensordash <repro|simulate|train|serve|info> [option
            [--per-layer]
   train    [--steps N] [--log-every K] [--seed S] [--artifacts DIR]
            [--samples N] [--sim-every K] [--per-layer]
+  explore  [--models m1,m2] [--budget N] [--population N] [--epoch F]
+           [--samples N] [--seed S]
+           [--space FILE | --axis name=v1,v2 [--axis ...]]
+           [--cache-cap N] [--cache-dir DIR]
+           cache-driven Pareto search over ChipConfig axes (run `info`
+           for the axis list + bounds). Emits a tensordash.frontier.v1
+           report; a fixed seed is byte-deterministic at any --jobs,
+           and the run fails if its staging-depth slice violates the
+           fig-19 depth ordering
   serve    [--listen ADDR] [--jobs N] [--cache-cap N] [--cache-dir DIR]
            [--preload m1,m2,...]
            JSON-lines loop (tensordash.serve.v1): one request object per
            line on stdin (or per TCP connection with --listen), one
            response per line in request order. Ops: simulate, sweep,
-           trace, batch, stats, shutdown. Identical units across a
-           batch coalesce onto one computation.
+           trace, explore, batch, stats, shutdown. Identical units
+           across a batch coalesce onto one computation.
   info
 
-report options (repro, simulate, train):
+report options (repro, simulate, train, explore):
   --format table|json|csv   renderer (default table). json emits the
                             tensordash.report.v1 schema; several reports
                             nest in one tensordash.reportset.v1 document
@@ -83,6 +94,7 @@ fn main() {
         "repro" => cmd_repro(&args),
         "simulate" => cmd_simulate(&args),
         "train" => cmd_train(&args),
+        "explore" => cmd_explore(&args),
         "serve" => cmd_serve(&args),
         "info" => cmd_info(&args),
         other => {
@@ -420,6 +432,78 @@ fn cmd_train(args: &Args) -> Result<()> {
     emit(&reports, args)
 }
 
+/// Build the search space the `explore` flags describe: an explicit
+/// `--space FILE` (tensordash.space.v1), else the `--axis name=v1,v2`
+/// pairs, else the default Figs. 17–19 axes.
+fn space_from_args(args: &Args) -> Result<SearchSpace> {
+    if let Some(path) = args.get("space") {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+        return SearchSpace::from_json(&j).map_err(|e| anyhow::anyhow!(e));
+    }
+    let axis_args = args.get_multi("axis");
+    if axis_args.is_empty() {
+        return Ok(SearchSpace::default_space());
+    }
+    let mut pairs = Vec::with_capacity(axis_args.len());
+    for a in &axis_args {
+        match a.split_once('=') {
+            Some((k, v)) => pairs.push((k.to_string(), v.to_string())),
+            None => anyhow::bail!("--axis expects name=v1,v2,..., got '{a}'"),
+        }
+    }
+    SearchSpace::from_pairs(&pairs).map_err(|e| anyhow::anyhow!(e))
+}
+
+fn cmd_explore(args: &Args) -> Result<()> {
+    report_format(args)?;
+    let models = args.get_list("models").unwrap_or_else(|| vec!["alexnet".to_string()]);
+    if models.is_empty() {
+        anyhow::bail!("--models needs at least one model name");
+    }
+    let epoch = args.get_f64("epoch", repro::MID_EPOCH)?;
+    let samples = args.get_usize("samples", repro::DEFAULT_SAMPLES)?.max(1);
+    let seed = args.get_u64("seed", 42)?;
+    let budget = args.get_usize("budget", 12)?.max(1);
+    let population = args.get_usize("population", search::default_population(budget))?;
+    let space = space_from_args(args)?;
+    // Exploration always runs cached — survivor re-evaluations and
+    // revisited design points are the whole workload. --cache-cap and
+    // --cache-dir size/persist it; --jobs sizes the worker pool.
+    let cap = args.get_usize("cache-cap", api::DEFAULT_CACHE_CAP)?;
+    let cache = Arc::new(build_cache(cap, args.get("cache-dir"))?);
+    let engine = Engine::new(args.get_usize("jobs", api::default_jobs())?)
+        .with_cache(Arc::clone(&cache));
+    let names: Vec<&str> = models.iter().map(String::as_str).collect();
+    let spec = ExploreSpec::new(space, &names, epoch, samples, seed, budget)
+        .map_err(|e| anyhow::anyhow!(e))?
+        .with_population(population);
+    let (res, report) = search::run(&engine, &spec);
+    eprintln!(
+        "explore: {} evaluations over {} generations, frontier size {} \
+         (space {} points, depth pairs {})",
+        res.evaluated.len(),
+        res.generations,
+        res.frontier.len(),
+        spec.space.size(),
+        res.depth_pairs
+    );
+    report_cache_use(&Some(Arc::clone(&cache)));
+    emit(&[report], args)?;
+    // The fig-19 validation gate: a depth slice that orders the wrong
+    // way means the simulator (or the search) regressed — fail loudly,
+    // after the report is already delivered for inspection.
+    if !res.depth_ordered {
+        anyhow::bail!(
+            "fig-19 validation gate failed: staging depth 3 was slower than depth 2 \
+             over {} explored pair(s)",
+            res.depth_pairs
+        );
+    }
+    Ok(())
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     let jobs = args.get_usize("jobs", api::default_jobs())?;
     let cap = args.get_usize("cache-cap", api::DEFAULT_CACHE_CAP)?;
@@ -462,5 +546,16 @@ fn cmd_info(args: &Args) -> Result<()> {
     println!("  staging depth {}, dtype {:?}, side {:?}", cfg.staging_depth, cfg.dtype, cfg.side);
     println!("  DRAM: {} GB/s ({:.1} B/cycle)", cfg.dram_gbps, cfg.dram_bytes_per_cycle());
     repro::table3(cfg.dtype).print();
+    // Self-documenting search surface: every explorable axis with its
+    // default value and accepted bounds (`explore --axis name=v1,v2`).
+    println!("\nexplore search axes (use: explore --axis name=v1,v2 [--axis ...]):");
+    for axis in SearchSpace::trivial().axes() {
+        println!(
+            "  {:<16} default {:<8} bounds {}",
+            axis.name,
+            axis.values[0],
+            search::axis_bounds(&axis.name)
+        );
+    }
     Ok(())
 }

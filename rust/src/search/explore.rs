@@ -1,0 +1,438 @@
+//! The cache-driven exploration loop: seeded successive halving with
+//! local mutation over a [`SearchSpace`].
+//!
+//! Each generation evaluates one *batch* of candidates — the previous
+//! generation's survivors plus fresh candidates (generation 0: the
+//! Table-2 origin, its staging-depth twin, and uniform samples; later
+//! generations: one-axis mutations of the survivors, topped up with
+//! samples). The whole batch goes through **one**
+//! [`Engine::run_all`] invocation, so
+//!
+//! * survivor re-evaluations are pure unit-cache hits (this is what
+//!   makes the halving loop cheap, and what the CI smoke's
+//!   "nonzero cache hits across generations" assertion checks);
+//! * units shared between candidates that were already simulated in a
+//!   previous generation — or in a previous *request*, through the
+//!   serving layer's shared cache — are never recomputed.
+//!
+//! **Determinism.** Every random decision draws from an `Rng` seeded by
+//! `derive_seed(seed ^ SEARCH_SEED_DOMAIN, generation)` on the calling
+//! thread; the engine's execution is byte-deterministic at any
+//! `--jobs`; candidate dedupe keys on content addresses; and the
+//! frontier's order is a total sort. A fixed-budget explore run is
+//! therefore byte-identical at `--jobs {1,4,8}`, warm or cold — the
+//! same contract every other pipeline stage carries, pinned by
+//! `rust/tests/search_explore.rs`.
+//!
+//! **Validation gate.** Whenever the explored set contains pairs of
+//! configurations differing only in staging depth, the fig-19 ordering
+//! (depth 3 / lookahead 2 at least as fast as depth 2 / lookahead 1)
+//! must hold over the slice; the result records it and the `explore`
+//! CLI refuses to bless a frontier that violates it.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
+
+use crate::api::cache::cfg_json;
+use crate::api::report::FRONTIER_SCHEMA;
+use crate::api::{derive_seed, Cell, Engine, Report, SimRequest};
+use crate::trace::profiles::ModelProfile;
+use crate::util::rng::Rng;
+
+use super::frontier::{Evaluated, Frontier};
+use super::objective::score_sims;
+use super::space::{Candidate, SearchSpace};
+
+/// Domain separator for the search RNG streams: keeps mutation draws
+/// statistically independent of the simulation seeds derived from the
+/// same base seed.
+const SEARCH_SEED_DOMAIN: u64 = 0x7365_6172_6368_2e31; // "search.1"
+
+/// What to explore: the space, the evaluation workload, and the budget.
+#[derive(Debug, Clone)]
+pub struct ExploreSpec {
+    pub space: SearchSpace,
+    /// Evaluation models (name, shared profile) — resolved up front so
+    /// unknown names fail on the calling thread, never in a worker.
+    pub models: Vec<(String, Arc<ModelProfile>)>,
+    pub epoch: f64,
+    /// Pass-sample budget per unit (see `repro::DEFAULT_SAMPLES`).
+    pub samples: usize,
+    pub seed: u64,
+    /// Maximum number of *unique* candidates evaluated. Survivor
+    /// re-evaluations are cache hits and do not count.
+    pub budget: usize,
+    /// Batch size per generation (survivors + fresh candidates).
+    pub population: usize,
+}
+
+impl ExploreSpec {
+    /// Build a spec, resolving model names through the profile
+    /// registry. Population defaults to [`default_population`].
+    pub fn new(
+        space: SearchSpace,
+        models: &[&str],
+        epoch: f64,
+        samples: usize,
+        seed: u64,
+        budget: usize,
+    ) -> Result<ExploreSpec, String> {
+        let mut resolved = Vec::with_capacity(models.len());
+        for m in models {
+            let p = ModelProfile::for_model(m)
+                .ok_or_else(|| format!("unknown model '{m}' (see models::FIG13_MODELS)"))?;
+            resolved.push((m.to_string(), Arc::new(p)));
+        }
+        Ok(ExploreSpec::with_profiles(space, resolved, epoch, samples, seed, budget))
+    }
+
+    /// Build a spec over already-loaded (`Arc`-shared) profiles — the
+    /// serving layer's zero-copy path through its artifact store.
+    pub fn with_profiles(
+        space: SearchSpace,
+        models: Vec<(String, Arc<ModelProfile>)>,
+        epoch: f64,
+        samples: usize,
+        seed: u64,
+        budget: usize,
+    ) -> ExploreSpec {
+        assert!(!models.is_empty(), "explore needs at least one model");
+        let population = default_population(budget);
+        ExploreSpec { space, models, epoch, samples, seed, budget, population }
+    }
+
+    pub fn with_population(mut self, population: usize) -> ExploreSpec {
+        self.population = population.max(1);
+        self
+    }
+}
+
+/// Default generation batch size for a budget: half the budget, kept
+/// in `2..=8` so small budgets still get a halving step and large ones
+/// still get several generations.
+pub fn default_population(budget: usize) -> usize {
+    (budget / 2).clamp(2, 8)
+}
+
+/// Everything an exploration run produced.
+#[derive(Debug, Clone)]
+pub struct ExploreResult {
+    pub frontier: Frontier,
+    /// Every unique candidate evaluated, in evaluation order.
+    pub evaluated: Vec<Evaluated>,
+    pub generations: usize,
+    /// Pairs of evaluated configs differing only in staging depth.
+    pub depth_pairs: usize,
+    /// The fig-19 gate: over all depth pairs, depth 3 needed no more
+    /// TensorDash cycles than depth 2. Vacuously true with no pairs.
+    pub depth_ordered: bool,
+}
+
+/// Offer a candidate into the fresh list iff its content address is
+/// new to the whole run and to this batch.
+fn offer(
+    space: &SearchSpace,
+    seen: &BTreeSet<u64>,
+    ids: &mut BTreeSet<u64>,
+    fresh: &mut Vec<Candidate>,
+    c: Candidate,
+) -> bool {
+    let id = space.id(&c);
+    if seen.contains(&id) || !ids.insert(id) {
+        return false;
+    }
+    fresh.push(c);
+    true
+}
+
+/// The staging-depth twin of a candidate (same indices, other depth
+/// value), when the space's depth axis has exactly two values.
+fn depth_twin(space: &SearchSpace, c: &Candidate) -> Option<Candidate> {
+    let (ai, axis) = space
+        .axes()
+        .iter()
+        .enumerate()
+        .find(|(_, a)| a.name == "staging_depth")?;
+    if axis.values.len() != 2 {
+        return None;
+    }
+    let mut t = c.clone();
+    t.indices[ai] = 1 - c.indices[ai];
+    Some(t)
+}
+
+/// Run the exploration loop. Pure in `(engine determinism, spec)`:
+/// byte-identical results for any worker count, warm or cold cache.
+pub fn explore(engine: &Engine, spec: &ExploreSpec) -> ExploreResult {
+    assert!(spec.budget >= 1, "explore needs a budget of at least 1");
+    let pop = spec.population.max(1);
+    let n_models = spec.models.len();
+    let mut seen: BTreeSet<u64> = BTreeSet::new();
+    let mut evaluated: Vec<Evaluated> = Vec::new();
+    let mut frontier = Frontier::new();
+    let mut survivors: Vec<Candidate> = Vec::new();
+    // Depth slice: neutral-config canon -> per-depth td-cycle totals.
+    let mut depth_slice: BTreeMap<String, [Option<f64>; 2]> = BTreeMap::new();
+    let mut generations = 0usize;
+
+    while evaluated.len() < spec.budget {
+        let gen = generations;
+        let mut rng = Rng::new(derive_seed(spec.seed ^ SEARCH_SEED_DOMAIN, gen as u64));
+        let want = (pop.saturating_sub(survivors.len()))
+            .max(1)
+            .min(spec.budget - evaluated.len());
+
+        // -- assemble fresh candidates --------------------------------
+        let mut fresh: Vec<Candidate> = Vec::new();
+        let mut fresh_ids: BTreeSet<u64> = BTreeSet::new();
+        if gen == 0 {
+            // Seed with the Table-2 origin and its staging-depth twin,
+            // so the fig-19 depth slice always has at least one pair.
+            let origin = spec.space.origin();
+            let twin = depth_twin(&spec.space, &origin);
+            offer(&spec.space, &seen, &mut fresh_ids, &mut fresh, origin);
+            if let Some(t) = twin {
+                offer(&spec.space, &seen, &mut fresh_ids, &mut fresh, t);
+            }
+        } else {
+            // Local mutation: walk the survivor ranking round-robin,
+            // one random neighbor per visit.
+            let limit = 16 * (spec.space.axes().len() + 1) * pop.max(1);
+            let mut attempts = 0usize;
+            'mutate: while fresh.len() < want && !survivors.is_empty() {
+                let mut progressed = false;
+                for s in &survivors {
+                    if fresh.len() >= want || attempts >= limit {
+                        break 'mutate;
+                    }
+                    let ns = spec.space.neighbors(s);
+                    attempts += 1;
+                    if ns.is_empty() {
+                        continue;
+                    }
+                    let pick = ns[rng.below(ns.len())].clone();
+                    if offer(&spec.space, &seen, &mut fresh_ids, &mut fresh, pick) {
+                        progressed = true;
+                    }
+                }
+                if !progressed && attempts >= limit {
+                    break;
+                }
+            }
+        }
+        // Top up with uniform samples (also how generation 0 fills).
+        let limit = 64 * (want + 1);
+        let mut attempts = 0usize;
+        while fresh.len() < want && attempts < limit {
+            let c = spec.space.sample(&mut rng);
+            offer(&spec.space, &seen, &mut fresh_ids, &mut fresh, c);
+            attempts += 1;
+        }
+        // Generation 0 may have seeded past a tiny budget.
+        fresh.truncate(spec.budget - evaluated.len());
+        if fresh.is_empty() {
+            break; // space exhausted around the survivors
+        }
+
+        // -- evaluate the batch through one engine invocation ---------
+        // Survivors first: their units are already cached, so the
+        // engine's serial lookup phase answers them without compute.
+        let batch: Vec<Candidate> =
+            survivors.iter().cloned().chain(fresh.iter().cloned()).collect();
+        let mut reqs: Vec<SimRequest> = Vec::with_capacity(batch.len() * n_models);
+        for c in &batch {
+            let cfg = spec.space.config(c);
+            for (mi, (_, profile)) in spec.models.iter().enumerate() {
+                // Seed per model only: every candidate sees identical
+                // tensors (the Fig. 17–19 comparability convention).
+                reqs.push(SimRequest::profile_shared(
+                    Arc::clone(profile),
+                    spec.epoch,
+                    cfg.clone(),
+                    spec.samples,
+                    derive_seed(spec.seed, mi as u64),
+                ));
+            }
+        }
+        let sims = engine.run_all(&reqs);
+
+        // -- fold scores, record fresh evaluations --------------------
+        let mut batch_eval: Vec<Evaluated> = Vec::with_capacity(batch.len());
+        for (c, slice) in batch.iter().zip(sims.chunks(n_models)) {
+            let cfg = spec.space.config(c);
+            let (score, detail) = score_sims(&cfg, slice);
+            let id = spec.space.id(c);
+            let e = Evaluated {
+                label: spec.space.label(c),
+                canon: spec.space.canon(c),
+                id,
+                score,
+                detail,
+                gen,
+            };
+            if seen.insert(id) {
+                evaluated.push(e.clone());
+                frontier.insert(e.clone());
+                let mut neutral = cfg.clone();
+                neutral.staging_depth = 3;
+                let slot = depth_slice.entry(cfg_json(&neutral).render()).or_default();
+                slot[cfg.staging_depth - 2] = Some(score.td_cycles);
+            }
+            batch_eval.push(e);
+        }
+
+        // -- successive halving: keep the batch's top half ------------
+        let mut order: Vec<usize> = (0..batch_eval.len()).collect();
+        let rank = |i: usize| -> usize {
+            batch_eval
+                .iter()
+                .filter(|o| o.score.dominates(&batch_eval[i].score))
+                .count()
+        };
+        let ranks: Vec<usize> = order.iter().map(|&i| rank(i)).collect();
+        order.sort_by(|&a, &b| {
+            ranks[a]
+                .cmp(&ranks[b])
+                .then_with(|| batch_eval[a].score.cmp_lex(&batch_eval[b].score))
+                .then_with(|| batch_eval[a].canon.cmp(&batch_eval[b].canon))
+        });
+        let keep = batch.len().div_ceil(2).max(1);
+        survivors = order.iter().take(keep).map(|&i| batch[i].clone()).collect();
+        generations += 1;
+    }
+
+    let mut depth_pairs = 0usize;
+    let (mut d2, mut d3) = (0.0f64, 0.0f64);
+    for slot in depth_slice.values() {
+        if let [Some(c2), Some(c3)] = slot {
+            depth_pairs += 1;
+            d2 += *c2;
+            d3 += *c3;
+        }
+    }
+    ExploreResult {
+        frontier,
+        evaluated,
+        generations,
+        depth_pairs,
+        depth_ordered: depth_pairs == 0 || d3 <= d2,
+    }
+}
+
+/// Render an exploration result as the `tensordash.frontier.v1`
+/// report: one row per frontier point in the stable tie-break order,
+/// provenance + gate verdict in the meta block. Byte-deterministic for
+/// a fixed spec.
+pub fn frontier_report(spec: &ExploreSpec, res: &ExploreResult) -> Report {
+    let models: Vec<&str> = spec.models.iter().map(|(m, _)| m.as_str()).collect();
+    let mut r = Report::with_schema(
+        FRONTIER_SCHEMA,
+        "frontier",
+        format!(
+            "Design-space Pareto frontier — {} evaluations over [{}]",
+            res.evaluated.len(),
+            models.join(", ")
+        ),
+        &["config", "td cycles", "speedup", "energy pJ", "energy eff", "area mm2", "gen"],
+    );
+    for p in res.frontier.points() {
+        r.row(vec![
+            Cell::text(p.label.clone()),
+            Cell::fmt((p.score.td_cycles as u64).to_string(), p.score.td_cycles),
+            Cell::num(p.detail.speedup),
+            Cell::fmt(format!("{:.3e}", p.score.energy_pj), p.score.energy_pj),
+            Cell::num(p.detail.energy_eff),
+            Cell::num(p.score.area_mm2),
+            Cell::fmt(p.gen.to_string(), p.gen as f64),
+        ]);
+    }
+    r.meta_str("models", &models.join(","));
+    r.meta_num("epoch", spec.epoch);
+    r.meta_num("samples", spec.samples as f64);
+    r.meta_num("seed", spec.seed as f64);
+    r.meta_num("budget", spec.budget as f64);
+    r.meta_num("population", spec.population as f64);
+    r.meta_num("evaluations", res.evaluated.len() as f64);
+    r.meta_num("generations", res.generations as f64);
+    r.meta_num("frontier_size", res.frontier.len() as f64);
+    r.meta_num("space_size", spec.space.size() as f64);
+    r.meta_num("depth_pairs", res.depth_pairs as f64);
+    r.meta_num("depth_ordered", if res.depth_ordered { 1.0 } else { 0.0 });
+    r.meta.insert("space".to_string(), spec.space.to_json());
+    r
+}
+
+/// Convenience wrapper: explore, build the frontier report, and — when
+/// the engine carries a unit cache — annotate the run's cache-counter
+/// deltas (`unit_cache_*` meta keys; presentation only, the rows never
+/// depend on the cache).
+pub fn run(engine: &Engine, spec: &ExploreSpec) -> (ExploreResult, Report) {
+    let before = engine.cache().map(|c| c.stats());
+    let res = explore(engine, spec);
+    let mut report = frontier_report(spec, &res);
+    if let (Some(cache), Some(b)) = (engine.cache(), before) {
+        cache.stats().since(&b).annotate(&mut report);
+    }
+    (res, report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::UnitCache;
+
+    fn tiny_spec(budget: usize) -> ExploreSpec {
+        let mut space = SearchSpace::trivial();
+        space.set_axis("staging_depth", &["2", "3"]).unwrap();
+        space.set_axis("tile_rows", &["2", "4"]).unwrap();
+        ExploreSpec::new(space, &["gcn"], 0.4, 1, 7, budget).unwrap()
+    }
+
+    #[test]
+    fn explore_respects_budget_and_builds_a_frontier() {
+        let (res, report) = run(&Engine::serial(), &tiny_spec(3));
+        assert_eq!(res.evaluated.len(), 3);
+        assert!(!res.frontier.is_empty());
+        assert!(res.frontier.len() <= res.evaluated.len());
+        assert_eq!(report.schema, FRONTIER_SCHEMA);
+        assert_eq!(report.rows.len(), res.frontier.len());
+        // Unique content addresses: no candidate evaluated twice.
+        let ids: BTreeSet<u64> = res.evaluated.iter().map(|e| e.id).collect();
+        assert_eq!(ids.len(), res.evaluated.len());
+    }
+
+    #[test]
+    fn generation_zero_seeds_the_depth_pair() {
+        // alexnet: real sparsity, so the fig-19 ordering has a margin
+        // (gcn is the no-sparsity control and is excluded from fig 19).
+        let mut space = SearchSpace::trivial();
+        space.set_axis("staging_depth", &["2", "3"]).unwrap();
+        let spec = ExploreSpec::new(space, &["alexnet"], 0.4, 1, 7, 2).unwrap();
+        let (res, _) = run(&Engine::parallel(), &spec);
+        assert!(res.depth_pairs >= 1, "origin + depth twin must pair up");
+        assert!(res.depth_ordered, "fig-19 ordering: depth 3 no slower than depth 2");
+    }
+
+    #[test]
+    fn survivor_reevaluation_hits_the_cache_across_generations() {
+        let cache = Arc::new(UnitCache::new(4096));
+        let engine = Engine::new(2).with_cache(Arc::clone(&cache));
+        let (res, report) = run(&engine, &tiny_spec(4));
+        assert!(res.generations >= 2, "budget 4 at population 2 needs several generations");
+        let s = cache.stats();
+        assert!(s.hits > 0, "survivors must re-evaluate as cache hits: {s:?}");
+        assert_eq!(
+            report.meta.get("unit_cache_hits").and_then(|j| j.as_f64()),
+            Some(s.hits as f64)
+        );
+    }
+
+    #[test]
+    fn exhausting_a_small_space_stops_early() {
+        let mut space = SearchSpace::trivial();
+        space.set_axis("staging_depth", &["2", "3"]).unwrap();
+        let spec = ExploreSpec::new(space, &["gcn"], 0.4, 1, 7, 50).unwrap();
+        let (res, _) = run(&Engine::serial(), &spec);
+        assert_eq!(res.evaluated.len(), 2, "only two candidates exist");
+    }
+}

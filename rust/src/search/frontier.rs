@@ -1,0 +1,152 @@
+//! Pareto-frontier tracking with dominance pruning.
+//!
+//! The frontier is the running set of non-dominated design points. Its
+//! contract (pinned by property tests in `rust/tests/search_explore.rs`):
+//!
+//! * no point in the frontier is dominated by any other point in it;
+//! * a point is rejected iff some already-seen point dominates it, or
+//!   it is an exact duplicate (same score *and* same canonical config);
+//! * the final frontier is a pure function of the *set* of points ever
+//!   inserted — insertion order never changes it — because "the
+//!   non-dominated subset of S" is order-free and the internal order is
+//!   re-established by a total sort key;
+//! * iteration order is the stable tie-break: lexicographic score
+//!   ([`Score::cmp_lex`]), then the canonical config string. Reports
+//!   built from a frontier are therefore byte-deterministic.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::objective::{Score, ScoreDetail};
+
+/// One evaluated design point (frontier member or not).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Evaluated {
+    /// Short human label (`axis=value` pairs of the free axes).
+    pub label: String,
+    /// Canonical config encoding (the unit-key `cfg` fragment).
+    pub canon: String,
+    /// Content address: FNV-1a of `canon`.
+    pub id: u64,
+    pub score: Score,
+    pub detail: ScoreDetail,
+    /// Generation the point was first evaluated in.
+    pub gen: usize,
+}
+
+impl Evaluated {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("label".to_string(), Json::Str(self.label.clone()));
+        m.insert("id".to_string(), Json::Str(format!("{:016x}", self.id)));
+        m.insert("score".to_string(), self.score.to_json());
+        m.insert("speedup".to_string(), Json::Num(self.detail.speedup));
+        m.insert("energy_eff".to_string(), Json::Num(self.detail.energy_eff));
+        m.insert("gen".to_string(), Json::Num(self.gen as f64));
+        Json::Obj(m)
+    }
+}
+
+/// The non-dominated set, kept sorted by the stable tie-break order.
+#[derive(Debug, Clone, Default)]
+pub struct Frontier {
+    points: Vec<Evaluated>,
+}
+
+impl Frontier {
+    pub fn new() -> Frontier {
+        Frontier::default()
+    }
+
+    /// Offer a point. Returns `true` if it joined the frontier (possibly
+    /// evicting points it dominates), `false` if a resident point
+    /// dominates it or it is an exact duplicate.
+    pub fn insert(&mut self, e: Evaluated) -> bool {
+        for p in &self.points {
+            if p.score.dominates(&e.score) {
+                return false;
+            }
+            if p.score == e.score && p.canon == e.canon {
+                return false;
+            }
+        }
+        self.points.retain(|p| !e.score.dominates(&p.score));
+        self.points.push(e);
+        self.points
+            .sort_by(|a, b| a.score.cmp_lex(&b.score).then_with(|| a.canon.cmp(&b.canon)));
+        true
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// Frontier members in the stable tie-break order.
+    pub fn points(&self) -> &[Evaluated] {
+        &self.points
+    }
+
+    /// Whether `s` would be rejected (some resident point dominates it).
+    pub fn dominated(&self, s: &Score) -> bool {
+        self.points.iter().any(|p| p.score.dominates(s))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(tag: &str, c: f64, e: f64, a: f64) -> Evaluated {
+        Evaluated {
+            label: tag.to_string(),
+            canon: tag.to_string(),
+            id: crate::util::hash::fnv1a64(tag.as_bytes()),
+            score: Score { td_cycles: c, energy_pj: e, area_mm2: a },
+            detail: ScoreDetail { base_cycles: c * 2.0, speedup: 2.0, energy_eff: 1.5 },
+            gen: 0,
+        }
+    }
+
+    #[test]
+    fn dominated_points_never_join_and_get_evicted() {
+        let mut f = Frontier::new();
+        assert!(f.insert(pt("mid", 2.0, 2.0, 2.0)));
+        assert!(!f.insert(pt("worse", 3.0, 2.0, 2.0)), "dominated on one axis");
+        assert!(f.insert(pt("tradeoff", 1.0, 3.0, 2.0)), "trade-offs coexist");
+        assert_eq!(f.len(), 2);
+        // A strictly better point evicts what it dominates.
+        assert!(f.insert(pt("best", 1.0, 1.0, 1.0)));
+        assert_eq!(f.len(), 1);
+        assert_eq!(f.points()[0].label, "best");
+        assert!(f.dominated(&pt("mid", 2.0, 2.0, 2.0).score));
+    }
+
+    #[test]
+    fn exact_duplicates_are_rejected_but_score_ties_coexist() {
+        let mut f = Frontier::new();
+        assert!(f.insert(pt("a", 1.0, 2.0, 3.0)));
+        assert!(!f.insert(pt("a", 1.0, 2.0, 3.0)), "same config, same score");
+        // A *different* config with the identical score is a distinct
+        // non-dominated point (dominance is strict).
+        assert!(f.insert(pt("b", 1.0, 2.0, 3.0)));
+        assert_eq!(f.len(), 2);
+        // Tie-break order: by canon when scores tie.
+        assert_eq!(f.points()[0].label, "a");
+        assert_eq!(f.points()[1].label, "b");
+    }
+
+    #[test]
+    fn iteration_order_is_lex_score_then_canon() {
+        let mut f = Frontier::new();
+        f.insert(pt("late", 3.0, 1.0, 1.0));
+        f.insert(pt("early", 1.0, 3.0, 1.0));
+        f.insert(pt("middle", 2.0, 2.0, 1.0));
+        let labels: Vec<&str> = f.points().iter().map(|p| p.label.as_str()).collect();
+        assert_eq!(labels, vec!["early", "middle", "late"]);
+    }
+}

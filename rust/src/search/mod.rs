@@ -1,0 +1,44 @@
+//! Design-space exploration: cache-driven Pareto search over chip
+//! configurations.
+//!
+//! The paper's headline numbers rest on specific design-point choices
+//! (8-input mux interconnect, staging depth 3, 16-lane PEs, 4×4 tiles)
+//! that the authors justify by sweeping the configuration space
+//! (§Figs. 17–19). This subsystem turns those hand-rolled figure grids
+//! into a first-class workload — HASS-style hardware search over the
+//! sparsity-exploiting accelerator — built on top of the PR-4
+//! content-addressed unit cache, which makes re-evaluating overlapping
+//! configurations nearly free:
+//!
+//! ```text
+//!   SearchSpace ──sample/mutate──► Candidate batch
+//!        │                             │ one Engine::run_all
+//!        │                             ▼ (survivors = cache hits)
+//!   canonical cfg encoding        score_sims → Score (cycles, energy, area)
+//!   (the unit-key cfg fragment)        │
+//!                                      ▼
+//!                              Frontier (Pareto, stable order)
+//!                                      │
+//!                                      ▼
+//!                        tensordash.frontier.v1 Report
+//! ```
+//!
+//! * [`space`] — declarative axes over `ChipConfig` with bounds,
+//!   mutation neighborhoods and content-addressed candidate encoding;
+//! * [`objective`] — the (cycles, energy, area) minimization vector
+//!   extracted from merged simulations + the analytic area model;
+//! * [`frontier`] — dominance-pruned Pareto set with a stable
+//!   tie-break order (property-tested invariants);
+//! * [`explore`] — the seeded successive-halving + local-mutation
+//!   loop, byte-deterministic at any `--jobs`, surfaced as the
+//!   `explore` CLI subcommand and the `explore` service op.
+
+pub mod explore;
+pub mod frontier;
+pub mod objective;
+pub mod space;
+
+pub use explore::{default_population, explore, frontier_report, run, ExploreResult, ExploreSpec};
+pub use frontier::{Evaluated, Frontier};
+pub use objective::{score_sims, Score, ScoreDetail};
+pub use space::{axis_bounds, Axis, Candidate, SearchSpace, AXIS_NAMES, SPACE_SCHEMA};

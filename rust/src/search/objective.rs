@@ -1,0 +1,156 @@
+//! Multi-objective scoring of one evaluated design point.
+//!
+//! The paper's evaluation already exposes the three quantities a chip
+//! architect trades off (§Figs. 13–19, Table 3): how long the workload
+//! takes (TensorDash chip cycles), what it costs to run (energy,
+//! including DRAM), and what the design costs to build (silicon area).
+//! A [`Score`] packs those into one minimization vector extracted from
+//! the merged [`ModelSim`]s plus the analytic [`AreaReport`]; Pareto
+//! [`Score::dominates`] ordering over that vector is what the
+//! [`frontier`](super::frontier) keeps.
+//!
+//! Scores are *derived data*: every field is computed from the
+//! deterministic simulation results (or the pure area model), so a
+//! score is byte-identical warm or cold, at any `--jobs`.
+
+use std::collections::BTreeMap;
+
+use crate::config::ChipConfig;
+use crate::energy::AreaReport;
+use crate::metrics::geomean;
+use crate::repro::ModelSim;
+use crate::util::json::Json;
+
+/// The minimization vector of one candidate: fewer cycles, less
+/// energy, less silicon — all lower-is-better.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Score {
+    /// TensorDash chip cycles summed over every evaluated model.
+    pub td_cycles: f64,
+    /// TensorDash energy (core + overhead + SRAM + scratchpad + DRAM)
+    /// summed over every evaluated model, picojoules.
+    pub energy_pj: f64,
+    /// Area proxy: TensorDash compute (cores + schedulers/muxes +
+    /// transposers) plus on-chip SRAM and scratchpads, mm².
+    pub area_mm2: f64,
+}
+
+impl Score {
+    /// Strict Pareto dominance: no objective worse, at least one
+    /// strictly better. Irreflexive by construction (a score never
+    /// dominates an equal score).
+    pub fn dominates(&self, o: &Score) -> bool {
+        let le = self.td_cycles <= o.td_cycles
+            && self.energy_pj <= o.energy_pj
+            && self.area_mm2 <= o.area_mm2;
+        let lt = self.td_cycles < o.td_cycles
+            || self.energy_pj < o.energy_pj
+            || self.area_mm2 < o.area_mm2;
+        le && lt
+    }
+
+    /// Total order for stable tie-breaking: lexicographic over
+    /// (cycles, energy, area) with `f64::total_cmp`, so sorting is
+    /// deterministic even for bit-different equal-comparing values.
+    pub fn cmp_lex(&self, o: &Score) -> std::cmp::Ordering {
+        self.td_cycles
+            .total_cmp(&o.td_cycles)
+            .then(self.energy_pj.total_cmp(&o.energy_pj))
+            .then(self.area_mm2.total_cmp(&o.area_mm2))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("td_cycles".to_string(), Json::Num(self.td_cycles));
+        m.insert("energy_pj".to_string(), Json::Num(self.energy_pj));
+        m.insert("area_mm2".to_string(), Json::Num(self.area_mm2));
+        Json::Obj(m)
+    }
+}
+
+/// Presentation metrics that ride along with a score (the frontier
+/// report's speedup/efficiency columns) — not part of the dominance
+/// vector.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScoreDetail {
+    /// Baseline chip cycles summed over every evaluated model.
+    pub base_cycles: f64,
+    /// Geomean of per-model overall speedups.
+    pub speedup: f64,
+    /// Geomean of per-model whole-chip energy efficiencies.
+    pub energy_eff: f64,
+}
+
+/// Extract the score (and its presentation detail) of one candidate
+/// from the merged simulations of its model sweep.
+pub fn score_sims(cfg: &ChipConfig, sims: &[ModelSim]) -> (Score, ScoreDetail) {
+    assert!(!sims.is_empty(), "a score needs at least one simulated model");
+    let mut td = 0u64;
+    let mut base = 0u64;
+    let mut energy = 0.0f64;
+    for s in sims {
+        for (b, t) in &s.per_op {
+            base += b;
+            td += t;
+        }
+        energy += s.energy_td.total_pj();
+    }
+    let a = AreaReport::compute(cfg);
+    let score = Score {
+        td_cycles: td as f64,
+        energy_pj: energy,
+        area_mm2: a.tensordash_compute() + a.sram_mm2 + a.spad_mm2,
+    };
+    let detail = ScoreDetail {
+        base_cycles: base as f64,
+        speedup: geomean(sims.iter().map(ModelSim::overall_speedup)),
+        energy_eff: geomean(sims.iter().map(ModelSim::total_efficiency)),
+    };
+    (score, detail)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(c: f64, e: f64, a: f64) -> Score {
+        Score { td_cycles: c, energy_pj: e, area_mm2: a }
+    }
+
+    #[test]
+    fn dominance_requires_strict_improvement_somewhere() {
+        assert!(s(1.0, 1.0, 1.0).dominates(&s(2.0, 1.0, 1.0)));
+        assert!(s(1.0, 1.0, 1.0).dominates(&s(2.0, 2.0, 2.0)));
+        assert!(!s(1.0, 1.0, 1.0).dominates(&s(1.0, 1.0, 1.0)), "irreflexive");
+        // Trade-offs don't dominate either way.
+        assert!(!s(1.0, 2.0, 1.0).dominates(&s(2.0, 1.0, 1.0)));
+        assert!(!s(2.0, 1.0, 1.0).dominates(&s(1.0, 2.0, 1.0)));
+    }
+
+    #[test]
+    fn lex_order_is_total_and_stable() {
+        let mut v = vec![s(2.0, 1.0, 1.0), s(1.0, 2.0, 1.0), s(1.0, 1.0, 2.0), s(1.0, 1.0, 1.0)];
+        v.sort_by(|a, b| a.cmp_lex(b));
+        assert_eq!(v[0], s(1.0, 1.0, 1.0));
+        assert_eq!(v[1], s(1.0, 1.0, 2.0));
+        assert_eq!(v[2], s(1.0, 2.0, 1.0));
+        assert_eq!(v[3], s(2.0, 1.0, 1.0));
+    }
+
+    #[test]
+    fn score_extraction_sums_models_and_prices_area() {
+        use crate::api::Engine;
+        use crate::api::SimRequest;
+        let cfg = ChipConfig::default();
+        let req = SimRequest::profile("gcn", 0.4, cfg.clone(), 1, 5).unwrap();
+        let sim = Engine::serial().run(&req);
+        let (one, d1) = score_sims(&cfg, std::slice::from_ref(&sim));
+        let (two, _) = score_sims(&cfg, &[sim.clone(), sim.clone()]);
+        assert_eq!(two.td_cycles, one.td_cycles * 2.0);
+        assert_eq!(two.energy_pj, one.energy_pj * 2.0);
+        assert_eq!(two.area_mm2, one.area_mm2, "area is per-design, not per-model");
+        assert!(one.td_cycles > 0.0 && one.energy_pj > 0.0 && one.area_mm2 > 0.0);
+        assert!((d1.speedup - sim.overall_speedup()).abs() < 1e-12);
+        assert!(d1.base_cycles >= one.td_cycles);
+    }
+}

@@ -1,0 +1,494 @@
+//! Declarative search spaces over [`ChipConfig`] axes.
+//!
+//! A [`SearchSpace`] is a small grid description: for each configurable
+//! chip axis (staging depth, tile geometry, tile count, lane count,
+//! datatype, sparsity side, SRAM/scratchpad sizing, transposer count) an
+//! ordered list of candidate values. A [`Candidate`] is one index per
+//! axis; [`SearchSpace::config`] lowers it to a concrete `ChipConfig`.
+//!
+//! **Content addressing.** A candidate's canonical encoding is the
+//! canonical JSON of its full chip configuration —
+//! [`crate::api::cache::cfg_json`], the *same* document that forms the
+//! `cfg` fragment of every [`crate::api::UnitKey`] its evaluation
+//! produces — hashed with the shared [`crate::util::hash::fnv1a64`].
+//! Two candidates with equal ids are the same design point whatever
+//! axis indices produced them, so the explorer dedupes re-visited
+//! configurations exactly as the unit cache dedupes their units.
+//!
+//! Axis values are validated against per-axis bounds at construction
+//! time (the calling thread), never inside a worker: the cycle
+//! simulator hard-asserts some of them (16 lanes, staging depth 2 or
+//! 3), and a zero bank count would divide-by-zero deep in the memory
+//! model.
+
+use std::collections::BTreeMap;
+
+use crate::api::cache::cfg_json;
+use crate::config::{ChipConfig, DataType, SparsitySide};
+use crate::util::hash::fnv1a64;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Schema tag of an on-disk space file (`explore --space FILE`).
+pub const SPACE_SCHEMA: &str = "tensordash.space.v1";
+
+/// Canonical axis order. Every space carries all axes (singleton axes
+/// pin their field to one value), in exactly this order — candidate
+/// indices, labels and mutation neighborhoods all key off it.
+pub const AXIS_NAMES: [&str; 12] = [
+    "staging_depth",
+    "tile_rows",
+    "tile_cols",
+    "tiles",
+    "lanes",
+    "dtype",
+    "side",
+    "sram_bank_bytes",
+    "sram_banks",
+    "spad_bytes",
+    "spad_banks",
+    "transposers",
+];
+
+/// Human-readable bounds per axis (the `info` listing and error
+/// messages). Bounds reflect what the simulator accepts today — e.g.
+/// the scheduler is specialised for 16 lanes, so that axis is fixed.
+pub fn axis_bounds(name: &str) -> &'static str {
+    match name {
+        "staging_depth" => "{2, 3} (lookahead 1 or 2)",
+        "tile_rows" => "1..=64",
+        "tile_cols" => "1..=64",
+        "tiles" => "1..=256",
+        "lanes" => "{16} (scheduler is specialised for 16 lanes)",
+        "dtype" => "{fp32, bf16}",
+        "side" => "{b, both}",
+        "sram_bank_bytes" => "1024..=16777216",
+        "sram_banks" => "1..=64",
+        "spad_bytes" => "64..=1048576",
+        "spad_banks" => "1..=16",
+        "transposers" => "1..=64",
+        _ => "unknown axis",
+    }
+}
+
+/// Canonicalize + bounds-check one axis value token. Returns the
+/// canonical token (numbers are re-rendered, so `"04"` and `"4"` are
+/// the same value).
+fn canon_token(name: &str, token: &str) -> Result<String, String> {
+    let bad = |t: &str| format!("axis '{name}': bad value '{t}' (bounds: {})", axis_bounds(name));
+    let num = |t: &str, lo: u64, hi: u64| -> Result<String, String> {
+        let v: u64 = t.trim().parse().map_err(|_| bad(t))?;
+        if v < lo || v > hi {
+            return Err(bad(t));
+        }
+        Ok(v.to_string())
+    };
+    match name {
+        "staging_depth" => num(token, 2, 3),
+        "tile_rows" | "tile_cols" => num(token, 1, 64),
+        "tiles" => num(token, 1, 256),
+        "lanes" => num(token, 16, 16),
+        "dtype" => match token.trim() {
+            "fp32" => Ok("fp32".to_string()),
+            "bf16" => Ok("bf16".to_string()),
+            t => Err(bad(t)),
+        },
+        "side" => match token.trim() {
+            "b" => Ok("b".to_string()),
+            "both" => Ok("both".to_string()),
+            t => Err(bad(t)),
+        },
+        "sram_bank_bytes" => num(token, 1024, 16 * 1024 * 1024),
+        "sram_banks" => num(token, 1, 64),
+        "spad_bytes" => num(token, 64, 1024 * 1024),
+        "spad_banks" => num(token, 1, 16),
+        "transposers" => num(token, 1, 64),
+        _ => Err(format!(
+            "unknown axis '{name}' (axes: {})",
+            AXIS_NAMES.join(", ")
+        )),
+    }
+}
+
+/// Apply one canonical axis token to a config. Tokens are produced by
+/// [`canon_token`], so the parses here cannot fail.
+fn apply_token(cfg: &mut ChipConfig, name: &str, token: &str) {
+    let v = || token.parse::<u64>().expect("canonical numeric token");
+    match name {
+        "staging_depth" => cfg.staging_depth = v() as usize,
+        "tile_rows" => cfg.tile_rows = v() as usize,
+        "tile_cols" => cfg.tile_cols = v() as usize,
+        "tiles" => cfg.tiles = v() as usize,
+        "lanes" => cfg.lanes = v() as usize,
+        "dtype" => {
+            cfg.dtype = match token {
+                "bf16" => DataType::Bf16,
+                _ => DataType::Fp32,
+            }
+        }
+        "side" => {
+            cfg.side = match token {
+                "both" => SparsitySide::Both,
+                _ => SparsitySide::BSide,
+            }
+        }
+        "sram_bank_bytes" => cfg.sram_bank_bytes = v(),
+        "sram_banks" => cfg.sram_banks = v(),
+        "spad_bytes" => cfg.spad_bytes = v(),
+        "spad_banks" => cfg.spad_banks = v(),
+        "transposers" => cfg.transposers = v(),
+        _ => unreachable!("axis names validated at construction"),
+    }
+}
+
+/// The default config's canonical token for an axis (the value a
+/// singleton axis pins, and the origin candidate's preferred value).
+fn default_token(name: &str) -> String {
+    let d = ChipConfig::default();
+    match name {
+        "staging_depth" => d.staging_depth.to_string(),
+        "tile_rows" => d.tile_rows.to_string(),
+        "tile_cols" => d.tile_cols.to_string(),
+        "tiles" => d.tiles.to_string(),
+        "lanes" => d.lanes.to_string(),
+        "dtype" => "fp32".to_string(),
+        "side" => "b".to_string(),
+        "sram_bank_bytes" => d.sram_bank_bytes.to_string(),
+        "sram_banks" => d.sram_banks.to_string(),
+        "spad_bytes" => d.spad_bytes.to_string(),
+        "spad_banks" => d.spad_banks.to_string(),
+        "transposers" => d.transposers.to_string(),
+        _ => unreachable!("axis names validated at construction"),
+    }
+}
+
+/// One axis: its canonical name and ordered, validated value tokens.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Axis {
+    pub name: String,
+    pub values: Vec<String>,
+}
+
+/// One candidate design point: an index into each axis, in
+/// [`AXIS_NAMES`] order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Candidate {
+    pub indices: Vec<usize>,
+}
+
+/// A declarative grid over [`ChipConfig`] axes.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SearchSpace {
+    axes: Vec<Axis>,
+}
+
+impl SearchSpace {
+    /// The trivial space: every axis a singleton at the Table-2 default.
+    pub fn trivial() -> SearchSpace {
+        SearchSpace {
+            axes: AXIS_NAMES
+                .iter()
+                .map(|n| Axis { name: n.to_string(), values: vec![default_token(n)] })
+                .collect(),
+        }
+    }
+
+    /// The default exploration space (the Figs. 17–19 design axes):
+    /// staging depth × tile rows × tile cols, everything else pinned.
+    pub fn default_space() -> SearchSpace {
+        let mut s = SearchSpace::trivial();
+        s.set_axis("staging_depth", &["2", "3"]).expect("static axis values");
+        s.set_axis("tile_rows", &["1", "2", "4", "8", "16"]).expect("static axis values");
+        s.set_axis("tile_cols", &["4", "8", "16"]).expect("static axis values");
+        s
+    }
+
+    /// Replace one axis's value list (validated, deduped in order).
+    pub fn set_axis(&mut self, name: &str, values: &[&str]) -> Result<(), String> {
+        let slot = self
+            .axes
+            .iter_mut()
+            .find(|a| a.name == name)
+            .ok_or_else(|| format!("unknown axis '{name}' (axes: {})", AXIS_NAMES.join(", ")))?;
+        let mut canon: Vec<String> = Vec::with_capacity(values.len());
+        for v in values {
+            let c = canon_token(name, v)?;
+            if !canon.contains(&c) {
+                canon.push(c);
+            }
+        }
+        if canon.is_empty() {
+            return Err(format!("axis '{name}': needs at least one value"));
+        }
+        slot.values = canon;
+        Ok(())
+    }
+
+    /// Build a space from `--axis name=v1,v2` style pairs: named axes
+    /// get the given values, unnamed axes stay pinned at the default.
+    pub fn from_pairs(pairs: &[(String, String)]) -> Result<SearchSpace, String> {
+        let mut s = SearchSpace::trivial();
+        for (name, list) in pairs {
+            let values: Vec<&str> =
+                list.split(',').map(str::trim).filter(|v| !v.is_empty()).collect();
+            s.set_axis(name, &values)?;
+        }
+        Ok(s)
+    }
+
+    /// Parse a `tensordash.space.v1` document:
+    /// `{"schema":"tensordash.space.v1","axes":{"staging_depth":[2,3],...}}`
+    /// (values may be numbers or strings). Unnamed axes stay pinned.
+    pub fn from_json(j: &Json) -> Result<SearchSpace, String> {
+        match j.get("schema").and_then(Json::as_str) {
+            Some(SPACE_SCHEMA) => {}
+            other => return Err(format!("expected schema '{SPACE_SCHEMA}', got {other:?}")),
+        }
+        let axes = match j.get("axes") {
+            Some(Json::Obj(m)) => m,
+            _ => return Err("space file needs an 'axes' object".to_string()),
+        };
+        let mut s = SearchSpace::trivial();
+        for (name, vals) in axes {
+            let arr = vals
+                .as_arr()
+                .ok_or_else(|| format!("axis '{name}': values must be an array"))?;
+            let mut tokens: Vec<String> = Vec::with_capacity(arr.len());
+            for v in arr {
+                tokens.push(match v {
+                    Json::Str(t) => t.clone(),
+                    Json::Num(n) => {
+                        if n.trunc() != *n || *n < 0.0 {
+                            return Err(format!("axis '{name}': bad numeric value {n}"));
+                        }
+                        format!("{}", *n as u64)
+                    }
+                    _ => return Err(format!("axis '{name}': values must be numbers or strings")),
+                });
+            }
+            let refs: Vec<&str> = tokens.iter().map(String::as_str).collect();
+            s.set_axis(name, &refs)?;
+        }
+        Ok(s)
+    }
+
+    pub fn axes(&self) -> &[Axis] {
+        &self.axes
+    }
+
+    /// Axes with more than one value — the ones actually searched.
+    pub fn free_axes(&self) -> impl Iterator<Item = &Axis> {
+        self.axes.iter().filter(|a| a.values.len() > 1)
+    }
+
+    /// Number of distinct candidates (product of axis arities).
+    pub fn size(&self) -> u64 {
+        self.axes.iter().fold(1u64, |acc, a| acc.saturating_mul(a.values.len() as u64))
+    }
+
+    /// The candidate closest to the Table-2 default: per axis, the
+    /// default value's index when present, else index 0.
+    pub fn origin(&self) -> Candidate {
+        Candidate {
+            indices: self
+                .axes
+                .iter()
+                .map(|a| {
+                    let d = default_token(&a.name);
+                    a.values.iter().position(|v| *v == d).unwrap_or(0)
+                })
+                .collect(),
+        }
+    }
+
+    /// Uniform deterministic sample (one index draw per axis, in axis
+    /// order — the stream consumption is part of the determinism
+    /// contract).
+    pub fn sample(&self, rng: &mut Rng) -> Candidate {
+        Candidate {
+            indices: self.axes.iter().map(|a| rng.below(a.values.len())).collect(),
+        }
+    }
+
+    /// The candidate's mutation neighborhood: each free axis stepped
+    /// one index down, then one up (axis-major order, deterministic).
+    pub fn neighbors(&self, c: &Candidate) -> Vec<Candidate> {
+        let mut out = Vec::new();
+        for (ai, axis) in self.axes.iter().enumerate() {
+            if axis.values.len() < 2 {
+                continue;
+            }
+            if c.indices[ai] > 0 {
+                let mut n = c.clone();
+                n.indices[ai] -= 1;
+                out.push(n);
+            }
+            if c.indices[ai] + 1 < axis.values.len() {
+                let mut n = c.clone();
+                n.indices[ai] += 1;
+                out.push(n);
+            }
+        }
+        out
+    }
+
+    /// Lower a candidate to its chip configuration.
+    pub fn config(&self, c: &Candidate) -> ChipConfig {
+        assert_eq!(c.indices.len(), self.axes.len(), "candidate/space arity mismatch");
+        let mut cfg = ChipConfig::default();
+        for (axis, &i) in self.axes.iter().zip(&c.indices) {
+            apply_token(&mut cfg, &axis.name, &axis.values[i]);
+        }
+        cfg
+    }
+
+    /// Canonical encoding: the candidate's full config as canonical
+    /// JSON — exactly the `cfg` fragment of the unit keys its
+    /// evaluation produces, so candidate identity and unit-cache
+    /// addressing can never disagree.
+    pub fn canon(&self, c: &Candidate) -> String {
+        cfg_json(&self.config(c)).render()
+    }
+
+    /// Content address of a candidate: FNV-1a of [`Self::canon`].
+    pub fn id(&self, c: &Candidate) -> u64 {
+        fnv1a64(self.canon(c).as_bytes())
+    }
+
+    /// Short human label: `axis=value` for every free axis (singleton
+    /// axes are implied), or `"default"` when nothing is free.
+    pub fn label(&self, c: &Candidate) -> String {
+        let parts: Vec<String> = self
+            .axes
+            .iter()
+            .zip(&c.indices)
+            .filter(|(a, _)| a.values.len() > 1)
+            .map(|(a, &i)| format!("{}={}", a.name, a.values[i]))
+            .collect();
+        if parts.is_empty() {
+            "default".to_string()
+        } else {
+            parts.join(" ")
+        }
+    }
+
+    /// The space as a `tensordash.space.v1` JSON document (free axes
+    /// only — pinned axes are implied by the schema's defaults).
+    pub fn to_json(&self) -> Json {
+        let mut axes = BTreeMap::new();
+        for a in self.free_axes() {
+            axes.insert(
+                a.name.clone(),
+                Json::Arr(a.values.iter().map(|v| Json::Str(v.clone())).collect()),
+            );
+        }
+        let mut m = BTreeMap::new();
+        m.insert("schema".to_string(), Json::Str(SPACE_SCHEMA.to_string()));
+        m.insert("axes".to_string(), Json::Obj(axes));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trivial_space_is_the_default_config() {
+        let s = SearchSpace::trivial();
+        assert_eq!(s.size(), 1);
+        let c = s.origin();
+        let cfg = s.config(&c);
+        assert_eq!(cfg.staging_depth, 3);
+        assert_eq!(cfg.tile_rows, 4);
+        assert_eq!(cfg.macs_per_cycle(), ChipConfig::default().macs_per_cycle());
+        assert_eq!(s.label(&c), "default");
+        // Canonical encoding is the unit-key cfg fragment.
+        assert_eq!(s.canon(&c), cfg_json(&ChipConfig::default()).render());
+    }
+
+    #[test]
+    fn axis_values_validate_and_canonicalize() {
+        let mut s = SearchSpace::trivial();
+        s.set_axis("staging_depth", &["2", "3", "02"]).unwrap();
+        let depth = s.axes().iter().find(|a| a.name == "staging_depth").unwrap();
+        assert_eq!(depth.values, vec!["2", "3"], "duplicates canonicalize away");
+        assert!(s.set_axis("staging_depth", &["4"]).is_err(), "depth 4 out of bounds");
+        assert!(s.set_axis("lanes", &["8"]).is_err(), "lanes are fixed at 16");
+        assert!(s.set_axis("dtype", &["fp64"]).is_err());
+        assert!(s.set_axis("nope", &["1"]).is_err());
+        assert!(s.set_axis("tiles", &[]).is_err(), "empty axis rejected");
+    }
+
+    #[test]
+    fn candidate_id_is_content_addressed() {
+        let s = SearchSpace::default_space();
+        let a = s.origin();
+        let mut b = s.origin();
+        assert_eq!(s.id(&a), s.id(&b));
+        b.indices[0] = if a.indices[0] == 0 { 1 } else { 0 }; // flip depth
+        assert_ne!(s.id(&a), s.id(&b));
+        assert_ne!(s.canon(&a), s.canon(&b));
+    }
+
+    #[test]
+    fn neighbors_step_one_free_axis_within_bounds() {
+        let s = SearchSpace::default_space();
+        let o = s.origin(); // depth=3 (idx 1), rows=4 (idx 2), cols=4 (idx 0)
+        let ns = s.neighbors(&o);
+        // depth: down only (idx 1 of 2); rows: both; cols: up only.
+        assert_eq!(ns.len(), 4);
+        for n in &ns {
+            let diff: usize = n
+                .indices
+                .iter()
+                .zip(&o.indices)
+                .filter(|(a, b)| a != b)
+                .count();
+            assert_eq!(diff, 1, "neighbor changes exactly one axis");
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_in_bounds() {
+        let s = SearchSpace::default_space();
+        let mut r1 = Rng::new(9);
+        let mut r2 = Rng::new(9);
+        for _ in 0..32 {
+            let a = s.sample(&mut r1);
+            let b = s.sample(&mut r2);
+            assert_eq!(a, b);
+            for (axis, &i) in s.axes().iter().zip(&a.indices) {
+                assert!(i < axis.values.len());
+            }
+        }
+    }
+
+    #[test]
+    fn space_json_round_trips_free_axes() {
+        let s = SearchSpace::default_space();
+        let j = s.to_json();
+        assert_eq!(j.get("schema").unwrap().as_str(), Some(SPACE_SCHEMA));
+        let back = SearchSpace::from_json(&j).unwrap();
+        assert_eq!(back, s);
+        // Numeric values parse too.
+        let doc = Json::parse(
+            r#"{"schema":"tensordash.space.v1","axes":{"staging_depth":[2,3],"dtype":["bf16","fp32"]}}"#,
+        )
+        .unwrap();
+        let parsed = SearchSpace::from_json(&doc).unwrap();
+        assert_eq!(parsed.size(), 4);
+        assert!(SearchSpace::from_json(&Json::parse(r#"{"schema":"nope"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn from_pairs_matches_set_axis() {
+        let pairs = vec![
+            ("staging_depth".to_string(), "2,3".to_string()),
+            ("tile_rows".to_string(), "2, 4".to_string()),
+        ];
+        let s = SearchSpace::from_pairs(&pairs).unwrap();
+        assert_eq!(s.size(), 4);
+        assert!(SearchSpace::from_pairs(&[("x".to_string(), "1".to_string())]).is_err());
+    }
+}

@@ -173,7 +173,14 @@ impl TensorBitmap {
             return None;
         }
         let hex = j.get("words")?.as_str()?;
-        if hex.len() % 4 != 0 || hex.len() / 4 != n * h * w * c / 16 {
+        // Checked product: crafted dims must not wrap in release (and
+        // pass the length check on 0 == 0) or panic in debug — a bad
+        // document reads as None, never as an inconsistent bitmap.
+        let bits = n
+            .checked_mul(h)
+            .and_then(|v| v.checked_mul(w))
+            .and_then(|v| v.checked_mul(c))?;
+        if hex.len() % 4 != 0 || hex.len() / 4 != bits / 16 {
             return None;
         }
         let mut words = Vec::with_capacity(hex.len() / 4);
@@ -248,6 +255,14 @@ mod tests {
             m.insert("words".to_string(), crate::util::json::Json::Str("zz".into()));
         }
         assert!(TensorBitmap::from_json(&bad).is_none());
+        // Overflow-crafted dims (n*h*w*c wraps to 0 with unchecked
+        // arithmetic) must read as None, not as an empty-word bitmap
+        // with huge dims.
+        let overflow = crate::util::json::Json::parse(
+            r#"{"dims":[1073741824,1073741824,16,16],"words":""}"#,
+        )
+        .unwrap();
+        assert!(TensorBitmap::from_json(&overflow).is_none());
     }
 
     #[test]

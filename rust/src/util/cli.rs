@@ -9,6 +9,10 @@ pub struct Args {
     pub positional: Vec<String>,
     pub options: BTreeMap<String, String>,
     pub flags: Vec<String>,
+    /// Every `--key value` occurrence in command-line order — repeated
+    /// options (`--axis a=1 --axis b=2`) keep all values here, while
+    /// `options` keeps last-wins semantics for ordinary lookups.
+    pub pairs: Vec<(String, String)>,
 }
 
 impl Args {
@@ -20,6 +24,7 @@ impl Args {
         while let Some(a) = it.next() {
             if let Some(body) = a.strip_prefix("--") {
                 if let Some((k, v)) = body.split_once('=') {
+                    out.pairs.push((k.to_string(), v.to_string()));
                     out.options.insert(k.to_string(), v.to_string());
                 } else if known_flags.contains(&body) {
                     out.flags.push(body.to_string());
@@ -28,6 +33,7 @@ impl Args {
                         out.flags.push(body.to_string());
                     } else {
                         let v = it.next().unwrap();
+                        out.pairs.push((body.to_string(), v.clone()));
                         out.options.insert(body.to_string(), v);
                     }
                 } else {
@@ -72,6 +78,17 @@ impl Args {
                 .parse()
                 .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
         }
+    }
+
+    /// All values of a repeated option, in command-line order:
+    /// `--axis depth=2,3 --axis rows=2,4` -> both values. Empty when
+    /// the option never appeared.
+    pub fn get_multi(&self, name: &str) -> Vec<String> {
+        self.pairs
+            .iter()
+            .filter(|(k, _)| k == name)
+            .map(|(_, v)| v.clone())
+            .collect()
     }
 
     /// Comma-separated list option: `--preload a,b` -> `["a", "b"]`.
@@ -134,6 +151,18 @@ mod tests {
             Some(vec!["alexnet".to_string(), "gcn".to_string(), "resnet50".to_string()])
         );
         assert_eq!(a.get_list("missing"), None);
+    }
+
+    #[test]
+    fn repeated_options_keep_every_value_in_order() {
+        let a = args(
+            &["explore", "--axis", "depth=2,3", "--axis=rows=2,4", "--seed", "7"],
+            &[],
+        );
+        assert_eq!(a.get_multi("axis"), vec!["depth=2,3", "rows=2,4"]);
+        assert_eq!(a.get("axis"), Some("rows=2,4"), "plain lookup stays last-wins");
+        assert_eq!(a.get_multi("seed"), vec!["7"]);
+        assert!(a.get_multi("missing").is_empty());
     }
 
     #[test]

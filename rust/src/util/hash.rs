@@ -1,0 +1,78 @@
+//! Stable, dependency-free hashing shared by every content-addressed
+//! key in the system.
+//!
+//! Both the unit cache ([`crate::api::cache::UnitKey`]) and the
+//! design-space search candidate encoder ([`crate::search::space`])
+//! address content by 64-bit FNV-1a over a canonical byte string. They
+//! must agree on the hash — a search candidate's canonical config is
+//! exactly the `cfg` fragment of the unit keys its evaluation produces —
+//! so the function lives here, in one module, instead of being
+//! duplicated per consumer. The test vectors below pin the algorithm;
+//! changing it invalidates every cache key and candidate id at once.
+
+use crate::tensor::TensorBitmap;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over `bytes`, continuing from state `h`.
+pub fn fnv1a64_with(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// 64-bit FNV-1a — the stable hash behind every cache key and search
+/// candidate id. Pinned by test vectors; changing it invalidates every
+/// key.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_with(FNV_OFFSET, bytes)
+}
+
+/// Content hash of a bitmap: dims then packed words, little-endian.
+pub fn bitmap_hash(bm: &TensorBitmap) -> u64 {
+    let mut h = FNV_OFFSET;
+    for d in [bm.n, bm.h, bm.w, bm.c] {
+        h = fnv1a64_with(h, &(d as u64).to_le_bytes());
+    }
+    for w in bm.words() {
+        h = fnv1a64_with(h, &w.to_le_bytes());
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn fnv1a64_matches_published_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn fnv1a64_with_continues_the_stream() {
+        let whole = fnv1a64(b"foobar");
+        let split = fnv1a64_with(fnv1a64(b"foo"), b"bar");
+        assert_eq!(whole, split);
+    }
+
+    #[test]
+    fn bitmap_hash_tracks_contents_and_dims() {
+        let mut rng = Rng::new(1);
+        let a = crate::trace::synthetic::random_bitmap((2, 4, 4, 16), 0.5, &mut rng);
+        let same = TensorBitmap::from_raw((2, 4, 4, 16), a.words().to_vec());
+        assert_eq!(bitmap_hash(&a), bitmap_hash(&same));
+        let reshaped = TensorBitmap::from_raw((4, 2, 4, 16), a.words().to_vec());
+        assert_ne!(bitmap_hash(&a), bitmap_hash(&reshaped));
+        let mut words = a.words().to_vec();
+        words[0] ^= 1;
+        let flipped = TensorBitmap::from_raw((2, 4, 4, 16), words);
+        assert_ne!(bitmap_hash(&a), bitmap_hash(&flipped));
+    }
+}

@@ -1,0 +1,252 @@
+//! Contract tests for the design-space explorer (`tensordash::search`).
+//!
+//! Three families, mirroring the ISSUE's acceptance bars:
+//!
+//! 1. **Pareto invariants** (property tests over seeded pseudo-random
+//!    score sets): dominance is a strict partial order; the frontier
+//!    never contains a dominated point; insertion order never changes
+//!    the final frontier.
+//! 2. **Determinism**: a fixed-budget explore run is byte-identical at
+//!    `--jobs {1, 4, 8}`, cached or uncached, warm or cold.
+//! 3. **Fig.-19 cross-check**: the explored staging-depth slice orders
+//!    depth 3 (lookahead 2) at least as fast as depth 2, the same
+//!    ordering Fig. 19 reports.
+//!
+//! CI runs this binary explicitly and fails if its tests are filtered
+//! out (same pattern as the stream/plan/cache gates).
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use tensordash::api::{Engine, Report, UnitCache, FRONTIER_SCHEMA};
+use tensordash::search::{
+    explore, frontier_report, run, Evaluated, ExploreSpec, Frontier, Score, ScoreDetail,
+    SearchSpace,
+};
+use tensordash::util::rng::Rng;
+
+// ---------------------------------------------------------------------
+// Helpers
+// ---------------------------------------------------------------------
+
+/// A pseudo-random score on a coarse grid (1..=4 per objective), so
+/// dominance chains and exact ties both occur often.
+fn random_score(rng: &mut Rng) -> Score {
+    Score {
+        td_cycles: (1 + rng.below(4)) as f64,
+        energy_pj: (1 + rng.below(4)) as f64,
+        area_mm2: (1 + rng.below(4)) as f64,
+    }
+}
+
+fn point(tag: usize, score: Score) -> Evaluated {
+    Evaluated {
+        label: format!("p{tag}"),
+        canon: format!("canon{tag}"),
+        id: tag as u64,
+        score,
+        detail: ScoreDetail { base_cycles: 0.0, speedup: 1.0, energy_eff: 1.0 },
+        gen: 0,
+    }
+}
+
+/// Deterministic Fisher–Yates shuffle.
+fn shuffle<T>(v: &mut [T], rng: &mut Rng) {
+    for i in (1..v.len()).rev() {
+        v.swap(i, rng.below(i + 1));
+    }
+}
+
+/// Canonical flat rendering of a frontier (labels + scores in frontier
+/// order) for equality checks across insertion orders.
+fn frontier_fingerprint(f: &Frontier) -> Vec<(String, u64, u64, u64)> {
+    f.points()
+        .iter()
+        .map(|p| {
+            (
+                p.canon.clone(),
+                p.score.td_cycles as u64,
+                p.score.energy_pj as u64,
+                p.score.area_mm2 as u64,
+            )
+        })
+        .collect()
+}
+
+fn tiny_space() -> SearchSpace {
+    let mut space = SearchSpace::trivial();
+    space.set_axis("staging_depth", &["2", "3"]).unwrap();
+    space.set_axis("tile_rows", &["2", "4"]).unwrap();
+    space.set_axis("tile_cols", &["4", "8"]).unwrap();
+    space
+}
+
+// ---------------------------------------------------------------------
+// 1. Pareto invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn dominance_is_a_strict_partial_order() {
+    let mut rng = Rng::new(101);
+    for _ in 0..2000 {
+        let (a, b, c) = (random_score(&mut rng), random_score(&mut rng), random_score(&mut rng));
+        // Irreflexive.
+        assert!(!a.dominates(&a), "{a:?} dominates itself");
+        // Asymmetric.
+        if a.dominates(&b) {
+            assert!(!b.dominates(&a), "dominance must be asymmetric: {a:?} vs {b:?}");
+        }
+        // Transitive.
+        if a.dominates(&b) && b.dominates(&c) {
+            assert!(a.dominates(&c), "dominance must be transitive: {a:?} {b:?} {c:?}");
+        }
+    }
+}
+
+#[test]
+fn frontier_never_contains_a_dominated_point() {
+    let mut rng = Rng::new(202);
+    for trial in 0..50 {
+        let mut f = Frontier::new();
+        let n = 5 + rng.below(40);
+        for i in 0..n {
+            f.insert(point(i, random_score(&mut rng)));
+        }
+        assert!(!f.is_empty(), "trial {trial}: frontier empty after {n} inserts");
+        let pts = f.points();
+        for a in pts {
+            for b in pts {
+                assert!(
+                    !a.score.dominates(&b.score),
+                    "trial {trial}: frontier holds dominated pair {a:?} -> {b:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn insertion_order_never_changes_the_final_frontier() {
+    let mut rng = Rng::new(303);
+    for trial in 0..25u64 {
+        let n = 6 + rng.below(30);
+        let base: Vec<Evaluated> =
+            (0..n).map(|i| point(i, random_score(&mut rng))).collect();
+        let mut reference = Frontier::new();
+        for p in &base {
+            reference.insert(p.clone());
+        }
+        let want = frontier_fingerprint(&reference);
+        for perm in 0..6u64 {
+            let mut order: Vec<usize> = (0..n).collect();
+            let mut prng = Rng::new(7000 + trial * 31 + perm);
+            shuffle(&mut order, &mut prng);
+            let mut f = Frontier::new();
+            for &i in &order {
+                f.insert(base[i].clone());
+            }
+            assert_eq!(
+                frontier_fingerprint(&f),
+                want,
+                "trial {trial} permutation {perm}: frontier depends on insertion order"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. Explore determinism
+// ---------------------------------------------------------------------
+
+#[test]
+fn explore_is_byte_identical_at_jobs_1_4_8() {
+    let spec = ExploreSpec::new(tiny_space(), &["gcn"], 0.4, 1, 11, 5).unwrap();
+    let mut renders: Vec<String> = Vec::new();
+    for jobs in [1usize, 4, 8] {
+        // Fresh cache per run: cold every time, so this also pins the
+        // cached execution path's worker independence.
+        let engine = Engine::new(jobs).with_cache(Arc::new(UnitCache::new(4096)));
+        let (res, report) = run(&engine, &spec);
+        assert_eq!(res.evaluated.len(), 5);
+        renders.push(report.render_json());
+    }
+    assert_eq!(renders[0], renders[1], "--jobs 1 vs 4 diverged");
+    assert_eq!(renders[0], renders[2], "--jobs 1 vs 8 diverged");
+    // The uncached engine produces the identical frontier (cache off
+    // only drops the unit_cache_* meta annotations).
+    let res_nc = explore(&Engine::new(4), &spec);
+    let report_nc = frontier_report(&spec, &res_nc);
+    let cached = Report::from_json(
+        &tensordash::util::json::Json::parse(&renders[0]).unwrap(),
+    )
+    .unwrap();
+    assert_eq!(report_nc.rows, cached.rows, "cached vs uncached frontier rows diverged");
+}
+
+#[test]
+fn warm_explore_is_byte_identical_to_cold() {
+    let spec = ExploreSpec::new(tiny_space(), &["gcn"], 0.4, 1, 13, 5).unwrap();
+    let cache = Arc::new(UnitCache::new(4096));
+    let engine = Engine::new(4).with_cache(Arc::clone(&cache));
+    let cold = explore(&engine, &spec);
+    let cold_stats = cache.stats();
+    let warm = explore(&engine, &spec);
+    let warm_stats = cache.stats();
+    assert_eq!(
+        frontier_report(&spec, &cold).render_json(),
+        frontier_report(&spec, &warm).render_json(),
+        "warm frontier must be byte-identical to cold"
+    );
+    assert_eq!(
+        warm_stats.inserts, cold_stats.inserts,
+        "a warm run must not compute any new unit"
+    );
+    assert!(warm_stats.hits > cold_stats.hits, "warm run must be served from the cache");
+}
+
+#[test]
+fn explore_report_is_schema_tagged_and_round_trips() {
+    let spec = ExploreSpec::new(tiny_space(), &["gcn"], 0.4, 1, 17, 4).unwrap();
+    let engine = Engine::new(2).with_cache(Arc::new(UnitCache::new(4096)));
+    let (res, report) = run(&engine, &spec);
+    assert_eq!(report.schema, FRONTIER_SCHEMA);
+    assert_eq!(report.rows.len(), res.frontier.len());
+    let parsed =
+        tensordash::util::json::Json::parse(&report.render_json()).expect("frontier json parses");
+    let back = Report::from_json(&parsed).expect("frontier report reconstructs");
+    assert_eq!(back, report);
+    // Text + CSV renderers accept it too.
+    assert!(report.render_text().contains("Pareto frontier"));
+    assert!(report.render_csv().starts_with("config,"));
+    // Every evaluated candidate has a unique content address.
+    let ids: BTreeSet<u64> = res.evaluated.iter().map(|e| e.id).collect();
+    assert_eq!(ids.len(), res.evaluated.len());
+}
+
+// ---------------------------------------------------------------------
+// 3. Fig.-19 cross-check
+// ---------------------------------------------------------------------
+
+#[test]
+fn depth_slice_reproduces_fig19_ordering() {
+    // alexnet at mid-training has real sparsity, so depth 3 (lookahead
+    // 2) must be strictly no slower than depth 2 — the Fig. 19
+    // ordering. The depth-only space makes every evaluation a pair.
+    let mut space = SearchSpace::trivial();
+    space.set_axis("staging_depth", &["2", "3"]).unwrap();
+    let spec = ExploreSpec::new(space, &["alexnet"], 0.4, 2, 42, 2).unwrap();
+    let engine = Engine::new(4).with_cache(Arc::new(UnitCache::new(4096)));
+    let (res, report) = run(&engine, &spec);
+    assert_eq!(res.evaluated.len(), 2);
+    assert_eq!(res.depth_pairs, 1);
+    assert!(res.depth_ordered, "fig-19 gate: depth 3 slower than depth 2");
+    assert_eq!(report.meta.get("depth_ordered").and_then(|j| j.as_f64()), Some(1.0));
+    // The frontier itself orders depth 3 first (fewer TensorDash
+    // cycles is the primary tie-break key).
+    let first = &res.frontier.points()[0];
+    assert!(
+        first.label.contains("staging_depth=3"),
+        "depth 3 should lead the frontier, got '{}'",
+        first.label
+    );
+}
