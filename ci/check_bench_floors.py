@@ -4,6 +4,7 @@ floors committed in ci/bench_floors.json.
 
 Usage:
     python3 ci/check_bench_floors.py BENCH_scheduler.json BENCH_tile.json ...
+    python3 ci/check_bench_floors.py --store experiments.tdstore
 
 Every artifact named on the command line must exist, parse as a
 ``tensordash.bench.v1`` document, and satisfy every floor registered
@@ -16,6 +17,13 @@ for it. Floor kinds:
 
 Patterns are ``fnmatch`` globs. A pattern that matches no record fails
 the gate: renaming a record must not silently remove its floor.
+
+``--store FILE`` reads the bench documents out of a ``.tdstore``
+experiment-store file instead (the record log written by ``tensordash
+store ingest``; format in DESIGN.md §store). Each configured artifact's
+``bench`` field names its record group inside the store; every stored
+document of that bench is held to the artifact's floors.
+
 Exit code 0 = all floors hold; 1 = any violation.
 """
 
@@ -26,6 +34,12 @@ import sys
 
 FLOORS_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)), "bench_floors.json")
 
+STORE_MAGIC = b"TDSTORE1"
+STORE_VERSION = 1
+KIND_RECORD = 1
+KIND_INDEX = 2
+MIN_BODY = 21  # kind u8 + key_hash u64 + key_len u32 + checksum u64
+
 
 def fail(msg: str) -> None:
     print(f"FLOOR VIOLATION: {msg}")
@@ -33,6 +47,51 @@ def fail(msg: str) -> None:
 
 
 fail.count = 0
+
+
+def read_store_docs(path: str) -> list:
+    """Walk a .tdstore record log and return the live stored documents.
+
+    Frame layout (little-endian, see rust/src/store/log.rs): a 16-byte
+    header (magic + version), then u32-length-prefixed frames with body
+    ``kind u8 | key_hash u64 | key_len u32 | key | payload | checksum
+    u64``. Index frames and the trailer are skipped; duplicate keys are
+    last-wins, mirroring the rust reader. A torn tail simply ends the
+    walk — exactly the rust crash-recovery rule.
+    """
+    with open(path, "rb") as f:
+        blob = f.read()
+    if len(blob) < 16 or blob[:8] != STORE_MAGIC:
+        raise SystemExit(f"{path}: not a {STORE_MAGIC.decode()} record log")
+    version = int.from_bytes(blob[8:16], "little")
+    if version != STORE_VERSION:
+        raise SystemExit(f"{path}: unsupported record-log version {version}")
+    by_key = {}
+    pos = 16
+    while pos + 4 <= len(blob):
+        length = int.from_bytes(blob[pos : pos + 4], "little")
+        frame_end = pos + 4 + length
+        if length < MIN_BODY or frame_end > len(blob):
+            break  # trailer or torn tail
+        body = blob[pos + 4 : frame_end]
+        pos = frame_end
+        kind = body[0]
+        if kind == KIND_INDEX:
+            continue
+        if kind != KIND_RECORD:
+            break
+        key_len = int.from_bytes(body[9:13], "little")
+        payload = body[13 + key_len : -8]
+        try:
+            env = json.loads(payload.decode("utf-8"))
+        except (UnicodeDecodeError, ValueError):
+            continue
+        if env.get("schema") != "tensordash.store.v1":
+            continue
+        key = env.get("key")
+        if key is not None and "doc" in env:
+            by_key[key] = env["doc"]  # last-wins, insertion-ordered
+    return list(by_key.values())
 
 
 def records_by_name(doc: dict) -> dict:
@@ -50,37 +109,36 @@ def matching(records: dict, pattern: str) -> list:
     return [records[name] for name in sorted(records) if fnmatch.fnmatch(name, pattern)]
 
 
-def check_artifact(path: str, floors: dict) -> None:
-    with open(path, encoding="utf-8") as f:
-        records = records_by_name(json.load(f))
-    print(f"== {path}: {len(records)} records")
+def check_doc(label: str, doc: dict, floors: dict) -> None:
+    records = records_by_name(doc)
+    print(f"== {label}: {len(records)} records")
     for pattern, floor in sorted(floors.get("min_speedup", {}).items()):
         recs = matching(records, pattern)
         if not recs:
-            fail(f"{path}: no record matches min_speedup pattern '{pattern}'")
+            fail(f"{label}: no record matches min_speedup pattern '{pattern}'")
             continue
         for rec in recs:
             speedup = rec.get("speedup")
             if speedup is None:
-                fail(f"{path}: record '{rec['name']}' has no 'speedup' field")
+                fail(f"{label}: record '{rec['name']}' has no 'speedup' field")
             elif speedup < floor:
-                fail(f"{path}: {rec['name']} speedup {speedup:.3f}x < floor {floor}x")
+                fail(f"{label}: {rec['name']} speedup {speedup:.3f}x < floor {floor}x")
             else:
                 print(f"   ok  {rec['name']}: speedup {speedup:.3f}x >= {floor}x")
     for pattern, spec in sorted(floors.get("min_speedup_per_job", {}).items()):
         recs = matching(records, pattern)
         if not recs:
-            fail(f"{path}: no record matches min_speedup_per_job pattern '{pattern}'")
+            fail(f"{label}: no record matches min_speedup_per_job pattern '{pattern}'")
             continue
         for rec in recs:
             speedup, jobs = rec.get("speedup"), rec.get("jobs")
             if speedup is None or jobs is None:
-                fail(f"{path}: record '{rec['name']}' needs 'speedup' and 'jobs' fields")
+                fail(f"{label}: record '{rec['name']}' needs 'speedup' and 'jobs' fields")
                 continue
             floor = min(spec["cap"], spec["per_job"] * jobs)
             if speedup < floor:
                 fail(
-                    f"{path}: {rec['name']} speedup {speedup:.3f}x < floor {floor:.2f}x "
+                    f"{label}: {rec['name']} speedup {speedup:.3f}x < floor {floor:.2f}x "
                     f"({spec['per_job']}x/job at {jobs:g} jobs, cap {spec['cap']}x)"
                 )
             else:
@@ -88,15 +146,15 @@ def check_artifact(path: str, floors: dict) -> None:
     for pattern, ceiling in sorted(floors.get("max_median_ns", {}).items()):
         recs = matching(records, pattern)
         if not recs:
-            fail(f"{path}: no record matches max_median_ns pattern '{pattern}'")
+            fail(f"{label}: no record matches max_median_ns pattern '{pattern}'")
             continue
         for rec in recs:
             median = rec.get("median_ns")
             if median is None:
-                fail(f"{path}: record '{rec['name']}' has no 'median_ns' field")
+                fail(f"{label}: record '{rec['name']}' has no 'median_ns' field")
             elif median > ceiling:
                 fail(
-                    f"{path}: {rec['name']} median {median / 1e6:.3f} ms "
+                    f"{label}: {rec['name']} median {median / 1e6:.3f} ms "
                     f"> ceiling {ceiling / 1e6:.3f} ms"
                 )
             else:
@@ -104,6 +162,32 @@ def check_artifact(path: str, floors: dict) -> None:
                     f"   ok  {rec['name']}: median {median / 1e6:.3f} ms "
                     f"<= {ceiling / 1e6:.3f} ms"
                 )
+
+
+def check_artifact(path: str, floors: dict) -> None:
+    with open(path, encoding="utf-8") as f:
+        check_doc(path, json.load(f), floors)
+
+
+def check_store(path: str, artifacts: dict) -> None:
+    if not os.path.exists(path):
+        fail(f"store file {path} is missing (ingest did not run or write it)")
+        return
+    docs = read_store_docs(path)
+    bench_docs = [d for d in docs if isinstance(d, dict) and d.get("schema") == "tensordash.bench.v1"]
+    print(f"store {path}: {len(docs)} live records, {len(bench_docs)} bench documents")
+    for name in sorted(artifacts):
+        floors = artifacts[name]
+        bench = floors.get("bench")
+        if bench is None:
+            fail(f"{name}: no 'bench' name in ci/bench_floors.json (needed for --store)")
+            continue
+        matches = [d for d in bench_docs if d.get("bench") == bench]
+        if not matches:
+            fail(f"{path}: no stored bench document named '{bench}' (for {name})")
+            continue
+        for i, doc in enumerate(matches):
+            check_doc(f"{path}[{bench}#{i}]", doc, floors)
 
 
 def main(argv: list) -> int:
@@ -115,16 +199,22 @@ def main(argv: list) -> int:
     if config.get("schema") != "tensordash.benchfloors.v1":
         raise SystemExit(f"unexpected floors schema: {config.get('schema')!r}")
     artifacts = config.get("artifacts", {})
-    for path in argv[1:]:
-        name = os.path.basename(path)
-        if not os.path.exists(path):
-            fail(f"artifact {path} is missing (bench did not run or write it)")
-            continue
-        floors = artifacts.get(name)
-        if floors is None:
-            fail(f"no floors registered for {name} in ci/bench_floors.json")
-            continue
-        check_artifact(path, floors)
+    if argv[1] == "--store":
+        if len(argv) != 3:
+            print(__doc__)
+            return 2
+        check_store(argv[2], artifacts)
+    else:
+        for path in argv[1:]:
+            name = os.path.basename(path)
+            if not os.path.exists(path):
+                fail(f"artifact {path} is missing (bench did not run or write it)")
+                continue
+            floors = artifacts.get(name)
+            if floors is None:
+                fail(f"no floors registered for {name} in ci/bench_floors.json")
+                continue
+            check_artifact(path, floors)
     if fail.count:
         print(f"\n{fail.count} floor violation(s)")
         return 1

@@ -1,0 +1,132 @@
+#!/usr/bin/env python3
+"""Experiment-store e2e smoke test.
+
+Drives the ``store`` subcommand end to end with the release binary:
+
+* simulate the same model at two epochs (standing in for two commits),
+  ingest both JSON reports into one ``.tdstore`` file;
+* ``store query`` returns the catalog and a metric trajectory as
+  parseable ``tensordash.report.v1`` JSON with the expected rows;
+* a repeated query in a *fresh process* is byte-identical on stdout
+  (the store is deterministic across processes, not just in-process);
+* re-ingesting an identical file is idempotent: zero new records and
+  zero file growth;
+* ``store diff`` between the two commits reports per-metric deltas;
+* ingesting a document with an unknown schema fails loudly (typed
+  error, non-zero exit), and querying a missing store file fails
+  instead of creating it.
+
+Usage: python3 ci/store_smoke.py [path/to/tensordash]
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+BIN = sys.argv[1] if len(sys.argv) > 1 else "target/release/tensordash"
+
+
+def run(args, expect_ok=True):
+    """Run the binary, return (stdout, stderr). Asserts the exit code."""
+    proc = subprocess.run(
+        [BIN] + args, capture_output=True, text=True, timeout=600
+    )
+    if expect_ok and proc.returncode != 0:
+        raise SystemExit(
+            f"command {args} exited {proc.returncode}\nstderr:\n{proc.stderr}"
+        )
+    if not expect_ok and proc.returncode == 0:
+        raise SystemExit(f"command {args} unexpectedly succeeded\nstdout:\n{proc.stdout}")
+    return proc.stdout, proc.stderr
+
+
+def reports_of(stdout):
+    """Parse a reportset/report JSON rendering into a list of reports."""
+    doc = json.loads(stdout)
+    if doc.get("schema") == "tensordash.reportset.v1":
+        return doc["reports"]
+    return [doc]
+
+
+def main():
+    tmp = tempfile.mkdtemp(prefix="td_store_smoke_")
+    db = os.path.join(tmp, "experiments.tdstore")
+    sim_a = os.path.join(tmp, "sim_a.json")
+    sim_b = os.path.join(tmp, "sim_b.json")
+
+    # Two runs of the same experiment at different "commits".
+    base = ["simulate", "--model", "gcn", "--samples", "1", "--seed", "42", "--format", "json"]
+    run(base + ["--epoch", "0.1", "--out", sim_a])
+    run(base + ["--epoch", "0.9", "--out", sim_b])
+    print("ok: simulated gcn at two epochs")
+
+    # Ingest both; the second file is a different config hash + commit.
+    _, err = run(["store", "ingest", "--db", db, "--commit", "c1", sim_a])
+    assert "1 new record(s)" in err, f"first ingest not recorded: {err}"
+    _, err = run(["store", "ingest", "--db", db, "--commit", "c2", sim_b])
+    assert "2 total" in err, f"second ingest missing: {err}"
+    print("ok: ingested two commits into one store file")
+
+    # Catalog: one row per record, both commits present.
+    out, _ = run(["store", "query", "--db", db, "--format", "json"])
+    (catalog,) = reports_of(out)
+    assert catalog["id"] == "store_query", catalog["id"]
+    commits = [row["cells"][0]["text"] for row in catalog["rows"]]
+    assert commits == ["c1", "c2"], f"catalog commits: {commits}"
+
+    # Trajectory: the overall speedup of the 'speedup' row across
+    # commits, in ingestion order.
+    traj_cmd = [
+        "store", "query", "--db", db,
+        "--metric", "overall", "--model", "speedup", "--format", "json",
+    ]
+    out, _ = run(traj_cmd)
+    (traj,) = reports_of(out)
+    assert len(traj["rows"]) == 2, f"trajectory rows: {traj['rows']}"
+    values = [row["cells"][3]["value"] for row in traj["rows"]]
+    assert all(v > 1.0 for v in values), f"speedups not extracted: {values}"
+    print(f"ok: trajectory across commits = {values}")
+
+    # Cross-process determinism: a fresh process, byte-identical stdout.
+    repeat, _ = run(traj_cmd)
+    assert repeat == out, "repeated query diverged across processes"
+    print("ok: repeated query byte-identical in a fresh process")
+
+    # Idempotent re-ingest: no new records, no file growth.
+    size_before = os.path.getsize(db)
+    _, err = run(["store", "ingest", "--db", db, "--commit", "c1", sim_a])
+    assert "0 new record(s)" in err, f"re-ingest was not idempotent: {err}"
+    assert os.path.getsize(db) == size_before, "idempotent re-ingest grew the file"
+    print("ok: re-ingest idempotent (0 new records, 0 bytes growth)")
+
+    # Diff: per-metric deltas between the two commits.
+    out, _ = run(["store", "diff", "--db", db, "--id", "simulate",
+                  "--from", "c1", "--to", "c2", "--format", "json"])
+    (diff,) = reports_of(out)
+    assert diff["id"] == "store_diff", diff["id"]
+    assert diff["meta"]["metrics_compared"] > 0, diff["meta"]
+    assert diff["rows"], "diff produced no rows"
+    print(f"ok: diff compared {diff['meta']['metrics_compared']:g} metrics")
+
+    # Unknown schemas are a typed error, not a silent skip.
+    bogus = os.path.join(tmp, "bogus.json")
+    with open(bogus, "w", encoding="utf-8") as f:
+        f.write('{"schema":"tensordash.mystery.v9","rows":[]}\n')
+    _, err = run(["store", "ingest", "--db", db, "--commit", "c3", bogus], expect_ok=False)
+    assert "tensordash.mystery.v9" in err, f"unknown schema not named: {err}"
+    print("ok: unknown schema rejected loudly")
+
+    # Query must not invent a store file.
+    missing = os.path.join(tmp, "nope.tdstore")
+    _, err = run(["store", "query", "--db", missing], expect_ok=False)
+    assert not os.path.exists(missing), "query created a store file"
+    print("ok: query refuses to create a missing store")
+
+    print("store smoke: PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

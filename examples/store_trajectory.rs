@@ -1,0 +1,52 @@
+//! Experiment history in ~40 lines: ingest two "commits" of a figure
+//! into the persistent store, query a metric's trajectory, diff them.
+//!
+//! Simulates alexnet at two training epochs (standing in for the same
+//! experiment re-run at two commits of the repo), ingests both reports
+//! into one single-file record log, then prints:
+//!
+//! * the record catalog,
+//! * the `overall` speedup trajectory across the two commits,
+//! * the per-metric commit-to-commit diff.
+//!
+//! Run: `cargo run --release --example store_trajectory`
+//! (same result as two `tensordash store ingest` runs followed by
+//!  `store query --metric overall` and `store diff`)
+
+use tensordash::api::{Engine, SimRequest};
+use tensordash::config::ChipConfig;
+use tensordash::repro;
+use tensordash::store::{ExperimentStore, QueryFilter};
+use tensordash::util::json::Json;
+
+fn fig13_at(epoch: f64) -> Json {
+    let engine = Engine::parallel();
+    let req = SimRequest::profile("alexnet", epoch, ChipConfig::default(), 1, 42)
+        .expect("known model");
+    let report = repro::fig13(&[engine.run(&req)]);
+    println!("simulated alexnet at epoch {epoch} ({} rows)", report.rows.len());
+    Json::parse(&report.render_json()).expect("report JSON parses")
+}
+
+fn main() {
+    let db = std::env::temp_dir().join(format!("td_trajectory_{}.tdstore", std::process::id()));
+    let _ = std::fs::remove_file(&db);
+
+    // 1. Ingest the same experiment from two points in its history.
+    let mut store = ExperimentStore::open(&db).expect("store opens");
+    store.ingest_json(&fig13_at(0.1), "commit-early").expect("ingest");
+    store.ingest_json(&fig13_at(0.9), "commit-late").expect("ingest");
+    store.commit().expect("fsync + index");
+
+    // 2. Catalog: what the store holds, one row per record.
+    store.query(&QueryFilter::default()).expect("catalog").print();
+
+    // 3. Trajectory: one metric followed across commits.
+    let f = QueryFilter { metric: Some("overall".to_string()), ..QueryFilter::default() };
+    store.query(&f).expect("trajectory").print();
+
+    // 4. Diff: per-metric deltas between the two commits.
+    store.diff("fig13", "commit-early", "commit-late").expect("diff").print();
+
+    let _ = std::fs::remove_file(&db);
+}

@@ -1,0 +1,151 @@
+//! §Perf — warm-starting the unit cache from its store-backed disk
+//! mirror: one indexed record-log file racing a cold recompute.
+//!
+//! PR-6 re-seated the disk mirror on the experiment store's record log
+//! (`rust/src/store/log.rs`): a warm process start opens **one**
+//! compacted, indexed file instead of thousands of per-key files, reads
+//! the frames its lookups need, and skips simulation entirely. Warm and
+//! cold results are asserted **byte-identical** before anything is
+//! timed — the mirror is only worth its disk if it returns exactly what
+//! the cold path computes.
+//!
+//! Emits medians and the warm-over-cold speedup as `BENCH_store.json`
+//! (`$BENCH_OUT` overrides; `tensordash.bench.v1`), which CI archives,
+//! ingests into the experiment store, and gates through
+//! `ci/bench_floors.json`. The bench itself exits non-zero below 2x
+//! warm-over-cold.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use tensordash::api::{default_jobs, Engine, SweepSpec, UnitCache, DEFAULT_CACHE_CAP};
+use tensordash::config::ChipConfig;
+use tensordash::repro::ModelSim;
+use tensordash::util::bench::{bench, section, BenchStats};
+use tensordash::util::json::Json;
+
+fn record(name: &str, s: &BenchStats) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(name.to_string()));
+    m.insert("median_ns".to_string(), Json::Num(s.median_ns));
+    m.insert("mean_ns".to_string(), Json::Num(s.mean_ns));
+    m.insert("min_ns".to_string(), Json::Num(s.min_ns));
+    m.insert("stddev_ns".to_string(), Json::Num(s.stddev_ns));
+    m.insert("iters".to_string(), Json::Num(s.iters as f64));
+    Json::Obj(m)
+}
+
+fn assert_identical(a: &ModelSim, b: &ModelSim, ctx: &str) {
+    assert_eq!(a.per_op, b.per_op, "{ctx}: cycles diverged");
+    assert_eq!(a.sched, b.sched, "{ctx}: telemetry diverged");
+    assert_eq!(
+        a.energy_td.total_pj().to_bits(),
+        b.energy_td.total_pj().to_bits(),
+        "{ctx}: energy bits diverged"
+    );
+    assert_eq!(a.layers, b.layers, "{ctx}: per-unit results diverged");
+}
+
+fn main() {
+    let samples = 2; // keeps a bench iteration in seconds, not minutes
+    let seed = 42;
+    let models = ["alexnet", "gcn"];
+    let cfg = ChipConfig::default();
+    let cells = SweepSpec::models(&models, 0.4, &cfg, samples, seed).cells();
+    let jobs = default_jobs().clamp(2, 8);
+    let dir = std::env::temp_dir().join(format!("td_warmstart_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+
+    section(&format!(
+        "store-backed warm start: {}-model sweep from one record-log file \
+         (samples={samples}, jobs={jobs})",
+        models.len()
+    ));
+
+    // Populate the mirror once; dropping the cache seals the log so
+    // every warm start below reopens on the indexed fast path.
+    let reference = Engine::new(jobs).run_all(&cells);
+    {
+        let cache = Arc::new(UnitCache::new(DEFAULT_CACHE_CAP).with_disk(&dir).unwrap());
+        let populated = Engine::new(jobs).with_cache(Arc::clone(&cache)).run_all(&cells);
+        for (r, p) in reference.iter().zip(&populated) {
+            assert_identical(r, p, &format!("populate {}", r.name));
+        }
+    }
+
+    // Byte-identity first: a fresh process image served purely from the
+    // store file must reproduce the uncached reference bit for bit.
+    let units: usize = reference.iter().map(|m| m.layers.len()).sum();
+    let warm_cache = Arc::new(UnitCache::new(DEFAULT_CACHE_CAP).with_disk(&dir).unwrap());
+    let log = warm_cache.disk_stats().unwrap();
+    assert!(log.fast_path, "sealed mirror must reopen without a scan: {log:?}");
+    let warm_sims = Engine::new(jobs).with_cache(Arc::clone(&warm_cache)).run_all(&cells);
+    for (r, w) in reference.iter().zip(&warm_sims) {
+        assert_identical(r, w, &format!("warm {}", r.name));
+    }
+    let s = warm_cache.stats();
+    assert_eq!(s.disk_hits as usize, units, "every unit must come from the store: {s:?}");
+    assert_eq!(s.misses, 0, "a warm start must not recompute: {s:?}");
+    println!(
+        "  result: {units} units from 1 store file ({} frame reads) — byte-identical to cold",
+        warm_cache.disk_stats().unwrap().reads
+    );
+
+    // Cold: compute everything (fresh memory-only cache per iteration).
+    let cold = bench("store_warmstart_cold", 1, 5, || {
+        let cache = Arc::new(UnitCache::new(DEFAULT_CACHE_CAP));
+        Engine::new(jobs).with_cache(cache).run_all(&cells)
+    });
+    // Warm: a fresh process image per iteration — reopen the store
+    // file, read + decode frames, merge. No simulation.
+    let warm = bench("store_warmstart_warm", 1, 5, || {
+        let cache = Arc::new(UnitCache::new(DEFAULT_CACHE_CAP).with_disk(&dir).unwrap());
+        Engine::new(jobs).with_cache(cache).run_all(&cells)
+    });
+    let speedup = cold.median_ns / warm.median_ns;
+    println!(
+        "  -> warm start {speedup:.2}x faster than cold ({:.1} ms vs {:.1} ms)",
+        warm.median_ns / 1e6,
+        cold.median_ns / 1e6
+    );
+
+    let mut speedup_rec = BTreeMap::new();
+    speedup_rec.insert("name".to_string(), Json::Str("store_warmstart_speedup".to_string()));
+    speedup_rec.insert("cold_median_ns".to_string(), Json::Num(cold.median_ns));
+    speedup_rec.insert("warm_median_ns".to_string(), Json::Num(warm.median_ns));
+    speedup_rec.insert("speedup".to_string(), Json::Num(speedup));
+    speedup_rec.insert("jobs".to_string(), Json::Num(jobs as f64));
+    speedup_rec.insert("units".to_string(), Json::Num(units as f64));
+    speedup_rec.insert("store_files".to_string(), Json::Num(1.0));
+    let records = vec![
+        record("store_warmstart_cold", &cold),
+        record("store_warmstart_warm", &warm),
+        Json::Obj(speedup_rec),
+    ];
+
+    let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_store.json".to_string());
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".to_string(), Json::Str("tensordash.bench.v1".to_string()));
+    doc.insert("bench".to_string(), Json::Str("store_warmstart".to_string()));
+    doc.insert("records".to_string(), Json::Arr(records));
+    let mut text = Json::Obj(doc).render_pretty();
+    text.push('\n');
+    match std::fs::write(&out_path, text.as_bytes()) {
+        Ok(()) => println!("\nwrote {out_path} ({} bytes)", text.len()),
+        Err(e) => eprintln!("\ncould not write {out_path}: {e}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // Acceptance bar (ISSUE 6 / EXPERIMENTS.md §Perf), enforced after
+    // the artifact is on disk so a regressing run is still archived: a
+    // store-backed warm start must be >= 2x faster than recomputing.
+    const WARM_SPEEDUP_GATE: f64 = 2.0;
+    if speedup < WARM_SPEEDUP_GATE {
+        eprintln!(
+            "PERF GATE: store warm-start speedup {speedup:.2}x < {WARM_SPEEDUP_GATE}x — \
+             the record-log mirror stopped paying for itself"
+        );
+        std::process::exit(1);
+    }
+    println!("perf gate passed: warm start {speedup:.2}x >= {WARM_SPEEDUP_GATE}x");
+}

@@ -29,12 +29,16 @@
 //!
 //! The store itself is a mutex-guarded LRU (`cap` entries, stamp-based
 //! eviction, counters for hit/miss/insert/evict/coalesce telemetry)
-//! with an optional on-disk mirror: one pretty-printed JSON document
-//! per unit, named by key hash, carrying the full canonical key so a
-//! (cosmically unlikely) 64-bit hash collision reads as a miss, never
-//! as a wrong answer. In-flight coalescing uses one `OnceLock` per
-//! missing key: concurrent computations of the same unit block on the
-//! first and share its result.
+//! with an optional on-disk mirror backed by the single-file
+//! [`RecordLog`](crate::store::RecordLog) (`units.tdstore` under the
+//! cache directory): entries are keyed by the full canonical key
+//! string, so a (cosmically unlikely) 64-bit hash collision reads as a
+//! miss, never as a wrong answer, and a warm start restores the whole
+//! mirror from one compacted in-file index instead of opening
+//! thousands of per-key files. The mirror is single-writer per file —
+//! one process owns a cache directory at a time. In-flight coalescing
+//! uses one `OnceLock` per missing key: concurrent computations of the
+//! same unit block on the first and share its result.
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
@@ -45,6 +49,7 @@ use crate::conv::{ConvShape, TrainOp};
 use crate::energy::EnergyBreakdown;
 use crate::sim::stream::CacheStats;
 use crate::sim::unit::LayerOpSim;
+use crate::store::{LogStats, RecordLog};
 use crate::util::json::Json;
 
 use super::plan::{UnitSpec, UnitTensors};
@@ -56,8 +61,11 @@ use super::report::Report;
 /// because old entries hash under the old version string.
 pub const UNIT_KEY_VERSION: &str = "tensordash.unitkey.v1";
 
-/// Schema tag of the on-disk per-unit documents.
+/// Schema tag of the per-unit documents in the disk mirror.
 pub const UNIT_CACHE_SCHEMA: &str = "tensordash.unitcache.v1";
+
+/// File name of the record log holding a cache directory's mirror.
+pub const UNIT_CACHE_FILE: &str = "units.tdstore";
 
 /// Default in-memory capacity (units, not bytes — a `LayerOpSim` is a
 /// small `Copy` struct, so 64k entries is a few MiB).
@@ -187,10 +195,6 @@ impl UnitKey {
         UnitKey { hash: fnv1a64(canon.as_bytes()), canon }
     }
 
-    /// File name of this key's on-disk document.
-    pub fn file_name(&self) -> String {
-        format!("unit-{:016x}.json", self.hash)
-    }
 }
 
 // ---------------------------------------------------------------------
@@ -380,7 +384,9 @@ struct Inner {
 #[derive(Debug)]
 pub struct UnitCache {
     cap: usize,
-    disk: Option<PathBuf>,
+    /// The record-log disk mirror. Its own mutex (not `inner`) so disk
+    /// IO never blocks memory lookups on other threads.
+    disk: Option<Mutex<RecordLog>>,
     inner: Mutex<Inner>,
 }
 
@@ -389,13 +395,15 @@ impl UnitCache {
         UnitCache { cap: cap.max(1), disk: None, inner: Mutex::new(Inner::default()) }
     }
 
-    /// Mirror entries to one JSON document per unit under `dir`
-    /// (created if missing). Entries persist across processes; the
+    /// Mirror entries to the `units.tdstore` record log under `dir`
+    /// (created if missing). Entries persist across processes — the
+    /// log is sealed with its in-file index when the cache drops, so
+    /// the next process warm-starts from one indexed file — and the
     /// versioned key makes stale schemas read as misses.
     pub fn with_disk(mut self, dir: impl Into<PathBuf>) -> std::io::Result<UnitCache> {
         let dir = dir.into();
         std::fs::create_dir_all(&dir)?;
-        self.disk = Some(dir);
+        self.disk = Some(Mutex::new(RecordLog::open(dir.join(UNIT_CACHE_FILE))?));
         Ok(self)
     }
 
@@ -413,6 +421,13 @@ impl UnitCache {
 
     pub fn stats(&self) -> UnitCacheStats {
         self.inner.lock().unwrap().stats
+    }
+
+    /// Backend telemetry of the disk mirror (`None` for a memory-only
+    /// cache): whether the last open took the indexed fast path, and
+    /// how many record frames were read/appended through this handle.
+    pub fn disk_stats(&self) -> Option<LogStats> {
+        Some(self.disk.as_ref()?.lock().unwrap().stats())
     }
 
     /// Look one key up, counting a hit or a miss. Memory first, then
@@ -529,29 +544,34 @@ impl UnitCache {
         }
     }
 
+    /// Look `key` up in the record-log mirror. The log stores entries
+    /// under the full canonical key string (and re-verifies it on every
+    /// frame read), so hash collisions and stale key versions both read
+    /// as misses.
     fn disk_load(&self, key: &UnitKey) -> Option<LayerOpSim> {
-        let dir = self.disk.as_ref()?;
-        let text = std::fs::read_to_string(dir.join(key.file_name())).ok()?;
+        let log = self.disk.as_ref()?;
+        let text = log.lock().unwrap().get(&key.canon).ok()??;
         let j = Json::parse(&text).ok()?;
         if j.get("schema")?.as_str()? != UNIT_CACHE_SCHEMA {
-            return None;
-        }
-        if j.get("key")?.as_str()? != key.canon {
             return None;
         }
         unit_from_json(j.get("unit")?)
     }
 
     fn disk_store(&self, key: &UnitKey, sim: &LayerOpSim) {
-        let Some(dir) = &self.disk else { return };
+        let Some(log) = &self.disk else { return };
         let mut m = BTreeMap::new();
         m.insert("schema".to_string(), Json::Str(UNIT_CACHE_SCHEMA.to_string()));
-        m.insert("key".to_string(), Json::Str(key.canon.clone()));
         m.insert("unit".to_string(), unit_to_json(sim));
-        let mut text = Json::Obj(m).render_pretty();
-        text.push('\n');
+        let text = Json::Obj(m).render();
+        let mut g = log.lock().unwrap();
+        // Idempotent: re-computing a unit already mirrored (promotion
+        // races, repeated runs) must not grow the log.
+        if g.get(&key.canon).ok().flatten().as_deref() == Some(text.as_str()) {
+            return;
+        }
         // Best effort: a full disk degrades to a memory-only cache.
-        let _ = std::fs::write(dir.join(key.file_name()), text.as_bytes());
+        let _ = g.append(&key.canon, &text);
     }
 }
 
@@ -707,16 +727,41 @@ mod tests {
             cache.insert(&key, sim);
         }
         let cache = UnitCache::new(8).with_disk(&dir).unwrap();
+        // Warm start restores the mirror's in-file index without a scan.
+        assert!(cache.disk_stats().unwrap().fast_path, "reopen must take the indexed path");
         assert_eq!(cache.lookup(&key), Some(sim), "disk mirror must survive the process");
         let s = cache.stats();
         assert_eq!((s.hits, s.disk_hits, s.disk_misses), (1, 1, 0));
         // Promoted into memory: the second lookup is a pure memory hit.
         assert_eq!(cache.lookup(&key), Some(sim));
         assert_eq!(cache.stats().disk_hits, 1);
-        // Memory-only caches never count disk misses.
+        // The whole mirror is one record log, not per-key files.
+        let files: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
+        assert_eq!(files.len(), 1);
+        assert_eq!(files[0].as_ref().unwrap().file_name(), UNIT_CACHE_FILE);
+        // Memory-only caches never count disk misses (and report no
+        // disk telemetry at all).
         let mem = UnitCache::new(8);
         assert!(mem.lookup(&key).is_none());
         assert_eq!(mem.stats().disk_misses, 0);
+        assert!(mem.disk_stats().is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn disk_store_is_idempotent_per_unit() {
+        let dir = std::env::temp_dir().join(format!("td_unitcache_idem_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (key, sim) = small_unit(13);
+        let cache = UnitCache::new(8).with_disk(&dir).unwrap();
+        cache.insert(&key, sim);
+        cache.insert(&key, sim);
+        cache.insert(&key, sim);
+        assert_eq!(
+            cache.disk_stats().unwrap().appends,
+            1,
+            "re-inserting an identical unit must not grow the log"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

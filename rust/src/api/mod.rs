@@ -50,7 +50,9 @@ pub mod report;
 pub mod request;
 pub mod service;
 
-pub use cache::{UnitCache, UnitCacheStats, UnitKey, DEFAULT_CACHE_CAP, UNIT_KEY_VERSION};
+pub use cache::{
+    UnitCache, UnitCacheStats, UnitKey, DEFAULT_CACHE_CAP, UNIT_CACHE_FILE, UNIT_KEY_VERSION,
+};
 pub use engine::{default_jobs, Engine};
 pub use plan::{layers_report, ModelPlan, UnitSpec, UnitTensors};
 pub use report::{

@@ -12,9 +12,9 @@
 //! * **Protocol** — one JSON object per line in, one JSON object per
 //!   line out (`tensordash.serve.v1`), responses streamed strictly in
 //!   request order. Ops: `simulate`, `sweep`, `trace`, `explore`,
-//!   `batch`, `stats`, `shutdown`. Unknown fields are ignored;
-//!   malformed lines answer `{"ok":false,...}` without killing the
-//!   loop.
+//!   `batch`, `stats`, `store_ingest`, `store_query`, `store_diff`,
+//!   `shutdown`. Unknown fields are ignored; malformed lines answer
+//!   `{"ok":false,...}` without killing the loop.
 //! * **Coalescing** — a `batch` op runs all of its sub-requests
 //!   through *one* engine invocation, so identical units across the
 //!   batch's cells simulate once (deterministically, in the engine's
@@ -30,6 +30,16 @@
 //!   byte-identical to a cold-computed one. Cache telemetry rides in
 //!   the separate `cache` envelope field (counters move between runs
 //!   by design, so they must not — and do not — touch the report).
+//! * **Telemetry** — every handled line records its wall-clock
+//!   duration; the `stats` op reports p50/p99/max percentiles over the
+//!   recorded samples (nearest-rank, so the summary is a deterministic
+//!   function of the durations), letting store-backed serve runs be
+//!   compared across PRs.
+//! * **Store ops** — `store_ingest`/`store_query`/`store_diff` expose
+//!   the [`ExperimentStore`](crate::store::ExperimentStore) over the
+//!   same protocol as the `store` CLI subcommand: ingest response
+//!   reports into an indexed history file, query a metric's trajectory
+//!   across commits, diff two commits' reports or frontiers.
 
 use std::collections::{BTreeMap, HashMap};
 use std::io::{BufRead, BufReader, BufWriter, Write};
@@ -37,11 +47,13 @@ use std::net::{TcpListener, TcpStream};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use crate::config::{ChipConfig, DataType};
 use crate::conv::{ConvShape, TrainOp};
 use crate::repro::{self, ModelSim};
 use crate::search::{self, ExploreSpec, SearchSpace, SPACE_SCHEMA};
+use crate::store::{ExperimentStore, QueryFilter};
 use crate::tensor::TensorBitmap;
 use crate::trace::profiles::ModelProfile;
 use crate::util::json::Json;
@@ -320,6 +332,9 @@ pub struct Service {
     cache: Arc<UnitCache>,
     artifacts: ArtifactStore,
     stop: AtomicBool,
+    /// Wall-clock nanoseconds of every handled line, across all
+    /// connections; the `stats` op summarizes them as percentiles.
+    lat_ns: Mutex<Vec<u64>>,
 }
 
 impl Service {
@@ -331,6 +346,7 @@ impl Service {
             cache,
             artifacts: ArtifactStore::default(),
             stop: AtomicBool::new(false),
+            lat_ns: Mutex::new(Vec::new()),
         }
     }
 
@@ -342,9 +358,18 @@ impl Service {
         &self.cache
     }
 
-    /// Handle one protocol line. Never panics on malformed input; the
-    /// error is reported in-band.
+    /// Handle one protocol line, recording its wall-clock duration for
+    /// the `stats` op's latency summary. Never panics on malformed
+    /// input; the error is reported in-band.
     pub fn handle_line(&self, line: &str) -> Handled {
+        let t0 = Instant::now();
+        let h = self.handle_line_inner(line);
+        let ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+        self.lat_ns.lock().unwrap().push(ns);
+        h
+    }
+
+    fn handle_line_inner(&self, line: &str) -> Handled {
         let j = match Json::parse(line) {
             Ok(j) => j,
             Err(e) => {
@@ -364,6 +389,9 @@ impl Service {
             }
             Some("stats") => Handled { lines: vec![self.stats_line(id)], shutdown: false },
             Some("explore") => Handled { lines: vec![self.explore_line(&j, id)], shutdown: false },
+            Some(op @ ("store_ingest" | "store_query" | "store_diff")) => {
+                Handled { lines: vec![store_line(op, &j, id)], shutdown: false }
+            }
             Some("batch") => {
                 let subs = match j.get("requests").and_then(Json::as_arr) {
                     Some(reqs) => reqs.iter().collect::<Vec<_>>(),
@@ -630,12 +658,35 @@ impl Service {
         Ok((search::frontier_report(&spec, &res), delta.to_json()))
     }
 
+    /// Per-request latency summary over every duration recorded so
+    /// far: count, p50/p99 (nearest-rank: the smallest sample with at
+    /// least p% of samples at or below it — a deterministic function
+    /// of the recorded durations) and max, in nanoseconds.
+    fn latency_json(&self) -> Json {
+        let mut v: Vec<u64> = self.lat_ns.lock().unwrap().clone();
+        v.sort_unstable();
+        let pick = |p: f64| -> f64 {
+            if v.is_empty() {
+                return 0.0;
+            }
+            let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+            v[rank.clamp(1, v.len()) - 1] as f64
+        };
+        let mut m = BTreeMap::new();
+        m.insert("count".to_string(), Json::Num(v.len() as f64));
+        m.insert("p50_ns".to_string(), Json::Num(pick(50.0)));
+        m.insert("p99_ns".to_string(), Json::Num(pick(99.0)));
+        m.insert("max_ns".to_string(), Json::Num(v.last().copied().unwrap_or(0) as f64));
+        Json::Obj(m)
+    }
+
     fn stats_line(&self, id: Option<Json>) -> String {
         let (profiles, traces) = self.artifacts.loaded();
         let mut m = envelope(id);
         m.insert("ok".to_string(), Json::Bool(true));
         m.insert("cache".to_string(), self.cache.stats().to_json());
         m.insert("cache_entries".to_string(), Json::Num(self.cache.len() as f64));
+        m.insert("latency".to_string(), self.latency_json());
         m.insert("profiles_loaded".to_string(), Json::Num(profiles as f64));
         m.insert("traces_loaded".to_string(), Json::Num(traces as f64));
         Json::Obj(m).render()
@@ -758,6 +809,112 @@ fn error_line(id: Option<Json>, msg: &str) -> String {
     m.insert("ok".to_string(), Json::Bool(false));
     m.insert("error".to_string(), Json::Str(msg.to_string()));
     Json::Obj(m).render()
+}
+
+// ---------------------------------------------------------------------
+// Store ops — the ExperimentStore over the serve protocol
+// ---------------------------------------------------------------------
+
+/// Dispatch one `store_*` op. Stateless with respect to the service:
+/// each request opens the store file it names (`db`), so different
+/// requests may address different stores.
+fn store_line(op: &str, j: &Json, id: Option<Json>) -> String {
+    let result = match op {
+        "store_ingest" => store_ingest(j),
+        "store_query" => store_query(j),
+        _ => store_diff(j),
+    };
+    match result {
+        Ok(m) => {
+            let mut env = envelope(id);
+            env.insert("ok".to_string(), Json::Bool(true));
+            env.extend(m);
+            Json::Obj(env).render()
+        }
+        Err(msg) => error_line(id, &msg),
+    }
+}
+
+/// Open the store file named by the request's `db` field. Query/diff
+/// refuse to invent an empty store from a mistyped path; only ingest
+/// creates the file.
+fn open_store(j: &Json, create: bool) -> Result<ExperimentStore, String> {
+    let db = j.get("db").and_then(Json::as_str).ok_or("store ops need a 'db' file path")?;
+    if !create && !Path::new(db).exists() {
+        return Err(format!("store file '{db}' does not exist"));
+    }
+    ExperimentStore::open(db).map_err(|e| e.to_string())
+}
+
+/// `store_ingest`: `{op, db, commit, files: [path...]}` and/or an
+/// inline `doc`. Responds with how many records were written (0 =
+/// everything already stored byte-identically).
+fn store_ingest(j: &Json) -> Result<BTreeMap<String, Json>, String> {
+    let mut store = open_store(j, true)?;
+    let commit = j
+        .get("commit")
+        .and_then(Json::as_str)
+        .ok_or("'store_ingest' needs a 'commit' string")?
+        .to_string();
+    let mut written = 0usize;
+    let mut files = 0usize;
+    if let Some(v) = j.get("files") {
+        for f in v.as_arr().ok_or("'files' must be an array of paths")? {
+            let path = f.as_str().ok_or("'files' must contain path strings")?;
+            written += store.ingest_file(path, &commit).map_err(|e| e.to_string())?;
+            files += 1;
+        }
+    }
+    if let Some(doc) = j.get("doc") {
+        written += store.ingest_json(doc, &commit).map_err(|e| e.to_string())?;
+    } else if files == 0 {
+        return Err("'store_ingest' needs 'files' and/or an inline 'doc'".to_string());
+    }
+    store.commit().map_err(|e| e.to_string())?;
+    let mut m = BTreeMap::new();
+    m.insert("ingested".to_string(), Json::Num(written as f64));
+    m.insert("files".to_string(), Json::Num(files as f64));
+    m.insert("records".to_string(), Json::Num(store.len() as f64));
+    Ok(m)
+}
+
+/// `store_query`: `{op, db, schema?, figure?, commit?, model?,
+/// metric?}` — the record catalog, or with `metric` the metric's
+/// trajectory across commits. The response report renders through the
+/// ordinary Report pipeline, byte-deterministically.
+fn store_query(j: &Json) -> Result<BTreeMap<String, Json>, String> {
+    let mut store = open_store(j, false)?;
+    let field = |k: &str| j.get(k).and_then(Json::as_str).map(str::to_string);
+    let filter = QueryFilter {
+        schema: field("schema"),
+        id: field("figure"),
+        commit: field("commit"),
+        model: field("model"),
+        metric: field("metric"),
+    };
+    let report = store.query(&filter).map_err(|e| e.to_string())?;
+    let mut m = BTreeMap::new();
+    m.insert("report".to_string(), report.to_json());
+    Ok(m)
+}
+
+/// `store_diff`: `{op, db, figure, from, to}` — compare one document
+/// between two commits (per-metric deltas, or Pareto-dominance
+/// classification for frontiers).
+fn store_diff(j: &Json) -> Result<BTreeMap<String, Json>, String> {
+    let mut store = open_store(j, false)?;
+    let need = |k: &str| -> Result<String, String> {
+        j.get(k)
+            .and_then(Json::as_str)
+            .map(str::to_string)
+            .ok_or_else(|| format!("'store_diff' needs a '{k}' string"))
+    };
+    let report = store
+        .diff(&need("figure")?, &need("from")?, &need("to")?)
+        .map_err(|e| e.to_string())?;
+    let mut m = BTreeMap::new();
+    m.insert("report".to_string(), report.to_json());
+    Ok(m)
 }
 
 #[cfg(test)]
@@ -907,6 +1064,69 @@ mod tests {
         let bad = s.handle_line(r#"{"op":"explore","id":9}"#);
         let j = Json::parse(&bad.lines[0]).unwrap();
         assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+    }
+
+    #[test]
+    fn stats_reports_deterministic_latency_percentiles() {
+        let s = service(1);
+        // Record a few cheap requests, then read the summary.
+        s.handle_line(r#"{"op":"stats"}"#);
+        s.handle_line(r#"{"op":"stats"}"#);
+        s.handle_line(r#"{"op":"stats"}"#);
+        let h = s.handle_line(r#"{"op":"stats","id":"s"}"#);
+        let j = Json::parse(&h.lines[0]).unwrap();
+        let lat = j.get("latency").expect("stats carries a latency block");
+        assert_eq!(lat.get("count").unwrap().as_f64(), Some(3.0));
+        let p50 = lat.get("p50_ns").unwrap().as_f64().unwrap();
+        let p99 = lat.get("p99_ns").unwrap().as_f64().unwrap();
+        let max = lat.get("max_ns").unwrap().as_f64().unwrap();
+        assert!(p50 <= p99 && p99 <= max, "percentiles must be ordered: {p50} {p99} {max}");
+        assert!(max > 0.0, "a handled line takes nonzero time");
+    }
+
+    #[test]
+    fn store_ops_ingest_query_and_diff_over_the_protocol() {
+        let name = format!("td_serve_store_{}.tdstore", std::process::id());
+        let db = std::env::temp_dir().join(name);
+        let _ = std::fs::remove_file(&db);
+        let s = service(1);
+        let mut fig = Report::new("fig13", "Demo", &["model", "overall"]);
+        fig.row(vec![Cell::text("alexnet"), Cell::num(2.0)]);
+        let doc1 = fig.to_json().render();
+        let mut fig2 = Report::new("fig13", "Demo", &["model", "overall"]);
+        fig2.row(vec![Cell::text("alexnet"), Cell::num(2.5)]);
+        let doc2 = fig2.to_json().render();
+        let db_s = db.display();
+        for (commit, doc) in [("c1", &doc1), ("c2", &doc2)] {
+            let line = format!(
+                r#"{{"op":"store_ingest","db":"{db_s}","commit":"{commit}","doc":{doc}}}"#
+            );
+            let h = s.handle_line(&line);
+            let j = Json::parse(&h.lines[0]).unwrap();
+            assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{}", h.lines[0]);
+            assert_eq!(j.get("ingested").unwrap().as_f64(), Some(1.0));
+        }
+        // Trajectory query: both commits' values in ingestion order.
+        let q = format!(r#"{{"op":"store_query","db":"{db_s}","metric":"overall"}}"#);
+        let h = s.handle_line(&q);
+        let r = Report::from_json(Json::parse(&h.lines[0]).unwrap().get("report").unwrap())
+            .expect("query report reconstructs");
+        assert_eq!(r.rows.len(), 2);
+        assert_eq!(r.value(0, "overall"), Some(2.0));
+        assert_eq!(r.value(1, "overall"), Some(2.5));
+        // Diff between the two commits.
+        let d = format!(
+            r#"{{"op":"store_diff","db":"{db_s}","figure":"fig13","from":"c1","to":"c2"}}"#
+        );
+        let h = s.handle_line(&d);
+        let r = Report::from_json(Json::parse(&h.lines[0]).unwrap().get("report").unwrap())
+            .expect("diff report reconstructs");
+        assert_eq!(r.value(0, "delta"), Some(0.5));
+        // Query on a missing store answers in-band, creating nothing.
+        let missing = s.handle_line(r#"{"op":"store_query","db":"/nonexistent/x.tdstore"}"#);
+        let j = Json::parse(&missing.lines[0]).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        let _ = std::fs::remove_file(&db);
     }
 
     #[test]

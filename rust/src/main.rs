@@ -8,6 +8,9 @@
 //!   serve     persistent JSON-lines simulation service (stdin/stdout
 //!             or --listen TCP) over a shared content-addressed unit
 //!             cache with batched request coalescing
+//!   store     persistent experiment store: ingest report/bench JSON
+//!             into a single indexed record-log file, query metric
+//!             trajectories across commits, diff two commits
 //!   info      print configuration + area model summary
 //!
 //! Every result is built as a structured `api::Report` first; `--format`
@@ -32,10 +35,11 @@ use tensordash::coordinator::Trainer;
 use tensordash::repro;
 use tensordash::runtime::Runtime;
 use tensordash::search::{self, ExploreSpec, SearchSpace};
+use tensordash::store::{registered_schemas, ExperimentStore, QueryFilter};
 use tensordash::util::cli::Args;
 use tensordash::util::json::Json;
 
-const USAGE: &str = "usage: tensordash <repro|simulate|train|explore|serve|info> [options]
+const USAGE: &str = "usage: tensordash <repro|simulate|train|explore|serve|store|info> [options]
   repro    --all | --fig <1|13|14|15|16|17|18|19|20|gcn|ablations>
            | --table <3|bf16>  [--samples N] [--seed S]
   simulate --model <name> [--epoch F] [--samples N] [--seed S]
@@ -57,11 +61,26 @@ const USAGE: &str = "usage: tensordash <repro|simulate|train|explore|serve|info>
            JSON-lines loop (tensordash.serve.v1): one request object per
            line on stdin (or per TCP connection with --listen), one
            response per line in request order. Ops: simulate, sweep,
-           trace, explore, batch, stats, shutdown. Identical units
-           across a batch coalesce onto one computation.
+           trace, explore, batch, stats, store_ingest, store_query,
+           store_diff, shutdown. Identical units across a batch
+           coalesce onto one computation.
+  store    ingest --db FILE --commit ID file.json [file2.json ...]
+           | query --db FILE [--schema S] [--id R] [--commit C]
+                   [--model M] [--metric COL]
+           | diff --db FILE --id R --from C1 --to C2
+           | compact --db FILE
+           single-file indexed experiment history (crash-safe record
+           log, no external DB). ingest stores report/layers/frontier/
+           bench JSON keyed by (commit, config hash, seed, schema) and
+           is idempotent; query prints the record catalog, or with
+           --metric one metric's trajectory across commits; diff
+           compares two commits' reports (per-metric deltas) or
+           frontiers (added/kept/removed/newly-dominated points);
+           compact rewrites the log keeping only live records. Run
+           `info` for the registered schema list
   info
 
-report options (repro, simulate, train, explore):
+report options (repro, simulate, train, explore, store query/diff):
   --format table|json|csv   renderer (default table). json emits the
                             tensordash.report.v1 schema; several reports
                             nest in one tensordash.reportset.v1 document
@@ -96,6 +115,7 @@ fn main() {
         "train" => cmd_train(&args),
         "explore" => cmd_explore(&args),
         "serve" => cmd_serve(&args),
+        "store" => cmd_store(&args),
         "info" => cmd_info(&args),
         other => {
             eprintln!("unknown command '{other}'\n{USAGE}");
@@ -537,6 +557,84 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Open an existing store file. `query`/`diff`/`compact` must never
+/// create one — a typo'd --db should fail fast, not mint an empty
+/// database; only `ingest` creates.
+fn open_store(db: &str) -> Result<ExperimentStore> {
+    if !std::path::Path::new(db).exists() {
+        anyhow::bail!("store {db} does not exist (run `store ingest` first)");
+    }
+    Ok(ExperimentStore::open(db)?)
+}
+
+fn cmd_store(args: &Args) -> Result<()> {
+    let sub = args.positional.get(1).map(String::as_str).unwrap_or("");
+    let db = args
+        .get("db")
+        .ok_or_else(|| anyhow::anyhow!("store needs --db FILE (the record-log file)"))?;
+    match sub {
+        "ingest" => {
+            let commit = args
+                .get("commit")
+                .ok_or_else(|| anyhow::anyhow!("store ingest needs --commit ID"))?;
+            let files = &args.positional[2..];
+            if files.is_empty() {
+                anyhow::bail!("store ingest needs at least one report/bench JSON file");
+            }
+            let mut store = ExperimentStore::open(db)?;
+            let mut written = 0usize;
+            for f in files {
+                written += store
+                    .ingest_file(f, commit)
+                    .map_err(|e| anyhow::anyhow!("ingesting {f}: {e}"))?;
+            }
+            // Seal: fsync + write the in-file index so the next open
+            // takes the fast path.
+            store.commit()?;
+            eprintln!(
+                "store: ingested {} file(s) at commit {commit} — {written} new record(s), \
+                 {} total in {db}",
+                files.len(),
+                store.len()
+            );
+            Ok(())
+        }
+        "query" => {
+            let mut store = open_store(db)?;
+            let filter = QueryFilter {
+                schema: args.get("schema").map(str::to_string),
+                id: args.get("id").map(str::to_string),
+                commit: args.get("commit").map(str::to_string),
+                model: args.get("model").map(str::to_string),
+                metric: args.get("metric").map(str::to_string),
+            };
+            let report = store.query(&filter)?;
+            emit(&[report], args)
+        }
+        "diff" => {
+            let id = args.get("id").ok_or_else(|| anyhow::anyhow!("store diff needs --id R"))?;
+            let from =
+                args.get("from").ok_or_else(|| anyhow::anyhow!("store diff needs --from C1"))?;
+            let to = args.get("to").ok_or_else(|| anyhow::anyhow!("store diff needs --to C2"))?;
+            let mut store = open_store(db)?;
+            let report = store.diff(id, from, to)?;
+            emit(&[report], args)
+        }
+        "compact" => {
+            let before = std::fs::metadata(db).map(|m| m.len()).unwrap_or(0);
+            let mut store = open_store(db)?;
+            store.compact()?;
+            let after = std::fs::metadata(db).map(|m| m.len()).unwrap_or(0);
+            eprintln!(
+                "store: compacted {db} — {before} -> {after} bytes, {} live record(s)",
+                store.len()
+            );
+            Ok(())
+        }
+        other => anyhow::bail!("unknown store subcommand '{other}' (ingest|query|diff|compact)"),
+    }
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
     let cfg = chip_from_args(args)?;
     println!("TensorDash reproduction — configuration (paper Table 2 defaults)");
@@ -556,6 +654,13 @@ fn cmd_info(args: &Args) -> Result<()> {
             axis.values[0],
             search::axis_bounds(&axis.name)
         );
+    }
+    // The experiment store's contract: every schema `store ingest`
+    // accepts (alias = what `store query --schema` takes) and the
+    // record-key tuple that deduplicates runs.
+    println!("\nstore schemas (records keyed by commit, config hash, seed, schema):");
+    for (alias, tag) in registered_schemas() {
+        println!("  {alias:<10} {tag}");
     }
     Ok(())
 }

@@ -97,6 +97,68 @@ impl Frontier {
     }
 }
 
+/// Classification of one design point when comparing two frontiers
+/// (the `store diff` path over `tensordash.frontier.v1` documents).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DiffStatus {
+    /// Present in the newer frontier only.
+    Added,
+    /// Present in both frontiers (same config label).
+    Kept,
+    /// Dropped from the newer frontier without being dominated by any
+    /// of its points (e.g. the search space no longer reaches it).
+    Removed,
+    /// Dropped from the newer frontier *because* some newer point
+    /// strictly dominates it — the frontier genuinely moved.
+    NewlyDominated,
+}
+
+impl DiffStatus {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DiffStatus::Added => "added",
+            DiffStatus::Kept => "kept",
+            DiffStatus::Removed => "removed",
+            DiffStatus::NewlyDominated => "newly-dominated",
+        }
+    }
+}
+
+/// Compare two frontiers given as `(config label, score)` lists.
+///
+/// Points are matched by config label. The result lists every point of
+/// `to` in its order (classified [`DiffStatus::Added`] or
+/// [`DiffStatus::Kept`]), followed by the points only in `from` in
+/// their order (classified [`DiffStatus::NewlyDominated`] when some
+/// `to` point strictly dominates them, else [`DiffStatus::Removed`]).
+/// Pure and order-stable, so diff reports are byte-deterministic.
+pub fn diff_points(
+    from: &[(String, Score)],
+    to: &[(String, Score)],
+) -> Vec<(String, Score, DiffStatus)> {
+    let mut out = Vec::with_capacity(from.len() + to.len());
+    for (label, score) in to {
+        let status = if from.iter().any(|(l, _)| l == label) {
+            DiffStatus::Kept
+        } else {
+            DiffStatus::Added
+        };
+        out.push((label.clone(), *score, status));
+    }
+    for (label, score) in from {
+        if to.iter().any(|(l, _)| l == label) {
+            continue;
+        }
+        let status = if to.iter().any(|(_, s)| s.dominates(score)) {
+            DiffStatus::NewlyDominated
+        } else {
+            DiffStatus::Removed
+        };
+        out.push((label.clone(), *score, status));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

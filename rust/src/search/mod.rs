@@ -39,6 +39,6 @@ pub mod objective;
 pub mod space;
 
 pub use explore::{default_population, explore, frontier_report, run, ExploreResult, ExploreSpec};
-pub use frontier::{Evaluated, Frontier};
+pub use frontier::{diff_points, DiffStatus, Evaluated, Frontier};
 pub use objective::{score_sims, Score, ScoreDetail};
 pub use space::{axis_bounds, Axis, Candidate, SearchSpace, AXIS_NAMES, SPACE_SCHEMA};

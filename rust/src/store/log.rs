@@ -1,0 +1,683 @@
+//! Single-file, append-friendly record log with an in-file index.
+//!
+//! The disk format backing both the experiment store
+//! ([`super::ExperimentStore`]) and the unit cache's disk mirror
+//! ([`crate::api::cache::UnitCache`]). One file, no external DB:
+//!
+//! ```text
+//!   header   "TDSTORE1" (8B) | version u64 LE (8B)
+//!   frame*   body_len u32 LE | body
+//!   body     kind u8 | key_hash u64 LE | key_len u32 LE | key bytes
+//!            | payload bytes | checksum u64 LE
+//!   [index frame  kind=2, key empty, payload = entry table]
+//!   [trailer      index_offset u64 LE (8B) | "TDINDEX1" (8B)]
+//! ```
+//!
+//! * `checksum` is FNV-1a ([`crate::util::hash::fnv1a64`]) over the
+//!   body bytes before it, so torn tail writes are detected.
+//! * Records are last-wins per key; re-appending a key replaces its
+//!   value while keeping the key's original position in iteration
+//!   order, so reads stay deterministic across updates.
+//! * [`RecordLog::seal`] writes an index frame (the live entry table)
+//!   plus a fixed-size trailer pointing at it; the next
+//!   [`RecordLog::open`] then restores the index from that one frame
+//!   without scanning — the compacted warm-start path. Appending to a
+//!   sealed file first truncates the stale index + trailer.
+//! * **Crash safety is recovery by tail truncation**: opening a file
+//!   without a valid trailer scans frame-by-frame, drops everything
+//!   from the first torn/corrupt frame onward (`set_len`), and keeps
+//!   every intact record before it. Committed prefixes survive;
+//!   half-written tails never alias as data.
+//! * [`RecordLog::compact`] rewrites only the live frames (dropping
+//!   superseded versions) into a fresh sealed file and atomically
+//!   renames it over the old one.
+
+use std::collections::HashMap;
+use std::fs::{File, OpenOptions};
+use std::io::{self, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::util::hash::fnv1a64;
+
+/// File magic: first 8 bytes of every record-log file.
+pub const LOG_MAGIC: &[u8; 8] = b"TDSTORE1";
+/// Trailer magic: last 8 bytes of a sealed file.
+pub const TRAILER_MAGIC: &[u8; 8] = b"TDINDEX1";
+/// On-disk format version (bump on any layout change).
+pub const LOG_VERSION: u64 = 1;
+
+const HEADER_LEN: u64 = 16;
+const TRAILER_LEN: u64 = 16;
+const KIND_RECORD: u8 = 1;
+const KIND_INDEX: u8 = 2;
+/// Smallest legal body: kind + key_hash + key_len + checksum.
+const MIN_BODY: u32 = 21;
+/// Upper bound keeps a corrupt length field from allocating wild.
+const MAX_BODY: u32 = 1 << 30;
+
+/// Open/read/append telemetry of one log handle — the evidence behind
+/// "one compacted index instead of thousands of per-key files".
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LogStats {
+    /// The open restored the index from the sealed trailer (no scan).
+    pub fast_path: bool,
+    /// Frames walked by the scanning open path (0 on the fast path).
+    pub frames_scanned: u64,
+    /// Bytes dropped by crash recovery (torn/corrupt tail).
+    pub truncated_bytes: u64,
+    /// Record frames read back (`get`/`records`).
+    pub reads: u64,
+    /// Record frames appended through this handle.
+    pub appends: u64,
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    key: String,
+    offset: u64,
+}
+
+/// A single-file keyed record log. All operations go through one file
+/// handle; callers needing sharing wrap it in a `Mutex`.
+#[derive(Debug)]
+pub struct RecordLog {
+    path: PathBuf,
+    file: File,
+    /// End of record data: the next append goes here; a sealed index
+    /// frame + trailer, when present, sit at this offset.
+    data_end: u64,
+    /// The file currently ends with a valid index frame + trailer.
+    indexed: bool,
+    /// Records were appended since the last seal.
+    dirty: bool,
+    /// Live entries in first-insertion order (last-wins offsets).
+    entries: Vec<Entry>,
+    by_key: HashMap<String, usize>,
+    stats: LogStats,
+}
+
+fn corrupt(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+fn u32_at(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes(b[off..off + 4].try_into().expect("4 bytes"))
+}
+
+fn u64_at(b: &[u8], off: usize) -> u64 {
+    u64::from_le_bytes(b[off..off + 8].try_into().expect("8 bytes"))
+}
+
+/// Encode one frame (length prefix + body + checksum).
+fn encode_frame(kind: u8, key: &[u8], payload: &[u8]) -> Vec<u8> {
+    let body_len = 1 + 8 + 4 + key.len() + payload.len() + 8;
+    let mut out = Vec::with_capacity(4 + body_len);
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+    out.push(kind);
+    out.extend_from_slice(&fnv1a64(key).to_le_bytes());
+    out.extend_from_slice(&(key.len() as u32).to_le_bytes());
+    out.extend_from_slice(key);
+    out.extend_from_slice(payload);
+    let sum = fnv1a64(&out[4..4 + body_len - 8]);
+    out.extend_from_slice(&sum.to_le_bytes());
+    out
+}
+
+/// A validated, decoded frame body.
+struct Frame {
+    kind: u8,
+    key: String,
+    payload: Vec<u8>,
+}
+
+/// Decode + validate one frame body (everything after the length
+/// prefix). Returns `None` on any integrity failure.
+fn decode_body(body: &[u8]) -> Option<Frame> {
+    if body.len() < MIN_BODY as usize {
+        return None;
+    }
+    let sum_off = body.len() - 8;
+    if u64_at(body, sum_off) != fnv1a64(&body[..sum_off]) {
+        return None;
+    }
+    let kind = body[0];
+    if kind != KIND_RECORD && kind != KIND_INDEX {
+        return None;
+    }
+    let key_hash = u64_at(body, 1);
+    let key_len = u32_at(body, 9) as usize;
+    if 13 + key_len > sum_off {
+        return None;
+    }
+    let key = std::str::from_utf8(&body[13..13 + key_len]).ok()?;
+    if fnv1a64(key.as_bytes()) != key_hash {
+        return None;
+    }
+    Some(Frame {
+        kind,
+        key: key.to_string(),
+        payload: body[13 + key_len..sum_off].to_vec(),
+    })
+}
+
+impl RecordLog {
+    /// Open (or create) the log at `path`. A sealed file restores its
+    /// index from the trailer; anything else is scanned with crash
+    /// recovery by tail truncation.
+    pub fn open(path: impl AsRef<Path>) -> io::Result<RecordLog> {
+        let path = path.as_ref().to_path_buf();
+        let file = OpenOptions::new().read(true).write(true).create(true).open(&path)?;
+        let file_len = file.metadata()?.len();
+        let mut log = RecordLog {
+            path,
+            file,
+            data_end: HEADER_LEN,
+            indexed: false,
+            dirty: false,
+            entries: Vec::new(),
+            by_key: HashMap::new(),
+            stats: LogStats::default(),
+        };
+        if file_len == 0 {
+            let mut header = Vec::with_capacity(HEADER_LEN as usize);
+            header.extend_from_slice(LOG_MAGIC);
+            header.extend_from_slice(&LOG_VERSION.to_le_bytes());
+            log.file.write_all(&header)?;
+            log.file.sync_all()?;
+            return Ok(log);
+        }
+        if file_len < HEADER_LEN {
+            return Err(corrupt(format!("{}: shorter than the header", log.path.display())));
+        }
+        let mut header = [0u8; HEADER_LEN as usize];
+        log.read_at(0, &mut header)?;
+        if &header[..8] != LOG_MAGIC {
+            return Err(corrupt(format!("{}: not a record log (bad magic)", log.path.display())));
+        }
+        let version = u64_at(&header, 8);
+        if version != LOG_VERSION {
+            return Err(corrupt(format!(
+                "{}: unsupported log version {version} (expected {LOG_VERSION})",
+                log.path.display()
+            )));
+        }
+        if log.load_indexed(file_len)? {
+            log.stats.fast_path = true;
+        } else {
+            log.scan(file_len)?;
+        }
+        Ok(log)
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn stats(&self) -> LogStats {
+        self.stats
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.by_key.contains_key(key)
+    }
+
+    /// Live keys in first-insertion order.
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.iter().map(|e| e.key.as_str())
+    }
+
+    /// The latest payload stored under `key`, checksum-verified.
+    pub fn get(&mut self, key: &str) -> io::Result<Option<String>> {
+        let Some(&i) = self.by_key.get(key) else {
+            return Ok(None);
+        };
+        let offset = self.entries[i].offset;
+        let frame = self.read_frame(offset)?;
+        if frame.key != key {
+            return Err(corrupt(format!(
+                "{}: index points key '{key}' at a frame holding '{}'",
+                self.path.display(),
+                frame.key
+            )));
+        }
+        self.stats.reads += 1;
+        let payload = String::from_utf8(frame.payload)
+            .map_err(|_| corrupt(format!("{}: non-utf8 payload for '{key}'", self.path.display())))?;
+        Ok(Some(payload))
+    }
+
+    /// Every live (key, payload) pair in first-insertion order.
+    pub fn records(&mut self) -> io::Result<Vec<(String, String)>> {
+        let offsets: Vec<u64> = self.entries.iter().map(|e| e.offset).collect();
+        let mut out = Vec::with_capacity(offsets.len());
+        for offset in offsets {
+            let frame = self.read_frame(offset)?;
+            self.stats.reads += 1;
+            let payload = String::from_utf8(frame.payload)
+                .map_err(|_| corrupt(format!("{}: non-utf8 payload", self.path.display())))?;
+            out.push((frame.key, payload));
+        }
+        Ok(out)
+    }
+
+    /// Append (or replace) `key` -> `payload`. The write lands in the
+    /// OS immediately; durability comes from [`RecordLog::commit`] /
+    /// [`RecordLog::seal`].
+    pub fn append(&mut self, key: &str, payload: &str) -> io::Result<()> {
+        if self.indexed {
+            // Drop the stale tail index + trailer; records stay put.
+            self.file.set_len(self.data_end)?;
+            self.indexed = false;
+        }
+        let frame = encode_frame(KIND_RECORD, key.as_bytes(), payload.as_bytes());
+        self.file.seek(SeekFrom::Start(self.data_end))?;
+        self.file.write_all(&frame)?;
+        self.remember(key.to_string(), self.data_end);
+        self.data_end += frame.len() as u64;
+        self.dirty = true;
+        self.stats.appends += 1;
+        Ok(())
+    }
+
+    /// fsync the file: every appended record is durable afterwards.
+    pub fn commit(&mut self) -> io::Result<()> {
+        self.file.sync_all()
+    }
+
+    /// Write the index frame + trailer and fsync. The next open takes
+    /// the no-scan fast path. Idempotent on an already-sealed file.
+    pub fn seal(&mut self) -> io::Result<()> {
+        if self.indexed {
+            return self.commit();
+        }
+        let payload = self.index_payload();
+        let frame = encode_frame(KIND_INDEX, b"", &payload);
+        self.file.seek(SeekFrom::Start(self.data_end))?;
+        self.file.write_all(&frame)?;
+        let mut trailer = Vec::with_capacity(TRAILER_LEN as usize);
+        trailer.extend_from_slice(&self.data_end.to_le_bytes());
+        trailer.extend_from_slice(TRAILER_MAGIC);
+        self.file.write_all(&trailer)?;
+        self.file.sync_all()?;
+        self.indexed = true;
+        self.dirty = false;
+        Ok(())
+    }
+
+    /// Rewrite only the live frames (dropping superseded record
+    /// versions) into a fresh sealed file, then atomically rename it
+    /// over this one.
+    pub fn compact(&mut self) -> io::Result<()> {
+        let records = self.records()?;
+        let tmp = self.path.with_extension("tdstore.tmp");
+        let mut entries = Vec::with_capacity(records.len());
+        let mut data_end = HEADER_LEN;
+        {
+            let mut f = File::create(&tmp)?;
+            let mut header = Vec::with_capacity(HEADER_LEN as usize);
+            header.extend_from_slice(LOG_MAGIC);
+            header.extend_from_slice(&LOG_VERSION.to_le_bytes());
+            f.write_all(&header)?;
+            for (key, payload) in &records {
+                let frame = encode_frame(KIND_RECORD, key.as_bytes(), payload.as_bytes());
+                f.write_all(&frame)?;
+                entries.push(Entry { key: key.clone(), offset: data_end });
+                data_end += frame.len() as u64;
+            }
+            let mut payload = Vec::new();
+            payload.extend_from_slice(&(entries.len() as u64).to_le_bytes());
+            for e in &entries {
+                payload.extend_from_slice(&fnv1a64(e.key.as_bytes()).to_le_bytes());
+                payload.extend_from_slice(&e.offset.to_le_bytes());
+                payload.extend_from_slice(&(e.key.len() as u32).to_le_bytes());
+                payload.extend_from_slice(e.key.as_bytes());
+            }
+            let frame = encode_frame(KIND_INDEX, b"", &payload);
+            f.write_all(&frame)?;
+            let mut trailer = Vec::with_capacity(TRAILER_LEN as usize);
+            trailer.extend_from_slice(&data_end.to_le_bytes());
+            trailer.extend_from_slice(TRAILER_MAGIC);
+            f.write_all(&trailer)?;
+            f.sync_all()?;
+        }
+        std::fs::rename(&tmp, &self.path)?;
+        self.file = OpenOptions::new().read(true).write(true).open(&self.path)?;
+        self.by_key = entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (e.key.clone(), i))
+            .collect();
+        self.entries = entries;
+        self.data_end = data_end;
+        self.indexed = true;
+        self.dirty = false;
+        Ok(())
+    }
+
+    // -- internals ----------------------------------------------------
+
+    fn read_at(&mut self, offset: u64, buf: &mut [u8]) -> io::Result<()> {
+        self.file.seek(SeekFrom::Start(offset))?;
+        self.file.read_exact(buf)
+    }
+
+    /// Read and validate the frame starting at `offset`.
+    fn read_frame(&mut self, offset: u64) -> io::Result<Frame> {
+        let mut len_buf = [0u8; 4];
+        self.read_at(offset, &mut len_buf)?;
+        let body_len = u32::from_le_bytes(len_buf);
+        if !(MIN_BODY..=MAX_BODY).contains(&body_len) {
+            return Err(corrupt(format!(
+                "{}: bad frame length {body_len} at offset {offset}",
+                self.path.display()
+            )));
+        }
+        let mut body = vec![0u8; body_len as usize];
+        self.read_at(offset + 4, &mut body)?;
+        decode_body(&body).ok_or_else(|| {
+            corrupt(format!("{}: corrupt frame at offset {offset}", self.path.display()))
+        })
+    }
+
+    fn remember(&mut self, key: String, offset: u64) {
+        match self.by_key.get(&key) {
+            // Last-wins value, first-insertion position.
+            Some(&i) => self.entries[i].offset = offset,
+            None => {
+                self.entries.push(Entry { key: key.clone(), offset });
+                self.by_key.insert(key, self.entries.len() - 1);
+            }
+        }
+    }
+
+    fn index_payload(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(&(self.entries.len() as u64).to_le_bytes());
+        for e in &self.entries {
+            out.extend_from_slice(&fnv1a64(e.key.as_bytes()).to_le_bytes());
+            out.extend_from_slice(&e.offset.to_le_bytes());
+            out.extend_from_slice(&(e.key.len() as u32).to_le_bytes());
+            out.extend_from_slice(e.key.as_bytes());
+        }
+        out
+    }
+
+    /// Try the trailer fast path. `Ok(false)` means "no valid sealed
+    /// index — fall back to scanning"; hard IO errors propagate.
+    fn load_indexed(&mut self, file_len: u64) -> io::Result<bool> {
+        if file_len < HEADER_LEN + TRAILER_LEN {
+            return Ok(false);
+        }
+        let mut trailer = [0u8; TRAILER_LEN as usize];
+        self.read_at(file_len - TRAILER_LEN, &mut trailer)?;
+        if &trailer[8..] != TRAILER_MAGIC {
+            return Ok(false);
+        }
+        let idx_off = u64_at(&trailer, 0);
+        // Bound idx_off before any arithmetic on it: the trailer bytes
+        // are untrusted disk content.
+        if idx_off < HEADER_LEN || idx_off > file_len - TRAILER_LEN - 4 {
+            return Ok(false);
+        }
+        let mut len_buf = [0u8; 4];
+        self.read_at(idx_off, &mut len_buf)?;
+        let body_len = u32::from_le_bytes(len_buf);
+        if !(MIN_BODY..=MAX_BODY).contains(&body_len)
+            || idx_off + 4 + body_len as u64 != file_len - TRAILER_LEN
+        {
+            return Ok(false);
+        }
+        let mut body = vec![0u8; body_len as usize];
+        self.read_at(idx_off + 4, &mut body)?;
+        let Some(frame) = decode_body(&body) else {
+            return Ok(false);
+        };
+        if frame.kind != KIND_INDEX || !frame.key.is_empty() {
+            return Ok(false);
+        }
+        // Parse the entry table.
+        let p = &frame.payload;
+        if p.len() < 8 {
+            return Ok(false);
+        }
+        let count = u64_at(p, 0) as usize;
+        let mut pos = 8usize;
+        let mut entries = Vec::with_capacity(count);
+        let mut by_key = HashMap::with_capacity(count);
+        for _ in 0..count {
+            if pos + 20 > p.len() {
+                return Ok(false);
+            }
+            let key_hash = u64_at(p, pos);
+            let offset = u64_at(p, pos + 8);
+            let key_len = u32_at(p, pos + 16) as usize;
+            pos += 20;
+            if pos + key_len > p.len() || offset < HEADER_LEN || offset >= idx_off {
+                return Ok(false);
+            }
+            let Ok(key) = std::str::from_utf8(&p[pos..pos + key_len]) else {
+                return Ok(false);
+            };
+            pos += key_len;
+            if fnv1a64(key.as_bytes()) != key_hash
+                || by_key.insert(key.to_string(), entries.len()).is_some()
+            {
+                return Ok(false);
+            }
+            entries.push(Entry { key: key.to_string(), offset });
+        }
+        if pos != p.len() {
+            return Ok(false);
+        }
+        self.entries = entries;
+        self.by_key = by_key;
+        self.data_end = idx_off;
+        self.indexed = true;
+        Ok(true)
+    }
+
+    /// Scanning open: walk frames from the header, index records, skip
+    /// stale index frames, and truncate at the first torn/corrupt
+    /// frame (crash recovery).
+    fn scan(&mut self, file_len: u64) -> io::Result<()> {
+        let mut off = HEADER_LEN;
+        while off < file_len {
+            let good = self.scan_frame(off, file_len)?;
+            match good {
+                Some(next) => off = next,
+                None => {
+                    self.file.set_len(off)?;
+                    self.file.sync_all()?;
+                    self.stats.truncated_bytes += file_len - off;
+                    break;
+                }
+            }
+        }
+        self.data_end = off;
+        Ok(())
+    }
+
+    /// Validate the frame at `off`; `Ok(Some(next_offset))` on success,
+    /// `Ok(None)` when the tail from `off` must be truncated.
+    fn scan_frame(&mut self, off: u64, file_len: u64) -> io::Result<Option<u64>> {
+        if off + 4 > file_len {
+            return Ok(None);
+        }
+        let mut len_buf = [0u8; 4];
+        self.read_at(off, &mut len_buf)?;
+        let body_len = u32::from_le_bytes(len_buf);
+        if !(MIN_BODY..=MAX_BODY).contains(&body_len) || off + 4 + body_len as u64 > file_len {
+            return Ok(None);
+        }
+        let mut body = vec![0u8; body_len as usize];
+        self.read_at(off + 4, &mut body)?;
+        let Some(frame) = decode_body(&body) else {
+            return Ok(None);
+        };
+        if frame.kind == KIND_RECORD {
+            self.remember(frame.key, off);
+        }
+        // KIND_INDEX frames found mid-scan are stale; records win.
+        self.stats.frames_scanned += 1;
+        Ok(Some(off + 4 + body_len as u64))
+    }
+}
+
+impl Drop for RecordLog {
+    fn drop(&mut self) {
+        // Best-effort seal so the next open takes the fast path; a
+        // failed seal just means that open scans instead.
+        if self.dirty {
+            let _ = self.seal();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_log(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("td_log_{tag}_{}.tdstore", std::process::id()))
+    }
+
+    #[test]
+    fn append_get_and_last_wins_update() {
+        let path = temp_log("basic");
+        let _ = std::fs::remove_file(&path);
+        let mut log = RecordLog::open(&path).unwrap();
+        assert!(log.is_empty());
+        log.append("a", "1").unwrap();
+        log.append("b", "2").unwrap();
+        log.append("a", "3").unwrap();
+        assert_eq!(log.len(), 2);
+        assert_eq!(log.get("a").unwrap().as_deref(), Some("3"));
+        assert_eq!(log.get("b").unwrap().as_deref(), Some("2"));
+        assert_eq!(log.get("missing").unwrap(), None);
+        // First-insertion iteration order survives the update.
+        assert_eq!(log.keys().collect::<Vec<_>>(), vec!["a", "b"]);
+        drop(log);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn sealed_reopen_takes_the_fast_path_and_append_unseals() {
+        let path = temp_log("seal");
+        let _ = std::fs::remove_file(&path);
+        {
+            let mut log = RecordLog::open(&path).unwrap();
+            log.append("k1", "v1").unwrap();
+            log.append("k2", "v2").unwrap();
+            log.seal().unwrap();
+        }
+        {
+            let mut log = RecordLog::open(&path).unwrap();
+            assert!(log.stats().fast_path, "sealed file must restore without scanning");
+            assert_eq!(log.stats().frames_scanned, 0);
+            assert_eq!(log.get("k1").unwrap().as_deref(), Some("v1"));
+            // Appending truncates the stale index, then Drop re-seals.
+            log.append("k3", "v3").unwrap();
+        }
+        let mut log = RecordLog::open(&path).unwrap();
+        assert!(log.stats().fast_path, "drop must have re-sealed");
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.get("k3").unwrap().as_deref(), Some("v3"));
+        drop(log);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn torn_tail_truncates_back_to_the_last_good_frame() {
+        let path = temp_log("torn");
+        let _ = std::fs::remove_file(&path);
+        let len2;
+        {
+            let mut log = RecordLog::open(&path).unwrap();
+            log.append("k1", "payload one").unwrap();
+            log.append("k2", "payload two").unwrap();
+            log.commit().unwrap();
+            len2 = std::fs::metadata(&path).unwrap().len();
+            log.append("k3", "payload three").unwrap();
+        }
+        // Tear the file mid-way through k3's frame (the Drop-seal is
+        // cut off with it).
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(len2 + 7).unwrap();
+        drop(f);
+        let mut log = RecordLog::open(&path).unwrap();
+        assert!(!log.stats().fast_path);
+        assert_eq!(log.stats().truncated_bytes, 7);
+        assert_eq!(log.len(), 2, "intact prefix survives, torn tail is dropped");
+        assert_eq!(log.get("k1").unwrap().as_deref(), Some("payload one"));
+        assert_eq!(log.get("k2").unwrap().as_deref(), Some("payload two"));
+        assert_eq!(log.get("k3").unwrap(), None);
+        // The log keeps working after recovery.
+        log.append("k3", "again").unwrap();
+        assert_eq!(log.get("k3").unwrap().as_deref(), Some("again"));
+        drop(log);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn flipped_byte_is_detected_and_truncated() {
+        let path = temp_log("flip");
+        let _ = std::fs::remove_file(&path);
+        let (len1, len2);
+        {
+            let mut log = RecordLog::open(&path).unwrap();
+            log.append("k1", "good").unwrap();
+            log.commit().unwrap();
+            len1 = std::fs::metadata(&path).unwrap().len();
+            log.append("k2", "to be corrupted").unwrap();
+            log.commit().unwrap();
+            len2 = std::fs::metadata(&path).unwrap().len();
+        }
+        // Chop the Drop-seal's index + trailer (a sealed index trusts
+        // its entries without re-reading frames; corruption under it is
+        // caught at `get` time, not open time), then flip a payload
+        // byte inside k2's frame.
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(len2 as usize);
+        bytes[len1 as usize + 20] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let mut log = RecordLog::open(&path).unwrap();
+        assert_eq!(log.len(), 1, "checksum failure truncates from the bad frame");
+        assert_eq!(log.stats().truncated_bytes, len2 - len1);
+        assert_eq!(log.get("k1").unwrap().as_deref(), Some("good"));
+        assert_eq!(log.get("k2").unwrap(), None);
+        drop(log);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn compact_drops_superseded_versions_and_stays_readable() {
+        let path = temp_log("compact");
+        let _ = std::fs::remove_file(&path);
+        let mut log = RecordLog::open(&path).unwrap();
+        for i in 0..4 {
+            log.append("hot", &format!("version {i}")).unwrap();
+        }
+        log.append("cold", "stable").unwrap();
+        log.seal().unwrap();
+        let before = std::fs::metadata(&path).unwrap().len();
+        log.compact().unwrap();
+        let after = std::fs::metadata(&path).unwrap().len();
+        assert!(after < before, "compaction must drop dead frames ({before} -> {after})");
+        assert_eq!(log.get("hot").unwrap().as_deref(), Some("version 3"));
+        assert_eq!(log.get("cold").unwrap().as_deref(), Some("stable"));
+        drop(log);
+        let mut log = RecordLog::open(&path).unwrap();
+        assert!(log.stats().fast_path, "compacted file is sealed");
+        assert_eq!(log.records().unwrap().len(), 2);
+        drop(log);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,756 @@
+//! Persistent experiment store with indexed history.
+//!
+//! Every artifact the pipeline emits — `tensordash.report.v1` figures,
+//! `tensordash.layers.v1` breakdowns, `tensordash.frontier.v1` Pareto
+//! frontiers, `tensordash.bench.v1` perf records — is write-once JSON
+//! that dies with its CI run. The store gives them a history: one
+//! single-file, append-friendly, indexed database (the
+//! [`RecordLog`]; no external DB dependency) keyed by
+//!
+//! ```text
+//!   (schema, id, commit, canonical-config hash, seed)
+//! ```
+//!
+//! so "did PR N regress fig-13 cycles?" and "how did the frontier
+//! move?" become `store query` / `store diff` one-liners. The config
+//! hash is FNV-1a ([`crate::util::hash::fnv1a64`]) over the canonical
+//! render of the document's meta block *minus* volatile presentation
+//! keys (`unit_cache_*` counters), so warm- and cold-cache runs of the
+//! same experiment land on the same key — re-ingest is idempotent and
+//! last-wins.
+//!
+//! Query and diff results are ordinary [`Report`]s, so they inherit the
+//! text/JSON/CSV renderers and their byte-determinism contract: the
+//! same store contents produce byte-identical output at any `--jobs`
+//! count, warm or cold.
+
+pub mod log;
+
+pub use log::{LogStats, RecordLog};
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::io;
+use std::path::Path;
+
+use crate::api::report::{
+    Cell, Report, FRONTIER_SCHEMA, LAYERS_SCHEMA, REPORT_SCHEMA, REPORT_SET_SCHEMA,
+};
+use crate::search::frontier::{diff_points, DiffStatus};
+use crate::search::objective::Score;
+use crate::util::hash::fnv1a64;
+use crate::util::json::Json;
+
+/// Version tag of the `BENCH_*.json` perf artifacts
+/// (`rust/benches/*.rs` all emit this envelope).
+pub const BENCH_SCHEMA: &str = "tensordash.bench.v1";
+/// Version tag of one stored record envelope (`{schema, key, doc}`).
+pub const STORE_RECORD_SCHEMA: &str = "tensordash.store.v1";
+/// Version tag of the canonical key tuple a record is stored under.
+pub const STORE_KEY_SCHEMA: &str = "tensordash.storekey.v1";
+
+/// The document schemas the store ingests, as `(alias, version tag)`
+/// pairs. The alias is what `store query --schema <alias>` accepts;
+/// `info` lists both columns.
+pub fn registered_schemas() -> &'static [(&'static str, &'static str)] {
+    &[
+        ("report", REPORT_SCHEMA),
+        ("layers", LAYERS_SCHEMA),
+        ("frontier", FRONTIER_SCHEMA),
+        ("reportset", REPORT_SET_SCHEMA),
+        ("bench", BENCH_SCHEMA),
+    ]
+}
+
+/// Typed store failure. Notably [`StoreError::UnknownSchema`]: feeding
+/// the store a document it has no schema handler for is an error, not
+/// a silent skip.
+#[derive(Debug)]
+pub enum StoreError {
+    Io(io::Error),
+    /// The document claims a registered schema but doesn't parse as it.
+    Parse(String),
+    /// The document's `schema` field names no registered schema (or is
+    /// missing entirely).
+    UnknownSchema(String),
+    /// A stored record failed validation on the way back out.
+    Corrupt(String),
+    /// `diff` asked for a (id, commit) pair the store doesn't hold.
+    NotFound(String),
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::Io(e) => write!(f, "store io error: {e}"),
+            StoreError::Parse(m) => write!(f, "store parse error: {m}"),
+            StoreError::UnknownSchema(s) => write!(
+                f,
+                "unknown document schema '{s}' (registered: {})",
+                registered_schemas()
+                    .iter()
+                    .map(|(_, v)| *v)
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+            StoreError::Corrupt(m) => write!(f, "store corrupt record: {m}"),
+            StoreError::NotFound(m) => write!(f, "store record not found: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            StoreError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<io::Error> for StoreError {
+    fn from(e: io::Error) -> StoreError {
+        StoreError::Io(e)
+    }
+}
+
+/// The canonical key tuple a record is stored under.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StoreKey {
+    /// Document schema tag (`tensordash.report.v1`, ...).
+    pub schema: String,
+    /// Document identity: report `id` or bench name.
+    pub id: String,
+    /// Source-tree commit the artifact was produced at.
+    pub commit: String,
+    /// FNV-1a over the canonical meta render minus volatile keys;
+    /// 0 when the document carries no config-bearing meta.
+    pub cfg_hash: u64,
+    /// Experiment seed (0 when the document has none).
+    pub seed: u64,
+}
+
+impl StoreKey {
+    /// Canonical key encoding: a compact-rendered JSON object with
+    /// BTreeMap-sorted fields. u64s render as fixed-width hex strings
+    /// (JSON numbers are f64 and lose integers past 2^53).
+    pub fn canon(&self) -> String {
+        let mut m = BTreeMap::new();
+        m.insert("cfg".to_string(), Json::Str(format!("{:016x}", self.cfg_hash)));
+        m.insert("commit".to_string(), Json::Str(self.commit.clone()));
+        m.insert("id".to_string(), Json::Str(self.id.clone()));
+        m.insert("schema".to_string(), Json::Str(self.schema.clone()));
+        m.insert("seed".to_string(), Json::Str(format!("{:016x}", self.seed)));
+        m.insert("v".to_string(), Json::Str(STORE_KEY_SCHEMA.to_string()));
+        Json::Obj(m).render()
+    }
+
+    fn parse(canon: &str) -> Result<StoreKey, StoreError> {
+        let j = Json::parse(canon)
+            .map_err(|e| StoreError::Corrupt(format!("unparseable store key: {e}")))?;
+        let field = |name: &str| -> Result<String, StoreError> {
+            j.get(name)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| StoreError::Corrupt(format!("store key missing '{name}': {canon}")))
+        };
+        if field("v")? != STORE_KEY_SCHEMA {
+            return Err(StoreError::Corrupt(format!("store key version mismatch: {canon}")));
+        }
+        let hex = |name: &str| -> Result<u64, StoreError> {
+            u64::from_str_radix(&field(name)?, 16)
+                .map_err(|_| StoreError::Corrupt(format!("store key bad hex '{name}': {canon}")))
+        };
+        Ok(StoreKey {
+            schema: field("schema")?,
+            id: field("id")?,
+            commit: field("commit")?,
+            cfg_hash: hex("cfg")?,
+            seed: hex("seed")?,
+        })
+    }
+}
+
+/// One record read back from the store: its key plus the original
+/// ingested document.
+#[derive(Debug, Clone)]
+pub struct StoreRecord {
+    pub key: StoreKey,
+    pub doc: Json,
+}
+
+impl StoreRecord {
+    /// Row count of the underlying document (report rows or bench
+    /// records) — the catalog query's size column.
+    fn row_count(&self) -> usize {
+        let arr = if self.key.schema == BENCH_SCHEMA {
+            self.doc.get("records")
+        } else {
+            self.doc.get("rows")
+        };
+        arr.and_then(Json::as_arr).map_or(0, Vec::len)
+    }
+}
+
+/// Record selection for [`ExperimentStore::query`]. Empty filter =
+/// everything; all present fields must match.
+#[derive(Debug, Clone, Default)]
+pub struct QueryFilter {
+    /// Schema alias (`report`) or full tag (`tensordash.report.v1`).
+    pub schema: Option<String>,
+    /// Report id / bench name (`fig13`, `store_warmstart`).
+    pub id: Option<String>,
+    pub commit: Option<String>,
+    /// Row label filter (first-column text): model or config name.
+    pub model: Option<String>,
+    /// Column (report docs) or record field (bench docs) to extract a
+    /// trajectory of. Without it, `query` prints the record catalog.
+    pub metric: Option<String>,
+}
+
+impl QueryFilter {
+    fn schema_tag(&self) -> Option<String> {
+        let s = self.schema.as_deref()?;
+        let tag = registered_schemas()
+            .iter()
+            .find(|(alias, _)| *alias == s)
+            .map_or(s, |(_, tag)| *tag);
+        Some(tag.to_string())
+    }
+
+    fn matches(&self, key: &StoreKey) -> bool {
+        if let Some(tag) = self.schema_tag() {
+            if key.schema != tag {
+                return false;
+            }
+        }
+        if let Some(id) = &self.id {
+            if &key.id != id {
+                return false;
+            }
+        }
+        if let Some(commit) = &self.commit {
+            if &key.commit != commit {
+                return false;
+            }
+        }
+        true
+    }
+}
+
+/// Hash the config-bearing part of a report's meta block: canonical
+/// render with volatile presentation keys (`unit_cache_*` counters)
+/// removed, so warm- and cold-cache runs key identically.
+fn config_hash(meta: &BTreeMap<String, Json>) -> u64 {
+    let stable: BTreeMap<String, Json> = meta
+        .iter()
+        .filter(|(k, _)| !k.starts_with("unit_cache_"))
+        .map(|(k, v)| (k.clone(), v.clone()))
+        .collect();
+    if stable.is_empty() {
+        return 0;
+    }
+    fnv1a64(Json::Obj(stable).render().as_bytes())
+}
+
+/// The experiment store: schema-aware ingestion, catalog/trajectory
+/// queries, and commit-to-commit diffs over one [`RecordLog`] file.
+#[derive(Debug)]
+pub struct ExperimentStore {
+    log: RecordLog,
+}
+
+impl ExperimentStore {
+    pub fn open(path: impl AsRef<Path>) -> Result<ExperimentStore, StoreError> {
+        Ok(ExperimentStore { log: RecordLog::open(path)? })
+    }
+
+    pub fn len(&self) -> usize {
+        self.log.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.log.is_empty()
+    }
+
+    /// Backend telemetry (fast-path open, scans, truncations, IO).
+    pub fn log_stats(&self) -> LogStats {
+        self.log.stats()
+    }
+
+    /// Ingest one JSON file produced at `commit`. Returns the number of
+    /// records actually written (0 when everything was already stored
+    /// byte-identically — re-ingest is idempotent).
+    pub fn ingest_file(&mut self, path: impl AsRef<Path>, commit: &str) -> Result<usize, StoreError> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)?;
+        let doc = Json::parse(&text)
+            .map_err(|e| StoreError::Parse(format!("{}: {e}", path.display())))?;
+        self.ingest_json(&doc, commit)
+    }
+
+    /// Ingest one parsed document produced at `commit`. Reportsets
+    /// unwrap to their member reports; unknown schemas are a typed
+    /// [`StoreError::UnknownSchema`], never a silent skip.
+    pub fn ingest_json(&mut self, doc: &Json, commit: &str) -> Result<usize, StoreError> {
+        let Some(schema) = doc.get("schema").and_then(Json::as_str) else {
+            return Err(StoreError::UnknownSchema("(missing schema field)".to_string()));
+        };
+        if schema == REPORT_SET_SCHEMA {
+            let reports = doc.get("reports").and_then(Json::as_arr).ok_or_else(|| {
+                StoreError::Parse("reportset document without a 'reports' array".to_string())
+            })?;
+            let mut written = 0;
+            for r in reports {
+                written += self.ingest_json(r, commit)?;
+            }
+            return Ok(written);
+        }
+        if schema == REPORT_SCHEMA || schema == LAYERS_SCHEMA || schema == FRONTIER_SCHEMA {
+            let report = Report::from_json(doc)
+                .ok_or_else(|| StoreError::Parse(format!("malformed {schema} document")))?;
+            let key = StoreKey {
+                schema: schema.to_string(),
+                id: report.id.clone(),
+                commit: commit.to_string(),
+                cfg_hash: config_hash(&report.meta),
+                seed: report.meta.get("seed").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            };
+            return self.put(&key, doc);
+        }
+        if schema == BENCH_SCHEMA {
+            let id = doc.get("bench").and_then(Json::as_str).ok_or_else(|| {
+                StoreError::Parse("bench document without a 'bench' name".to_string())
+            })?;
+            if doc.get("records").and_then(Json::as_arr).is_none() {
+                return Err(StoreError::Parse(format!(
+                    "bench document '{id}' without a 'records' array"
+                )));
+            }
+            let key = StoreKey {
+                schema: schema.to_string(),
+                id: id.to_string(),
+                commit: commit.to_string(),
+                cfg_hash: 0,
+                seed: 0,
+            };
+            return self.put(&key, doc);
+        }
+        Err(StoreError::UnknownSchema(schema.to_string()))
+    }
+
+    /// Store `doc` under `key`: last-wins per key, no-op (returns 0)
+    /// when the stored payload is already byte-identical.
+    fn put(&mut self, key: &StoreKey, doc: &Json) -> Result<usize, StoreError> {
+        let canon = key.canon();
+        let mut env = BTreeMap::new();
+        env.insert("doc".to_string(), doc.clone());
+        env.insert("key".to_string(), Json::Str(canon.clone()));
+        env.insert("schema".to_string(), Json::Str(STORE_RECORD_SCHEMA.to_string()));
+        let payload = Json::Obj(env).render();
+        if self.log.get(&canon)?.as_deref() == Some(payload.as_str()) {
+            return Ok(0);
+        }
+        self.log.append(&canon, &payload)?;
+        Ok(1)
+    }
+
+    /// fsync + write the in-file index; the next open is a no-scan
+    /// fast path.
+    pub fn commit(&mut self) -> Result<(), StoreError> {
+        Ok(self.log.seal()?)
+    }
+
+    /// Rewrite the backing file keeping only live record versions.
+    pub fn compact(&mut self) -> Result<(), StoreError> {
+        Ok(self.log.compact()?)
+    }
+
+    /// Every stored record (validated envelope + key) in insertion
+    /// order.
+    pub fn records(&mut self) -> Result<Vec<StoreRecord>, StoreError> {
+        let raw = self.log.records()?;
+        let mut out = Vec::with_capacity(raw.len());
+        for (log_key, payload) in raw {
+            let env = Json::parse(&payload)
+                .map_err(|e| StoreError::Corrupt(format!("record '{log_key}': {e}")))?;
+            if env.get("schema").and_then(Json::as_str) != Some(STORE_RECORD_SCHEMA) {
+                return Err(StoreError::Corrupt(format!(
+                    "record '{log_key}' is not a {STORE_RECORD_SCHEMA} envelope"
+                )));
+            }
+            if env.get("key").and_then(Json::as_str) != Some(log_key.as_str()) {
+                return Err(StoreError::Corrupt(format!(
+                    "record '{log_key}' envelope key does not match its log key"
+                )));
+            }
+            let doc = env
+                .get("doc")
+                .cloned()
+                .ok_or_else(|| StoreError::Corrupt(format!("record '{log_key}' has no doc")))?;
+            out.push(StoreRecord { key: StoreKey::parse(&log_key)?, doc });
+        }
+        Ok(out)
+    }
+
+    /// Catalog or trajectory query; see [`QueryFilter`]. The result is
+    /// an ordinary [`Report`] (text/JSON/CSV renderable). An empty
+    /// selection yields an empty report, not an error.
+    pub fn query(&mut self, f: &QueryFilter) -> Result<Report, StoreError> {
+        let records: Vec<StoreRecord> =
+            self.records()?.into_iter().filter(|r| f.matches(&r.key)).collect();
+        match &f.metric {
+            Some(metric) => Self::trajectory(&records, f, metric),
+            None => Ok(Self::catalog(&records)),
+        }
+    }
+
+    /// The no-metric query: one row per stored record.
+    fn catalog(records: &[StoreRecord]) -> Report {
+        let mut r = Report::new(
+            "store_query",
+            format!("Experiment store catalog — {} records", records.len()),
+            &["commit", "schema", "id", "rows", "seed"],
+        );
+        for rec in records {
+            let n = rec.row_count();
+            r.row(vec![
+                Cell::text(rec.key.commit.clone()),
+                Cell::text(rec.key.schema.clone()),
+                Cell::text(rec.key.id.clone()),
+                Cell::fmt(n.to_string(), n as f64),
+                Cell::fmt(rec.key.seed.to_string(), rec.key.seed as f64),
+            ]);
+        }
+        r.meta_num("records", records.len() as f64);
+        r
+    }
+
+    /// The metric query: one row per (record, matching row) holding the
+    /// metric's value — the trajectory of that metric across commits.
+    fn trajectory(
+        records: &[StoreRecord],
+        f: &QueryFilter,
+        metric: &str,
+    ) -> Result<Report, StoreError> {
+        let mut r = Report::new(
+            "store_query",
+            format!("Trajectory of '{metric}' — {} records", records.len()),
+            &["commit", "id", "row", metric],
+        );
+        for rec in records {
+            if rec.key.schema == BENCH_SCHEMA {
+                let bench_recs = rec.doc.get("records").and_then(Json::as_arr);
+                for bench_rec in bench_recs.map(Vec::as_slice).unwrap_or_default() {
+                    let Some(name) = bench_rec.get("name").and_then(Json::as_str) else {
+                        continue;
+                    };
+                    if let Some(model) = &f.model {
+                        if name != model {
+                            continue;
+                        }
+                    }
+                    if let Some(v) = bench_rec.get(metric).and_then(Json::as_f64) {
+                        r.row(vec![
+                            Cell::text(rec.key.commit.clone()),
+                            Cell::text(rec.key.id.clone()),
+                            Cell::text(name),
+                            Cell::num(v),
+                        ]);
+                    }
+                }
+                continue;
+            }
+            let report = Report::from_json(&rec.doc).ok_or_else(|| {
+                StoreError::Corrupt(format!(
+                    "stored {} document '{}' no longer parses",
+                    rec.key.schema, rec.key.id
+                ))
+            })?;
+            let Some(col) = report.columns.iter().position(|c| c == metric) else {
+                continue;
+            };
+            for row in &report.rows {
+                let label = &row.cells[0].text;
+                if let Some(model) = &f.model {
+                    if label != model {
+                        continue;
+                    }
+                }
+                let cell = &row.cells[col];
+                if let Some(v) = cell.value {
+                    r.row(vec![
+                        Cell::text(rec.key.commit.clone()),
+                        Cell::text(rec.key.id.clone()),
+                        Cell::text(label.clone()),
+                        Cell::fmt(cell.text.clone(), v),
+                    ]);
+                }
+            }
+        }
+        r.meta_str("metric", metric);
+        if let Some(model) = &f.model {
+            r.meta_str("model", model);
+        }
+        r.meta_num("records", records.len() as f64);
+        Ok(r)
+    }
+
+    /// The latest stored record for (`id`, `commit`), if any.
+    fn latest(records: &[StoreRecord], id: &str, commit: &str) -> Option<StoreRecord> {
+        records
+            .iter()
+            .rev()
+            .find(|r| r.key.id == id && r.key.commit == commit)
+            .cloned()
+    }
+
+    /// Compare document `id` between two commits. Two frontiers diff by
+    /// Pareto dominance (added / kept / removed / newly-dominated, via
+    /// [`diff_points`]); everything else diffs per-metric
+    /// (from/to/delta/pct, rows matched by first-column label).
+    pub fn diff(&mut self, id: &str, from: &str, to: &str) -> Result<Report, StoreError> {
+        let records = self.records()?;
+        let a = Self::latest(&records, id, from).ok_or_else(|| {
+            StoreError::NotFound(format!("no record for id '{id}' at commit '{from}'"))
+        })?;
+        let b = Self::latest(&records, id, to).ok_or_else(|| {
+            StoreError::NotFound(format!("no record for id '{id}' at commit '{to}'"))
+        })?;
+        if a.key.schema == BENCH_SCHEMA || b.key.schema == BENCH_SCHEMA {
+            return Err(StoreError::Parse(format!(
+                "diff compares report/layers/frontier documents; '{id}' is a bench record \
+                 (query a bench metric's trajectory instead)"
+            )));
+        }
+        let ar = Report::from_json(&a.doc).ok_or_else(|| {
+            StoreError::Corrupt(format!("stored document '{id}'@{from} no longer parses"))
+        })?;
+        let br = Report::from_json(&b.doc).ok_or_else(|| {
+            StoreError::Corrupt(format!("stored document '{id}'@{to} no longer parses"))
+        })?;
+        let mut r = if ar.schema == FRONTIER_SCHEMA && br.schema == FRONTIER_SCHEMA {
+            Self::diff_frontiers(&ar, &br)?
+        } else {
+            Self::diff_reports(&ar, &br)
+        };
+        r.meta_str("id", id);
+        r.meta_str("from", from);
+        r.meta_str("to", to);
+        Ok(r)
+    }
+
+    /// Extract `(config label, score)` points from a stored
+    /// `tensordash.frontier.v1` report.
+    fn frontier_points(r: &Report) -> Result<Vec<(String, Score)>, StoreError> {
+        let mut out = Vec::with_capacity(r.rows.len());
+        for (i, row) in r.rows.iter().enumerate() {
+            let need = |col: &str| -> Result<f64, StoreError> {
+                r.value(i, col).ok_or_else(|| {
+                    StoreError::Corrupt(format!("frontier row {i} has no numeric '{col}'"))
+                })
+            };
+            out.push((
+                row.cells[0].text.clone(),
+                Score {
+                    td_cycles: need("td cycles")?,
+                    energy_pj: need("energy pJ")?,
+                    area_mm2: need("area mm2")?,
+                },
+            ));
+        }
+        Ok(out)
+    }
+
+    fn diff_frontiers(ar: &Report, br: &Report) -> Result<Report, StoreError> {
+        let from_pts = Self::frontier_points(ar)?;
+        let to_pts = Self::frontier_points(br)?;
+        let classified = diff_points(&from_pts, &to_pts);
+        let count = |s: DiffStatus| classified.iter().filter(|(_, _, st)| *st == s).count();
+        let mut r = Report::new(
+            "store_diff",
+            format!(
+                "Frontier diff — {} added, {} kept, {} newly-dominated, {} removed",
+                count(DiffStatus::Added),
+                count(DiffStatus::Kept),
+                count(DiffStatus::NewlyDominated),
+                count(DiffStatus::Removed),
+            ),
+            &["config", "status", "td cycles", "energy pJ", "area mm2"],
+        );
+        for (label, score, status) in &classified {
+            r.row(vec![
+                Cell::text(label.clone()),
+                Cell::text(status.as_str()),
+                Cell::fmt((score.td_cycles as u64).to_string(), score.td_cycles),
+                Cell::fmt(format!("{:.3e}", score.energy_pj), score.energy_pj),
+                Cell::num(score.area_mm2),
+            ]);
+        }
+        r.meta_num("added", count(DiffStatus::Added) as f64);
+        r.meta_num("kept", count(DiffStatus::Kept) as f64);
+        r.meta_num("newly_dominated", count(DiffStatus::NewlyDominated) as f64);
+        r.meta_num("removed", count(DiffStatus::Removed) as f64);
+        Ok(r)
+    }
+
+    fn diff_reports(ar: &Report, br: &Report) -> Report {
+        let mut r = Report::new(
+            "store_diff",
+            format!("Report diff — '{}'", br.id),
+            &["row", "metric", "from", "to", "delta", "pct"],
+        );
+        let mut compared = 0usize;
+        for (bi, brow) in br.rows.iter().enumerate() {
+            let label = &brow.cells[0].text;
+            let Some(ai) = ar.rows.iter().position(|a| &a.cells[0].text == label) else {
+                continue;
+            };
+            for col in br.columns.iter().skip(1) {
+                let (Some(fv), Some(tv)) = (ar.value(ai, col), br.value(bi, col)) else {
+                    continue;
+                };
+                let delta = tv - fv;
+                let pct = if fv != 0.0 { delta / fv * 100.0 } else { 0.0 };
+                r.row(vec![
+                    Cell::text(label.clone()),
+                    Cell::text(col.clone()),
+                    Cell::num(fv),
+                    Cell::num(tv),
+                    Cell::fmt(format!("{delta:+.4}"), delta),
+                    Cell::fmt(format!("{pct:+.2}%"), pct),
+                ]);
+                compared += 1;
+            }
+        }
+        r.meta_num("metrics_compared", compared as f64);
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_store(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("td_store_{tag}_{}.tdstore", std::process::id()))
+    }
+
+    fn demo_report(id: &str, v: f64) -> Report {
+        let mut r = Report::new(id, "Demo", &["model", "overall"]);
+        r.row(vec![Cell::text("alexnet"), Cell::num(v)]);
+        r.meta_num("seed", 42.0);
+        r
+    }
+
+    #[test]
+    fn unknown_schema_is_a_typed_error_not_a_skip() {
+        let path = temp_store("unknown");
+        let _ = std::fs::remove_file(&path);
+        let mut store = ExperimentStore::open(&path).unwrap();
+        let doc = Json::parse(r#"{"schema":"tensordash.report.v9","id":"x"}"#).unwrap();
+        assert!(matches!(
+            store.ingest_json(&doc, "c1"),
+            Err(StoreError::UnknownSchema(s)) if s == "tensordash.report.v9"
+        ));
+        let doc = Json::parse(r#"{"id":"x"}"#).unwrap();
+        assert!(matches!(store.ingest_json(&doc, "c1"), Err(StoreError::UnknownSchema(_))));
+        assert!(store.is_empty(), "failed ingest must write nothing");
+        drop(store);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn reingest_is_idempotent_and_update_is_last_wins() {
+        let path = temp_store("idem");
+        let _ = std::fs::remove_file(&path);
+        let mut store = ExperimentStore::open(&path).unwrap();
+        let doc = demo_report("fig13", 1.95).to_json();
+        assert_eq!(store.ingest_json(&doc, "c1").unwrap(), 1);
+        assert_eq!(store.ingest_json(&doc, "c1").unwrap(), 0, "byte-identical re-ingest");
+        assert_eq!(store.len(), 1);
+        // Same key, different content: replaced, not duplicated.
+        let doc2 = demo_report("fig13", 2.05).to_json();
+        assert_eq!(store.ingest_json(&doc2, "c1").unwrap(), 1);
+        assert_eq!(store.len(), 1);
+        let recs = store.records().unwrap();
+        assert_eq!(recs[0].doc, doc2);
+        // A different commit is a different key.
+        assert_eq!(store.ingest_json(&doc, "c2").unwrap(), 1);
+        assert_eq!(store.len(), 2);
+        drop(store);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn config_hash_ignores_volatile_cache_counters() {
+        let mut warm = demo_report("fig13", 1.95);
+        warm.meta_num("unit_cache_hits", 120.0);
+        warm.meta_num("unit_cache_hit_rate", 0.93);
+        let cold = demo_report("fig13", 1.95);
+        assert_eq!(config_hash(&warm.meta), config_hash(&cold.meta));
+        let mut other = demo_report("fig13", 1.95);
+        other.meta_num("seed", 43.0);
+        assert_ne!(config_hash(&other.meta), config_hash(&cold.meta));
+    }
+
+    #[test]
+    fn key_canon_round_trips() {
+        let key = StoreKey {
+            schema: REPORT_SCHEMA.to_string(),
+            id: "fig13".to_string(),
+            commit: "abc123".to_string(),
+            cfg_hash: 0xdead_beef_0000_0001,
+            seed: 42,
+        };
+        let canon = key.canon();
+        assert!(canon.contains(STORE_KEY_SCHEMA));
+        assert_eq!(StoreKey::parse(&canon).unwrap(), key);
+    }
+
+    #[test]
+    fn catalog_and_trajectory_queries() {
+        let path = temp_store("query");
+        let _ = std::fs::remove_file(&path);
+        let mut store = ExperimentStore::open(&path).unwrap();
+        store.ingest_json(&demo_report("fig13", 1.95).to_json(), "c1").unwrap();
+        store.ingest_json(&demo_report("fig13", 2.05).to_json(), "c2").unwrap();
+        let catalog = store.query(&QueryFilter::default()).unwrap();
+        assert_eq!(catalog.rows.len(), 2);
+        let traj = store
+            .query(&QueryFilter { metric: Some("overall".to_string()), ..Default::default() })
+            .unwrap();
+        assert_eq!(traj.columns, vec!["commit", "id", "row", "overall"]);
+        assert_eq!(traj.rows.len(), 2);
+        assert_eq!(traj.value(0, "overall"), Some(1.95));
+        assert_eq!(traj.value(1, "overall"), Some(2.05));
+        // Unmatched filters are empty reports, not errors.
+        let none = store
+            .query(&QueryFilter { commit: Some("c9".to_string()), ..Default::default() })
+            .unwrap();
+        assert!(none.rows.is_empty());
+        drop(store);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn report_diff_computes_deltas() {
+        let path = temp_store("diff");
+        let _ = std::fs::remove_file(&path);
+        let mut store = ExperimentStore::open(&path).unwrap();
+        store.ingest_json(&demo_report("fig13", 2.0).to_json(), "c1").unwrap();
+        store.ingest_json(&demo_report("fig13", 2.5).to_json(), "c2").unwrap();
+        let d = store.diff("fig13", "c1", "c2").unwrap();
+        assert_eq!(d.rows.len(), 1);
+        assert_eq!(d.value(0, "from"), Some(2.0));
+        assert_eq!(d.value(0, "to"), Some(2.5));
+        assert_eq!(d.value(0, "delta"), Some(0.5));
+        assert_eq!(d.rows[0].cells[5].text, "+25.00%");
+        assert!(matches!(
+            store.diff("fig13", "c1", "c9"),
+            Err(StoreError::NotFound(_))
+        ));
+        drop(store);
+        let _ = std::fs::remove_file(&path);
+    }
+}

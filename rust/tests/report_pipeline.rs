@@ -104,6 +104,47 @@ fn table3_report_json_golden() {
     assert_eq!(Json::parse(&report.render_json()).unwrap(), parsed);
 }
 
+/// Property test: randomized `tensordash.frontier.v1` reports
+/// round-trip bit-exactly through render_json → parse → `from_json`.
+/// The experiment store re-materialises stored frontiers through this
+/// exact path (query trajectories, commit-to-commit diffs), so the
+/// reconstruction must lose nothing — text and raw value of every cell.
+#[test]
+fn frontier_report_json_round_trips_on_randomized_inputs() {
+    use tensordash::api::Cell;
+    use tensordash::util::rng::Rng;
+    let mut rng = Rng::new(0xF207);
+    for case in 0..50 {
+        let mut r = Report::with_schema(
+            tensordash::api::FRONTIER_SCHEMA,
+            format!("frontier_{case}"),
+            "randomized frontier",
+            &["config", "td cycles", "speedup", "energy pJ", "energy eff", "area mm2", "gen"],
+        );
+        for i in 0..(1 + rng.below(6)) {
+            let cycles = rng.next_u64() >> 20;
+            let energy = rng.f64() * 1e9;
+            let generation = rng.below(9);
+            r.row(vec![
+                Cell::text(format!("cfg{i}_d{}", rng.below(4))),
+                Cell::fmt(cycles.to_string(), cycles as f64),
+                Cell::num(1.0 + rng.f64() * 3.0),
+                Cell::fmt(format!("{energy:.3e}"), energy),
+                Cell::num(rng.f64() * 2.0),
+                Cell::num(rng.f64() * 100.0),
+                Cell::fmt(generation.to_string(), generation as f64),
+            ]);
+        }
+        r.meta_num("seed", rng.next_u64() as f64);
+        r.meta_str("models", "alexnet,gcn");
+
+        let parsed = Json::parse(&r.render_json()).expect("frontier JSON parses");
+        let back = Report::from_json(&parsed).expect("frontier reconstructs from JSON");
+        assert_eq!(back, r, "case {case}: reconstruction lost information");
+        assert_eq!(back.render_json(), r.render_json(), "case {case}: renderer bytes");
+    }
+}
+
 /// CSV renderer sanity on a real figure.
 #[test]
 fn table3_csv_has_header_and_rows() {

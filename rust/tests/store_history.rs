@@ -1,0 +1,302 @@
+//! Contract of the persistent experiment store (`store` subcommand,
+//! `rust/src/store/`).
+//!
+//! The store's load-bearing properties, pinned end to end over the real
+//! single-file record log:
+//!
+//! * a sealed store reopens on the indexed fast path (no scan);
+//! * every registered schema ingests — report, layers, frontier, bench
+//!   and reportset documents — and unknown schemas are a *typed* error,
+//!   never a silent skip;
+//! * re-ingesting an identical document is idempotent (zero new
+//!   records, zero file growth), while a changed document under the
+//!   same key is a last-wins update that `compact` folds away;
+//! * a torn tail write (crash mid-append) truncates back to the last
+//!   good frame on reopen, keeping every earlier record;
+//! * query output is byte-identical across `--jobs {1, 4, 8}` and
+//!   warm/cold unit-cache runs — the `unit_cache_*` telemetry keys are
+//!   excluded from the config hash, so both ingest under one key;
+//! * a frontier-vs-frontier diff classifies points as added / kept /
+//!   removed / newly-dominated by Pareto dominance.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use tensordash::api::{Cell, Engine, Report, UnitCache, FRONTIER_SCHEMA, LAYERS_SCHEMA};
+use tensordash::config::ChipConfig;
+use tensordash::repro;
+use tensordash::store::{registered_schemas, ExperimentStore, QueryFilter, StoreError};
+use tensordash::util::json::Json;
+
+fn temp_db(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("td_hist_{tag}_{}.tdstore", std::process::id()));
+    let _ = std::fs::remove_file(&p);
+    p
+}
+
+/// The Fig. 13 report as the CLI would produce it: optionally cached,
+/// with the cache telemetry annotated into the meta block.
+fn fig13_report(jobs: usize, cache: Option<&Arc<UnitCache>>) -> Report {
+    let mut engine = Engine::new(jobs);
+    if let Some(c) = cache {
+        engine = engine.with_cache(Arc::clone(c));
+    }
+    let cfg = ChipConfig::default();
+    let sims = repro::run_fig13_sims(&engine, &cfg, 1, 42);
+    let mut r = repro::fig13(&sims);
+    if let Some(c) = cache {
+        c.stats().annotate(&mut r);
+    }
+    r
+}
+
+/// A synthetic `tensordash.frontier.v1` report with the real column
+/// layout (`search::explore::frontier_report`).
+fn frontier_report(points: &[(&str, u64, f64, f64)]) -> Report {
+    let mut r = Report::with_schema(
+        FRONTIER_SCHEMA,
+        "explore_frontier",
+        "synthetic frontier",
+        &["config", "td cycles", "speedup", "energy pJ", "energy eff", "area mm2", "gen"],
+    );
+    for (label, cycles, energy, area) in points {
+        r.row(vec![
+            Cell::text(label.to_string()),
+            Cell::fmt(cycles.to_string(), *cycles as f64),
+            Cell::num(1.5),
+            Cell::fmt(format!("{energy:.3e}"), *energy),
+            Cell::num(1.0),
+            Cell::num(*area),
+            Cell::fmt("0".to_string(), 0.0),
+        ]);
+    }
+    r.meta_num("seed", 42.0);
+    r
+}
+
+fn parse(report: &Report) -> Json {
+    Json::parse(&report.render_json()).expect("report JSON parses")
+}
+
+#[test]
+fn sealed_store_reopens_on_the_indexed_fast_path() {
+    let db = temp_db("fastpath");
+    let doc = parse(&frontier_report(&[("a", 100, 1e3, 1.0)]));
+    {
+        let mut store = ExperimentStore::open(&db).unwrap();
+        assert_eq!(store.ingest_json(&doc, "c1").unwrap(), 1);
+        store.commit().unwrap();
+    }
+    let mut store = ExperimentStore::open(&db).unwrap();
+    let stats = store.log_stats();
+    assert!(stats.fast_path, "sealed file must reopen without a scan: {stats:?}");
+    assert_eq!(stats.truncated_bytes, 0);
+    assert_eq!(store.len(), 1);
+    let cat = store.query(&QueryFilter::default()).unwrap();
+    assert_eq!(cat.rows.len(), 1);
+    let _ = std::fs::remove_file(&db);
+}
+
+#[test]
+fn every_registered_schema_ingests_including_reportsets() {
+    let db = temp_db("schemas");
+    let mut store = ExperimentStore::open(&db).unwrap();
+
+    let mut report = Report::new("fig13", "t", &["model", "overall"]);
+    report.row(vec![Cell::text("alexnet"), Cell::num(2.0)]);
+    report.meta_num("seed", 7.0);
+    let mut layers = Report::with_schema(LAYERS_SCHEMA, "layers", "t", &["layer", "speedup"]);
+    layers.row(vec![Cell::text("conv1"), Cell::num(1.5)]);
+    let frontier = frontier_report(&[("cfg0", 100, 1e3, 1.0)]);
+    let bench = Json::parse(concat!(
+        r#"{"schema":"tensordash.bench.v1","bench":"store_warmstart","records":"#,
+        r#"[{"name":"store_warmstart_speedup","median_ns":10.0,"speedup":3.0}]}"#,
+    ))
+    .unwrap();
+    let set = tensordash::api::report_set_json(&[report, layers]);
+
+    assert_eq!(store.ingest_json(&set, "c1").unwrap(), 2, "reportset unwraps to members");
+    assert_eq!(store.ingest_json(&parse(&frontier), "c1").unwrap(), 1);
+    assert_eq!(store.ingest_json(&bench, "c1").unwrap(), 1);
+    store.commit().unwrap();
+    assert_eq!(store.len(), 4, "report + layers + frontier + bench");
+    assert_eq!(registered_schemas().len(), 5, "alias table covers every schema");
+
+    // Schema-alias filtering and a bench-record trajectory.
+    let f = QueryFilter { schema: Some("bench".to_string()), ..QueryFilter::default() };
+    assert_eq!(store.query(&f).unwrap().rows.len(), 1);
+    let f = QueryFilter {
+        schema: Some("bench".to_string()),
+        metric: Some("speedup".to_string()),
+        ..QueryFilter::default()
+    };
+    let traj = store.query(&f).unwrap();
+    assert_eq!(traj.rows.len(), 1);
+    assert_eq!(traj.value(0, "speedup"), Some(3.0));
+    let _ = std::fs::remove_file(&db);
+}
+
+#[test]
+fn unknown_schema_ingestion_is_a_typed_error() {
+    let db = temp_db("unknown");
+    let mut store = ExperimentStore::open(&db).unwrap();
+    let bad = std::env::temp_dir().join(format!("td_hist_bad_{}.json", std::process::id()));
+    std::fs::write(&bad, "{\"schema\":\"tensordash.mystery.v9\",\"rows\":[]}\n").unwrap();
+    let err = store.ingest_file(&bad, "c1").unwrap_err();
+    assert!(
+        matches!(&err, StoreError::UnknownSchema(s) if s == "tensordash.mystery.v9"),
+        "want UnknownSchema, got {err}"
+    );
+    assert!(store.is_empty(), "a rejected document must not be stored");
+    let _ = std::fs::remove_file(&bad);
+    let _ = std::fs::remove_file(&db);
+}
+
+#[test]
+fn reingest_is_idempotent_and_updates_compact_away() {
+    let db = temp_db("idem");
+    let doc = parse(&frontier_report(&[("a", 100, 1e3, 1.0)]));
+    {
+        let mut store = ExperimentStore::open(&db).unwrap();
+        assert_eq!(store.ingest_json(&doc, "c1").unwrap(), 1);
+        store.commit().unwrap();
+    }
+    let size1 = std::fs::metadata(&db).unwrap().len();
+    {
+        let mut store = ExperimentStore::open(&db).unwrap();
+        assert_eq!(store.ingest_json(&doc, "c1").unwrap(), 0, "identical re-ingest is a no-op");
+        store.commit().unwrap();
+        assert_eq!(store.len(), 1);
+    }
+    assert_eq!(
+        std::fs::metadata(&db).unwrap().len(),
+        size1,
+        "idempotent re-ingest must not grow the file"
+    );
+
+    // Same key, different payload: a last-wins update...
+    let doc2 = parse(&frontier_report(&[("a", 90, 1e3, 1.0)]));
+    let mut store = ExperimentStore::open(&db).unwrap();
+    assert_eq!(store.ingest_json(&doc2, "c1").unwrap(), 1, "update writes a new version");
+    assert_eq!(store.len(), 1, "...under the same key");
+    let f = QueryFilter { metric: Some("td cycles".to_string()), ..QueryFilter::default() };
+    assert_eq!(store.query(&f).unwrap().value(0, "td cycles"), Some(90.0));
+    // ...whose superseded version compaction drops.
+    let grown = std::fs::metadata(&db).unwrap().len();
+    store.compact().unwrap();
+    let compacted = std::fs::metadata(&db).unwrap().len();
+    assert!(compacted < grown, "compact must shrink {grown} -> {compacted}");
+    assert_eq!(store.query(&f).unwrap().value(0, "td cycles"), Some(90.0));
+    let _ = std::fs::remove_file(&db);
+}
+
+#[test]
+fn a_torn_tail_write_recovers_to_the_last_good_frame() {
+    let db = temp_db("torn");
+    let doc = parse(&frontier_report(&[("a", 100, 1e3, 1.0)]));
+    let golden;
+    {
+        let mut store = ExperimentStore::open(&db).unwrap();
+        store.ingest_json(&doc, "c1").unwrap();
+        store.commit().unwrap();
+        golden = store.query(&QueryFilter::default()).unwrap().render_json();
+    }
+    // Crash mid-append: garbage bytes after the sealed image.
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new().append(true).open(&db).unwrap();
+    f.write_all(&[0xAB; 9]).unwrap();
+    drop(f);
+
+    let mut store = ExperimentStore::open(&db).unwrap();
+    let stats = store.log_stats();
+    assert!(!stats.fast_path, "a torn tail invalidates the trailer: {stats:?}");
+    assert!(stats.truncated_bytes > 0, "recovery must truncate: {stats:?}");
+    assert_eq!(store.len(), 1, "the committed record survives");
+    assert_eq!(store.query(&QueryFilter::default()).unwrap().render_json(), golden);
+    let _ = std::fs::remove_file(&db);
+}
+
+#[test]
+fn query_bytes_are_identical_across_jobs_and_cache_modes() {
+    let reference_db = temp_db("ref");
+    let mut reference = ExperimentStore::open(&reference_db).unwrap();
+    reference.ingest_json(&parse(&fig13_report(1, None)), "c1").unwrap();
+    let catalog = reference.query(&QueryFilter::default()).unwrap().render_json();
+    let traj_filter = QueryFilter {
+        metric: Some("overall".to_string()),
+        model: Some("gcn".to_string()),
+        ..QueryFilter::default()
+    };
+    let trajectory = reference.query(&traj_filter).unwrap().render_json();
+    assert!(!reference.query(&traj_filter).unwrap().rows.is_empty());
+
+    for jobs in [1usize, 4, 8] {
+        let cache = Arc::new(UnitCache::new(65_536));
+        let cold = fig13_report(jobs, Some(&cache));
+        let warm = fig13_report(jobs, Some(&cache));
+        for (mode, report) in [("cold", &cold), ("warm", &warm)] {
+            let db = temp_db(&format!("q{jobs}{mode}"));
+            let mut store = ExperimentStore::open(&db).unwrap();
+            store.ingest_json(&parse(report), "c1").unwrap();
+            let ctx = format!("jobs={jobs} {mode}");
+            assert_eq!(
+                store.query(&QueryFilter::default()).unwrap().render_json(),
+                catalog,
+                "{ctx}: catalog bytes"
+            );
+            assert_eq!(
+                store.query(&traj_filter).unwrap().render_json(),
+                trajectory,
+                "{ctx}: trajectory bytes"
+            );
+            let _ = std::fs::remove_file(&db);
+        }
+        // Warm and cold differ only in unit_cache_* telemetry, which
+        // the config hash excludes — both land under one store key.
+        let db = temp_db(&format!("key{jobs}"));
+        let mut store = ExperimentStore::open(&db).unwrap();
+        store.ingest_json(&parse(&cold), "c1").unwrap();
+        store.ingest_json(&parse(&warm), "c1").unwrap();
+        assert_eq!(store.len(), 1, "jobs={jobs}: warm/cold share a key");
+        let _ = std::fs::remove_file(&db);
+    }
+    let _ = std::fs::remove_file(&reference_db);
+}
+
+#[test]
+fn frontier_diff_classifies_by_pareto_dominance() {
+    let db = temp_db("fdiff");
+    let mut store = ExperimentStore::open(&db).unwrap();
+    // c1: a, b, c. c2: a kept, d added; d dominates b (all axes <=,
+    // some <) but not c (c has fewer cycles).
+    let from = frontier_report(&[
+        ("a", 100, 1e3, 1.0),
+        ("b", 200, 2e3, 2.0),
+        ("c", 50, 9e3, 9.0),
+    ]);
+    let to = frontier_report(&[("a", 100, 1e3, 1.0), ("d", 80, 9e2, 0.9)]);
+    store.ingest_json(&parse(&from), "c1").unwrap();
+    store.ingest_json(&parse(&to), "c2").unwrap();
+
+    let diff = store.diff("explore_frontier", "c1", "c2").unwrap();
+    let got: Vec<(String, String)> = diff
+        .rows
+        .iter()
+        .map(|r| (r.cells[0].text.clone(), r.cells[1].text.clone()))
+        .collect();
+    let want = [
+        ("a", "kept"),
+        ("d", "added"),
+        ("b", "newly-dominated"),
+        ("c", "removed"),
+    ];
+    let want: Vec<(String, String)> =
+        want.iter().map(|(l, s)| (l.to_string(), s.to_string())).collect();
+    assert_eq!(got, want);
+    assert_eq!(diff.meta.get("from").and_then(Json::as_str), Some("c1"));
+    assert_eq!(diff.value(0, "td cycles"), Some(100.0));
+
+    let err = store.diff("explore_frontier", "c1", "c9").unwrap_err();
+    assert!(matches!(err, StoreError::NotFound(_)), "missing commit must be NotFound");
+    let _ = std::fs::remove_file(&db);
+}
