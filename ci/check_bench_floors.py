@@ -13,7 +13,12 @@ for it. Floor kinds:
 * ``min_speedup``  — the ``speedup`` field of every record whose name
   matches the pattern must be >= the floor;
 * ``max_median_ns`` — the ``median_ns`` field of every matching record
-  must be <= the ceiling.
+  must be <= the ceiling;
+* ``require_identical`` — every matching record must carry
+  ``"identical": true``, the bench's in-run assertion that the fast
+  path produced byte-identical results to the reference it was raced
+  against. A speedup record without that flag means the bench dropped
+  its equality check, so the gate fails.
 
 Patterns are ``fnmatch`` globs. A pattern that matches no record fails
 the gate: renaming a record must not silently remove its floor.
@@ -162,6 +167,19 @@ def check_doc(label: str, doc: dict, floors: dict) -> None:
                     f"   ok  {rec['name']}: median {median / 1e6:.3f} ms "
                     f"<= {ceiling / 1e6:.3f} ms"
                 )
+    for pattern in sorted(floors.get("require_identical", [])):
+        recs = matching(records, pattern)
+        if not recs:
+            fail(f"{label}: no record matches require_identical pattern '{pattern}'")
+            continue
+        for rec in recs:
+            if rec.get("identical") is not True:
+                fail(
+                    f"{label}: record '{rec['name']}' does not assert byte-identity "
+                    f"(identical != true)"
+                )
+            else:
+                print(f"   ok  {rec['name']}: byte-identity asserted in-bench")
 
 
 def check_artifact(path: str, floors: dict) -> None:

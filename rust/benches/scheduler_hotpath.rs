@@ -4,7 +4,10 @@
 //! throughput bounds every experiment above. Tracked in EXPERIMENTS.md
 //! §Perf (before/after for each optimisation step).
 //!
-//! Besides the console log, the run emits its medians as
+//! Besides the console log, the run emits its medians — plus one
+//! machine-independent `packed_vs_reference_speedup` record racing the
+//! packed word-ops streaming core against `stream::reference` on its
+//! uniform-random worst case, byte-identity asserted in-bench — as
 //! `BENCH_scheduler.json` (or `$BENCH_OUT` if set) through the
 //! `util::json` writer, so CI archives one machine-readable perf point
 //! per PR.
@@ -14,6 +17,7 @@ use std::collections::BTreeMap;
 use tensordash::sim::connectivity::Connectivity;
 use tensordash::sim::pe::simulate_stream_stats;
 use tensordash::sim::scheduler::schedule_cycle;
+use tensordash::sim::stream::reference;
 use tensordash::sim::tile::tile_pass_stats;
 use tensordash::util::bench::{bench, section, BenchStats};
 use tensordash::util::json::Json;
@@ -66,6 +70,31 @@ fn main() {
         (0..4).map(|_| (0..1024).map(|_| rng.mask16(0.5)).collect()).collect();
     let t = bench("tile_pass_4x1024", 5, 100, || tile_pass_stats(&conn, &streams, 6));
     records.push(record("tile_pass_4x1024", &t));
+
+    // Packed core vs the per-element reference on the same uniform
+    // random streams — the memo table's worst case (few recurring
+    // masks), so this is the machine-independent floor of the word-ops
+    // rewrite, not its showcase (that's tile_hotpath's trace-like
+    // workload). Byte-identity is asserted before timing.
+    section("packed streaming core vs stream::reference (4 rows x 1024 steps)");
+    let new = tile_pass_stats(&conn, &streams, 6);
+    let old = reference::tile_pass_stats(&conn, &streams, 6);
+    assert_eq!(new.cycles, old.cycles, "packed core diverged (cycles)");
+    assert_eq!(new.macs, old.macs, "packed core diverged (macs)");
+    let r = bench("tile_pass_reference_4x1024", 5, 100, || {
+        reference::tile_pass_stats(&conn, &streams, 6)
+    });
+    let packed_speedup = r.median_ns / t.median_ns;
+    println!("  -> packed-over-reference speedup {packed_speedup:.2}x on uniform random");
+    records.push(record("tile_pass_reference_4x1024", &r));
+    let mut rec = BTreeMap::new();
+    rec.insert("name".to_string(), Json::Str("packed_vs_reference_speedup".to_string()));
+    rec.insert("reference_median_ns".to_string(), Json::Num(r.median_ns));
+    rec.insert("packed_median_ns".to_string(), Json::Num(t.median_ns));
+    rec.insert("speedup".to_string(), Json::Num(packed_speedup));
+    // Cycles and MACs were asserted equal above, before any timing.
+    rec.insert("identical".to_string(), Json::Bool(true));
+    records.push(Json::Obj(rec));
 
     // Machine-readable perf point for the BENCH_* trajectory.
     let out_path =

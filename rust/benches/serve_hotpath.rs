@@ -9,16 +9,25 @@
 //! meaningful if the cache returns exactly what the cold path
 //! computes.
 //!
-//! Emits medians, the warm-over-cold speedup and requests/sec as
-//! `BENCH_serve.json` (`$BENCH_OUT` overrides; `tensordash.bench.v1`),
-//! which CI archives next to the scheduler/tile/model artifacts and
-//! gates through `ci/bench_floors.json`. The bench itself exits
-//! non-zero below 2x warm-over-cold.
+//! Also races the binary v2 `UnitKey` encoder against the
+//! canonical-JSON oracle over the sweep's full unit list (the
+//! per-lookup cost every cache probe pays), after asserting that
+//! decoding the bytes reproduces the JSON document exactly.
+//!
+//! Emits medians, the warm-over-cold speedup, the key-encode speedup
+//! and requests/sec as `BENCH_serve.json` (`$BENCH_OUT` overrides;
+//! `tensordash.bench.v1`), which CI archives next to the
+//! scheduler/tile/model artifacts and gates through
+//! `ci/bench_floors.json`. The bench itself exits non-zero below 2x
+//! warm-over-cold or below 5x binary-over-JSON key encoding.
 
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use tensordash::api::{default_jobs, Engine, Service, SweepSpec, UnitCache, DEFAULT_CACHE_CAP};
+use tensordash::api::cache::{canon_json_for_unit, fnv1a64};
+use tensordash::api::{
+    default_jobs, Engine, ModelPlan, Service, SweepSpec, UnitCache, UnitKey, DEFAULT_CACHE_CAP,
+};
 use tensordash::config::ChipConfig;
 use tensordash::repro::ModelSim;
 use tensordash::util::bench::{bench, section, BenchStats};
@@ -90,6 +99,44 @@ fn main() {
         "  -> warm sweep {speedup:.2}x faster than cold ({rps_cold:.1} -> {rps_warm:.1} cells/s)"
     );
 
+    // Key-encoding microbench: every cache probe builds a UnitKey, so
+    // the v2 binary encoder is on the serving hot path. Race it against
+    // the canonical-JSON oracle (the v1-style encoder) over the sweep's
+    // full unit list — after asserting the two forms agree, because the
+    // speedup is only meaningful if decode(bytes) == json(spec).
+    section("unit-key encoding: binary v2 vs canonical JSON");
+    let plans: Vec<ModelPlan> = cells.iter().filter_map(ModelPlan::for_request).collect();
+    let key_units: Vec<_> =
+        plans.iter().flat_map(|p| p.units.iter().map(move |u| (&p.cfg, u))).collect();
+    for (cfg, u) in &key_units {
+        assert_eq!(
+            UnitKey::for_unit(cfg, u).canon(),
+            canon_json_for_unit(cfg, u),
+            "binary/JSON key divergence"
+        );
+    }
+    let kb = bench("unit_key_binary", 10, 200, || {
+        let mut acc = 0u64;
+        for (cfg, u) in &key_units {
+            acc ^= UnitKey::for_unit(cfg, u).hash;
+        }
+        acc
+    });
+    let kj = bench("unit_key_json", 10, 200, || {
+        let mut acc = 0u64;
+        for (cfg, u) in &key_units {
+            acc ^= fnv1a64(canon_json_for_unit(cfg, u).as_bytes());
+        }
+        acc
+    });
+    let key_speedup = kj.median_ns / kb.median_ns;
+    println!(
+        "  -> binary key encode {key_speedup:.2}x faster than JSON ({} keys, {:.0} -> {:.0} ns/key)",
+        key_units.len(),
+        kj.median_ns / key_units.len() as f64,
+        kb.median_ns / key_units.len() as f64
+    );
+
     // End-to-end serve path: a duplicate request through the protocol
     // handler (parse + cache-served engine run + report render).
     let service = Service::new(Engine::new(jobs), Arc::new(UnitCache::new(DEFAULT_CACHE_CAP)));
@@ -108,11 +155,26 @@ fn main() {
     speedup_rec.insert("requests_per_sec_cold".to_string(), Json::Num(rps_cold));
     speedup_rec.insert("requests_per_sec_warm".to_string(), Json::Num(rps_warm));
     speedup_rec.insert("jobs".to_string(), Json::Num(jobs as f64));
+    // assert_identical ran on every warm/cold pair before any timing;
+    // ci/check_bench_floors.py's require_identical gate pins this flag.
+    speedup_rec.insert("identical".to_string(), Json::Bool(true));
+    let mut key_rec = BTreeMap::new();
+    key_rec.insert("name".to_string(), Json::Str("key_encode_speedup".to_string()));
+    key_rec.insert("json_median_ns".to_string(), Json::Num(kj.median_ns));
+    key_rec.insert("binary_median_ns".to_string(), Json::Num(kb.median_ns));
+    key_rec.insert("speedup".to_string(), Json::Num(key_speedup));
+    key_rec.insert("keys".to_string(), Json::Num(key_units.len() as f64));
+    // Every key's decoded canon was asserted equal to the JSON oracle
+    // before timing.
+    key_rec.insert("identical".to_string(), Json::Bool(true));
     let records = vec![
         record("serve_sweep_cold", &cold),
         record("serve_sweep_warm", &warm),
         record("serve_request_warm", &serve_warm),
+        record("unit_key_binary", &kb),
+        record("unit_key_json", &kj),
         Json::Obj(speedup_rec),
+        Json::Obj(key_rec),
     ];
 
     let out_path = std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_serve.json".to_string());
@@ -127,16 +189,32 @@ fn main() {
         Err(e) => eprintln!("\ncould not write {out_path}: {e}"),
     }
 
-    // Acceptance bar (EXPERIMENTS.md §Perf), enforced after the
+    // Acceptance bars (EXPERIMENTS.md §Perf), enforced after the
     // artifact is on disk so a regressing run is still archived: a warm
-    // unit-cache sweep must be >= 2x faster than cold.
+    // unit-cache sweep must be >= 2x faster than cold, and the binary
+    // v2 key encoder must beat the canonical-JSON encoder >= 5x.
     const WARM_SPEEDUP_GATE: f64 = 2.0;
+    const KEY_ENCODE_GATE: f64 = 5.0;
+    let mut failed = false;
     if speedup < WARM_SPEEDUP_GATE {
         eprintln!(
             "PERF GATE: warm sweep speedup {speedup:.2}x < {WARM_SPEEDUP_GATE}x — \
              the unit cache stopped paying for itself"
         );
+        failed = true;
+    }
+    if key_speedup < KEY_ENCODE_GATE {
+        eprintln!(
+            "PERF GATE: key encode speedup {key_speedup:.2}x < {KEY_ENCODE_GATE}x — \
+             the binary key encoder stopped paying for itself"
+        );
+        failed = true;
+    }
+    if failed {
         std::process::exit(1);
     }
-    println!("perf gate passed: warm {speedup:.2}x >= {WARM_SPEEDUP_GATE}x");
+    println!(
+        "perf gate passed: warm {speedup:.2}x >= {WARM_SPEEDUP_GATE}x, \
+         key encode {key_speedup:.2}x >= {KEY_ENCODE_GATE}x"
+    );
 }

@@ -2,11 +2,15 @@
 //!
 //! PR 3 made every (layer, op) unit a pure function of
 //! `(UnitSpec, derived seed, ChipConfig)`; this module exploits that
-//! purity. A [`UnitKey`] is the *canonical JSON* of everything a unit's
-//! result depends on — chip config, op, layer geometry, sampling
+//! purity. A [`UnitKey`] is a *fixed-layout binary encoding* (the v2
+//! key format — versioned magic, little-endian fields) of everything a
+//! unit's result depends on — chip config, op, layer geometry, sampling
 //! budget, derived seed, and a content hash of the operand bitmaps —
-//! prefixed with a version tag and hashed with FNV-1a. Two units with
-//! equal keys are byte-interchangeable, so:
+//! hashed with FNV-1a over the bytes. The canonical JSON document of
+//! the same content is *derived* from the bytes ([`UnitKey::canon`])
+//! and only materialises at the disk-mirror boundary; the hot lookup
+//! path never serializes JSON. Two units with equal keys are
+//! byte-interchangeable, so:
 //!
 //! * sweep cells that share units (the Fig. 17 `rows4` column *is* the
 //!   Fig. 18 `cols4` column; Fig. 19's `depth3` arm *is* the default
@@ -21,11 +25,12 @@
 //! hit, so two layers with identical geometry/tensors/seed share one
 //! entry) and the request `label` (presentation only). Everything else
 //! — *every* `ChipConfig` field included — must be serialized here;
-//! **adding a field to `ChipConfig` or changing any serialization
-//! detail requires bumping [`UNIT_KEY_VERSION`]**, or stale disk
-//! entries would silently alias new configurations. The golden-key
-//! test below pins the canonical bytes and the hash so accidental
-//! drift fails loudly.
+//! **adding a field to `ChipConfig` or changing any encoding detail
+//! requires bumping the binary format byte *and* [`UNIT_KEY_VERSION`]
+//! together**, or stale disk entries would silently alias new
+//! configurations. The golden-key test below pins the v2 bytes, the
+//! hash and the derived canonical JSON so accidental drift fails
+//! loudly.
 //!
 //! The store itself is a mutex-guarded LRU (`cap` entries, stamp-based
 //! eviction, counters for hit/miss/insert/evict/coalesce telemetry)
@@ -52,14 +57,17 @@ use crate::sim::unit::LayerOpSim;
 use crate::store::{LogStats, RecordLog};
 use crate::util::json::Json;
 
-use super::plan::{UnitSpec, UnitTensors};
+use super::plan::{TensorRecipe, UnitSpec};
 use super::report::Report;
 
-/// Version tag embedded in every canonical key. Bump on **any** change
-/// to the key serialization, `ChipConfig`'s field set, or the unit
-/// pipeline's observable behaviour — the disk store self-invalidates
-/// because old entries hash under the old version string.
-pub const UNIT_KEY_VERSION: &str = "tensordash.unitkey.v1";
+/// Version tag embedded in every canonical key document. Bump on
+/// **any** change to the key encoding, `ChipConfig`'s field set, or the
+/// unit pipeline's observable behaviour — the disk store
+/// self-invalidates because old entries are stored under the old
+/// version's canonical string. v2 = the fixed-layout binary encoding
+/// (v1 was canonical JSON built per lookup); v1 mirror entries read as
+/// clean misses under v2.
+pub const UNIT_KEY_VERSION: &str = "tensordash.unitkey.v2";
 
 /// Schema tag of the per-unit documents in the disk mirror.
 pub const UNIT_CACHE_SCHEMA: &str = "tensordash.unitcache.v1";
@@ -140,61 +148,313 @@ pub fn shape_json(s: &ConvShape) -> Json {
     Json::Obj(m)
 }
 
-fn tensors_json(spec: &UnitSpec) -> Json {
+/// Canonical JSON of a tensor recipe — the `tensors` fragment of the
+/// canonical key document. Profile bitmaps key their generation recipe
+/// (so cache hits skip generation too); captured/explicit bitmaps are
+/// content-addressed, hitting regardless of which request carried them.
+fn recipe_json(r: &TensorRecipe) -> Json {
     let mut m = BTreeMap::new();
-    match &spec.tensors {
-        // Profile bitmaps are deterministic in (model, layer, epoch,
-        // seed) — key the *recipe*, so cache hits skip generation too.
-        UnitTensors::Profile { profile, epoch, bitmap_seed, .. } => {
+    match r {
+        TensorRecipe::Profile { model, layer, epoch, bitmap_seed } => {
             m.insert("kind".to_string(), Json::Str("profile".to_string()));
-            m.insert("model".to_string(), Json::Str(profile.name().to_string()));
-            m.insert("layer".to_string(), num(spec.layer as f64));
+            m.insert("model".to_string(), Json::Str(model.clone()));
+            m.insert("layer".to_string(), num(*layer as f64));
             m.insert("epoch".to_string(), num(*epoch));
             m.insert("bitmap_seed".to_string(), hex64(*bitmap_seed));
         }
-        // Captured/explicit bitmaps are content-addressed: equal bytes
-        // hit regardless of which request carried them.
-        UnitTensors::Trace { layers } => {
-            let (a, g) = &layers[spec.layer];
+        TensorRecipe::Bitmaps { a, g } => {
             m.insert("kind".to_string(), Json::Str("bitmaps".to_string()));
-            m.insert("a".to_string(), hex64(bitmap_hash(a)));
-            m.insert("g".to_string(), hex64(bitmap_hash(g)));
-        }
-        UnitTensors::Explicit { a, g } => {
-            m.insert("kind".to_string(), Json::Str("bitmaps".to_string()));
-            m.insert("a".to_string(), hex64(bitmap_hash(a)));
-            m.insert("g".to_string(), hex64(bitmap_hash(g)));
+            m.insert("a".to_string(), hex64(*a));
+            m.insert("g".to_string(), hex64(*g));
         }
     }
     Json::Obj(m)
 }
 
-/// The cache key of one unit under one chip configuration: the
-/// canonical JSON document plus its FNV-1a hash. The map is keyed by
-/// the hash; the canonical string rides along so lookups verify the
-/// full key and a hash collision degrades to a miss.
+/// The full canonical key document for decoded/recipe form content.
+fn canon_json(
+    cfg: &ChipConfig,
+    op: TrainOp,
+    shape: &ConvShape,
+    batch_mult: u64,
+    samples: u64,
+    seed: u64,
+    recipe: &TensorRecipe,
+) -> String {
+    let mut m = BTreeMap::new();
+    m.insert("v".to_string(), Json::Str(UNIT_KEY_VERSION.to_string()));
+    m.insert("cfg".to_string(), cfg_json(cfg));
+    m.insert("op".to_string(), Json::Str(op.label().to_string()));
+    m.insert("shape".to_string(), shape_json(shape));
+    m.insert("batch_mult".to_string(), num(batch_mult as f64));
+    m.insert("samples".to_string(), num(samples as f64));
+    m.insert("seed".to_string(), hex64(seed));
+    m.insert("tensors".to_string(), recipe_json(recipe));
+    Json::Obj(m).render()
+}
+
+/// The canonical JSON key document built *directly* from the spec —
+/// the agreement oracle for the binary encoding: [`UnitKey::canon`]
+/// (which decodes the v2 bytes) must return exactly this string for
+/// every unit. Also the yardstick the `serve_hotpath` bench races the
+/// binary encoder against.
+pub fn canon_json_for_unit(cfg: &ChipConfig, spec: &UnitSpec) -> String {
+    canon_json(
+        cfg,
+        spec.op,
+        &spec.shape,
+        spec.batch_mult,
+        spec.samples as u64,
+        spec.seed,
+        &spec.tensor_recipe(),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Binary v2 key encoding
+// ---------------------------------------------------------------------
+//
+// Byte layout (DESIGN.md §4; all multi-byte integers little-endian):
+//
+//   magic   "TDK" + format byte (= 2)                          4 bytes
+//   enums   op u8 | dtype u8 | side u8 | flags u8              4 bytes
+//           (op: 0 Fwd, 1 Igrad, 2 Wgrad; dtype: 0 fp32, 1 bf16;
+//            side: 0 b, 1 both; flags: bit0 power_gate,
+//            bit1 dram_gate)
+//   cfg     lanes, staging_depth, tile_rows, tile_cols, tiles,
+//           lead_limit, freq_mhz, sram_bank_bytes, sram_banks,
+//           spad_bytes, spad_banks, transposers          12 x u64
+//           dram_gbps (f64 bit pattern)                       u64
+//   shape   n, h, w, c, f, kh, kw, stride, pad            9 x u64
+//   unit    batch_mult, samples, seed                     3 x u64
+//   tensors kind u8 = 0 (profile): epoch (f64 bits) u64,
+//             bitmap_seed u64, layer u64,
+//             model-name byte length u32 + UTF-8 bytes
+//           kind u8 = 1 (bitmaps): a hash u64, g hash u64
+//
+// The layout is self-contained: [`UnitKey::canon`] decodes it back to
+// the canonical JSON document (needed only at the disk-mirror
+// boundary). Any change here is a key-schema change: bump `KEY_FORMAT`
+// *and* [`UNIT_KEY_VERSION`] together and repin the golden test.
+
+const KEY_MAGIC: [u8; 3] = *b"TDK";
+const KEY_FORMAT: u8 = 2;
+const TENSORS_PROFILE: u8 = 0;
+const TENSORS_BITMAPS: u8 = 1;
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn encode_key(cfg: &ChipConfig, spec: &UnitSpec) -> Vec<u8> {
+    let mut b = Vec::with_capacity(256);
+    b.extend_from_slice(&KEY_MAGIC);
+    b.push(KEY_FORMAT);
+    b.push(match spec.op {
+        TrainOp::Fwd => 0,
+        TrainOp::Igrad => 1,
+        TrainOp::Wgrad => 2,
+    });
+    b.push(match cfg.dtype {
+        DataType::Fp32 => 0,
+        DataType::Bf16 => 1,
+    });
+    b.push(match cfg.side {
+        SparsitySide::BSide => 0,
+        SparsitySide::Both => 1,
+    });
+    b.push((cfg.power_gate as u8) | ((cfg.dram_gate as u8) << 1));
+    for v in [
+        cfg.lanes as u64,
+        cfg.staging_depth as u64,
+        cfg.tile_rows as u64,
+        cfg.tile_cols as u64,
+        cfg.tiles as u64,
+        cfg.lead_limit as u64,
+        cfg.freq_mhz,
+        cfg.sram_bank_bytes,
+        cfg.sram_banks,
+        cfg.spad_bytes,
+        cfg.spad_banks,
+        cfg.transposers,
+    ] {
+        put_u64(&mut b, v);
+    }
+    put_u64(&mut b, cfg.dram_gbps.to_bits());
+    let s = &spec.shape;
+    for v in [s.n, s.h, s.w, s.c, s.f, s.kh, s.kw, s.stride, s.pad] {
+        put_u64(&mut b, v as u64);
+    }
+    put_u64(&mut b, spec.batch_mult);
+    put_u64(&mut b, spec.samples as u64);
+    put_u64(&mut b, spec.seed);
+    match spec.tensor_recipe() {
+        TensorRecipe::Profile { model, layer, epoch, bitmap_seed } => {
+            b.push(TENSORS_PROFILE);
+            put_u64(&mut b, epoch.to_bits());
+            put_u64(&mut b, bitmap_seed);
+            put_u64(&mut b, layer as u64);
+            b.extend_from_slice(&(model.len() as u32).to_le_bytes());
+            b.extend_from_slice(model.as_bytes());
+        }
+        TensorRecipe::Bitmaps { a, g } => {
+            b.push(TENSORS_BITMAPS);
+            put_u64(&mut b, a);
+            put_u64(&mut b, g);
+        }
+    }
+    b
+}
+
+/// Sequential little-endian reader over a v2 key's payload bytes.
+/// Panics on truncation — v2 bytes only come out of [`encode_key`]
+/// within this process, so malformed input is an invariant breach.
+struct KeyReader<'a> {
+    b: &'a [u8],
+}
+
+impl<'a> KeyReader<'a> {
+    fn u8(&mut self) -> u8 {
+        let (v, rest) = self.b.split_first().expect("truncated v2 unit key");
+        self.b = rest;
+        *v
+    }
+
+    fn u32(&mut self) -> u32 {
+        let (head, rest) = self.b.split_at(4);
+        self.b = rest;
+        u32::from_le_bytes(head.try_into().expect("4-byte field"))
+    }
+
+    fn u64(&mut self) -> u64 {
+        let (head, rest) = self.b.split_at(8);
+        self.b = rest;
+        u64::from_le_bytes(head.try_into().expect("8-byte field"))
+    }
+
+    fn str(&mut self, len: usize) -> String {
+        let (head, rest) = self.b.split_at(len);
+        self.b = rest;
+        String::from_utf8(head.to_vec()).expect("UTF-8 model name in v2 unit key")
+    }
+}
+
+/// Decode a v2 key back into its content. Exactly inverts
+/// [`encode_key`]; the agreement test pins the round trip.
+#[allow(clippy::type_complexity)]
+fn decode_key(bytes: &[u8]) -> (ChipConfig, TrainOp, ConvShape, u64, u64, u64, TensorRecipe) {
+    assert!(
+        bytes.len() > 4 && bytes[..3] == KEY_MAGIC && bytes[3] == KEY_FORMAT,
+        "not a v2 unit key"
+    );
+    let mut r = KeyReader { b: &bytes[4..] };
+    let op = match r.u8() {
+        0 => TrainOp::Fwd,
+        1 => TrainOp::Igrad,
+        2 => TrainOp::Wgrad,
+        k => panic!("bad op tag {k} in v2 unit key"),
+    };
+    let dtype = match r.u8() {
+        0 => DataType::Fp32,
+        1 => DataType::Bf16,
+        k => panic!("bad dtype tag {k} in v2 unit key"),
+    };
+    let side = match r.u8() {
+        0 => SparsitySide::BSide,
+        1 => SparsitySide::Both,
+        k => panic!("bad side tag {k} in v2 unit key"),
+    };
+    let flags = r.u8();
+    let lanes = r.u64() as usize;
+    let staging_depth = r.u64() as usize;
+    let tile_rows = r.u64() as usize;
+    let tile_cols = r.u64() as usize;
+    let tiles = r.u64() as usize;
+    let lead_limit = r.u64() as usize;
+    let freq_mhz = r.u64();
+    let sram_bank_bytes = r.u64();
+    let sram_banks = r.u64();
+    let spad_bytes = r.u64();
+    let spad_banks = r.u64();
+    let transposers = r.u64();
+    let dram_gbps = f64::from_bits(r.u64());
+    let cfg = ChipConfig {
+        lanes,
+        staging_depth,
+        tile_rows,
+        tile_cols,
+        tiles,
+        freq_mhz,
+        dtype,
+        side,
+        sram_bank_bytes,
+        sram_banks,
+        spad_bytes,
+        spad_banks,
+        transposers,
+        dram_gbps,
+        power_gate: flags & 1 != 0,
+        lead_limit,
+        dram_gate: flags & 2 != 0,
+    };
+    let n = r.u64() as usize;
+    let h = r.u64() as usize;
+    let w = r.u64() as usize;
+    let c = r.u64() as usize;
+    let f = r.u64() as usize;
+    let kh = r.u64() as usize;
+    let kw = r.u64() as usize;
+    let stride = r.u64() as usize;
+    let pad = r.u64() as usize;
+    let shape = ConvShape { n, h, w, c, f, kh, kw, stride, pad };
+    let batch_mult = r.u64();
+    let samples = r.u64();
+    let seed = r.u64();
+    let recipe = match r.u8() {
+        TENSORS_PROFILE => {
+            let epoch = f64::from_bits(r.u64());
+            let bitmap_seed = r.u64();
+            let layer = r.u64() as usize;
+            let len = r.u32() as usize;
+            let model = r.str(len);
+            TensorRecipe::Profile { model, layer, epoch, bitmap_seed }
+        }
+        TENSORS_BITMAPS => TensorRecipe::Bitmaps { a: r.u64(), g: r.u64() },
+        k => panic!("bad tensors tag {k} in v2 unit key"),
+    };
+    assert!(r.b.is_empty(), "trailing bytes in v2 unit key");
+    (cfg, op, shape, batch_mult, samples, seed, recipe)
+}
+
+/// The cache key of one unit under one chip configuration: the v2
+/// fixed-layout binary encoding plus its FNV-1a hash. The in-memory
+/// map is keyed by the hash; the bytes ride along so lookups verify
+/// the full key and a hash collision degrades to a miss. The canonical
+/// JSON string is derived on demand ([`UnitKey::canon`]) for the disk
+/// mirror only — building a key costs a few hundred byte writes, no
+/// JSON rendering.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct UnitKey {
     pub hash: u64,
-    pub canon: String,
+    pub bytes: Vec<u8>,
 }
 
 impl UnitKey {
-    /// Build the canonical, versioned key for `spec` under `cfg`.
+    /// Build the binary, versioned key for `spec` under `cfg`.
     pub fn for_unit(cfg: &ChipConfig, spec: &UnitSpec) -> UnitKey {
-        let mut m = BTreeMap::new();
-        m.insert("v".to_string(), Json::Str(UNIT_KEY_VERSION.to_string()));
-        m.insert("cfg".to_string(), cfg_json(cfg));
-        m.insert("op".to_string(), Json::Str(spec.op.label().to_string()));
-        m.insert("shape".to_string(), shape_json(&spec.shape));
-        m.insert("batch_mult".to_string(), num(spec.batch_mult as f64));
-        m.insert("samples".to_string(), num(spec.samples as f64));
-        m.insert("seed".to_string(), hex64(spec.seed));
-        m.insert("tensors".to_string(), tensors_json(spec));
-        let canon = Json::Obj(m).render();
-        UnitKey { hash: fnv1a64(canon.as_bytes()), canon }
+        let bytes = encode_key(cfg, spec);
+        UnitKey { hash: fnv1a64(&bytes), bytes }
     }
 
+    /// The canonical JSON key document, decoded from the binary form —
+    /// the disk mirror's record key (human-inspectable, and distinct
+    /// per [`UNIT_KEY_VERSION`], so stale v1 mirror entries read as
+    /// clean misses). Panics on bytes not produced by
+    /// [`UnitKey::for_unit`].
+    pub fn canon(&self) -> String {
+        let (cfg, op, shape, batch_mult, samples, seed, recipe) = decode_key(&self.bytes);
+        canon_json(&cfg, op, &shape, batch_mult, samples, seed, &recipe)
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -358,14 +618,16 @@ impl UnitCacheStats {
 
 #[derive(Debug, Clone)]
 struct CachedUnit {
-    canon: String,
+    /// The full v2 key bytes, verified on every lookup.
+    bytes: Vec<u8>,
     stamp: u64,
     sim: LayerOpSim,
 }
 
 #[derive(Debug, Default)]
 struct Inner {
-    /// hash -> entry; the entry's `canon` is verified on every lookup.
+    /// hash -> entry; the entry's key bytes are verified on every
+    /// lookup.
     map: HashMap<u64, CachedUnit>,
     /// LRU index: stamp -> hash. Oldest stamp evicts first.
     lru: BTreeMap<u64, u64>,
@@ -373,10 +635,9 @@ struct Inner {
     stats: UnitCacheStats,
     /// Keys currently being computed: concurrent requests for the same
     /// unit block on the first computation's `OnceLock`. Keyed by the
-    /// full canonical string — sharing a slot on a hash collision
-    /// would hand one unit another's result, so hashes are not enough
-    /// here.
-    inflight: HashMap<String, Arc<OnceLock<LayerOpSim>>>,
+    /// full key bytes — sharing a slot on a hash collision would hand
+    /// one unit another's result, so hashes are not enough here.
+    inflight: HashMap<Vec<u8>, Arc<OnceLock<LayerOpSim>>>,
 }
 
 /// Thread-safe LRU of per-unit results with an optional disk mirror.
@@ -483,7 +744,7 @@ impl UnitCache {
             if let Some(sim) = Self::touch(&mut g, key) {
                 return sim;
             }
-            Arc::clone(g.inflight.entry(key.canon.clone()).or_default())
+            Arc::clone(g.inflight.entry(key.bytes.clone()).or_default())
         };
         let mut ran = false;
         let sim = *slot.get_or_init(|| {
@@ -494,7 +755,7 @@ impl UnitCache {
             let mut g = self.inner.lock().unwrap();
             if ran {
                 Self::insert_locked(&mut g, key, sim, self.cap, true);
-                g.inflight.remove(&key.canon);
+                g.inflight.remove(&key.bytes);
             } else {
                 g.stats.coalesced += 1;
             }
@@ -507,11 +768,11 @@ impl UnitCache {
 
     // -- internals ----------------------------------------------------
 
-    /// Map lookup + LRU touch. Verifies the full canonical key, so a
+    /// Map lookup + LRU touch. Verifies the full key bytes, so a
     /// 64-bit collision reads as a miss.
     fn touch(g: &mut Inner, key: &UnitKey) -> Option<LayerOpSim> {
         let (old, sim) = match g.map.get(&key.hash) {
-            Some(e) if e.canon == key.canon => (e.stamp, e.sim),
+            Some(e) if e.bytes == key.bytes => (e.stamp, e.sim),
             _ => return None,
         };
         g.clock += 1;
@@ -525,7 +786,7 @@ impl UnitCache {
     fn insert_locked(g: &mut Inner, key: &UnitKey, sim: LayerOpSim, cap: usize, count: bool) {
         g.clock += 1;
         let stamp = g.clock;
-        let entry = CachedUnit { canon: key.canon.clone(), stamp, sim };
+        let entry = CachedUnit { bytes: key.bytes.clone(), stamp, sim };
         if let Some(prev) = g.map.insert(key.hash, entry) {
             g.lru.remove(&prev.stamp);
         }
@@ -545,12 +806,14 @@ impl UnitCache {
     }
 
     /// Look `key` up in the record-log mirror. The log stores entries
-    /// under the full canonical key string (and re-verifies it on every
-    /// frame read), so hash collisions and stale key versions both read
-    /// as misses.
+    /// under the full canonical key string — derived here from the
+    /// binary key, the only place the lookup path ever renders JSON —
+    /// and re-verifies it on every frame read, so hash collisions and
+    /// stale key versions both read as misses.
     fn disk_load(&self, key: &UnitKey) -> Option<LayerOpSim> {
         let log = self.disk.as_ref()?;
-        let text = log.lock().unwrap().get(&key.canon).ok()??;
+        let canon = key.canon();
+        let text = log.lock().unwrap().get(&canon).ok()??;
         let j = Json::parse(&text).ok()?;
         if j.get("schema")?.as_str()? != UNIT_CACHE_SCHEMA {
             return None;
@@ -564,20 +827,22 @@ impl UnitCache {
         m.insert("schema".to_string(), Json::Str(UNIT_CACHE_SCHEMA.to_string()));
         m.insert("unit".to_string(), unit_to_json(sim));
         let text = Json::Obj(m).render();
+        let canon = key.canon();
         let mut g = log.lock().unwrap();
         // Idempotent: re-computing a unit already mirrored (promotion
         // races, repeated runs) must not grow the log.
-        if g.get(&key.canon).ok().flatten().as_deref() == Some(text.as_str()) {
+        if g.get(&canon).ok().flatten().as_deref() == Some(text.as_str()) {
             return;
         }
         // Best effort: a full disk degrades to a memory-only cache.
-        let _ = g.append(&key.canon, &text);
+        let _ = g.append(&canon, &text);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::plan::UnitTensors;
     use crate::tensor::TensorBitmap;
     use std::sync::Arc;
 
@@ -603,27 +868,56 @@ mod tests {
         (key, spec.execute(&cfg))
     }
 
+    /// The exact canonical string PR 3's v1 JSON encoder produced for
+    /// `explicit_spec(42, 2, 0)` under the default config — kept as the
+    /// stale-mirror fixture: a v2 cache must treat a mirror entry
+    /// stored under this key as a clean miss.
+    const V1_GOLDEN_CANON: &str = concat!(
+        "{\"batch_mult\":1,\"cfg\":{\"dram_gate\":false,\"dram_gbps\":51.2,",
+        "\"dtype\":\"fp32\",\"freq_mhz\":500,\"lanes\":16,\"lead_limit\":6,",
+        "\"power_gate\":false,\"side\":\"b\",\"spad_banks\":3,\"spad_bytes\":1024,",
+        "\"sram_bank_bytes\":262144,\"sram_banks\":4,\"staging_depth\":3,",
+        "\"tile_cols\":4,\"tile_rows\":4,\"tiles\":16,\"transposers\":15},",
+        "\"op\":\"A*W\",\"samples\":2,\"seed\":\"000000000000002a\",",
+        "\"shape\":{\"c\":16,\"f\":16,\"h\":4,\"kh\":3,\"kw\":3,\"n\":1,",
+        "\"pad\":1,\"stride\":1,\"w\":4},",
+        "\"tensors\":{\"a\":\"cab5d030f0dd4d63\",\"g\":\"c9a5fd30eff666aa\",",
+        "\"kind\":\"bitmaps\"},\"v\":\"tensordash.unitkey.v1\"}",
+    );
+
     #[test]
-    fn golden_key_pins_canonical_bytes_and_hash() {
-        // Any change to the key schema, the canonical JSON writer, the
-        // hex encoding, `ChipConfig`'s defaults or its field
-        // serialization shows up here first. If this test fails and
-        // the change is intentional, bump UNIT_KEY_VERSION.
+    fn golden_key_pins_v2_bytes_and_hash() {
+        // Any change to the binary layout, the field order, the enum
+        // tags or `ChipConfig`'s field set shows up here first. If this
+        // test fails and the change is intentional, bump KEY_FORMAT and
+        // UNIT_KEY_VERSION together and repin.
         let key = UnitKey::for_unit(&ChipConfig::default(), &explicit_spec(42, 2, 0));
-        let golden = concat!(
-            "{\"batch_mult\":1,\"cfg\":{\"dram_gate\":false,\"dram_gbps\":51.2,",
-            "\"dtype\":\"fp32\",\"freq_mhz\":500,\"lanes\":16,\"lead_limit\":6,",
-            "\"power_gate\":false,\"side\":\"b\",\"spad_banks\":3,\"spad_bytes\":1024,",
-            "\"sram_bank_bytes\":262144,\"sram_banks\":4,\"staging_depth\":3,",
-            "\"tile_cols\":4,\"tile_rows\":4,\"tiles\":16,\"transposers\":15},",
-            "\"op\":\"A*W\",\"samples\":2,\"seed\":\"000000000000002a\",",
-            "\"shape\":{\"c\":16,\"f\":16,\"h\":4,\"kh\":3,\"kw\":3,\"n\":1,",
-            "\"pad\":1,\"stride\":1,\"w\":4},",
-            "\"tensors\":{\"a\":\"cab5d030f0dd4d63\",\"g\":\"c9a5fd30eff666aa\",",
-            "\"kind\":\"bitmaps\"},\"v\":\"tensordash.unitkey.v1\"}",
-        );
-        assert_eq!(key.canon, golden);
-        assert_eq!(key.hash, fnv1a64(golden.as_bytes()));
+        let mut golden: Vec<u8> = vec![b'T', b'D', b'K', 2, 0, 0, 0, 0];
+        // cfg u64 block: lanes, depth, rows, cols, tiles, lead_limit,
+        // freq, sram bank bytes/banks, spad bytes/banks, transposers.
+        for v in [16u64, 3, 4, 4, 16, 6, 500, 262144, 4, 1024, 3, 15] {
+            golden.extend_from_slice(&v.to_le_bytes());
+        }
+        golden.extend_from_slice(&51.2f64.to_bits().to_le_bytes());
+        // shape: n h w c f kh kw stride pad.
+        for v in [1u64, 4, 4, 16, 16, 3, 3, 1, 1] {
+            golden.extend_from_slice(&v.to_le_bytes());
+        }
+        // batch_mult, samples, seed.
+        for v in [1u64, 2, 42] {
+            golden.extend_from_slice(&v.to_le_bytes());
+        }
+        // tensors: bitmaps kind + the two content hashes.
+        golden.push(1);
+        golden.extend_from_slice(&0xcab5_d030_f0dd_4d63u64.to_le_bytes());
+        golden.extend_from_slice(&0xc9a5_fd30_eff6_66aau64.to_le_bytes());
+        assert_eq!(golden.len(), 225, "fixed-size prefix + bitmaps tensors");
+        assert_eq!(key.bytes, golden);
+        assert_eq!(key.hash, fnv1a64(&golden));
+        // The derived canonical document is the v1 golden with the
+        // version tag bumped — same content, new namespace on disk.
+        assert_eq!(key.canon(), V1_GOLDEN_CANON.replace("unitkey.v1", "unitkey.v2"));
+        assert_ne!(key.canon(), V1_GOLDEN_CANON);
     }
 
     #[test]
@@ -634,10 +928,76 @@ mod tests {
         // tensors + seed share one entry.
         assert_eq!(base, UnitKey::for_unit(&cfg, &explicit_spec(42, 2, 7)));
         // Everything result-relevant changes the key.
-        assert_ne!(base.canon, UnitKey::for_unit(&cfg, &explicit_spec(43, 2, 0)).canon);
-        assert_ne!(base.canon, UnitKey::for_unit(&cfg, &explicit_spec(42, 3, 0)).canon);
+        assert_ne!(base, UnitKey::for_unit(&cfg, &explicit_spec(43, 2, 0)));
+        assert_ne!(base, UnitKey::for_unit(&cfg, &explicit_spec(42, 3, 0)));
         let depth2 = ChipConfig::default().with_depth(2);
-        assert_ne!(base.canon, UnitKey::for_unit(&depth2, &explicit_spec(42, 2, 0)).canon);
+        assert_ne!(base, UnitKey::for_unit(&depth2, &explicit_spec(42, 2, 0)));
+    }
+
+    #[test]
+    fn binary_and_json_keys_agree_for_every_tensor_kind() {
+        // The agreement property: decoding the v2 bytes must rebuild
+        // exactly the canonical JSON the direct builder produces, for
+        // explicit-bitmap and profile-recipe units alike, across
+        // configs. (This is what makes the disk mirror keyed by
+        // `canon()` trustworthy without ever encoding JSON on the hot
+        // path.)
+        let configs = [ChipConfig::default(), ChipConfig::default().with_depth(2)];
+        for cfg in &configs {
+            for seed in [0u64, 1, 42, u64::MAX] {
+                for samples in [1usize, 2, 7] {
+                    let spec = explicit_spec(seed, samples, 0);
+                    let key = UnitKey::for_unit(cfg, &spec);
+                    assert_eq!(key.canon(), canon_json_for_unit(cfg, &spec));
+                    assert_eq!(key.hash, fnv1a64(&key.bytes));
+                }
+            }
+        }
+        // Profile recipes carry the model name and layer; every unit of
+        // a real plan must round-trip, and distinct layers must key
+        // distinctly (their bitmaps differ by recipe).
+        let p = crate::trace::profiles::ModelProfile::for_model("gcn").unwrap();
+        let plan = crate::api::plan::ModelPlan::profile(&p, 0.4, &configs[0], 1, 7);
+        let mut seen = std::collections::HashSet::new();
+        for u in &plan.units {
+            let key = UnitKey::for_unit(&plan.cfg, u);
+            let canon = key.canon();
+            assert_eq!(canon, canon_json_for_unit(&plan.cfg, u));
+            assert!(canon.contains("\"kind\":\"profile\""));
+            assert!(canon.contains(UNIT_KEY_VERSION));
+            seen.insert(key.bytes.clone());
+        }
+        assert_eq!(seen.len(), plan.units.len(), "every (layer, op) unit keys distinctly");
+    }
+
+    #[test]
+    fn stale_v1_mirror_entries_read_as_clean_misses() {
+        let dir = std::env::temp_dir().join(format!("td_unitcache_v1_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let (key, sim) = small_unit(42);
+        // Plant a well-formed v1 entry: the exact canonical string the
+        // v1 encoder produced for this very unit, with a valid payload.
+        let mut m = BTreeMap::new();
+        m.insert("schema".to_string(), Json::Str(UNIT_CACHE_SCHEMA.to_string()));
+        m.insert("unit".to_string(), unit_to_json(&sim));
+        let payload = Json::Obj(m).render();
+        {
+            let mut log = RecordLog::open(dir.join(UNIT_CACHE_FILE)).unwrap();
+            log.append(V1_GOLDEN_CANON, &payload).unwrap();
+        }
+        // The v2 canonical string differs (the version tag is part of
+        // the document), so the stale entry is unreachable: a clean
+        // miss, not an error and never a wrong answer.
+        assert_ne!(key.canon(), V1_GOLDEN_CANON);
+        let cache = UnitCache::new(8).with_disk(&dir).unwrap();
+        assert!(cache.lookup(&key).is_none());
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.disk_misses), (0, 1, 1));
+        // And the mirror keeps working under the v2 namespace.
+        cache.insert(&key, sim);
+        assert_eq!(cache.lookup(&key), Some(sim));
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -180,9 +180,10 @@ impl Engine {
         let mut jobs: Vec<Job> = Vec::new();
         let mut cells: Vec<Vec<Source>> = Vec::with_capacity(reqs.len());
         let mut whole_job: Vec<Option<usize>> = vec![None; reqs.len()];
-        // Batch-level coalescing: canonical key -> job index of the
-        // first (authoritative) occurrence.
-        let mut pending: HashMap<String, usize> = HashMap::new();
+        // Batch-level coalescing: full key bytes -> job index of the
+        // first (authoritative) occurrence. Keyed by the bytes, not the
+        // 64-bit hash, so a collision can never merge distinct units.
+        let mut pending: HashMap<Vec<u8>, usize> = HashMap::new();
         for (cell, plan) in plans.iter().enumerate() {
             match plan {
                 Some(p) => {
@@ -191,12 +192,12 @@ impl Engine {
                         let key = UnitKey::for_unit(&p.cfg, u);
                         if let Some(hit) = cache.lookup(&key) {
                             srcs.push(Source::Hit(hit));
-                        } else if let Some(&j) = pending.get(&key.canon) {
+                        } else if let Some(&j) = pending.get(&key.bytes) {
                             cache.note_coalesced();
                             srcs.push(Source::Job(j));
                         } else {
                             let j = jobs.len();
-                            pending.insert(key.canon.clone(), j);
+                            pending.insert(key.bytes.clone(), j);
                             jobs.push(Job::Unit { plan: p, unit: ui, key });
                             srcs.push(Source::Job(j));
                         }

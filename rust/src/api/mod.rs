@@ -54,7 +54,7 @@ pub use cache::{
     UnitCache, UnitCacheStats, UnitKey, DEFAULT_CACHE_CAP, UNIT_CACHE_FILE, UNIT_KEY_VERSION,
 };
 pub use engine::{default_jobs, Engine};
-pub use plan::{layers_report, ModelPlan, UnitSpec, UnitTensors};
+pub use plan::{layers_report, ModelPlan, TensorRecipe, UnitSpec, UnitTensors};
 pub use report::{
     report_set_json, Cell, Report, ReportRow, FRONTIER_SCHEMA, LAYERS_SCHEMA, REPORT_SCHEMA,
     REPORT_SET_SCHEMA,

@@ -37,6 +37,7 @@ use crate::repro::ModelSim;
 use crate::sim::unit::{simulate_unit, LayerOpSim};
 use crate::tensor::TensorBitmap;
 use crate::trace::profiles::ModelProfile;
+use crate::util::hash::bitmap_hash;
 
 use super::report::{Cell, Report, LAYERS_SCHEMA};
 use super::request::{derive_seed, SimRequest, Workload};
@@ -64,6 +65,19 @@ pub enum UnitTensors {
     /// Explicit bitmaps (single-op requests), shared across units
     /// without copying.
     Explicit { a: Arc<TensorBitmap>, g: Arc<TensorBitmap> },
+}
+
+/// The cache-key view of a unit's operand bitmaps: everything their
+/// content depends on, with explicit/captured bitmaps collapsed to
+/// content hashes. Profile bitmaps are deterministic in
+/// `(model, layer, epoch, bitmap_seed)`, so keying the *recipe* lets a
+/// cache hit skip generation too; the two hash variants are
+/// interchangeable across [`UnitTensors::Trace`] and
+/// [`UnitTensors::Explicit`] carriers by construction.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorRecipe {
+    Profile { model: String, layer: usize, epoch: f64, bitmap_seed: u64 },
+    Bitmaps { a: u64, g: u64 },
 }
 
 /// One independent simulation unit: a (layer, op) pair with everything
@@ -108,6 +122,28 @@ impl UnitSpec {
             self.batch_mult,
             self.seed,
         )
+    }
+
+    /// The content recipe of this unit's operand bitmaps — the tensor
+    /// fragment of its [`crate::api::UnitKey`]. Hashing captured and
+    /// explicit bitmaps here (rather than in the key encoder) keeps the
+    /// key layer free of tensor types.
+    pub fn tensor_recipe(&self) -> TensorRecipe {
+        match &self.tensors {
+            UnitTensors::Profile { profile, epoch, bitmap_seed, .. } => TensorRecipe::Profile {
+                model: profile.name().to_string(),
+                layer: self.layer,
+                epoch: *epoch,
+                bitmap_seed: *bitmap_seed,
+            },
+            UnitTensors::Trace { layers } => {
+                let (a, g) = &layers[self.layer];
+                TensorRecipe::Bitmaps { a: bitmap_hash(a), g: bitmap_hash(g) }
+            }
+            UnitTensors::Explicit { a, g } => {
+                TensorRecipe::Bitmaps { a: bitmap_hash(a), g: bitmap_hash(g) }
+            }
+        }
     }
 }
 

@@ -15,6 +15,13 @@
 //! axis indices produced them, so the explorer dedupes re-visited
 //! configurations exactly as the unit cache dedupes their units.
 //!
+//! Candidate ids are **stable across unit-key format bumps**: the unit
+//! cache moved its key to a binary v2 encoding (DESIGN.md §4), but
+//! candidate identity stays FNV-1a over the canonical-JSON `cfg`
+//! fragment — explore reports render ids as `{:016x}`, so changing
+//! this encoding would silently change every published frontier id.
+//! The pinned-id test below locks the origin candidate's id.
+//!
 //! Axis values are validated against per-axis bounds at construction
 //! time (the calling thread), never inside a worker: the cycle
 //! simulator hard-asserts some of them (16 lanes, staging depth 2 or
@@ -418,6 +425,19 @@ mod tests {
         assert!(s.set_axis("dtype", &["fp64"]).is_err());
         assert!(s.set_axis("nope", &["1"]).is_err());
         assert!(s.set_axis("tiles", &[]).is_err(), "empty axis rejected");
+    }
+
+    #[test]
+    fn origin_candidate_id_is_pinned() {
+        // Explore output stability: frontier reports print candidate
+        // ids as {:016x}, so the id of the Table-2 default config is a
+        // published value. It must not move when the *unit* key
+        // encoding changes (it did not across the JSON->binary v2 key
+        // bump) — only a deliberate cfg_json/hash change may repin it.
+        let s = SearchSpace::trivial();
+        let id = s.id(&s.origin());
+        assert_eq!(format!("{id:016x}"), "343d7c2bb22c2e90");
+        assert_eq!(id, fnv1a64(cfg_json(&ChipConfig::default()).render().as_bytes()));
     }
 
     #[test]

@@ -41,6 +41,6 @@ pub use chip::{ChipSim, LayerCycles, Pass};
 pub use connectivity::{Connectivity, LANES};
 pub use pe::{baseline_cycles, simulate_stream};
 pub use scheduler::{schedule_cycle, Schedule, IDLE};
-pub use stream::{CacheStats, CachedScheduler, StreamWindow};
+pub use stream::{CacheStats, CachedScheduler, PackedStream, StreamWindow};
 pub use tile::{tile_pass_cycles, DEFAULT_LEAD_LIMIT};
 pub use unit::{cycle_ratio, simulate_unit, LayerOpSim};

@@ -6,22 +6,32 @@
 //! the same state machine: pack up to `depth` 16-lane effectual masks
 //! into the scheduler's 48-bit window vector `Z`, schedule a cycle,
 //! AND out the consumed pairs, shift by the advance, refill from the
-//! stream. This module is the single implementation of that machine:
+//! stream. This module is the single implementation of that machine,
+//! built on a bit-parallel packed mask representation:
 //!
+//! * [`PackedStream`] — the per-row 16-lane effectual masks packed four
+//!   rows per `u64` word (row `i` at bits `16*(i % 4)` of word `i / 4`,
+//!   plus one always-zero pad word). Window loads become one unaligned
+//!   two-word funnel shift instead of a per-row loop, and zero-run
+//!   detection becomes whole-word compares plus a `trailing_zeros`
+//!   scan instead of per-element iteration — the access pattern the
+//!   long dynamic zero runs of backprop sparsity reward most.
 //! * [`StreamWindow`] — the cursor (load / consume / shift / refill)
-//!   plus arithmetic zero-run skipping: a run of `k` all-zero rows
-//!   retires in `ceil(k / depth)` cycles computed in O(k) mask reads
-//!   instead of iterated schedule/shift cycles.
+//!   over a [`PackedStream`], plus arithmetic zero-run skipping: a run
+//!   of `k` all-zero rows retires in `ceil(k / depth)` cycles computed
+//!   in O(k / 4) word reads instead of iterated schedule/shift cycles.
 //! * [`CachedScheduler`] — a memoizing wrapper around
 //!   [`schedule_cycle`]: analytical fast paths for the empty window and
 //!   the fully-dense head row (constant-time, no encoder walk), and a
-//!   fixed-size direct-mapped memo table keyed on `(z, depth)` so the
-//!   recurring window patterns that dominate real traces (§4.4: dense
-//!   rows, empty rows, clustered-nonzero channel patterns) schedule in
-//!   one lookup. The schedule is a pure function of `(z, depth)`, so
-//!   caching can never change simulated cycles or MACs — only how fast
-//!   the simulator produces them. [`reference`] keeps the pre-refactor
-//!   uncached loops as the differential baseline
+//!   fixed-size direct-mapped memo table keyed on the widened
+//!   [`memo_key`] — the 48-bit packed window in the low bits, the
+//!   staging depth in the top byte — so a probe is a single `u64`
+//!   compare and the recurring window patterns that dominate real
+//!   traces (§4.4: dense rows, empty rows, clustered-nonzero channel
+//!   patterns) schedule in one lookup. The schedule is a pure function
+//!   of `(z, depth)`, so caching can never change simulated cycles or
+//!   MACs — only how fast the simulator produces them. [`reference`]
+//!   keeps the pre-refactor uncached loops as the differential baseline
 //!   (`rust/tests/stream_differential.rs` pins byte-identity,
 //!   `rust/benches/tile_hotpath.rs` pins the throughput win).
 //! * [`drive`] — the run-to-completion loop, generic over a per-cycle
@@ -44,6 +54,9 @@ use super::scheduler::{schedule_cycle, Schedule, IDLE};
 /// Mask of the window's head row (step 0).
 const HEAD_ROW: u64 = 0xFFFF;
 
+/// Effectual-mask rows per packed `u64` word.
+pub const ROWS_PER_WORD: usize = 64 / LANES;
+
 /// log2 of the memo-table size. 4096 direct-mapped entries (~160 KiB)
 /// comfortably hold the working set of recurring window patterns a
 /// trace-like stream produces while staying L2-resident.
@@ -52,23 +65,38 @@ pub const MEMO_BITS: u32 = 12;
 /// Number of direct-mapped memo entries.
 pub const MEMO_SIZE: usize = 1 << MEMO_BITS;
 
-/// The direct-mapped slot a window vector hashes to. Fibonacci hashing
-/// spreads the low-entropy sparse windows across the table; public so
-/// the differential tests can construct adversarial collision pairs.
+/// The widened memo key: the packed multi-row window vector (≤ 48 bits
+/// for the 3-deep staging buffer) in the low bits and the staging depth
+/// in the top byte. One `u64` equality check replaces the old
+/// `(z, depth)` two-field probe, and `key == 0` doubles as the
+/// empty-slot sentinel: a real key always carries depth bits, and the
+/// all-zero window is answered by a fast path before it can reach the
+/// table.
 #[inline(always)]
-pub fn memo_index(z: u64) -> usize {
-    (z.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> (64 - MEMO_BITS)) as usize
+pub fn memo_key(z: u64, depth: usize) -> u64 {
+    debug_assert_eq!(z >> 48, 0, "window vector exceeds 48 bits");
+    z | ((depth as u64) << 56)
 }
 
-/// The first pair of distinct single-head-row window keys that collide
-/// in the memo table — adversarial-test support for the direct-mapped
-/// eviction path. Scanning keys `1..` in order, the pigeonhole
-/// principle bounds both members of the pair by `MEMO_SIZE + 1`, so
-/// they are always valid non-empty, non-dense `u16` head masks.
-pub fn memo_collision_pair() -> (u64, u64) {
+/// The direct-mapped slot a widened [`memo_key`] hashes to. Fibonacci
+/// hashing spreads the low-entropy sparse windows across the table;
+/// public so the differential tests can construct adversarial collision
+/// pairs.
+#[inline(always)]
+pub fn memo_index(key: u64) -> usize {
+    (key.wrapping_mul(0x9E37_79B9_7F4A_7C15) >> (64 - MEMO_BITS)) as usize
+}
+
+/// The first pair of distinct single-head-row window vectors whose
+/// widened keys collide in the memo table at the given depth —
+/// adversarial-test support for the direct-mapped eviction path.
+/// Scanning vectors `1..` in order, the pigeonhole principle bounds
+/// both members of the pair by `MEMO_SIZE + 1`, so they are always
+/// valid non-empty, non-dense `u16` head masks.
+pub fn memo_collision_pair(depth: usize) -> (u64, u64) {
     let mut first: Vec<Option<u64>> = vec![None; MEMO_SIZE];
     for m in 1u64..=(MEMO_SIZE as u64 + 1) {
-        let idx = memo_index(m);
+        let idx = memo_index(memo_key(m, depth));
         match first[idx] {
             None => first[idx] = Some(m),
             Some(other) => return (other, m),
@@ -123,12 +151,10 @@ impl CacheStats {
     }
 }
 
-/// One memo slot. `z == 0` marks an empty slot: the all-zero window is
-/// answered by the fast path and never enters the table.
+/// One memo slot. `key == 0` marks an empty slot (see [`memo_key`]).
 #[derive(Debug, Clone, Copy)]
 struct MemoEntry {
-    z: u64,
-    depth: u8,
+    key: u64,
     sched: Schedule,
 }
 
@@ -144,11 +170,8 @@ pub struct CachedScheduler {
 
 impl CachedScheduler {
     pub fn new(conn: Connectivity) -> CachedScheduler {
-        let empty = MemoEntry {
-            z: 0,
-            depth: 0,
-            sched: Schedule { ms: [IDLE; LANES], picks: 0, advance: 0 },
-        };
+        let empty =
+            MemoEntry { key: 0, sched: Schedule { ms: [IDLE; LANES], picks: 0, advance: 0 } };
         CachedScheduler { conn, table: vec![empty; MEMO_SIZE], stats: CacheStats::default() }
     }
 
@@ -184,25 +207,116 @@ impl CachedScheduler {
             let advance = ((after.trailing_zeros() as u8) / LANES as u8).min(depth);
             return Schedule { ms: [0; LANES], picks: HEAD_ROW, advance };
         }
-        // Direct-mapped memo probe, keyed on (z, depth).
-        let idx = memo_index(z);
+        // Direct-mapped memo probe on the widened single-u64 key.
+        let key = memo_key(z, self.conn.depth);
+        let idx = memo_index(key);
         let e = &self.table[idx];
-        if e.z == z && e.depth == depth {
+        if e.key == key {
             self.stats.hits += 1;
             return e.sched;
         }
         let sched = schedule_cycle(&self.conn, z);
         self.stats.walks += 1;
-        self.table[idx] = MemoEntry { z, depth, sched };
+        self.table[idx] = MemoEntry { key, sched };
         sched
     }
 }
 
-/// The shared window cursor: the packed `Z` vector over a stream of
-/// 16-lane effectual masks, with load/consume/shift/refill and
-/// arithmetic zero-run skipping.
-pub struct StreamWindow<'a> {
-    stream: &'a [u16],
+/// A stream of 16-lane effectual masks packed four rows per `u64` word:
+/// row `i` occupies bits `16 * (i % 4) ..` of word `i / 4`. Rows past
+/// the stream length read as zero (the packing never writes them), and
+/// one always-zero pad word terminates the vector so an unaligned
+/// two-word window load never reads out of bounds.
+#[derive(Debug, Clone)]
+pub struct PackedStream {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl PackedStream {
+    /// Pack a mask stream. O(n) single pass; the result is immutable.
+    pub fn pack(rows: &[u16]) -> PackedStream {
+        let n = rows.len();
+        let mut words = vec![0u64; n.div_ceil(ROWS_PER_WORD) + 1];
+        for (i, &m) in rows.iter().enumerate() {
+            words[i / ROWS_PER_WORD] |= (m as u64) << ((i % ROWS_PER_WORD) * LANES);
+        }
+        PackedStream { words, len: n }
+    }
+
+    /// Rows in the stream.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The effectual mask of row `i` (`i < len`).
+    #[inline]
+    pub fn row(&self, i: usize) -> u16 {
+        debug_assert!(i < self.len);
+        (self.words[i / ROWS_PER_WORD] >> ((i % ROWS_PER_WORD) * LANES)) as u16
+    }
+
+    /// Unaligned load of four consecutive rows starting at `start`
+    /// (`start < len`): row `start + s` lands at bits `16s`. Rows past
+    /// the stream end read as zero. One or two word reads plus a funnel
+    /// shift — never a per-row loop.
+    #[inline]
+    pub fn load4(&self, start: usize) -> u64 {
+        debug_assert!(start < self.len);
+        let w = start / ROWS_PER_WORD;
+        let sh = (start % ROWS_PER_WORD) * LANES;
+        if sh == 0 {
+            self.words[w]
+        } else {
+            // The pad word makes `w + 1` always in bounds.
+            (self.words[w] >> sh) | (self.words[w + 1] << (64 - sh))
+        }
+    }
+
+    /// Index of the first row at or after `start` with any effectual
+    /// lane, or `len` when the rest of the stream is all-zero. Scans
+    /// whole words (four rows per compare) and finishes with one
+    /// `trailing_zeros`; zero-padding past `len` guarantees any set bit
+    /// names a real row.
+    #[inline]
+    pub fn next_effectual(&self, start: usize) -> usize {
+        if start >= self.len {
+            return self.len;
+        }
+        let mut w = start / ROWS_PER_WORD;
+        let sh = (start % ROWS_PER_WORD) * LANES;
+        // Rows `start..` of the first word, earlier rows shifted out.
+        let head = self.words[w] >> sh;
+        if head != 0 {
+            let hit = start + head.trailing_zeros() as usize / LANES;
+            debug_assert!(hit < self.len);
+            return hit;
+        }
+        let data_words = self.len.div_ceil(ROWS_PER_WORD);
+        w += 1;
+        while w < data_words && self.words[w] == 0 {
+            w += 1;
+        }
+        if w >= data_words {
+            return self.len;
+        }
+        let hit = w * ROWS_PER_WORD + self.words[w].trailing_zeros() as usize / LANES;
+        debug_assert!(hit < self.len);
+        hit
+    }
+}
+
+/// The shared window cursor: the packed `Z` vector over a
+/// [`PackedStream`] of 16-lane effectual masks, with
+/// load/consume/shift/refill and arithmetic zero-run skipping.
+pub struct StreamWindow {
+    packed: PackedStream,
     /// Remaining-effectual window, row `s` of the window at bits
     /// `16s..16s+16`.
     z: u64,
@@ -213,19 +327,28 @@ pub struct StreamWindow<'a> {
     depth: usize,
 }
 
-impl<'a> StreamWindow<'a> {
-    pub fn new(stream: &'a [u16], depth: usize) -> StreamWindow<'a> {
-        let mut w = StreamWindow { stream, z: 0, pos: 0, loaded: 0, depth };
+impl StreamWindow {
+    pub fn new(stream: &[u16], depth: usize) -> StreamWindow {
+        debug_assert!(depth >= 1 && depth * LANES <= 48, "depth outside staging range");
+        let mut w = StreamWindow { packed: PackedStream::pack(stream), z: 0, pos: 0, loaded: 0, depth };
         w.refill();
         w
     }
 
+    /// Load the unfilled window tail in one unaligned packed load
+    /// instead of a per-row loop. Rows already resident keep their
+    /// consumed (ANDed-out) state: only fresh rows are ORed in above
+    /// them.
     #[inline]
     fn refill(&mut self) {
-        while self.loaded < self.depth && self.pos + self.loaded < self.stream.len() {
-            self.z |= (self.stream[self.pos + self.loaded] as u64) << (self.loaded * LANES);
-            self.loaded += 1;
+        let start = self.pos + self.loaded;
+        if self.loaded >= self.depth || start >= self.packed.len() {
+            return;
         }
+        let fresh = (self.depth - self.loaded).min(self.packed.len() - start);
+        let mask = (1u64 << (fresh * LANES)) - 1;
+        self.z |= (self.packed.load4(start) & mask) << (self.loaded * LANES);
+        self.loaded += fresh;
     }
 
     /// The current window vector for the scheduler.
@@ -269,9 +392,10 @@ impl<'a> StreamWindow<'a> {
 
     /// Arithmetic zero-run skipping. When the loaded window is entirely
     /// ineffectual (`z == 0`), extend the run over the un-loaded stream
-    /// tail and retire it wholesale: a run of `k` all-zero rows costs
-    /// `ceil(k / depth)` all-skip cycles when it reaches the stream end,
-    /// and `floor(k / depth)` full-depth skip cycles when a non-zero row
+    /// tail — a whole-word scan, four rows per compare — and retire it
+    /// wholesale: a run of `k` all-zero rows costs `ceil(k / depth)`
+    /// all-skip cycles when it reaches the stream end, and
+    /// `floor(k / depth)` full-depth skip cycles when a non-zero row
     /// follows (the residual `k % depth` zero rows then drain for free
     /// with the next real schedule's advance, exactly as the iterated
     /// loop would). Returns the cycles retired (0 if the window holds
@@ -281,12 +405,10 @@ impl<'a> StreamWindow<'a> {
         if self.z != 0 || self.loaded == 0 {
             return 0;
         }
-        let n = self.stream.len();
-        // All `loaded` window rows are zero; extend over the tail.
-        let mut end = self.pos + self.loaded;
-        while end < n && self.stream[end] == 0 {
-            end += 1;
-        }
+        let n = self.packed.len();
+        // All `loaded` window rows are zero; word-scan the tail for the
+        // next effectual row.
+        let end = self.packed.next_effectual(self.pos + self.loaded);
         let k = end - self.pos;
         if end == n {
             // The run reaches the stream end: ceil(k/depth) cycles, each
@@ -471,6 +593,18 @@ mod tests {
     }
 
     #[test]
+    fn memo_key_carries_the_window_and_separates_depths() {
+        for depth in [2usize, 3] {
+            for z in [1u64, 0xFFFF, 0x8000_0000_0001, 0xFFFF_FFFF_FFFF] {
+                let key = memo_key(z, depth);
+                assert_ne!(key, 0, "real keys must never hit the empty sentinel");
+                assert_eq!(key & 0xFFFF_FFFF_FFFF, z, "window bits must survive");
+            }
+        }
+        assert_ne!(memo_key(5, 2), memo_key(5, 3), "depth must widen the key");
+    }
+
+    #[test]
     fn cached_matches_combinational_for_random_windows() {
         for depth in [2usize, 3] {
             let conn = Connectivity::new(depth);
@@ -499,9 +633,9 @@ mod tests {
         // still get their own schedule (direct-mapped eviction, never a
         // stale answer).
         let conn = Connectivity::new(3);
-        let (za, zb) = memo_collision_pair();
+        let (za, zb) = memo_collision_pair(3);
         assert_ne!(za, zb);
-        assert_eq!(memo_index(za), memo_index(zb));
+        assert_eq!(memo_index(memo_key(za, 3)), memo_index(memo_key(zb, 3)));
         let mut cached = CachedScheduler::new(conn.clone());
         for _ in 0..4 {
             assert_eq!(cached.schedule(za), schedule_cycle(&conn, za));
@@ -510,6 +644,52 @@ mod tests {
         // Direct-mapped: the alternation thrashes the slot — all walks.
         assert_eq!(cached.stats.walks, 8);
         assert_eq!(cached.stats.hits, 0);
+    }
+
+    #[test]
+    fn packed_rows_round_trip_and_straddle_word_seams() {
+        let mut rng = Rng::new(0xBEEF);
+        for len in [0usize, 1, 3, 4, 5, 63, 64, 65, 130] {
+            let rows: Vec<u16> = (0..len).map(|_| rng.next_u64() as u16).collect();
+            let p = PackedStream::pack(&rows);
+            assert_eq!(p.len(), len);
+            for (i, &m) in rows.iter().enumerate() {
+                assert_eq!(p.row(i), m, "row {i} of {len}");
+            }
+            // Unaligned 4-row loads across every word seam: row start+s
+            // at bits 16s, rows past the end read as zero.
+            for start in 0..len {
+                let got = p.load4(start);
+                for s in 0..ROWS_PER_WORD {
+                    let want =
+                        if start + s < len { rows[start + s] as u64 } else { 0 };
+                    assert_eq!((got >> (s * LANES)) & 0xFFFF, want, "start {start} step {s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn next_effectual_matches_linear_scan() {
+        let mut rng = Rng::new(0x5CA7);
+        for trial in 0..120usize {
+            let target = 70 + trial; // spans word counts 18..48
+            let mut rows: Vec<u16> = Vec::new();
+            while rows.len() < target {
+                if rng.chance(0.5) {
+                    for _ in 0..=rng.below(20) {
+                        rows.push(0);
+                    }
+                } else {
+                    rows.push(rng.mask16(0.4) | 1);
+                }
+            }
+            let p = PackedStream::pack(&rows);
+            for start in 0..=rows.len() {
+                let want = (start..rows.len()).find(|&i| rows[i] != 0).unwrap_or(rows.len());
+                assert_eq!(p.next_effectual(start), want, "trial {trial} start {start}");
+            }
+        }
     }
 
     #[test]

@@ -11,7 +11,7 @@
 use tensordash::sim::connectivity::{Connectivity, LANES, MAX_DEPTH};
 use tensordash::sim::pe::simulate_stream_stats;
 use tensordash::sim::scheduler::{schedule_cycle, IDLE};
-use tensordash::sim::stream::{memo_index, reference, CachedScheduler};
+use tensordash::sim::stream::{memo_index, memo_key, reference, CachedScheduler};
 use tensordash::sim::tile::tile_pass_stats;
 use tensordash::tensor::scheduled::{ScheduledRow, ScheduledTensor};
 use tensordash::tensor::{compress_one_side, decompress};
@@ -195,13 +195,15 @@ fn diff_compress_round_trips() {
 /// ever producing a stale schedule.
 #[test]
 fn diff_cache_collision_thrash() {
-    // Two distinct non-zero, non-dense 16-bit head masks whose
-    // single-row windows collide in the memo table.
-    let (za, zb) = tensordash::sim::stream::memo_collision_pair();
-    let (a, b) = (za as u16, zb as u16);
-    assert_eq!(memo_index(a as u64), memo_index(b as u64));
-    assert_ne!(a, b);
     for depth in [2usize, 3] {
+        // Two distinct non-zero, non-dense 16-bit head masks whose
+        // single-row windows collide in the memo table at this depth
+        // (the widened key folds the depth in, so the pair is
+        // depth-specific).
+        let (za, zb) = tensordash::sim::stream::memo_collision_pair(depth);
+        let (a, b) = (za as u16, zb as u16);
+        assert_eq!(memo_index(memo_key(a as u64, depth)), memo_index(memo_key(b as u64, depth)));
+        assert_ne!(a, b);
         let conn = Connectivity::new(depth);
         // [a, 0.., b, 0..] repeated: each scheduled window is exactly
         // `a` or `b` (the zero padding rides the advance), so the two
@@ -251,6 +253,89 @@ fn diff_zero_runs_engage_skipping() {
                 new.skipped_cycles > 0,
                 "a {run}-zero run must retire arithmetically (depth {depth})"
             );
+        }
+    }
+}
+
+/// Word-boundary adversaries for the packed (4-rows-per-`u64`) core:
+/// zero runs ending exactly at rows 63/64/65, effectual clusters
+/// straddling u64 word seams, and all-dense / single-lane masks whose
+/// length lands on and around word multiples, at depths 2 and 3 — the
+/// cases per-element iteration gets right for free and bit-twiddling
+/// gets wrong.
+#[test]
+fn diff_packed_word_boundaries() {
+    for depth in [2usize, 3] {
+        let conn = Connectivity::new(depth);
+        let mut rng = Rng::new(0x0B17 + depth as u64);
+
+        // Zero runs ending at rows 62..66 and 127..129, with a few
+        // effectual lead rows so the run start shifts against the word
+        // grid, and dense + single-lane rows after the run so the run
+        // boundary never coincides with the stream boundary.
+        for end in [62usize, 63, 64, 65, 66, 127, 128, 129] {
+            for lead in [0usize, 1, 2, 3, 5] {
+                if lead >= end {
+                    continue;
+                }
+                let mut rows: Vec<u16> = (0..lead).map(|_| rng.mask16(0.7) | 1).collect();
+                rows.extend(vec![0u16; end - lead]); // run ends at row `end`
+                rows.push(0xFFFF);
+                rows.push(1 << (end % 16));
+                let new = simulate_stream_stats(&conn, &rows);
+                let old = reference::simulate_stream_stats(&conn, &rows);
+                assert_eq!(new.cycles, old.cycles, "end {end} lead {lead} depth {depth}");
+                assert_eq!(new.macs, old.macs, "end {end} lead {lead} depth {depth}");
+                assert!(new.skipped_cycles > 0, "the run must engage skipping");
+            }
+        }
+
+        // Effectual clusters of width 1..3 placed right on word seams
+        // (multiples of four rows), zeros on both sides: the window
+        // load straddles two words mid-cluster.
+        for seam in [4usize, 8, 60, 64, 124, 128] {
+            for width in [1usize, 2, 3] {
+                let mut rows = vec![0u16; seam - 1];
+                for k in 0..width {
+                    rows.push(rng.mask16(0.8) | (1 << k));
+                }
+                rows.extend(vec![0u16; 7]);
+                let new = simulate_stream_stats(&conn, &rows);
+                let old = reference::simulate_stream_stats(&conn, &rows);
+                assert_eq!(new.cycles, old.cycles, "seam {seam} width {width} depth {depth}");
+                assert_eq!(new.macs, old.macs, "seam {seam} width {width} depth {depth}");
+            }
+        }
+
+        // All-dense and single-lane streams of length 63/64/65: the
+        // drained-row advance crosses the word seam on the last loads.
+        for len in [63usize, 64, 65] {
+            let dense = vec![0xFFFFu16; len];
+            let lane = vec![1u16 << 9; len];
+            for rows in [&dense, &lane] {
+                let new = simulate_stream_stats(&conn, rows);
+                let old = reference::simulate_stream_stats(&conn, rows);
+                assert_eq!(new.cycles, old.cycles, "len {len} depth {depth}");
+                assert_eq!(new.macs, old.macs, "len {len} depth {depth}");
+            }
+        }
+
+        // Tile rows of seam-straddling lengths sharing one scheduler.
+        let streams: Vec<Vec<u16>> = vec![
+            vec![0u16; 64],
+            {
+                let mut v = vec![0u16; 63];
+                v.push(0xFFFF);
+                v
+            },
+            vec![1u16 << 4; 65],
+        ];
+        for lead in [0usize, 6] {
+            let new = tile_pass_stats(&conn, &streams, lead);
+            let old = reference::tile_pass_stats(&conn, &streams, lead);
+            assert_eq!(new.cycles, old.cycles, "tile seam lead {lead} depth {depth}");
+            assert_eq!(new.macs, old.macs);
+            assert_eq!(new.imbalance_stall_row_cycles, old.imbalance_stall_row_cycles);
         }
     }
 }
