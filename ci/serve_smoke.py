@@ -1,15 +1,25 @@
 #!/usr/bin/env python3
-"""Service e2e smoke test.
+"""Service e2e load harness.
 
-Starts ``tensordash serve`` on a TCP port, fires overlapping duplicate
-requests from concurrent connections, and asserts:
+Phase 1 — concurrent load. Starts ``tensordash serve`` with a bounded
+worker pool (``--workers/--queue-depth``) over a sharded unit cache
+(``--shards``), fans N concurrent TCP clients at it, each holding one
+persistent connection and issuing several overlapping sweep requests,
+and asserts:
 
-* every response is ok and the ``report`` bodies are byte-identical
-  across all duplicates (the serving layer's determinism contract);
-* a sequential repeat is served from the unit cache with nonzero
-  cache-hit telemetry;
-* a ``shutdown`` op is acknowledged, the connection closes, and the
-  server process exits cleanly (code 0).
+* every response is ok, ids come back in request order per connection,
+  and the ``report`` bodies are byte-identical across all clients (the
+  serving layer's determinism contract under concurrency);
+* a batch of duplicate sub-requests reports a nonzero ``coalesced``
+  count (duplicate units computed once);
+* cumulative stats report nonzero hits/inserts and the configured
+  shard count;
+* a ``shutdown`` op is acknowledged and the server exits cleanly (0).
+
+Phase 2 — backpressure. Restarts the server with ``--workers 1
+--queue-depth 1``, occupies the worker with one connection, queues a
+second, and asserts a third is shed with an explicit in-protocol
+"overloaded" error line; then shuts down cleanly.
 
 Usage: python3 ci/serve_smoke.py [path/to/tensordash]
 """
@@ -24,33 +34,34 @@ import time
 BIN = sys.argv[1] if len(sys.argv) > 1 else "target/release/tensordash"
 HOST = "127.0.0.1"
 PORT = 17871
-REQUEST = {
-    "op": "simulate",
-    "id": "dup",
-    "model": "alexnet",
-    "epoch": 0.4,
-    "samples": 1,
-    "seed": 42,
-}
-DUPLICATES = 4
+
+CLIENTS = 6
+# Two overlapping sweeps (the two-model sweep's gcn cells are the
+# one-model sweep's whole unit set), alternated per client.
+SWEEPS = [
+    {"op": "sweep", "models": ["alexnet", "gcn"], "samples": 1, "seed": 42},
+    {"op": "sweep", "models": ["gcn"], "samples": 1, "seed": 42},
+]
+REQS_PER_CLIENT = 4
 
 
-def wait_for_port(proc, timeout=60.0):
+def wait_for_port(proc, port, timeout=60.0):
     deadline = time.time() + timeout
     while time.time() < deadline:
         if proc.poll() is not None:
             raise SystemExit(f"server exited early with code {proc.returncode}")
         try:
-            with socket.create_connection((HOST, PORT), timeout=1.0):
+            with socket.create_connection((HOST, port), timeout=1.0):
                 return
         except OSError:
             time.sleep(0.2)
     raise SystemExit("server never opened its port")
 
 
-def roundtrip(payload):
-    """Send one request object, return the parsed response line."""
-    with socket.create_connection((HOST, PORT), timeout=120.0) as sock:
+def roundtrip(payload, port):
+    """One-shot connection: send one request object, return the parsed
+    response line."""
+    with socket.create_connection((HOST, port), timeout=120.0) as sock:
         sock.sendall((json.dumps(payload) + "\n").encode())
         with sock.makefile("r", encoding="utf-8") as f:
             line = f.readline()
@@ -59,75 +70,168 @@ def roundtrip(payload):
     return json.loads(line)
 
 
-def main():
+def start_server(port, extra):
     proc = subprocess.Popen(
-        [BIN, "serve", "--listen", f"{HOST}:{PORT}", "--jobs", "2"],
+        [BIN, "serve", "--listen", f"{HOST}:{port}", "--jobs", "2"] + extra,
         stdout=subprocess.PIPE,
         stderr=subprocess.PIPE,
     )
-    try:
-        wait_for_port(proc)
+    wait_for_port(proc, port)
+    return proc
 
-        # Overlapping duplicates from concurrent connections.
-        results = [None] * DUPLICATES
+
+def stop_server(proc, port):
+    bye = roundtrip({"op": "shutdown"}, port)
+    assert bye.get("bye") is True, f"no shutdown ack: {bye}"
+    code = proc.wait(timeout=60)
+    assert code == 0, f"server exited with code {code}"
+
+
+def run_client(client, port):
+    """One persistent connection, REQS_PER_CLIENT sequential requests
+    with ids; returns the report bodies in request order."""
+    bodies = []
+    with socket.create_connection((HOST, port), timeout=120.0) as sock:
+        with sock.makefile("r", encoding="utf-8") as f:
+            for i in range(REQS_PER_CLIENT):
+                req = dict(SWEEPS[i % len(SWEEPS)])
+                req["id"] = f"c{client}-r{i}"
+                sock.sendall((json.dumps(req) + "\n").encode())
+                line = f.readline()
+                assert line, f"client {client}: connection closed mid-stream"
+                resp = json.loads(line)
+                assert resp.get("ok") is True, f"client {client} req {i}: {resp}"
+                assert resp.get("id") == req["id"], (
+                    f"client {client}: response out of order: {resp.get('id')}"
+                )
+                bodies.append(json.dumps(resp["report"]))
+    return bodies
+
+
+def phase_concurrent_load():
+    proc = start_server(
+        PORT, ["--workers", "4", "--queue-depth", "32", "--shards", "16"]
+    )
+    try:
+        results = [None] * CLIENTS
         errors = []
 
         def fire(i):
             try:
-                results[i] = roundtrip(REQUEST)
+                results[i] = run_client(i, PORT)
             except Exception as e:  # noqa: BLE001 - report, don't hang
-                errors.append(f"request {i}: {e}")
+                errors.append(f"client {i}: {e}")
 
-        threads = [threading.Thread(target=fire, args=(i,)) for i in range(DUPLICATES)]
+        threads = [threading.Thread(target=fire, args=(i,)) for i in range(CLIENTS)]
         for t in threads:
             t.start()
         for t in threads:
             t.join(timeout=300)
         if errors:
             raise SystemExit("; ".join(errors))
-        for i, resp in enumerate(results):
-            assert resp is not None, f"request {i} got no response"
-            assert resp.get("ok") is True, f"request {i} not ok: {resp}"
-            assert resp.get("id") == "dup", f"request {i} lost its id: {resp}"
 
-        # Byte-identical bodies: dump preserves the server's key order.
-        bodies = [json.dumps(r["report"]) for r in results]
-        for i, body in enumerate(bodies[1:], start=1):
-            assert body == bodies[0], f"duplicate {i} diverged from duplicate 0"
-        print(f"ok: {DUPLICATES} overlapping duplicates returned identical bodies")
+        # Byte-identical bodies across every client (json.dumps
+        # preserves the server's key order).
+        for i, bodies in enumerate(results):
+            assert bodies is not None, f"client {i} returned nothing"
+            assert len(bodies) == REQS_PER_CLIENT, f"client {i} lost responses"
+            assert bodies == results[0], f"client {i} diverged from client 0"
+        print(
+            f"ok: {CLIENTS} concurrent clients x {REQS_PER_CLIENT} overlapping "
+            "sweeps returned byte-identical bodies in request order"
+        )
 
-        # A sequential repeat must be cache-served: nonzero hit delta.
-        repeat = roundtrip(REQUEST)
-        assert repeat.get("ok") is True, f"repeat not ok: {repeat}"
-        assert json.dumps(repeat["report"]) == bodies[0], "repeat body diverged"
-        cache = repeat.get("cache", {})
-        assert cache.get("hits", 0) > 0, f"repeat was not cache-served: {cache}"
-        assert cache.get("misses", 1) == 0, f"repeat recomputed units: {cache}"
-        print(f"ok: sequential repeat fully cache-served ({cache['hits']} hits)")
+        # Duplicate sub-requests in one batch must coalesce onto one
+        # computation (fresh seed so the units cannot already be
+        # cached).
+        batch = {
+            "op": "batch",
+            "requests": [
+                {"op": "simulate", "id": "a", "model": "gcn", "samples": 1, "seed": 777},
+                {"op": "simulate", "id": "b", "model": "gcn", "samples": 1, "seed": 777},
+            ],
+        }
+        with socket.create_connection((HOST, PORT), timeout=120.0) as sock:
+            sock.sendall((json.dumps(batch) + "\n").encode())
+            with sock.makefile("r", encoding="utf-8") as f:
+                lines = [f.readline(), f.readline()]
+        subs = [json.loads(l) for l in lines]
+        assert all(r.get("ok") is True for r in subs), f"batch failed: {subs}"
+        assert json.dumps(subs[0]["report"]) == json.dumps(subs[1]["report"])
+        coalesced = subs[-1].get("cache", {}).get("coalesced", 0)
+        assert coalesced > 0, f"batch duplicates did not coalesce: {subs[-1]}"
+        print(f"ok: duplicate batch sub-requests coalesced ({coalesced} units)")
 
-        # Cumulative stats: every unique unit computed exactly once.
-        stats = roundtrip({"op": "stats"})
+        # Cumulative stats: real cache traffic over the configured
+        # shard count.
+        stats = roundtrip({"op": "stats"}, PORT)
         assert stats.get("ok") is True, f"stats not ok: {stats}"
         total = stats["cache"]
         assert total["inserts"] > 0, f"no units were ever computed: {total}"
         assert total["hits"] > 0, f"no request was ever cache-served: {total}"
+        assert total["coalesced"] > 0, f"coalescing telemetry lost: {total}"
+        assert stats.get("cache_shards") == 16, f"shard count not reported: {stats}"
         print(
             "ok: cumulative telemetry hits={hits} misses={misses} "
-            "inserts={inserts} coalesced={coalesced}".format(**total)
+            "inserts={inserts} coalesced={coalesced} over 16 shards".format(**total)
         )
 
-        # Clean shutdown: ack, then process exit 0.
-        bye = roundtrip({"op": "shutdown"})
-        assert bye.get("bye") is True, f"no shutdown ack: {bye}"
-        code = proc.wait(timeout=60)
-        assert code == 0, f"server exited with code {code}"
-        print("ok: clean shutdown (exit 0)")
-        print("serve smoke: PASS")
-        return 0
+        stop_server(proc, PORT)
+        print("ok: clean shutdown under load config (exit 0)")
     finally:
         if proc.poll() is None:
             proc.kill()
             proc.wait(timeout=10)
+
+
+def phase_backpressure():
+    port = PORT + 1
+    proc = start_server(port, ["--workers", "1", "--queue-depth", "1"])
+    try:
+        # Occupy the single worker with connection A (a served request
+        # proves the worker owns it).
+        a = socket.create_connection((HOST, port), timeout=120.0)
+        a_file = a.makefile("r", encoding="utf-8")
+        a.sendall(b'{"op":"stats","id":"hold"}\n')
+        resp = json.loads(a_file.readline())
+        assert resp.get("ok") is True, f"hold request failed: {resp}"
+
+        # B parks in the depth-1 queue ...
+        b = socket.create_connection((HOST, port), timeout=120.0)
+        time.sleep(0.5)
+
+        # ... so C must be shed with an explicit overloaded error line.
+        with socket.create_connection((HOST, port), timeout=120.0) as c:
+            with c.makefile("r", encoding="utf-8") as f:
+                line = f.readline()
+        assert line, "shed connection closed without the error line"
+        shed = json.loads(line)
+        assert shed.get("ok") is False, f"shed response claims ok: {shed}"
+        assert "overloaded" in shed.get("error", ""), f"not an overload error: {shed}"
+        print(f"ok: queue overflow shed with in-protocol error: {shed['error']}")
+
+        # Shutdown through the in-service connection; B is refused or
+        # closed, the process exits 0.
+        a.sendall(b'{"op":"shutdown"}\n')
+        bye = json.loads(a_file.readline())
+        assert bye.get("bye") is True, f"no shutdown ack: {bye}"
+        b.close()
+        a_file.close()
+        a.close()
+        code = proc.wait(timeout=60)
+        assert code == 0, f"server exited with code {code}"
+        print("ok: clean shutdown under backpressure config (exit 0)")
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=10)
+
+
+def main():
+    phase_concurrent_load()
+    phase_backpressure()
+    print("serve smoke: PASS")
+    return 0
 
 
 if __name__ == "__main__":

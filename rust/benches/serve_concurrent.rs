@@ -1,0 +1,261 @@
+//! §Perf — the TCP serving layer under concurrent load: 8 clients
+//! hammering overlapping warm sweeps through the bounded worker pool
+//! (sharded cache, blocking accept) racing the same storm through the
+//! pre-pool transport (thread-per-connection over a 10ms nonblocking
+//! accept poll, single-shard cache), reimplemented here verbatim as
+//! the baseline.
+//!
+//! The poll-driven baseline taxes every connection with up to one
+//! accept tick of dead time, so a client's connect/request/response
+//! cycle is bounded by the poll period no matter how cheap the warm
+//! request is; the pool accepts immediately and serves from the
+//! lock-striped cache. Byte-identity is asserted **in-run**: every
+//! client's report bodies must equal the uncached reference, across
+//! both transports, before and during timing — the throughput win is
+//! only meaningful if concurrency changes nothing about the bytes.
+//!
+//! Emits medians, the pooled-over-legacy speedup and requests/sec as
+//! `BENCH_serve_concurrent.json` (`$BENCH_OUT` overrides;
+//! `tensordash.bench.v1`), gated through `ci/bench_floors.json`. The
+//! bench itself exits non-zero below 2x pooled-over-legacy.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use tensordash::api::{Engine, Service, UnitCache, DEFAULT_CACHE_CAP};
+use tensordash::util::bench::{bench, section, BenchStats};
+use tensordash::util::json::Json;
+
+/// Concurrent clients in the storm (the acceptance bar is at 8).
+const CLIENTS: usize = 8;
+/// Connect/request/response cycles per client per iteration.
+const REQS_PER_CLIENT: usize = 12;
+/// Worker pool geometry for the pooled configuration.
+const WORKERS: usize = 8;
+const QUEUE_DEPTH: usize = 64;
+const SHARDS: usize = 16;
+
+fn record(name: &str, s: &BenchStats) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(name.to_string()));
+    m.insert("median_ns".to_string(), Json::Num(s.median_ns));
+    m.insert("mean_ns".to_string(), Json::Num(s.mean_ns));
+    m.insert("min_ns".to_string(), Json::Num(s.min_ns));
+    m.insert("stddev_ns".to_string(), Json::Num(s.stddev_ns));
+    m.insert("iters".to_string(), Json::Num(s.iters as f64));
+    Json::Obj(m)
+}
+
+/// Extract the `report` body of a response line; panics (failing the
+/// bench) on any non-ok response. Comparing bodies — not whole lines —
+/// keeps the moving `cache` telemetry envelope out of the identity
+/// check, exactly like the determinism contract specifies.
+fn report_body(line: &str) -> String {
+    let j = Json::parse(line).expect("response parses");
+    assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "response not ok: {line}");
+    j.get("report").expect("response carries a report").render()
+}
+
+/// One client: `reqs` sequential connect/request/read/close cycles;
+/// returns the report bodies in request order.
+fn run_client(addr: SocketAddr, reqs: &[String]) -> Vec<String> {
+    let mut bodies = Vec::with_capacity(reqs.len());
+    for line in reqs {
+        let stream = TcpStream::connect(addr).expect("connect");
+        let _ = stream.set_nodelay(true);
+        let mut w = stream.try_clone().expect("clone");
+        let mut r = BufReader::new(stream);
+        w.write_all(line.as_bytes()).expect("send");
+        w.write_all(b"\n").expect("send");
+        let mut resp = String::new();
+        r.read_line(&mut resp).expect("recv");
+        bodies.push(report_body(&resp));
+    }
+    bodies
+}
+
+/// Fan `CLIENTS` concurrent clients at `addr` and assert every one of
+/// them saw exactly `expect` — the in-run byte-identity gate.
+fn run_storm(addr: SocketAddr, reqs: &[String], expect: &[String]) {
+    std::thread::scope(|s| {
+        let handles: Vec<_> =
+            (0..CLIENTS).map(|_| s.spawn(move || run_client(addr, reqs))).collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let bodies = h.join().expect("client thread");
+            assert_eq!(bodies, expect, "client {i}: bodies diverged from the reference");
+        }
+    });
+}
+
+/// The pre-pool transport, verbatim: nonblocking accept polled on a
+/// 10ms sleep, one spawned thread per connection, external stop flag.
+fn legacy_serve(service: &Service, listener: TcpListener, stop: &AtomicBool) {
+    listener.set_nonblocking(true).expect("nonblocking listener");
+    std::thread::scope(|s| {
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    s.spawn(move || {
+                        stream.set_nonblocking(false).expect("blocking conn");
+                        let reader = BufReader::new(stream.try_clone().expect("clone"));
+                        let writer = BufWriter::new(stream);
+                        let _ = service.serve_lines(reader, writer);
+                    });
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(10));
+                }
+                Err(e) => panic!("legacy accept: {e}"),
+            }
+        }
+    });
+}
+
+/// One timed iteration against the legacy transport.
+fn storm_legacy(cache: &Arc<UnitCache>, reqs: &[String], expect: &[String]) {
+    let service = Service::new(Engine::new(1), Arc::clone(cache));
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("local addr");
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let server = s.spawn(|| legacy_serve(&service, listener, &stop));
+        run_storm(addr, reqs, expect);
+        stop.store(true, Ordering::SeqCst);
+        server.join().expect("legacy server");
+    });
+}
+
+/// One timed iteration against the bounded worker pool.
+fn storm_pooled(cache: &Arc<UnitCache>, reqs: &[String], expect: &[String]) {
+    let service = Service::new(Engine::new(1), Arc::clone(cache));
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().expect("local addr");
+    std::thread::scope(|s| {
+        let server = s.spawn(|| service.serve_listener(listener, WORKERS, QUEUE_DEPTH));
+        run_storm(addr, reqs, expect);
+        // Shutdown over the protocol, like a real client would.
+        let stream = TcpStream::connect(addr).expect("connect");
+        let mut w = stream.try_clone().expect("clone");
+        let mut r = BufReader::new(stream);
+        w.write_all(b"{\"op\":\"shutdown\"}\n").expect("send");
+        let mut line = String::new();
+        r.read_line(&mut line).expect("recv");
+        assert_eq!(Json::parse(&line).unwrap().get("bye"), Some(&Json::Bool(true)));
+        server.join().expect("pooled server").expect("serve_listener");
+    });
+}
+
+fn main() {
+    // Two overlapping sweeps (the two-model sweep's gcn cells are the
+    // one-model sweep's whole unit set), alternated per client.
+    let r1 = r#"{"op":"sweep","models":["alexnet","gcn"],"samples":1,"seed":42}"#.to_string();
+    let r2 = r#"{"op":"sweep","models":["gcn"],"samples":1,"seed":42}"#.to_string();
+    let reqs: Vec<String> =
+        (0..REQS_PER_CLIENT).map(|i| if i % 2 == 0 { r1.clone() } else { r2.clone() }).collect();
+
+    section(&format!(
+        "concurrent serving: {CLIENTS} clients x {REQS_PER_CLIENT} overlapping warm sweeps, \
+         pooled ({WORKERS} workers, {SHARDS} shards) vs thread-per-conn (10ms accept poll)"
+    ));
+
+    // Uncached reference bodies — the identity baseline everything
+    // (both transports, every client, warm and cold) must match.
+    let reference = Service::new(Engine::new(1), Arc::new(UnitCache::new(1)));
+    let expect: Vec<String> = reqs
+        .iter()
+        .map(|l| {
+            let h = reference.handle_line(l);
+            assert_eq!(h.lines.len(), 1, "one response per request");
+            report_body(&h.lines[0])
+        })
+        .collect();
+
+    // Warm both caches through a plain service and assert warm == cold
+    // reference before any TCP traffic.
+    let legacy_cache = Arc::new(UnitCache::new(DEFAULT_CACHE_CAP));
+    let pooled_cache = Arc::new(UnitCache::with_shards(DEFAULT_CACHE_CAP, SHARDS));
+    for cache in [&legacy_cache, &pooled_cache] {
+        let warmer = Service::new(Engine::new(1), Arc::clone(cache));
+        for (l, want) in reqs.iter().zip(&expect) {
+            let h = warmer.handle_line(l);
+            assert_eq!(&report_body(&h.lines[0]), want, "warm body diverged from cold");
+        }
+    }
+    println!(
+        "  result: {} shards warm ({} units), byte-identical to the uncached reference",
+        pooled_cache.shard_count(),
+        pooled_cache.len()
+    );
+
+    let legacy = bench("serve_legacy_storm", 1, 3, || {
+        storm_legacy(&legacy_cache, &reqs, &expect);
+    });
+    let pooled = bench("serve_pooled_storm", 1, 3, || {
+        storm_pooled(&pooled_cache, &reqs, &expect);
+    });
+
+    let total_reqs = (CLIENTS * REQS_PER_CLIENT) as f64;
+    let speedup = legacy.median_ns / pooled.median_ns;
+    let rps_legacy = total_reqs / (legacy.median_ns / 1e9);
+    let rps_pooled = total_reqs / (pooled.median_ns / 1e9);
+    println!(
+        "  -> pooled storm {speedup:.2}x faster than thread-per-conn \
+         ({rps_legacy:.0} -> {rps_pooled:.0} req/s at {CLIENTS} clients)"
+    );
+
+    let mut speedup_rec = BTreeMap::new();
+    speedup_rec.insert("name".to_string(), Json::Str("serve_concurrent_speedup".to_string()));
+    speedup_rec.insert("legacy_median_ns".to_string(), Json::Num(legacy.median_ns));
+    speedup_rec.insert("pooled_median_ns".to_string(), Json::Num(pooled.median_ns));
+    speedup_rec.insert("speedup".to_string(), Json::Num(speedup));
+    speedup_rec.insert("clients".to_string(), Json::Num(CLIENTS as f64));
+    speedup_rec.insert("requests_per_client".to_string(), Json::Num(REQS_PER_CLIENT as f64));
+    speedup_rec.insert("requests_per_sec_legacy".to_string(), Json::Num(rps_legacy));
+    speedup_rec.insert("requests_per_sec_pooled".to_string(), Json::Num(rps_pooled));
+    speedup_rec.insert("workers".to_string(), Json::Num(WORKERS as f64));
+    speedup_rec.insert("queue_depth".to_string(), Json::Num(QUEUE_DEPTH as f64));
+    speedup_rec.insert("shards".to_string(), Json::Num(SHARDS as f64));
+    // Every storm — warmup and timed, both transports — asserted every
+    // client's bodies against the uncached reference;
+    // ci/check_bench_floors.py's require_identical gate pins this flag.
+    speedup_rec.insert("identical".to_string(), Json::Bool(true));
+    let records = vec![
+        record("serve_legacy_storm", &legacy),
+        record("serve_pooled_storm", &pooled),
+        Json::Obj(speedup_rec),
+    ];
+
+    let out_path =
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_serve_concurrent.json".to_string());
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".to_string(), Json::Str("tensordash.bench.v1".to_string()));
+    doc.insert("bench".to_string(), Json::Str("serve_concurrent".to_string()));
+    doc.insert("records".to_string(), Json::Arr(records));
+    let mut text = Json::Obj(doc).render_pretty();
+    text.push('\n');
+    match std::fs::write(&out_path, text.as_bytes()) {
+        Ok(()) => println!("\nwrote {out_path} ({} bytes)", text.len()),
+        Err(e) => eprintln!("\ncould not write {out_path}: {e}"),
+    }
+
+    // Acceptance bar (EXPERIMENTS.md §Perf), enforced after the
+    // artifact is on disk so a regressing run is still archived: the
+    // worker pool must beat the thread-per-conn poll loop >= 2x at 8
+    // concurrent clients.
+    const CONCURRENT_GATE: f64 = 2.0;
+    if speedup < CONCURRENT_GATE {
+        eprintln!(
+            "PERF GATE: concurrent serve speedup {speedup:.2}x < {CONCURRENT_GATE}x — \
+             the worker pool stopped paying for itself"
+        );
+        std::process::exit(1);
+    }
+    println!("perf gate passed: pooled {speedup:.2}x >= {CONCURRENT_GATE}x at {CLIENTS} clients");
+}

@@ -32,18 +32,33 @@
 //! hash and the derived canonical JSON so accidental drift fails
 //! loudly.
 //!
-//! The store itself is a mutex-guarded LRU (`cap` entries, stamp-based
-//! eviction, counters for hit/miss/insert/evict/coalesce telemetry)
-//! with an optional on-disk mirror backed by the single-file
+//! The store itself is a **lock-striped LRU**: `shards` independent
+//! mutex-guarded stripes, each a stamp-based LRU over a proportional
+//! slice of the total capacity (`ceil(cap / shards)` entries), with
+//! counters for hit/miss/insert/evict/coalesce telemetry. A key's
+//! stripe is `key.hash % shards` — deterministic, because the FNV-1a
+//! hash is a pure function of the v2 key bytes — so concurrent serve
+//! connections touching different units take different locks instead
+//! of convoying on one global mutex. [`UnitCache::stats`] merges the
+//! per-stripe counters by summation; since hits and misses are counted
+//! in the engine's *serial* lookup phase and shard choice is
+//! deterministic, the merged telemetry is byte-identical at any shard
+//! count (while nothing evicts; see the shard-determinism tests).
+//! `UnitCache::new` builds the single-shard (exact global LRU)
+//! degenerate case; [`UnitCache::with_shards`] stripes it.
+//!
+//! The optional on-disk mirror is backed by the single-file
 //! [`RecordLog`](crate::store::RecordLog) (`units.tdstore` under the
 //! cache directory): entries are keyed by the full canonical key
 //! string, so a (cosmically unlikely) 64-bit hash collision reads as a
 //! miss, never as a wrong answer, and a warm start restores the whole
 //! mirror from one compacted in-file index instead of opening
 //! thousands of per-key files. The mirror is single-writer per file —
-//! one process owns a cache directory at a time. In-flight coalescing
-//! uses one `OnceLock` per missing key: concurrent computations of the
-//! same unit block on the first and share its result.
+//! one process owns a cache directory at a time (shards share it; disk
+//! IO already has its own lock). In-flight coalescing uses one
+//! `OnceLock` per missing key, held in the key's own stripe:
+//! concurrent computations of the same unit block on the first and
+//! share its result.
 
 use std::collections::{BTreeMap, HashMap};
 use std::path::PathBuf;
@@ -78,6 +93,13 @@ pub const UNIT_CACHE_FILE: &str = "units.tdstore";
 /// Default in-memory capacity (units, not bytes — a `LayerOpSim` is a
 /// small `Copy` struct, so 64k entries is a few MiB).
 pub const DEFAULT_CACHE_CAP: usize = 65_536;
+
+/// Default lock-stripe count for concurrent use (the `serve`
+/// subcommand and `--cache` CLI runs). Enough stripes that 8-16
+/// connections rarely collide, few enough that the per-stripe LRU
+/// slices stay large. `UnitCache::new` stays single-shard for exact
+/// global LRU semantics.
+pub const DEFAULT_CACHE_SHARDS: usize = 8;
 
 // ---------------------------------------------------------------------
 // Stable hashing — shared with the search candidate encoder
@@ -640,20 +662,52 @@ struct Inner {
     inflight: HashMap<Vec<u8>, Arc<OnceLock<LayerOpSim>>>,
 }
 
-/// Thread-safe LRU of per-unit results with an optional disk mirror.
-/// Shared across requests (and service connections) via `Arc`.
+/// Thread-safe lock-striped LRU of per-unit results with an optional
+/// disk mirror. Shared across requests (and service connections) via
+/// `Arc`. A key lives in stripe `key.hash % shards`; each stripe has
+/// its own mutex, LRU order, in-flight table and counters.
 #[derive(Debug)]
 pub struct UnitCache {
     cap: usize,
-    /// The record-log disk mirror. Its own mutex (not `inner`) so disk
-    /// IO never blocks memory lookups on other threads.
+    /// Per-stripe capacity: `ceil(cap / shards)`, at least 1. The
+    /// proportional split means a balanced key population sees the
+    /// same total residency as a single-shard cache of `cap`.
+    shard_cap: usize,
+    /// The record-log disk mirror. Its own mutex (not a stripe lock)
+    /// so disk IO never blocks memory lookups on other threads; shared
+    /// by every stripe.
     disk: Option<Mutex<RecordLog>>,
-    inner: Mutex<Inner>,
+    shards: Vec<Mutex<Inner>>,
 }
 
 impl UnitCache {
+    /// A single-shard cache: one lock, exact global LRU over `cap`
+    /// entries. The right choice for single-threaded CLI runs and the
+    /// degenerate case the sharded constructor is tested against.
     pub fn new(cap: usize) -> UnitCache {
-        UnitCache { cap: cap.max(1), disk: None, inner: Mutex::new(Inner::default()) }
+        UnitCache::with_shards(cap, 1)
+    }
+
+    /// A lock-striped cache: `shards` independent stripes (clamped to
+    /// at least 1), each an LRU of `ceil(cap / shards)` entries. Shard
+    /// choice is `key.hash % shards` — deterministic in the key — so
+    /// results and (while nothing evicts) telemetry are byte-identical
+    /// at any shard count.
+    pub fn with_shards(cap: usize, shards: usize) -> UnitCache {
+        let cap = cap.max(1);
+        let shards = shards.max(1);
+        UnitCache {
+            cap,
+            shard_cap: cap.div_ceil(shards),
+            disk: None,
+            shards: (0..shards).map(|_| Mutex::new(Inner::default())).collect(),
+        }
+    }
+
+    /// The stripe owning `key`. Pure in the key bytes: FNV-1a hash
+    /// modulo the stripe count.
+    fn shard(&self, key: &UnitKey) -> &Mutex<Inner> {
+        &self.shards[(key.hash % self.shards.len() as u64) as usize]
     }
 
     /// Mirror entries to the `units.tdstore` record log under `dir`
@@ -668,20 +722,43 @@ impl UnitCache {
         Ok(self)
     }
 
+    /// Total requested capacity across all stripes.
     pub fn capacity(&self) -> usize {
         self.cap
     }
 
+    /// Lock-stripe count (1 for `UnitCache::new`).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Resident entries, summed across stripes.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        self.shards.iter().map(|s| s.lock().unwrap().map.len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Counters merged across stripes by summation — the stats-merge
+    /// rule that keeps telemetry byte-identical at any shard count:
+    /// hits/misses/coalesced are counted in the engine's serial lookup
+    /// phase and shard choice is deterministic, so only the *grouping*
+    /// of the counters varies with the stripe count, never the sums.
     pub fn stats(&self) -> UnitCacheStats {
-        self.inner.lock().unwrap().stats
+        let mut total = UnitCacheStats::default();
+        for s in &self.shards {
+            let st = s.lock().unwrap().stats;
+            total.hits += st.hits;
+            total.misses += st.misses;
+            total.inserts += st.inserts;
+            total.evictions += st.evictions;
+            total.coalesced += st.coalesced;
+            total.disk_hits += st.disk_hits;
+            total.disk_misses += st.disk_misses;
+        }
+        total
     }
 
     /// Backend telemetry of the disk mirror (`None` for a memory-only
@@ -691,24 +768,26 @@ impl UnitCache {
         Some(self.disk.as_ref()?.lock().unwrap().stats())
     }
 
-    /// Look one key up, counting a hit or a miss. Memory first, then
-    /// the disk mirror (a disk hit is promoted into memory).
+    /// Look one key up, counting a hit or a miss in the key's stripe.
+    /// Memory first, then the disk mirror (a disk hit is promoted into
+    /// memory).
     pub fn lookup(&self, key: &UnitKey) -> Option<LayerOpSim> {
+        let shard = self.shard(key);
         {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = shard.lock().unwrap();
             if let Some(sim) = Self::touch(&mut g, key) {
                 g.stats.hits += 1;
                 return Some(sim);
             }
         }
         if let Some(sim) = self.disk_load(key) {
-            let mut g = self.inner.lock().unwrap();
-            Self::insert_locked(&mut g, key, sim, self.cap, false);
+            let mut g = shard.lock().unwrap();
+            Self::insert_locked(&mut g, key, sim, self.shard_cap, false);
             g.stats.hits += 1;
             g.stats.disk_hits += 1;
             return Some(sim);
         }
-        let mut g = self.inner.lock().unwrap();
+        let mut g = shard.lock().unwrap();
         g.stats.misses += 1;
         if self.disk.is_some() {
             g.stats.disk_misses += 1;
@@ -719,26 +798,31 @@ impl UnitCache {
     /// Insert a computed result (and mirror it to disk, best effort).
     pub fn insert(&self, key: &UnitKey, sim: LayerOpSim) {
         {
-            let mut g = self.inner.lock().unwrap();
-            Self::insert_locked(&mut g, key, sim, self.cap, true);
+            let mut g = self.shard(key).lock().unwrap();
+            Self::insert_locked(&mut g, key, sim, self.shard_cap, true);
         }
         self.disk_store(key, &sim);
     }
 
-    /// Record that a unit was served by piggybacking on an identical
-    /// pending unit (the engine's deterministic batch-level dedupe).
-    pub fn note_coalesced(&self) {
-        self.inner.lock().unwrap().stats.coalesced += 1;
+    /// Record that `key`'s unit was served by piggybacking on an
+    /// identical pending unit (the engine's deterministic batch-level
+    /// dedupe). Counted in the key's own stripe so per-stripe counters
+    /// stay attributable; the merged sum is shard-count independent.
+    pub fn note_coalesced(&self, key: &UnitKey) {
+        self.shard(key).lock().unwrap().stats.coalesced += 1;
     }
 
     /// Compute-or-wait for a key that missed the lookup phase. If an
     /// identical unit is already in flight (another batch, another
-    /// connection), block on its `OnceLock` and share the result;
-    /// otherwise run `f`, publish, and insert. Does *not* count
-    /// hits/misses — those belong to the deterministic lookup phase.
+    /// connection), block on its `OnceLock` — held in the key's stripe,
+    /// so duplicate units still compute exactly once at any shard
+    /// count — and share the result; otherwise run `f`, publish, and
+    /// insert. Does *not* count hits/misses — those belong to the
+    /// deterministic lookup phase.
     pub fn compute_coalesced(&self, key: &UnitKey, f: impl FnOnce() -> LayerOpSim) -> LayerOpSim {
+        let shard = self.shard(key);
         let slot = {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = shard.lock().unwrap();
             // Re-check under the lock: another request may have
             // completed this unit since our lookup phase ran.
             if let Some(sim) = Self::touch(&mut g, key) {
@@ -752,9 +836,9 @@ impl UnitCache {
             f()
         });
         {
-            let mut g = self.inner.lock().unwrap();
+            let mut g = shard.lock().unwrap();
             if ran {
-                Self::insert_locked(&mut g, key, sim, self.cap, true);
+                Self::insert_locked(&mut g, key, sim, self.shard_cap, true);
                 g.inflight.remove(&key.bytes);
             } else {
                 g.stats.coalesced += 1;
@@ -1123,6 +1207,66 @@ mod tests {
             "re-inserting an identical unit must not grow the log"
         );
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sharded_cache_matches_single_shard_contents_and_merged_stats() {
+        // Drive a single-shard and a striped cache through the same
+        // sequence (capacity far from pressure): lookup results, total
+        // residency and the summed telemetry must be identical — the
+        // stats-merge rule the serving layer's determinism rests on.
+        let single = UnitCache::new(64);
+        let sharded = UnitCache::with_shards(64, 4);
+        let units: Vec<_> = (0..12u64).map(small_unit).collect();
+        for (k, s) in &units {
+            assert!(single.lookup(k).is_none());
+            assert!(sharded.lookup(k).is_none());
+            single.insert(k, *s);
+            sharded.insert(k, *s);
+        }
+        for (k, s) in &units {
+            assert_eq!(single.lookup(k), Some(*s));
+            assert_eq!(sharded.lookup(k), Some(*s));
+        }
+        assert_eq!(single.shard_count(), 1);
+        assert_eq!(sharded.shard_count(), 4);
+        assert_eq!(sharded.len(), single.len());
+        assert_eq!(sharded.capacity(), single.capacity());
+        assert_eq!(sharded.stats(), single.stats(), "merged counters must not depend on shards");
+        // Shard choice is a pure function of the key bytes: an
+        // independently re-derived key finds the same stripe.
+        let rekey = UnitKey::for_unit(&ChipConfig::default(), &explicit_spec(3, 2, 9));
+        assert_eq!(sharded.lookup(&rekey), Some(units[3].1));
+    }
+
+    #[test]
+    fn proportional_shard_caps_evict_within_one_stripe_only() {
+        // cap 4 over 4 stripes = 1 entry per stripe. Two keys landing
+        // in the same stripe displace each other; keys in other stripes
+        // are untouched — per-stripe LRU, not a merged global one.
+        let cache = UnitCache::with_shards(4, 4);
+        let units: Vec<_> = (0..32u64).map(small_unit).collect();
+        let stripe = |k: &UnitKey| (k.hash % 4) as usize;
+        let (a, b) = {
+            let first = &units[0];
+            let twin = units[1..]
+                .iter()
+                .find(|(k, _)| stripe(k) == stripe(&first.0))
+                .expect("32 keys must collide in 4 stripes");
+            (first.clone(), twin.clone())
+        };
+        let other = units[1..]
+            .iter()
+            .find(|(k, _)| stripe(k) != stripe(&a.0))
+            .expect("some key lands elsewhere")
+            .clone();
+        cache.insert(&a.0, a.1);
+        cache.insert(&other.0, other.1);
+        cache.insert(&b.0, b.1);
+        assert_eq!(cache.stats().evictions, 1, "stripe overflow evicts exactly once");
+        assert!(cache.lookup(&a.0).is_none(), "displaced within its stripe");
+        assert_eq!(cache.lookup(&b.0), Some(b.1));
+        assert_eq!(cache.lookup(&other.0), Some(other.1), "other stripes untouched");
     }
 
     #[test]

@@ -193,7 +193,7 @@ impl Engine {
                         if let Some(hit) = cache.lookup(&key) {
                             srcs.push(Source::Hit(hit));
                         } else if let Some(&j) = pending.get(&key.bytes) {
-                            cache.note_coalesced();
+                            cache.note_coalesced(&key);
                             srcs.push(Source::Job(j));
                         } else {
                             let j = jobs.len();

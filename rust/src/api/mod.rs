@@ -51,7 +51,8 @@ pub mod request;
 pub mod service;
 
 pub use cache::{
-    UnitCache, UnitCacheStats, UnitKey, DEFAULT_CACHE_CAP, UNIT_CACHE_FILE, UNIT_KEY_VERSION,
+    UnitCache, UnitCacheStats, UnitKey, DEFAULT_CACHE_CAP, DEFAULT_CACHE_SHARDS, UNIT_CACHE_FILE,
+    UNIT_KEY_VERSION,
 };
 pub use engine::{default_jobs, Engine};
 pub use plan::{layers_report, ModelPlan, TensorRecipe, UnitSpec, UnitTensors};
@@ -60,4 +61,7 @@ pub use report::{
     REPORT_SET_SCHEMA,
 };
 pub use request::{derive_seed, SimRequest, SweepSpec, Workload};
-pub use service::{ArtifactStore, Service, TraceArtifact, SERVE_SCHEMA, TRACE_SCHEMA};
+pub use service::{
+    ArtifactStore, Service, TraceArtifact, DEFAULT_QUEUE_DEPTH, DEFAULT_SERVE_WORKERS,
+    SERVE_SCHEMA, TRACE_SCHEMA,
+};

@@ -30,24 +30,36 @@
 //!   byte-identical to a cold-computed one. Cache telemetry rides in
 //!   the separate `cache` envelope field (counters move between runs
 //!   by design, so they must not — and do not — touch the report).
+//! * **Transport** — the TCP mode runs a *bounded worker pool*: one
+//!   fixed accept thread blocks in `accept()` (no polling; shutdown
+//!   wakes it with a self-connect poke) and feeds a depth-limited
+//!   connection queue that `--workers` pool threads drain. A worker
+//!   owns a connection until EOF, so responses per connection still
+//!   stream strictly in request order. Past `--queue-depth` pending
+//!   connections the accept thread *sheds load*: the client gets an
+//!   explicit `tensordash.serve.v1` "overloaded" error line and a
+//!   closed socket instead of an unbounded thread spawn.
 //! * **Telemetry** — every handled line records its wall-clock
-//!   duration; the `stats` op reports p50/p99/max percentiles over the
-//!   recorded samples (nearest-rank, so the summary is a deterministic
-//!   function of the durations), letting store-backed serve runs be
-//!   compared across PRs.
+//!   duration into a fixed-capacity reservoir (the most recent
+//!   `LAT_RESERVOIR_CAP` samples, plus exact running count and max,
+//!   so a resident server's memory stays bounded); the `stats` op
+//!   reports p50/p99 percentiles over the retained window plus the
+//!   exact max (nearest-rank, so the summary is a deterministic
+//!   function of the recorded durations), letting store-backed serve
+//!   runs be compared across PRs.
 //! * **Store ops** — `store_ingest`/`store_query`/`store_diff` expose
 //!   the [`ExperimentStore`](crate::store::ExperimentStore) over the
 //!   same protocol as the `store` CLI subcommand: ingest response
 //!   reports into an indexed history file, query a metric's trajectory
 //!   across commits, diff two commits' reports or frontiers.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::io::{BufRead, BufReader, BufWriter, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::config::{ChipConfig, DataType};
 use crate::conv::{ConvShape, TrainOp};
@@ -68,6 +80,13 @@ use super::request::{SimRequest, SweepSpec, Workload};
 pub const SERVE_SCHEMA: &str = "tensordash.serve.v1";
 /// Schema tag of on-disk trace artifacts ([`TraceArtifact`]).
 pub const TRACE_SCHEMA: &str = "tensordash.trace.v1";
+/// Default worker-pool size for the TCP transport (`--workers`).
+pub const DEFAULT_SERVE_WORKERS: usize = 8;
+/// Default pending-connection queue depth (`--queue-depth`); past this
+/// many queued connections the accept thread sheds load.
+pub const DEFAULT_QUEUE_DEPTH: usize = 64;
+/// Latency samples retained by the stats reservoir.
+const LAT_RESERVOIR_CAP: usize = 4096;
 
 // ---------------------------------------------------------------------
 // Trace artifacts + the Arc-backed artifact store
@@ -324,6 +343,35 @@ pub struct Handled {
     pub shutdown: bool,
 }
 
+/// Fixed-capacity latency reservoir: a ring of the most recent
+/// [`LAT_RESERVOIR_CAP`] samples plus an exact running count and max.
+/// A resident server's memory stays bounded under sustained load
+/// (the old unbounded `Vec<u64>` grew by 8 bytes per request forever),
+/// while p50/p99 summarize the retained window and count/max stay
+/// exact over the whole session. The retained window is a pure
+/// function of the recorded sequence, so percentiles are as
+/// deterministic as the durations themselves.
+#[derive(Debug, Default)]
+struct LatReservoir {
+    count: u64,
+    max_ns: u64,
+    ring: Vec<u64>,
+    pos: usize,
+}
+
+impl LatReservoir {
+    fn record(&mut self, ns: u64) {
+        self.count += 1;
+        self.max_ns = self.max_ns.max(ns);
+        if self.ring.len() < LAT_RESERVOIR_CAP {
+            self.ring.push(ns);
+        } else {
+            self.ring[self.pos] = ns;
+            self.pos = (self.pos + 1) % LAT_RESERVOIR_CAP;
+        }
+    }
+}
+
 /// The persistent simulation service. Share by reference across
 /// connection-handler threads; all interior state is synchronized.
 #[derive(Debug)]
@@ -332,9 +380,9 @@ pub struct Service {
     cache: Arc<UnitCache>,
     artifacts: ArtifactStore,
     stop: AtomicBool,
-    /// Wall-clock nanoseconds of every handled line, across all
+    /// Wall-clock nanoseconds of handled lines, across all
     /// connections; the `stats` op summarizes them as percentiles.
-    lat_ns: Mutex<Vec<u64>>,
+    latency: Mutex<LatReservoir>,
 }
 
 impl Service {
@@ -346,7 +394,7 @@ impl Service {
             cache,
             artifacts: ArtifactStore::default(),
             stop: AtomicBool::new(false),
-            lat_ns: Mutex::new(Vec::new()),
+            latency: Mutex::new(LatReservoir::default()),
         }
     }
 
@@ -365,7 +413,7 @@ impl Service {
         let t0 = Instant::now();
         let h = self.handle_line_inner(line);
         let ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
-        self.lat_ns.lock().unwrap().push(ns);
+        self.latency.lock().unwrap().record(ns);
         h
     }
 
@@ -658,25 +706,29 @@ impl Service {
         Ok((search::frontier_report(&spec, &res), delta.to_json()))
     }
 
-    /// Per-request latency summary over every duration recorded so
-    /// far: count, p50/p99 (nearest-rank: the smallest sample with at
-    /// least p% of samples at or below it — a deterministic function
-    /// of the recorded durations) and max, in nanoseconds.
+    /// Per-request latency summary: exact count and max over every
+    /// duration recorded so far, p50/p99 (nearest-rank: the smallest
+    /// sample with at least p% of samples at or below it — a
+    /// deterministic function of the recorded durations) over the
+    /// reservoir's retained window, in nanoseconds.
     fn latency_json(&self) -> Json {
-        let mut v: Vec<u64> = self.lat_ns.lock().unwrap().clone();
-        v.sort_unstable();
+        let (count, max_ns, mut window) = {
+            let r = self.latency.lock().unwrap();
+            (r.count, r.max_ns, r.ring.clone())
+        };
+        window.sort_unstable();
         let pick = |p: f64| -> f64 {
-            if v.is_empty() {
+            if window.is_empty() {
                 return 0.0;
             }
-            let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
-            v[rank.clamp(1, v.len()) - 1] as f64
+            let rank = ((p / 100.0) * window.len() as f64).ceil() as usize;
+            window[rank.clamp(1, window.len()) - 1] as f64
         };
         let mut m = BTreeMap::new();
-        m.insert("count".to_string(), Json::Num(v.len() as f64));
+        m.insert("count".to_string(), Json::Num(count as f64));
         m.insert("p50_ns".to_string(), Json::Num(pick(50.0)));
         m.insert("p99_ns".to_string(), Json::Num(pick(99.0)));
-        m.insert("max_ns".to_string(), Json::Num(v.last().copied().unwrap_or(0) as f64));
+        m.insert("max_ns".to_string(), Json::Num(max_ns as f64));
         Json::Obj(m)
     }
 
@@ -686,6 +738,7 @@ impl Service {
         m.insert("ok".to_string(), Json::Bool(true));
         m.insert("cache".to_string(), self.cache.stats().to_json());
         m.insert("cache_entries".to_string(), Json::Num(self.cache.len() as f64));
+        m.insert("cache_shards".to_string(), Json::Num(self.cache.shard_count() as f64));
         m.insert("latency".to_string(), self.latency_json());
         m.insert("profiles_loaded".to_string(), Json::Num(profiles as f64));
         m.insert("traces_loaded".to_string(), Json::Num(traces as f64));
@@ -720,71 +773,127 @@ impl Service {
         Ok(())
     }
 
-    /// Accept TCP connections on `addr` until a `shutdown` op arrives
-    /// on any connection; each connection runs [`Self::serve_lines`]
-    /// on its own thread over the shared cache and artifact store.
-    /// On shutdown every open connection is half-closed so handler
-    /// threads blocked in a read drain promptly — otherwise one idle
-    /// client would keep the scope join (and the process) alive
-    /// forever.
-    pub fn serve_tcp(&self, addr: &str) -> std::io::Result<()> {
+    /// Bind `addr` and serve it with a bounded worker pool: see
+    /// [`Self::serve_listener`].
+    pub fn serve_tcp(
+        &self,
+        addr: &str,
+        workers: usize,
+        queue_depth: usize,
+    ) -> std::io::Result<()> {
         let listener = TcpListener::bind(addr)?;
-        listener.set_nonblocking(true)?;
-        eprintln!("tensordash serve: listening on {}", listener.local_addr()?);
-        // Live connections, tracked so shutdown can half-close them.
-        // Each handler reaps its own entry on exit — a resident
-        // service must not accumulate one fd per past connection.
+        self.serve_listener(listener, workers, queue_depth)
+    }
+
+    /// Serve an already-bound listener until a `shutdown` op arrives
+    /// on any connection. The calling thread becomes the fixed accept
+    /// thread: it blocks in `accept()` (no polling — an idle server
+    /// burns no CPU; shutdown wakes it with a self-connect poke) and
+    /// pushes each connection onto a depth-limited queue that
+    /// `workers` pool threads drain. A worker owns a connection until
+    /// EOF, so responses per connection stream strictly in request
+    /// order. When the queue is at `queue_depth` the accept thread
+    /// sheds load: the client gets an explicit "overloaded" error line
+    /// and a closed socket. On shutdown every in-service connection is
+    /// half-closed so workers blocked in a read drain promptly, and
+    /// queued-but-unserved connections are refused with an error line.
+    pub fn serve_listener(
+        &self,
+        listener: TcpListener,
+        workers: usize,
+        queue_depth: usize,
+    ) -> std::io::Result<()> {
+        let workers = workers.max(1);
+        let local = listener.local_addr()?;
+        eprintln!(
+            "tensordash serve: listening on {local} ({workers} workers, queue depth {})",
+            queue_depth.max(1)
+        );
+        let queue = ConnQueue::new(queue_depth);
+        // Connections currently owned by workers, tracked so shutdown
+        // can half-close them. Each worker reaps its own entry on
+        // handoff — a resident service must not accumulate one fd per
+        // past connection.
         let conns: Mutex<Vec<(u64, TcpStream)>> = Mutex::new(Vec::new());
-        let conns_ref = &conns;
-        let mut next_id = 0u64;
-        std::thread::scope(|s| -> std::io::Result<()> {
+        let next_id = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| self.worker_loop(&queue, &conns, &next_id, local));
+            }
             loop {
-                if self.stop.load(Ordering::SeqCst) {
-                    // Half-close the read side only: idle readers see
-                    // EOF and exit, while handlers mid-computation can
-                    // still write their in-flight response before the
-                    // scope joins them.
-                    for (_, c) in conns.lock().unwrap().iter() {
-                        let _ = c.shutdown(std::net::Shutdown::Read);
-                    }
-                    return Ok(());
-                }
                 match listener.accept() {
                     Ok((stream, _)) => {
-                        let id = next_id;
-                        next_id += 1;
-                        // An untracked connection could not be
-                        // half-closed on shutdown, so an idle client
-                        // would hang the scope join forever — refuse
-                        // the connection instead of serving it
-                        // untracked (try_clone fails under fd
-                        // pressure, where shedding is the right move
-                        // anyway).
-                        match stream.try_clone() {
-                            Ok(clone) => conns.lock().unwrap().push((id, clone)),
-                            Err(e) => {
-                                eprintln!("serve: refusing untrackable connection: {e}");
-                                continue;
-                            }
+                        if self.stop.load(Ordering::SeqCst) {
+                            // The shutdown poke (or a late client).
+                            drop(stream);
+                            break;
                         }
-                        s.spawn(move || {
-                            let _ = self.handle_conn(stream);
-                            conns_ref.lock().unwrap().retain(|(i, _)| *i != id);
-                        });
-                    }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(10));
+                        if let Err(stream) = queue.push(stream) {
+                            shed(stream, "overloaded: connection queue full, retry later");
+                        }
                     }
                     // Transient accept failures (ECONNABORTED, EMFILE
                     // pressure, ...) must not take the service down —
                     // only the shutdown op ends the loop.
                     Err(e) => {
+                        if self.stop.load(Ordering::SeqCst) {
+                            break;
+                        }
                         eprintln!("serve: accept failed (retrying): {e}");
-                        std::thread::sleep(std::time::Duration::from_millis(100));
+                        std::thread::sleep(Duration::from_millis(100));
                     }
                 }
             }
-        })
+            // Shutdown: refuse connections that were queued but never
+            // served (close() also wakes every idle worker), then
+            // half-close the read side of in-service connections —
+            // idle readers see EOF and exit, while workers
+            // mid-computation can still write their in-flight response
+            // before the scope joins them.
+            for stream in queue.close() {
+                shed(stream, "overloaded: service shutting down");
+            }
+            for (_, c) in conns.lock().unwrap().iter() {
+                let _ = c.shutdown(std::net::Shutdown::Read);
+            }
+        });
+        Ok(())
+    }
+
+    /// One pool worker: take a connection from the queue, own it until
+    /// its line loop ends, repeat. Exits when the queue closes; a
+    /// worker that observes the stop flag pokes the accept thread out
+    /// of its blocking `accept()` so the whole scope can join.
+    fn worker_loop(
+        &self,
+        queue: &ConnQueue,
+        conns: &Mutex<Vec<(u64, TcpStream)>>,
+        next_id: &AtomicU64,
+        local: SocketAddr,
+    ) {
+        while let Some(stream) = queue.pop() {
+            let id = next_id.fetch_add(1, Ordering::Relaxed);
+            // An untracked connection could not be half-closed on
+            // shutdown, so an idle client would hang the scope join
+            // forever — refuse the connection instead of serving it
+            // untracked (try_clone fails under fd pressure, where
+            // shedding is the right move anyway).
+            match stream.try_clone() {
+                Ok(clone) => conns.lock().unwrap().push((id, clone)),
+                Err(e) => {
+                    eprintln!("serve: refusing untrackable connection: {e}");
+                    continue;
+                }
+            }
+            let _ = self.handle_conn(stream);
+            conns.lock().unwrap().retain(|(i, _)| *i != id);
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+        }
+        if self.stop.load(Ordering::SeqCst) {
+            poke_listener(local);
+        }
     }
 
     fn handle_conn(&self, stream: TcpStream) -> std::io::Result<()> {
@@ -793,6 +902,97 @@ impl Service {
         let writer = BufWriter::new(stream);
         self.serve_lines(reader, writer)
     }
+}
+
+// ---------------------------------------------------------------------
+// TCP transport plumbing — the bounded handoff queue and backpressure
+// ---------------------------------------------------------------------
+
+/// Depth-bounded handoff queue between the accept thread and the
+/// worker pool. `push` never blocks: at depth the connection comes
+/// straight back so the accept thread can shed it, keeping admission
+/// control on the accept side and workers ignorant of load.
+struct ConnQueue {
+    depth: usize,
+    state: Mutex<QueueState>,
+    ready: Condvar,
+}
+
+#[derive(Default)]
+struct QueueState {
+    pending: VecDeque<TcpStream>,
+    closed: bool,
+}
+
+impl ConnQueue {
+    fn new(depth: usize) -> ConnQueue {
+        ConnQueue {
+            depth: depth.max(1),
+            state: Mutex::new(QueueState::default()),
+            ready: Condvar::new(),
+        }
+    }
+
+    /// Enqueue a connection; hands it back when the queue is at depth
+    /// or closed (the caller sheds it).
+    fn push(&self, conn: TcpStream) -> Result<(), TcpStream> {
+        let mut g = self.state.lock().unwrap();
+        if g.closed || g.pending.len() >= self.depth {
+            return Err(conn);
+        }
+        g.pending.push_back(conn);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Block until a connection is available (`Some`) or the queue is
+    /// closed and drained (`None`).
+    fn pop(&self) -> Option<TcpStream> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(c) = g.pending.pop_front() {
+                return Some(c);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.ready.wait(g).unwrap();
+        }
+    }
+
+    /// Close the queue, waking every waiting worker; returns the
+    /// connections that were queued but never served.
+    fn close(&self) -> Vec<TcpStream> {
+        let mut g = self.state.lock().unwrap();
+        g.closed = true;
+        let drained = g.pending.drain(..).collect();
+        self.ready.notify_all();
+        drained
+    }
+}
+
+/// Backpressure: answer a connection the pool cannot take with an
+/// explicit in-protocol error line, then close it. The write gets a
+/// short timeout so a shed client that never reads cannot wedge the
+/// accept thread.
+fn shed(mut stream: TcpStream, msg: &str) {
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(250)));
+    let _ = stream.write_all(error_line(None, msg).as_bytes());
+    let _ = stream.write_all(b"\n");
+}
+
+/// Wake a thread blocked in `accept()` by connecting to its listener
+/// and immediately dropping the connection. Tries the bound address
+/// first, then loopback on the same port for wildcard binds. Best
+/// effort: a failed connect means the listener is already past
+/// `accept()`.
+fn poke_listener(local: SocketAddr) {
+    let timeout = Duration::from_millis(200);
+    if TcpStream::connect_timeout(&local, timeout).is_ok() {
+        return;
+    }
+    let loopback = SocketAddr::from(([127, 0, 0, 1], local.port()));
+    let _ = TcpStream::connect_timeout(&loopback, timeout);
 }
 
 fn envelope(id: Option<Json>) -> BTreeMap<String, Json> {
@@ -1140,5 +1340,87 @@ mod tests {
         assert_eq!(lines.len(), 2, "nothing after the shutdown ack: {text}");
         let ack = Json::parse(lines[1]).unwrap();
         assert_eq!(ack.get("bye"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn latency_reservoir_is_bounded_with_exact_count_and_max() {
+        let mut r = LatReservoir::default();
+        let total = (LAT_RESERVOIR_CAP as u64) * 2 + 123;
+        for ns in 1..=total {
+            r.record(ns);
+        }
+        assert_eq!(r.count, total, "count stays exact past the ring capacity");
+        assert_eq!(r.max_ns, total, "max stays exact past the ring capacity");
+        assert_eq!(r.ring.len(), LAT_RESERVOIR_CAP, "memory is bounded");
+        // The ring retains exactly the most recent CAP samples.
+        let oldest = total - LAT_RESERVOIR_CAP as u64;
+        assert!(r.ring.iter().all(|&v| v > oldest), "only recent samples retained");
+        let sum: u64 = r.ring.iter().sum();
+        let expect: u64 = (oldest + 1..=total).sum();
+        assert_eq!(sum, expect, "ring holds each recent sample exactly once");
+    }
+
+    #[test]
+    fn tcp_worker_pool_keeps_order_sheds_past_depth_and_shuts_down() {
+        use std::io::{BufRead, BufReader, Write};
+
+        let s = service(1);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::scope(|scope| {
+            // workers=1, queue_depth=1: one connection in service, one
+            // queued, the next one shed.
+            let server = scope.spawn(|| s.serve_listener(listener, 1, 1));
+
+            let connect = || {
+                let c = TcpStream::connect(addr).unwrap();
+                c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                c
+            };
+            // Connection A is picked up by the single worker; three
+            // pipelined requests come back in request order.
+            let a = connect();
+            let mut a_r = BufReader::new(a.try_clone().unwrap());
+            let mut a_w = a;
+            for id in 1..=3 {
+                a_w.write_all(format!("{{\"op\":\"stats\",\"id\":{id}}}\n").as_bytes()).unwrap();
+            }
+            for want in 1..=3 {
+                let mut line = String::new();
+                a_r.read_line(&mut line).unwrap();
+                let j = Json::parse(&line).unwrap();
+                assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{line}");
+                assert_eq!(j.get("id").unwrap().as_f64(), Some(want as f64), "in order: {line}");
+            }
+            // B fills the queue (the worker still owns A) ...
+            let b = connect();
+            std::thread::sleep(Duration::from_millis(300));
+            // ... so C is shed with an explicit in-protocol error.
+            let c = connect();
+            let mut c_r = BufReader::new(c);
+            let mut line = String::new();
+            c_r.read_line(&mut line).unwrap();
+            let j = Json::parse(&line).unwrap();
+            assert_eq!(j.get("ok"), Some(&Json::Bool(false)), "shed response: {line}");
+            assert!(
+                j.get("error").unwrap().as_str().unwrap().contains("overloaded"),
+                "shed response names the overload: {line}"
+            );
+            // Shutdown over A acks, unblocks the accept thread and the
+            // queued-but-unserved B, and joins the server cleanly.
+            a_w.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
+            let mut line = String::new();
+            a_r.read_line(&mut line).unwrap();
+            assert_eq!(Json::parse(&line).unwrap().get("bye"), Some(&Json::Bool(true)));
+            let mut b_r = BufReader::new(b);
+            let mut b_line = String::new();
+            // B either gets the shutting-down refusal or a clean EOF.
+            let n = b_r.read_line(&mut b_line).unwrap();
+            if n > 0 {
+                let j = Json::parse(&b_line).unwrap();
+                assert_eq!(j.get("ok"), Some(&Json::Bool(false)), "{b_line}");
+            }
+            server.join().unwrap().unwrap();
+        });
     }
 }

@@ -56,14 +56,19 @@ const USAGE: &str = "usage: tensordash <repro|simulate|train|explore|serve|store
            report; a fixed seed is byte-deterministic at any --jobs,
            and the run fails if its staging-depth slice violates the
            fig-19 depth ordering
-  serve    [--listen ADDR] [--jobs N] [--cache-cap N] [--cache-dir DIR]
+  serve    [--listen ADDR] [--jobs N] [--workers N] [--queue-depth N]
+           [--cache-cap N] [--cache-dir DIR] [--shards N]
            [--preload m1,m2,...]
            JSON-lines loop (tensordash.serve.v1): one request object per
            line on stdin (or per TCP connection with --listen), one
            response per line in request order. Ops: simulate, sweep,
            trace, explore, batch, stats, store_ingest, store_query,
            store_diff, shutdown. Identical units across a batch
-           coalesce onto one computation.
+           coalesce onto one computation. With --listen a fixed accept
+           thread feeds a --queue-depth bounded queue drained by
+           --workers pool threads (default 8/64); past the depth the
+           service sheds load with an explicit \"overloaded\" error
+           response instead of spawning unboundedly.
   store    ingest --db FILE --commit ID file.json [file2.json ...]
            | query --db FILE [--schema S] [--id R] [--commit C]
                    [--model M] [--metric COL]
@@ -99,6 +104,10 @@ report options (repro, simulate, train, explore, store query/diff):
                             Results are byte-identical; unit_cache_*
                             meta keys record the telemetry
   --cache-cap N             cache capacity in units (default 65536)
+  --shards N                lock-striped cache shards (default 8); any
+                            shard count yields byte-identical results
+                            and telemetry — more shards only reduce
+                            lock contention under concurrent load
   --cache-dir DIR           also mirror cached units to DIR (implies
                             --cache; persists across runs)";
 
@@ -142,14 +151,16 @@ fn chip_from_args(args: &Args) -> Result<ChipConfig> {
     Ok(cfg)
 }
 
-/// Build a unit cache of `cap` entries, disk-mirrored when `dir` is
-/// given. Shared by the `--cache*` flags and the `serve` subcommand.
-fn build_cache(cap: usize, dir: Option<&str>) -> Result<UnitCache> {
+/// Build a unit cache of `cap` entries over `shards` lock stripes,
+/// disk-mirrored when `dir` is given. Shared by the `--cache*` flags
+/// and the `serve` subcommand.
+fn build_cache(cap: usize, shards: usize, dir: Option<&str>) -> Result<UnitCache> {
+    let cache = UnitCache::with_shards(cap, shards);
     Ok(match dir {
-        Some(d) => UnitCache::new(cap)
+        Some(d) => cache
             .with_disk(d)
             .map_err(|e| anyhow::anyhow!("opening cache dir {d}: {e}"))?,
-        None => UnitCache::new(cap),
+        None => cache,
     })
 }
 
@@ -161,7 +172,8 @@ fn cache_from_args(args: &Args) -> Result<Option<Arc<UnitCache>>> {
         return Ok(None);
     }
     let cap = args.get_usize("cache-cap", api::DEFAULT_CACHE_CAP)?;
-    Ok(Some(Arc::new(build_cache(cap, dir)?)))
+    let shards = args.get_usize("shards", api::DEFAULT_CACHE_SHARDS)?;
+    Ok(Some(Arc::new(build_cache(cap, shards, dir)?)))
 }
 
 fn engine_from_args(args: &Args) -> Result<(Engine, Option<Arc<UnitCache>>)> {
@@ -492,7 +504,8 @@ fn cmd_explore(args: &Args) -> Result<()> {
     // revisited design points are the whole workload. --cache-cap and
     // --cache-dir size/persist it; --jobs sizes the worker pool.
     let cap = args.get_usize("cache-cap", api::DEFAULT_CACHE_CAP)?;
-    let cache = Arc::new(build_cache(cap, args.get("cache-dir"))?);
+    let shards = args.get_usize("shards", api::DEFAULT_CACHE_SHARDS)?;
+    let cache = Arc::new(build_cache(cap, shards, args.get("cache-dir"))?);
     let engine = Engine::new(args.get_usize("jobs", api::default_jobs())?)
         .with_cache(Arc::clone(&cache));
     let names: Vec<&str> = models.iter().map(String::as_str).collect();
@@ -527,7 +540,10 @@ fn cmd_explore(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let jobs = args.get_usize("jobs", api::default_jobs())?;
     let cap = args.get_usize("cache-cap", api::DEFAULT_CACHE_CAP)?;
-    let cache = Arc::new(build_cache(cap, args.get("cache-dir"))?);
+    let shards = args.get_usize("shards", api::DEFAULT_CACHE_SHARDS)?;
+    let workers = args.get_usize("workers", api::DEFAULT_SERVE_WORKERS)?;
+    let queue_depth = args.get_usize("queue-depth", api::DEFAULT_QUEUE_DEPTH)?;
+    let cache = Arc::new(build_cache(cap, shards, args.get("cache-dir"))?);
     let service = Service::new(Engine::new(jobs), Arc::clone(&cache));
     // Pre-resolve profiles into the artifact store so first requests
     // skip the load too.
@@ -539,7 +555,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     match args.get("listen") {
-        Some(addr) => service.serve_tcp(addr)?,
+        Some(addr) => service.serve_tcp(addr, workers, queue_depth)?,
         None => {
             let stdin = std::io::stdin();
             let stdout = std::io::stdout();

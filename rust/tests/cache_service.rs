@@ -13,13 +13,24 @@
 //!   *concurrent* requests, computes each unique unit exactly once,
 //!   and reports nonzero cache-hit telemetry on a repeat;
 //! * overlapping sweep requests (the Fig. 17 `rows4` column is the
-//!   Fig. 18 `cols4` column) reuse units across requests.
+//!   Fig. 18 `cols4` column) reuse units across requests;
+//! * the lock-striped cache is **invisible**: any `--shards` count ×
+//!   any `--jobs` count yields byte-identical results *and* identical
+//!   merged hit/miss/insert telemetry;
+//! * proportional per-shard caps evict exactly what a single-shard
+//!   LRU of the same total capacity would evict — stripes never merge
+//!   entries and never drop units the global LRU would keep alive.
 
 use std::sync::Arc;
 
-use tensordash::api::{layers_report, Engine, Service, SimRequest, SweepSpec, UnitCache};
+use tensordash::api::{
+    layers_report, Engine, Service, SimRequest, SweepSpec, UnitCache, UnitCacheStats, UnitKey,
+    UnitSpec, UnitTensors,
+};
 use tensordash::config::ChipConfig;
+use tensordash::conv::{ConvShape, TrainOp};
 use tensordash::repro::ModelSim;
+use tensordash::tensor::TensorBitmap;
 use tensordash::util::json::Json;
 
 const MODELS: [&str; 2] = ["alexnet", "gcn"];
@@ -163,4 +174,124 @@ fn overlapping_sweeps_share_units_across_requests() {
     assert_eq!(delta.misses, 0, "second sweep recomputed units: {delta:?}");
     assert_eq!(delta.hits as usize, b[0].layers.len());
     assert_bit_identical(&a[0], &b[0], "shared sweep cell");
+}
+
+#[test]
+fn shard_counts_are_invisible_to_results_and_telemetry() {
+    let cfg = ChipConfig::default();
+    let cells = SweepSpec::models(&MODELS, 0.4, &cfg, SAMPLES, SEED).cells();
+    // The uncached single-worker engine is the ground truth.
+    let reference = Engine::new(1).run_all(&cells);
+    let mut baseline: Option<UnitCacheStats> = None;
+    for shards in [1usize, 4, 16] {
+        for jobs in [1usize, 8] {
+            let cache = Arc::new(UnitCache::with_shards(4096, shards));
+            assert_eq!(cache.shard_count(), shards);
+            let engine = Engine::new(jobs).with_cache(Arc::clone(&cache));
+            let cold = engine.run_all(&cells);
+            let warm = engine.run_all(&cells);
+            let ctx = format!("shards={shards} jobs={jobs}");
+            for ((r, c), w) in reference.iter().zip(&cold).zip(&warm) {
+                assert_bit_identical(r, c, &format!("{ctx} cold {}", r.name));
+                assert_bit_identical(c, w, &format!("{ctx} warm {}", c.name));
+            }
+            let stats = cache.stats();
+            assert!(stats.hits > 0, "{ctx}: warm run must be cache-served");
+            // The merged counters are byte-identical at every shard ×
+            // worker combination — the stats-merge rule in action.
+            match &baseline {
+                None => baseline = Some(stats),
+                Some(b) => {
+                    assert_eq!(&stats, b, "{ctx}: telemetry must not depend on shards/jobs")
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn proportional_shard_caps_evict_exactly_like_a_single_shard_lru() {
+    let cfg = ChipConfig::default();
+    let spec_for = |seed: u64| UnitSpec {
+        layer: 0,
+        op: TrainOp::Fwd,
+        shape: ConvShape::conv(1, 4, 4, 16, 16, 3, 1, 1),
+        tensors: UnitTensors::Explicit {
+            a: Arc::new(TensorBitmap::from_raw((1, 1, 1, 16), vec![0x00FF])),
+            g: Arc::new(TensorBitmap::from_raw((1, 1, 1, 16), vec![0x0F0F])),
+        },
+        batch_mult: 1,
+        samples: 1,
+        seed,
+    };
+    // One tiny computed unit reused as every insert's value — eviction
+    // accounting depends only on the keys.
+    let sim = spec_for(0).execute(&cfg);
+    // 32 keys, two per `hash % 16` stripe in stripe-major order, so a
+    // 32-entry cache is exactly full at 1, 4 and 16 shards alike
+    // (proportional caps: 32x1, 8x4, 2x16).
+    let mut buckets: Vec<Vec<UnitKey>> = (0..16).map(|_| Vec::new()).collect();
+    let mut seed = 0u64;
+    while buckets.iter().any(|b| b.len() < 2) {
+        let key = UnitKey::for_unit(&cfg, &spec_for(seed));
+        let b = (key.hash % 16) as usize;
+        if buckets[b].len() < 2 {
+            buckets[b].push(key);
+        }
+        seed += 1;
+        assert!(seed < 100_000, "FNV bucket fill must converge");
+    }
+    let keys: Vec<UnitKey> = buckets.into_iter().flatten().collect();
+    // A 33rd key in keys[0]'s stripe — at every shard count it lands
+    // in the stripe that holds keys[0] (b % 16 equal implies b % 4 and
+    // b % 1 equal).
+    let probe = {
+        let mut s = seed;
+        loop {
+            let k = UnitKey::for_unit(&cfg, &spec_for(s));
+            if k.hash % 16 == keys[0].hash % 16 && keys.iter().all(|e| e.hash != k.hash) {
+                break k;
+            }
+            s += 1;
+            assert!(s < 1_000_000, "probe-key search must converge");
+        }
+    };
+
+    let mut resident_sets: Vec<Vec<bool>> = Vec::new();
+    let mut final_stats: Vec<UnitCacheStats> = Vec::new();
+    for shards in [1usize, 4, 16] {
+        let cache = UnitCache::with_shards(32, shards);
+        for k in &keys {
+            cache.insert(k, sim);
+        }
+        assert_eq!(cache.len(), 32, "shards={shards}: balanced fill fits exactly");
+        assert_eq!(cache.stats().evictions, 0, "shards={shards}: nothing evicted on fill");
+        // Touch everything in one fixed order: keys[0] becomes the
+        // LRU-oldest entry of its stripe at every shard count.
+        for k in &keys {
+            assert!(cache.lookup(k).is_some(), "shards={shards}: resident before probe");
+        }
+        cache.insert(&probe, sim);
+        assert_eq!(cache.stats().evictions, 1, "shards={shards}: exactly one eviction");
+        let resident: Vec<bool> = keys
+            .iter()
+            .chain(std::iter::once(&probe))
+            .map(|k| cache.lookup(k).is_some())
+            .collect();
+        assert!(!resident[0], "shards={shards}: the globally-oldest key is the victim");
+        assert!(
+            resident[1..].iter().all(|&r| r),
+            "shards={shards}: no other unit may be dropped or merged away"
+        );
+        resident_sets.push(resident);
+        final_stats.push(cache.stats());
+    }
+    assert!(
+        resident_sets.windows(2).all(|w| w[0] == w[1]),
+        "resident sets must be identical across shard counts"
+    );
+    assert!(
+        final_stats.windows(2).all(|w| w[0] == w[1]),
+        "telemetry must be identical across shard counts: {final_stats:?}"
+    );
 }
