@@ -16,10 +16,23 @@ and asserts:
   shard count;
 * a ``shutdown`` op is acknowledged and the server exits cleanly (0).
 
-Phase 2 — backpressure. Restarts the server with ``--workers 1
---queue-depth 1``, occupies the worker with one connection, queues a
-second, and asserts a third is shed with an explicit in-protocol
-"overloaded" error line; then shuts down cleanly.
+Phase 2 — head-of-line. One connection pipelines a slow cold sweep and
+three ``"stream": true`` fast point requests; the fast responses must
+arrive *before* the sweep's, each tagged with an ``op`` echo and
+byte-identical to a plain v1 roundtrip of the same request, while the
+sweep's ordered response arrives last without an echo.
+
+Phase 3 — backpressure. Restarts the server with ``--workers 1
+--queue-depth 1``, occupies the worker with a slow sweep, parks one
+request in the depth-1 queue, and asserts the next request is shed
+with an in-band "overloaded" error *while the connection stays open* —
+the same socket then receives its ordered responses and keeps working;
+``stats`` reports the shed in ``mux``.
+
+Phase 4 — deadlines. Restarts the server with ``--request-timeout``
+set; a request carrying its own ``timeout_ms`` override that expires
+while parked behind a slow sweep is answered with an in-band "timeout"
+error instead of computing; ``stats`` reports it in ``mux``.
 
 Usage: python3 ci/serve_smoke.py [path/to/tensordash]
 """
@@ -184,43 +197,146 @@ def phase_concurrent_load():
             proc.wait(timeout=10)
 
 
-def phase_backpressure():
+# A multi-model cold sweep: seconds of compute, so requests parked
+# behind it have ample time to be raced, shed or timed out.
+SLOW_SWEEP = {
+    "op": "sweep",
+    "models": ["alexnet", "gcn"],
+    "epochs": [0.1, 0.5, 0.9],
+    "samples": 2,
+    "seed": 97,
+    "id": "slow",
+}
+
+FAST_POINT = {"op": "simulate", "model": "gcn", "epoch": 0.5, "samples": 1, "seed": 4242}
+
+
+def send_req(sock, payload):
+    sock.sendall((json.dumps(payload) + "\n").encode())
+
+
+def phase_head_of_line():
     port = PORT + 1
+    proc = start_server(port, ["--workers", "2"])
+    try:
+        # Reference body via a plain v1 roundtrip (also warms the
+        # cache, so the streamed copies below are cache hits).
+        ref = roundtrip(FAST_POINT, port)
+        assert ref.get("ok") is True, f"reference request failed: {ref}"
+        ref_body = json.dumps(ref["report"])
+
+        with socket.create_connection((HOST, port), timeout=120.0) as sock:
+            with sock.makefile("r", encoding="utf-8") as f:
+                send_req(sock, SLOW_SWEEP)
+                time.sleep(0.3)  # let a worker dequeue the sweep
+                for i in range(3):
+                    req = dict(FAST_POINT)
+                    req["id"] = f"f{i}"
+                    req["stream"] = True
+                    send_req(sock, req)
+                seen = []
+                for _ in range(3):
+                    resp = json.loads(f.readline())
+                    assert resp.get("ok") is True, f"fast request failed: {resp}"
+                    assert resp.get("op") == "simulate", f"no op echo: {resp}"
+                    assert json.dumps(resp["report"]) == ref_body, (
+                        f"streamed body diverged: {resp.get('id')}"
+                    )
+                    seen.append(resp.get("id"))
+                assert sorted(seen) == ["f0", "f1", "f2"], (
+                    f"fast requests did not all overtake the sweep: {seen}"
+                )
+                slow = json.loads(f.readline())
+                assert slow.get("id") == "slow", f"expected the sweep last: {slow}"
+                assert slow.get("ok") is True, f"sweep failed: {slow}"
+                assert "op" not in slow, f"ordered v1 reply grew an op echo: {slow}"
+        print("ok: 3 streamed fast requests overtook a slow sweep on one connection")
+        stop_server(proc, port)
+        print("ok: clean shutdown under head-of-line config (exit 0)")
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=10)
+
+
+def phase_backpressure():
+    port = PORT + 2
     proc = start_server(port, ["--workers", "1", "--queue-depth", "1"])
     try:
-        # Occupy the single worker with connection A (a served request
-        # proves the worker owns it).
-        a = socket.create_connection((HOST, port), timeout=120.0)
-        a_file = a.makefile("r", encoding="utf-8")
-        a.sendall(b'{"op":"stats","id":"hold"}\n')
-        resp = json.loads(a_file.readline())
-        assert resp.get("ok") is True, f"hold request failed: {resp}"
+        with socket.create_connection((HOST, port), timeout=120.0) as sock:
+            with sock.makefile("r", encoding="utf-8") as f:
+                # Occupy the single worker with the slow sweep ...
+                send_req(sock, SLOW_SWEEP)
+                time.sleep(0.3)  # let the worker dequeue it
+                # ... park one ordered request in the depth-1 queue ...
+                send_req(sock, {"op": "stats", "id": "queued"})
+                time.sleep(0.2)
+                # ... so the next request is shed in-band: an immediate
+                # out-of-order error on a connection that stays open.
+                send_req(sock, {"op": "stats", "id": "shed", "stream": True})
+                shed = json.loads(f.readline())
+                assert shed.get("id") == "shed", f"expected the shed reply first: {shed}"
+                assert shed.get("ok") is False, f"shed response claims ok: {shed}"
+                assert "overloaded" in shed.get("error", ""), f"not an overload error: {shed}"
+                assert shed.get("op") == "stats", f"no op echo on the shed reply: {shed}"
+                print(f"ok: queue overflow shed in-band: {shed['error']}")
 
-        # B parks in the depth-1 queue ...
-        b = socket.create_connection((HOST, port), timeout=120.0)
-        time.sleep(0.5)
+                # The connection survived the shed: its ordered
+                # responses still arrive, strictly in request order.
+                for want in ["slow", "queued"]:
+                    resp = json.loads(f.readline())
+                    assert resp.get("id") == want, f"order broken: {resp}"
+                    assert resp.get("ok") is True, f"{want} failed: {resp}"
+                print("ok: connection stayed open and v1 order held after the shed")
 
-        # ... so C must be shed with an explicit overloaded error line.
-        with socket.create_connection((HOST, port), timeout=120.0) as c:
-            with c.makefile("r", encoding="utf-8") as f:
-                line = f.readline()
-        assert line, "shed connection closed without the error line"
-        shed = json.loads(line)
-        assert shed.get("ok") is False, f"shed response claims ok: {shed}"
-        assert "overloaded" in shed.get("error", ""), f"not an overload error: {shed}"
-        print(f"ok: queue overflow shed with in-protocol error: {shed['error']}")
+                # The shed is visible in the mux telemetry.
+                send_req(sock, {"op": "stats", "id": "after"})
+                stats = json.loads(f.readline())
+                assert stats.get("ok") is True, f"post-shed stats failed: {stats}"
+                assert stats["mux"]["shed"] >= 1, f"shed not counted: {stats['mux']}"
+                print("ok: stats report mux shed={}".format(stats["mux"]["shed"]))
 
-        # Shutdown through the in-service connection; B is refused or
-        # closed, the process exits 0.
-        a.sendall(b'{"op":"shutdown"}\n')
-        bye = json.loads(a_file.readline())
-        assert bye.get("bye") is True, f"no shutdown ack: {bye}"
-        b.close()
-        a_file.close()
-        a.close()
-        code = proc.wait(timeout=60)
-        assert code == 0, f"server exited with code {code}"
+        stop_server(proc, port)
         print("ok: clean shutdown under backpressure config (exit 0)")
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=10)
+
+
+def phase_request_timeout():
+    port = PORT + 3
+    # A server-wide default deadline nothing here will hit (it also
+    # exercises the flag), overridden per-request below.
+    proc = start_server(port, ["--workers", "1", "--request-timeout", "3600000"])
+    try:
+        with socket.create_connection((HOST, port), timeout=120.0) as sock:
+            with sock.makefile("r", encoding="utf-8") as f:
+                send_req(sock, SLOW_SWEEP)
+                time.sleep(0.3)
+                # Parked behind the sweep with a 1ms budget: expired
+                # long before a worker reaches it.
+                send_req(
+                    sock,
+                    {"op": "stats", "id": "late", "timeout_ms": 1, "stream": True},
+                )
+                slow = json.loads(f.readline())
+                assert slow.get("id") == "slow", f"expected the sweep first: {slow}"
+                assert slow.get("ok") is True, f"sweep failed: {slow}"
+                late = json.loads(f.readline())
+                assert late.get("id") == "late", f"expected the timeout next: {late}"
+                assert late.get("ok") is False, f"expired request claims ok: {late}"
+                assert "timeout" in late.get("error", ""), f"not a timeout error: {late}"
+                print(f"ok: queued past its deadline, answered in-band: {late['error']}")
+
+                send_req(sock, {"op": "stats", "id": "after"})
+                stats = json.loads(f.readline())
+                assert stats.get("ok") is True, f"post-timeout stats failed: {stats}"
+                assert stats["mux"]["timeouts"] >= 1, f"timeout not counted: {stats['mux']}"
+                print("ok: stats report mux timeouts={}".format(stats["mux"]["timeouts"]))
+
+        stop_server(proc, port)
+        print("ok: clean shutdown under deadline config (exit 0)")
     finally:
         if proc.poll() is None:
             proc.kill()
@@ -229,7 +345,9 @@ def phase_backpressure():
 
 def main():
     phase_concurrent_load()
+    phase_head_of_line()
     phase_backpressure()
+    phase_request_timeout()
     print("serve smoke: PASS")
     return 0
 

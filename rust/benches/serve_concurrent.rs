@@ -26,7 +26,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use tensordash::api::{Engine, Service, UnitCache, DEFAULT_CACHE_CAP};
+use tensordash::api::{Engine, ServeOptions, Service, UnitCache, DEFAULT_CACHE_CAP};
 use tensordash::util::bench::{bench, section, BenchStats};
 use tensordash::util::json::Json;
 
@@ -138,7 +138,9 @@ fn storm_pooled(cache: &Arc<UnitCache>, reqs: &[String], expect: &[String]) {
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
     let addr = listener.local_addr().expect("local addr");
     std::thread::scope(|s| {
-        let server = s.spawn(|| service.serve_listener(listener, WORKERS, QUEUE_DEPTH));
+        let opts =
+            ServeOptions { workers: WORKERS, queue_depth: QUEUE_DEPTH, ..ServeOptions::default() };
+        let server = s.spawn(|| service.serve_listener(listener, opts));
         run_storm(addr, reqs, expect);
         // Shutdown over the protocol, like a real client would.
         let stream = TcpStream::connect(addr).expect("connect");

@@ -41,10 +41,19 @@
 //! * [`Service`] — the persistent JSON-lines serving loop
 //!   (stdin/stdout and TCP, `serve` subcommand) over a shared cache
 //!   and an `Arc`-backed [`ArtifactStore`], with batched request
-//!   coalescing.
+//!   coalescing. The TCP transport multiplexes at request grain
+//!   ([`ServeOptions`]): per-connection readers feed one bounded
+//!   request queue, a compute pool executes individual requests, and
+//!   per-connection writers re-sequence responses (or stream them
+//!   out of order on request). Every response renders through the
+//!   typed [`ServeReply`] envelope.
+//! * [`params`](crate::api::params) — the one parameter-parsing path
+//!   shared by the CLI and the serve protocol, so names, defaults and
+//!   error text cannot drift between them.
 
 pub mod cache;
 pub mod engine;
+pub mod params;
 pub mod plan;
 pub mod report;
 pub mod request;
@@ -61,7 +70,8 @@ pub use report::{
     REPORT_SET_SCHEMA,
 };
 pub use request::{derive_seed, SimRequest, SweepSpec, Workload};
+pub use params::{ParamSource, ParamValue, DEFAULT_EXPLORE_BUDGET, DEFAULT_SEED};
 pub use service::{
-    ArtifactStore, Service, TraceArtifact, DEFAULT_QUEUE_DEPTH, DEFAULT_SERVE_WORKERS,
-    SERVE_SCHEMA, TRACE_SCHEMA,
+    ArtifactStore, Handled, HandledReplies, ServeOptions, ServeReply, Service, TraceArtifact,
+    DEFAULT_QUEUE_DEPTH, DEFAULT_SERVE_WORKERS, SERVE_SCHEMA, TRACE_SCHEMA,
 };

@@ -1,0 +1,326 @@
+//! One parameter-parsing path for the CLI and the serve protocol.
+//!
+//! Before this module, `simulate --depth 9` and
+//! `{"op":"simulate","depth":9}` went through two hand-written parsers
+//! that had already drifted: the serve path validated chip geometry
+//! (positive rows/cols, depth ∈ {2,3}) while the CLI accepted anything
+//! and crashed deep inside a worker; the explore budget defaulted to 8
+//! over the wire and 12 on the CLI; seeds were range-checked in one
+//! place and not the other. [`ParamSource`] abstracts *where* a value
+//! comes from — a parsed JSON request object or a parsed `--flag`
+//! vector — and the typed getters below parse every shared parameter
+//! (chip axes, samples, seed, epoch, budget, booleans) through one
+//! code path, so names, defaults and validation cannot diverge again.
+//!
+//! Error text is shared as a template; only the *spelling* of the
+//! parameter differs per source (`'rows'` in a serve response,
+//! `--rows` in a CLI error), keeping serve's v1 error bytes intact —
+//! the exact strings are pinned by tests below.
+//!
+//! Two deliberate semantic notes:
+//!
+//! * JSON numbers keep their historical v1 coercion: an integral-typed
+//!   parameter given `2.9` truncates to `2`, exactly as
+//!   [`Json::as_usize`] always did, so existing clients see identical
+//!   behaviour. Decimal *strings* are accepted everywhere a number is
+//!   (they are the CLI's native form) but must parse exactly.
+//! * Canonical parameter names are snake_case (`power_gate`); the CLI
+//!   spelling is the kebab-case flag (`--power-gate`). The mapping is
+//!   mechanical, never per-parameter.
+
+use crate::config::{ChipConfig, DataType};
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Default seed shared by every subcommand and serve op.
+pub const DEFAULT_SEED: u64 = 42;
+/// Default unique-candidate budget for `explore`, CLI and serve alike.
+/// (Pre-unification the serve op defaulted to 8 — the CLI's 12 wins.)
+pub const DEFAULT_EXPLORE_BUDGET: usize = 12;
+
+/// One parameter value as a source surfaced it, before typing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ParamValue<'a> {
+    Num(f64),
+    Str(&'a str),
+    Bool(bool),
+    /// Present but of an un-coercible shape (array, object, null).
+    Other,
+}
+
+/// Anything parameters can be read from. `name` is always the
+/// canonical snake_case parameter name; the source maps it to its own
+/// spelling (JSON key, `--kebab-case` flag).
+pub trait ParamSource {
+    /// The raw value for `name`, or `None` when absent.
+    fn value(&self, name: &str) -> Option<ParamValue<'_>>;
+    /// How this source spells `name` in error messages.
+    fn spell(&self, name: &str) -> String;
+}
+
+impl ParamSource for Json {
+    fn value(&self, name: &str) -> Option<ParamValue<'_>> {
+        Some(match self.get(name)? {
+            Json::Num(n) => ParamValue::Num(*n),
+            Json::Str(s) => ParamValue::Str(s),
+            Json::Bool(b) => ParamValue::Bool(*b),
+            _ => ParamValue::Other,
+        })
+    }
+
+    fn spell(&self, name: &str) -> String {
+        format!("'{name}'")
+    }
+}
+
+impl ParamSource for Args {
+    fn value(&self, name: &str) -> Option<ParamValue<'_>> {
+        let key = name.replace('_', "-");
+        if let Some(v) = self.get(&key) {
+            return Some(ParamValue::Str(v));
+        }
+        if self.flag(&key) {
+            return Some(ParamValue::Bool(true));
+        }
+        None
+    }
+
+    fn spell(&self, name: &str) -> String {
+        format!("--{}", name.replace('_', "-"))
+    }
+}
+
+/// An integer parameter. JSON numbers truncate (v1 coercion); strings
+/// must parse exactly.
+pub fn get_usize<S: ParamSource + ?Sized>(
+    src: &S,
+    name: &str,
+    default: usize,
+) -> Result<usize, String> {
+    match src.value(name) {
+        None => Ok(default),
+        Some(ParamValue::Num(n)) => Ok(n as usize),
+        Some(ParamValue::Str(s)) => {
+            s.parse().map_err(|_| format!("{} must be a number", src.spell(name)))
+        }
+        Some(_) => Err(format!("{} must be a number", src.spell(name))),
+    }
+}
+
+/// A float parameter; strings parse as decimals.
+pub fn get_f64<S: ParamSource + ?Sized>(
+    src: &S,
+    name: &str,
+    default: f64,
+) -> Result<f64, String> {
+    match src.value(name) {
+        None => Ok(default),
+        Some(ParamValue::Num(n)) => Ok(n),
+        Some(ParamValue::Str(s)) => {
+            s.parse().map_err(|_| format!("{} must be a number", src.spell(name)))
+        }
+        Some(_) => Err(format!("{} must be a number", src.spell(name))),
+    }
+}
+
+/// A boolean parameter. A bare CLI flag is `true`; anything that is
+/// not a real boolean is rejected rather than guessed at.
+pub fn get_bool<S: ParamSource + ?Sized>(
+    src: &S,
+    name: &str,
+    default: bool,
+) -> Result<bool, String> {
+    match src.value(name) {
+        None => Ok(default),
+        Some(ParamValue::Bool(b)) => Ok(b),
+        Some(_) => Err(format!("{} must be a boolean", src.spell(name))),
+    }
+}
+
+/// The seed parameter. Seeds are u64 and must survive the protocol
+/// exactly — JSON numbers ride through f64, which is only exact up to
+/// 2^53, so numbers are accepted in that range only and larger seeds
+/// travel as decimal strings (the same reason cache keys hex-encode
+/// their seeds). The string form is also the CLI's native one.
+pub fn get_seed<S: ParamSource + ?Sized>(src: &S, default: u64) -> Result<u64, String> {
+    match src.value("seed") {
+        None => Ok(default),
+        Some(ParamValue::Num(v)) => {
+            if v >= 0.0 && v <= 9.0e15 && v.trunc() == v {
+                Ok(v as u64)
+            } else {
+                Err(format!(
+                    "{} as a JSON number must be a non-negative integer <= 9e15; \
+                     pass larger seeds as a decimal string",
+                    src.spell("seed")
+                ))
+            }
+        }
+        Some(ParamValue::Str(s)) => s
+            .parse::<u64>()
+            .map_err(|_| format!("{} string '{s}' is not a u64", src.spell("seed"))),
+        Some(_) => Err(format!("{} must be a number or a decimal string", src.spell("seed"))),
+    }
+}
+
+/// Integer value of a chip-geometry parameter, with the v1 JSON
+/// truncation; `None` when the shape cannot be a number at all.
+fn dim(v: ParamValue<'_>) -> Option<usize> {
+    match v {
+        ParamValue::Num(n) => Some(n as usize),
+        ParamValue::Str(s) => s.parse().ok(),
+        _ => None,
+    }
+}
+
+/// The shared chip-configuration parameters: `rows`, `cols`, `depth`,
+/// `bf16`, `power_gate`, each defaulting to the paper's Table-2 value.
+/// Zero geometry would divide-by-zero deep inside a worker and the
+/// simulator hard-asserts depth ∈ {2,3}, so both are rejected here —
+/// in-band for serve, before any simulation starts for the CLI (which
+/// historically skipped this validation entirely).
+pub fn chip_config<S: ParamSource + ?Sized>(src: &S) -> Result<ChipConfig, String> {
+    let mut cfg = ChipConfig::default();
+    if let Some(v) = src.value("rows") {
+        cfg.tile_rows = match dim(v) {
+            Some(r) if r >= 1 => r,
+            _ => return Err(format!("{} must be a positive number", src.spell("rows"))),
+        };
+    }
+    if let Some(v) = src.value("cols") {
+        cfg.tile_cols = match dim(v) {
+            Some(c) if c >= 1 => c,
+            _ => return Err(format!("{} must be a positive number", src.spell("cols"))),
+        };
+    }
+    if let Some(v) = src.value("depth") {
+        let d = dim(v).ok_or_else(|| format!("{} must be a number", src.spell("depth")))?;
+        if d != 2 && d != 3 {
+            return Err(format!("{} must be 2 or 3", src.spell("depth")));
+        }
+        cfg.staging_depth = d;
+    }
+    if get_bool(src, "bf16", false)? {
+        cfg.dtype = DataType::Bf16;
+    }
+    if src.value("power_gate").is_some() {
+        cfg.power_gate = get_bool(src, "power_gate", false)?;
+    }
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn json(s: &str) -> Json {
+        Json::parse(s).expect("test json parses")
+    }
+
+    /// Parse a space-separated CLI line with the binary's known flags.
+    fn cli(line: &str) -> Args {
+        Args::parse_from(
+            line.split_whitespace().map(str::to_string),
+            &["bf16", "power-gate", "per-layer"],
+        )
+    }
+
+    #[test]
+    fn equivalent_sources_parse_identically() {
+        let j = json(
+            r#"{"rows":4,"cols":8,"depth":3,"bf16":true,"power_gate":true,
+                "samples":3,"seed":"12345678901234567890","epoch":0.25}"#,
+        );
+        let a = cli(
+            "--rows 4 --cols 8 --depth 3 --bf16 --power-gate \
+             --samples 3 --seed 12345678901234567890 --epoch 0.25",
+        );
+        assert_eq!(chip_config(&j).unwrap(), chip_config(&a).unwrap());
+        assert_eq!(get_usize(&j, "samples", 1).unwrap(), get_usize(&a, "samples", 1).unwrap());
+        assert_eq!(get_seed(&j, DEFAULT_SEED).unwrap(), get_seed(&a, DEFAULT_SEED).unwrap());
+        assert_eq!(get_seed(&j, 0).unwrap(), 12345678901234567890u64);
+        assert_eq!(get_f64(&j, "epoch", 0.0).unwrap(), get_f64(&a, "epoch", 0.0).unwrap());
+        let cfg = chip_config(&j).unwrap();
+        assert_eq!((cfg.tile_rows, cfg.tile_cols, cfg.staging_depth), (4, 8, 3));
+        assert_eq!(cfg.dtype, DataType::Bf16);
+        assert!(cfg.power_gate);
+    }
+
+    #[test]
+    fn defaults_match_across_sources() {
+        let j = json("{}");
+        let a = cli("");
+        assert_eq!(chip_config(&j).unwrap(), ChipConfig::default());
+        assert_eq!(chip_config(&j).unwrap(), chip_config(&a).unwrap());
+        assert_eq!(get_seed(&j, DEFAULT_SEED).unwrap(), get_seed(&a, DEFAULT_SEED).unwrap());
+        assert_eq!(get_usize(&j, "budget", DEFAULT_EXPLORE_BUDGET).unwrap(), 12);
+        assert!(!get_bool(&j, "per_layer", false).unwrap());
+        assert!(!get_bool(&a, "per_layer", false).unwrap());
+    }
+
+    #[test]
+    fn serve_error_bytes_stay_v1() {
+        // These strings are the wire contract: each is pinned to the
+        // exact pre-refactor serve error text.
+        let err = |s: &str| -> String {
+            let j = json(s);
+            chip_config(&j).unwrap_err()
+        };
+        assert_eq!(err(r#"{"rows":0}"#), "'rows' must be a positive number");
+        assert_eq!(err(r#"{"rows":"x"}"#), "'rows' must be a positive number");
+        assert_eq!(err(r#"{"cols":-2}"#), "'cols' must be a positive number");
+        assert_eq!(err(r#"{"depth":[2]}"#), "'depth' must be a number");
+        assert_eq!(err(r#"{"depth":4}"#), "'depth' must be 2 or 3");
+        assert_eq!(err(r#"{"bf16":1}"#), "'bf16' must be a boolean");
+        assert_eq!(err(r#"{"power_gate":"yes"}"#), "'power_gate' must be a boolean");
+        assert_eq!(
+            get_usize(&json(r#"{"samples":true}"#), "samples", 1).unwrap_err(),
+            "'samples' must be a number"
+        );
+        assert_eq!(
+            get_seed(&json(r#"{"seed":1e16}"#), 0).unwrap_err(),
+            "'seed' as a JSON number must be a non-negative integer <= 9e15; \
+             pass larger seeds as a decimal string"
+        );
+        assert_eq!(
+            get_seed(&json(r#"{"seed":"xyz"}"#), 0).unwrap_err(),
+            "'seed' string 'xyz' is not a u64"
+        );
+        assert_eq!(
+            get_seed(&json(r#"{"seed":[1]}"#), 0).unwrap_err(),
+            "'seed' must be a number or a decimal string"
+        );
+        assert_eq!(
+            get_bool(&json(r#"{"per_layer":3}"#), "per_layer", false).unwrap_err(),
+            "'per_layer' must be a boolean"
+        );
+    }
+
+    #[test]
+    fn cli_spellings_use_kebab_flags() {
+        // Same templates, CLI spelling; snake_case names map to
+        // kebab-case flags mechanically.
+        assert_eq!(chip_config(&cli("--rows 0")).unwrap_err(), "--rows must be a positive number");
+        assert_eq!(chip_config(&cli("--depth 4")).unwrap_err(), "--depth must be 2 or 3");
+        assert_eq!(chip_config(&cli("--depth huge")).unwrap_err(), "--depth must be a number");
+        assert_eq!(
+            get_seed(&cli("--seed not-a-number"), 0).unwrap_err(),
+            "--seed string 'not-a-number' is not a u64"
+        );
+        let gated = chip_config(&cli("--power-gate")).unwrap();
+        assert!(gated.power_gate, "power_gate maps to --power-gate");
+    }
+
+    #[test]
+    fn json_numbers_keep_v1_truncation_and_strings_widen() {
+        // Historical v1 coercion: JSON numbers truncate toward zero.
+        assert_eq!(get_usize(&json(r#"{"samples":2.9}"#), "samples", 0).unwrap(), 2);
+        let cfg = chip_config(&json(r#"{"depth":2.5}"#)).unwrap();
+        assert_eq!(cfg.staging_depth, 2);
+        // Widening: numeric parameters now also accept decimal strings
+        // over the wire (previously CLI-only).
+        assert_eq!(get_usize(&json(r#"{"samples":"7"}"#), "samples", 0).unwrap(), 7);
+        assert_eq!(get_f64(&json(r#"{"epoch":"0.5"}"#), "epoch", 0.0).unwrap(), 0.5);
+        assert!(get_usize(&json(r#"{"samples":"2.9"}"#), "samples", 0).is_err());
+    }
+}

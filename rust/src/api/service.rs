@@ -10,11 +10,12 @@
 //! unit recomputation:
 //!
 //! * **Protocol** — one JSON object per line in, one JSON object per
-//!   line out (`tensordash.serve.v1`), responses streamed strictly in
-//!   request order. Ops: `simulate`, `sweep`, `trace`, `explore`,
-//!   `batch`, `stats`, `store_ingest`, `store_query`, `store_diff`,
-//!   `shutdown`. Unknown fields are ignored; malformed lines answer
-//!   `{"ok":false,...}` without killing the loop.
+//!   line out (`tensordash.serve.v1`). Ops: `simulate`, `sweep`,
+//!   `trace`, `explore`, `batch`, `stats`, `store_ingest`,
+//!   `store_query`, `store_diff`, `shutdown`. Unknown fields are
+//!   ignored; malformed lines answer `{"ok":false,...}` without
+//!   killing the loop. Every response is built through one typed
+//!   [`ServeReply`] envelope so ops cannot drift apart.
 //! * **Coalescing** — a `batch` op runs all of its sub-requests
 //!   through *one* engine invocation, so identical units across the
 //!   batch's cells simulate once (deterministically, in the engine's
@@ -30,16 +31,32 @@
 //!   byte-identical to a cold-computed one. Cache telemetry rides in
 //!   the separate `cache` envelope field (counters move between runs
 //!   by design, so they must not — and do not — touch the report).
-//! * **Transport** — the TCP mode runs a *bounded worker pool*: one
-//!   fixed accept thread blocks in `accept()` (no polling; shutdown
-//!   wakes it with a self-connect poke) and feeds a depth-limited
-//!   connection queue that `--workers` pool threads drain. A worker
-//!   owns a connection until EOF, so responses per connection still
-//!   stream strictly in request order. Past `--queue-depth` pending
-//!   connections the accept thread *sheds load*: the client gets an
-//!   explicit `tensordash.serve.v1` "overloaded" error line and a
-//!   closed socket instead of an unbounded thread spawn.
-//! * **Telemetry** — every handled line records its wall-clock
+//! * **Transport** — the TCP mode multiplexes at *request* grain: a
+//!   per-connection reader thread parses and tags each line into one
+//!   global depth-limited request queue, `--workers` compute threads
+//!   execute individual requests, and a per-connection writer thread
+//!   delivers the responses. One slow cold sweep therefore no longer
+//!   pins a compute slot against a whole connection — cheap cache-hit
+//!   requests from the same or other connections overtake it. Past
+//!   `--queue-depth` queued *requests* the reader sheds load with an
+//!   explicit `tensordash.serve.v1` "overloaded" error line; the
+//!   connection itself stays open.
+//! * **Ordering & streaming** — by default the writer re-sequences
+//!   completions so responses stream strictly in request order per
+//!   connection, exactly the v1 contract. A request carrying
+//!   `"stream": true` opts out: its response is written the moment it
+//!   completes, tagged with an `"op"` echo so the client can correlate
+//!   out-of-order lines (ids are already echoed).
+//! * **Deadlines & cancellation** — `--request-timeout` (or a
+//!   per-request `timeout_ms` field) stamps each request with a
+//!   deadline at enqueue; a request still queued past its deadline
+//!   answers an in-band "timeout" error instead of computing, exactly
+//!   mirroring the "overloaded" shed semantics. Work queued for a
+//!   client that disconnected is cancelled at dequeue, and shutdown
+//!   drains the queue with in-band errors — a dead client cannot hold
+//!   compute slots. The `stats` op reports shed/timeout/cancel/stream
+//!   counters under `mux`.
+//! * **Telemetry** — every handled request records its wall-clock
 //!   duration into a fixed-capacity reservoir (the most recent
 //!   `LAT_RESERVOIR_CAP` samples, plus exact running count and max,
 //!   so a resident server's memory stays bounded); the `stats` op
@@ -61,7 +78,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::config::{ChipConfig, DataType};
+use crate::config::ChipConfig;
 use crate::conv::{ConvShape, TrainOp};
 use crate::repro::{self, ModelSim};
 use crate::search::{self, ExploreSpec, SearchSpace, SPACE_SCHEMA};
@@ -72,6 +89,7 @@ use crate::util::json::Json;
 
 use super::cache::{shape_json, UnitCache};
 use super::engine::Engine;
+use super::params;
 use super::plan::layers_report;
 use super::report::{report_set_json, Cell, Report};
 use super::request::{SimRequest, SweepSpec, Workload};
@@ -80,10 +98,10 @@ use super::request::{SimRequest, SweepSpec, Workload};
 pub const SERVE_SCHEMA: &str = "tensordash.serve.v1";
 /// Schema tag of on-disk trace artifacts ([`TraceArtifact`]).
 pub const TRACE_SCHEMA: &str = "tensordash.trace.v1";
-/// Default worker-pool size for the TCP transport (`--workers`).
+/// Default compute-pool size for the TCP transport (`--workers`).
 pub const DEFAULT_SERVE_WORKERS: usize = 8;
-/// Default pending-connection queue depth (`--queue-depth`); past this
-/// many queued connections the accept thread sheds load.
+/// Default pending-request queue depth (`--queue-depth`); past this
+/// many queued requests the readers shed load in-band.
 pub const DEFAULT_QUEUE_DEPTH: usize = 64;
 /// Latency samples retained by the stats reservoir.
 const LAT_RESERVOIR_CAP: usize = 4096;
@@ -243,6 +261,67 @@ impl ArtifactStore {
 }
 
 // ---------------------------------------------------------------------
+// The response envelope
+// ---------------------------------------------------------------------
+
+/// One typed serve response. Every op builds its response through this
+/// one envelope so `schema`/`id`/`ok`/`error` fields cannot drift
+/// between ops, and so the transport can render the same reply either
+/// as exact v1 bytes (in-order mode) or with an `"op"` echo
+/// (streaming mode, where the client must correlate out-of-order
+/// lines).
+#[derive(Debug, Clone)]
+pub struct ServeReply {
+    id: Option<Json>,
+    op: Option<String>,
+    ok: bool,
+    error: Option<String>,
+    fields: BTreeMap<String, Json>,
+}
+
+impl ServeReply {
+    /// A successful reply for `op`, echoing the request's `id`.
+    pub fn ok(id: Option<Json>, op: impl Into<String>) -> ServeReply {
+        ServeReply { id, op: Some(op.into()), ok: true, error: None, fields: BTreeMap::new() }
+    }
+
+    /// An in-band error reply.
+    pub fn err(id: Option<Json>, op: Option<String>, msg: impl Into<String>) -> ServeReply {
+        ServeReply { id, op, ok: false, error: Some(msg.into()), fields: BTreeMap::new() }
+    }
+
+    /// Attach one payload field (`report`, `cache`, `latency`, ...).
+    pub fn field(mut self, key: &str, value: Json) -> ServeReply {
+        self.fields.insert(key.to_string(), value);
+        self
+    }
+
+    /// Render to one protocol line. `echo_op: false` is the exact v1
+    /// byte contract (no `op` key); `echo_op: true` adds the `"op"`
+    /// echo used by streaming responses.
+    pub fn render(&self, echo_op: bool) -> String {
+        let mut m = BTreeMap::new();
+        m.insert("schema".to_string(), Json::Str(SERVE_SCHEMA.to_string()));
+        if let Some(id) = &self.id {
+            m.insert("id".to_string(), id.clone());
+        }
+        m.insert("ok".to_string(), Json::Bool(self.ok));
+        if let Some(e) = &self.error {
+            m.insert("error".to_string(), Json::Str(e.clone()));
+        }
+        if echo_op {
+            if let Some(op) = &self.op {
+                m.insert("op".to_string(), Json::Str(op.clone()));
+            }
+        }
+        for (k, v) in &self.fields {
+            m.insert(k.clone(), v.clone());
+        }
+        Json::Obj(m).render()
+    }
+}
+
+// ---------------------------------------------------------------------
 // Request parsing
 // ---------------------------------------------------------------------
 
@@ -261,74 +340,13 @@ enum SubKind {
     Trace { name: String },
 }
 
-fn parse_cfg(j: &Json) -> Result<ChipConfig, String> {
-    let mut cfg = ChipConfig::default();
-    // Zero geometry would divide-by-zero deep inside a worker; reject
-    // it here so the error stays in-band instead of killing the loop.
-    if let Some(v) = j.get("rows") {
-        cfg.tile_rows = match v.as_usize() {
-            Some(r) if r >= 1 => r,
-            _ => return Err("'rows' must be a positive number".to_string()),
-        };
-    }
-    if let Some(v) = j.get("cols") {
-        cfg.tile_cols = match v.as_usize() {
-            Some(c) if c >= 1 => c,
-            _ => return Err("'cols' must be a positive number".to_string()),
-        };
-    }
-    if let Some(v) = j.get("depth") {
-        let d = v.as_usize().ok_or("'depth' must be a number")?;
-        if d != 2 && d != 3 {
-            return Err("'depth' must be 2 or 3".to_string());
+impl SubKind {
+    fn op_name(&self) -> &'static str {
+        match self {
+            SubKind::Simulate { .. } => "simulate",
+            SubKind::Sweep => "sweep",
+            SubKind::Trace { .. } => "trace",
         }
-        cfg.staging_depth = d;
-    }
-    if let Some(v) = j.get("bf16") {
-        if v.as_bool().ok_or("'bf16' must be a boolean")? {
-            cfg.dtype = DataType::Bf16;
-        }
-    }
-    if let Some(v) = j.get("power_gate") {
-        cfg.power_gate = v.as_bool().ok_or("'power_gate' must be a boolean")?;
-    }
-    Ok(cfg)
-}
-
-fn get_usize(j: &Json, key: &str, default: usize) -> Result<usize, String> {
-    match j.get(key) {
-        None => Ok(default),
-        Some(v) => v.as_usize().ok_or_else(|| format!("'{key}' must be a number")),
-    }
-}
-
-fn get_f64(j: &Json, key: &str, default: f64) -> Result<f64, String> {
-    match j.get(key) {
-        None => Ok(default),
-        Some(v) => v.as_f64().ok_or_else(|| format!("'{key}' must be a number")),
-    }
-}
-
-/// Seeds are u64 and must survive the protocol exactly — JSON numbers
-/// ride through f64, which is only exact up to 2^53, so numbers are
-/// accepted in that range only and larger seeds travel as decimal
-/// strings (the same reason cache keys hex-encode their seeds).
-fn get_seed(j: &Json, default: u64) -> Result<u64, String> {
-    match j.get("seed") {
-        None => Ok(default),
-        Some(Json::Num(v)) => {
-            if *v >= 0.0 && *v <= 9.0e15 && v.trunc() == *v {
-                Ok(*v as u64)
-            } else {
-                Err("'seed' as a JSON number must be a non-negative integer <= 9e15; \
-                     pass larger seeds as a decimal string"
-                    .to_string())
-            }
-        }
-        Some(Json::Str(s)) => {
-            s.parse::<u64>().map_err(|_| format!("'seed' string '{s}' is not a u64"))
-        }
-        Some(_) => Err("'seed' must be a number or a decimal string".to_string()),
     }
 }
 
@@ -336,10 +354,18 @@ fn get_seed(j: &Json, default: u64) -> Result<u64, String> {
 // The service
 // ---------------------------------------------------------------------
 
-/// Result of handling one input line: the response lines (one per
-/// sub-request) and whether the service should shut down.
+/// Result of handling one input line: the rendered v1 response lines
+/// (one per sub-request) and whether the service should shut down.
 pub struct Handled {
     pub lines: Vec<String>,
+    pub shutdown: bool,
+}
+
+/// Result of handling one parsed request: the typed replies (rendered
+/// by the transport, which knows whether the client opted into
+/// streaming) and whether the service should shut down.
+pub struct HandledReplies {
+    pub replies: Vec<ServeReply>,
     pub shutdown: bool,
 }
 
@@ -372,6 +398,33 @@ impl LatReservoir {
     }
 }
 
+/// Multiplexer telemetry: how often the transport shed, timed out,
+/// cancelled or streamed a request. Reported by the `stats` op under
+/// `mux`.
+#[derive(Debug, Default)]
+struct MuxCounters {
+    shed: AtomicU64,
+    timeouts: AtomicU64,
+    cancelled: AtomicU64,
+    streamed: AtomicU64,
+}
+
+impl MuxCounters {
+    fn to_json(&self) -> Json {
+        let load = |c: &AtomicU64| Json::Num(c.load(Ordering::Relaxed) as f64);
+        let mut m = BTreeMap::new();
+        m.insert("cancelled".to_string(), load(&self.cancelled));
+        m.insert("shed".to_string(), load(&self.shed));
+        m.insert("streamed".to_string(), load(&self.streamed));
+        m.insert("timeouts".to_string(), load(&self.timeouts));
+        Json::Obj(m)
+    }
+}
+
+fn bump(counter: &AtomicU64) {
+    counter.fetch_add(1, Ordering::Relaxed);
+}
+
 /// The persistent simulation service. Share by reference across
 /// connection-handler threads; all interior state is synchronized.
 #[derive(Debug)]
@@ -380,9 +433,10 @@ pub struct Service {
     cache: Arc<UnitCache>,
     artifacts: ArtifactStore,
     stop: AtomicBool,
-    /// Wall-clock nanoseconds of handled lines, across all
+    /// Wall-clock nanoseconds of handled requests, across all
     /// connections; the `stats` op summarizes them as percentiles.
     latency: Mutex<LatReservoir>,
+    mux: MuxCounters,
 }
 
 impl Service {
@@ -395,6 +449,7 @@ impl Service {
             artifacts: ArtifactStore::default(),
             stop: AtomicBool::new(false),
             latency: Mutex::new(LatReservoir::default()),
+            mux: MuxCounters::default(),
         }
     }
 
@@ -406,61 +461,72 @@ impl Service {
         &self.cache
     }
 
-    /// Handle one protocol line, recording its wall-clock duration for
-    /// the `stats` op's latency summary. Never panics on malformed
-    /// input; the error is reported in-band.
+    /// Handle one protocol line in v1 (in-order, no `op` echo) form,
+    /// recording its wall-clock duration for the `stats` op's latency
+    /// summary. Never panics on malformed input; the error is reported
+    /// in-band. This is the stdin/stdout path; the TCP transport goes
+    /// through [`Self::handle_json`] so it can render streaming
+    /// responses itself.
     pub fn handle_line(&self, line: &str) -> Handled {
         let t0 = Instant::now();
-        let h = self.handle_line_inner(line);
+        let h = self.dispatch_line(line);
         let ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
         self.latency.lock().unwrap().record(ns);
-        h
+        Handled {
+            lines: h.replies.iter().map(|r| r.render(false)).collect(),
+            shutdown: h.shutdown,
+        }
     }
 
-    fn handle_line_inner(&self, line: &str) -> Handled {
-        let j = match Json::parse(line) {
-            Ok(j) => j,
-            Err(e) => {
-                return Handled {
-                    lines: vec![error_line(None, &format!("bad json: {e}"))],
-                    shutdown: false,
-                }
-            }
-        };
+    fn dispatch_line(&self, line: &str) -> HandledReplies {
+        match Json::parse(line) {
+            Ok(j) => self.handle_json(&j),
+            Err(e) => HandledReplies {
+                replies: vec![ServeReply::err(None, None, format!("bad json: {e}"))],
+                shutdown: false,
+            },
+        }
+    }
+
+    /// Dispatch one parsed request object to its op handler. Pure with
+    /// respect to telemetry: the caller records latency (so queued
+    /// time never pollutes the compute-latency reservoir).
+    pub fn handle_json(&self, j: &Json) -> HandledReplies {
         let id = j.get("id").cloned();
         match j.get("op").and_then(Json::as_str) {
-            Some("shutdown") => {
-                let mut m = envelope(id);
-                m.insert("ok".to_string(), Json::Bool(true));
-                m.insert("bye".to_string(), Json::Bool(true));
-                Handled { lines: vec![Json::Obj(m).render()], shutdown: true }
+            Some("shutdown") => HandledReplies {
+                replies: vec![ServeReply::ok(id, "shutdown").field("bye", Json::Bool(true))],
+                shutdown: true,
+            },
+            Some("stats") => {
+                HandledReplies { replies: vec![self.stats_reply(id)], shutdown: false }
             }
-            Some("stats") => Handled { lines: vec![self.stats_line(id)], shutdown: false },
-            Some("explore") => Handled { lines: vec![self.explore_line(&j, id)], shutdown: false },
+            Some("explore") => {
+                HandledReplies { replies: vec![self.explore_reply(j, id)], shutdown: false }
+            }
             Some(op @ ("store_ingest" | "store_query" | "store_diff")) => {
-                Handled { lines: vec![store_line(op, &j, id)], shutdown: false }
+                HandledReplies { replies: vec![store_reply(op, j, id)], shutdown: false }
             }
             Some("batch") => {
                 let subs = match j.get("requests").and_then(Json::as_arr) {
                     Some(reqs) => reqs.iter().collect::<Vec<_>>(),
                     None => {
-                        return Handled {
-                            lines: vec![error_line(id, "'batch' needs a 'requests' array")],
-                            shutdown: false,
-                        }
+                        let op = Some("batch".to_string());
+                        let err = ServeReply::err(id, op, "'batch' needs a 'requests' array");
+                        return HandledReplies { replies: vec![err], shutdown: false };
                     }
                 };
-                Handled { lines: self.run_batch(&subs), shutdown: false }
+                HandledReplies { replies: self.run_batch(&subs), shutdown: false }
             }
-            _ => Handled { lines: self.run_batch(&[&j]), shutdown: false },
+            _ => HandledReplies { replies: self.run_batch(&[j]), shutdown: false },
         }
     }
 
     /// Parse, execute (one engine invocation for the whole batch, so
-    /// identical units across sub-requests coalesce) and render
-    /// responses in request order.
-    fn run_batch(&self, subs: &[&Json]) -> Vec<String> {
-        let parsed: Vec<Result<SubReq, (Option<Json>, String)>> =
+    /// identical units across sub-requests coalesce) and build typed
+    /// replies in request order.
+    fn run_batch(&self, subs: &[&Json]) -> Vec<ServeReply> {
+        let parsed: Vec<Result<SubReq, (Option<Json>, String, String)>> =
             subs.iter().map(|j| self.parse_request(j)).collect();
         let mut all_cells: Vec<SimRequest> = Vec::new();
         for sub in parsed.iter().flatten() {
@@ -473,38 +539,35 @@ impl Service {
         let mut cursor = 0usize;
         for sub in parsed {
             match sub {
-                Err((id, msg)) => out.push(error_line(id, &msg)),
+                Err((id, op, msg)) => out.push(ServeReply::err(id, Some(op), msg)),
                 Ok(sub) => {
                     let slice = &sims[cursor..cursor + sub.cells.len()];
                     cursor += sub.cells.len();
                     let reports = self.build_reports(&sub, slice);
-                    let mut m = envelope(sub.id);
-                    m.insert("ok".to_string(), Json::Bool(true));
-                    m.insert("report".to_string(), report_set_json(&reports));
-                    m.insert("cache".to_string(), delta.to_json());
-                    out.push(Json::Obj(m).render());
+                    let reply = ServeReply::ok(sub.id, sub.kind.op_name())
+                        .field("report", report_set_json(&reports))
+                        .field("cache", delta.to_json());
+                    out.push(reply);
                 }
             }
         }
         out
     }
 
-    fn parse_request(&self, j: &Json) -> Result<SubReq, (Option<Json>, String)> {
+    fn parse_request(&self, j: &Json) -> Result<SubReq, (Option<Json>, String, String)> {
         let id = j.get("id").cloned();
+        let op = j.get("op").and_then(Json::as_str).unwrap_or("simulate").to_string();
         match self.parse_request_inner(j) {
             Ok((kind, per_layer, cells)) => Ok(SubReq { id, per_layer, kind, cells }),
-            Err(msg) => Err((id, msg)),
+            Err(msg) => Err((id, op, msg)),
         }
     }
 
     #[allow(clippy::type_complexity)]
     fn parse_request_inner(&self, j: &Json) -> Result<(SubKind, bool, Vec<SimRequest>), String> {
-        let per_layer = match j.get("per_layer") {
-            None => false,
-            Some(v) => v.as_bool().ok_or("'per_layer' must be a boolean")?,
-        };
-        let samples = get_usize(j, "samples", repro::DEFAULT_SAMPLES)?;
-        let seed = get_seed(j, 42)?;
+        let per_layer = params::get_bool(j, "per_layer", false)?;
+        let samples = params::get_usize(j, "samples", repro::DEFAULT_SAMPLES)?;
+        let seed = params::get_seed(j, params::DEFAULT_SEED)?;
         match j.get("op").and_then(Json::as_str) {
             Some("simulate") | None => {
                 let model = j
@@ -512,8 +575,8 @@ impl Service {
                     .and_then(Json::as_str)
                     .ok_or("'simulate' needs a 'model'")?
                     .to_string();
-                let epoch = get_f64(j, "epoch", repro::MID_EPOCH)?;
-                let cfg = parse_cfg(j)?;
+                let epoch = params::get_f64(j, "epoch", repro::MID_EPOCH)?;
+                let cfg = params::chip_config(j)?;
                 let profile = self
                     .artifacts
                     .profile(&model)
@@ -533,7 +596,7 @@ impl Service {
                         .collect::<Option<_>>()
                         .ok_or("'epochs' must contain numbers")?,
                 };
-                let cfg = parse_cfg(j)?;
+                let cfg = params::chip_config(j)?;
                 let names: Vec<&str> = models.iter().map(|(m, _)| m.as_str()).collect();
                 let spec = SweepSpec::models(&names, repro::MID_EPOCH, &cfg, samples, seed)
                     .with_epochs(&epochs);
@@ -561,7 +624,7 @@ impl Service {
                     .and_then(Json::as_str)
                     .ok_or("'trace' needs a 'path'")?;
                 let artifact = self.artifacts.trace(path)?;
-                let cfg = parse_cfg(j)?;
+                let cfg = params::chip_config(j)?;
                 let req = artifact.request(cfg, samples, seed);
                 Ok((SubKind::Trace { name: artifact.name.clone() }, per_layer, vec![req]))
             }
@@ -639,16 +702,12 @@ impl Service {
     /// meta) is deterministic in the request, so a warm response is
     /// byte-identical to a cold one; cache telemetry rides in the
     /// separate `cache` envelope field.
-    fn explore_line(&self, j: &Json, id: Option<Json>) -> String {
+    fn explore_reply(&self, j: &Json, id: Option<Json>) -> ServeReply {
         match self.parse_and_run_explore(j) {
-            Ok((report, cache)) => {
-                let mut m = envelope(id);
-                m.insert("ok".to_string(), Json::Bool(true));
-                m.insert("report".to_string(), report.to_json());
-                m.insert("cache".to_string(), cache);
-                Json::Obj(m).render()
-            }
-            Err(msg) => error_line(id, &msg),
+            Ok((report, cache)) => ServeReply::ok(id, "explore")
+                .field("report", report.to_json())
+                .field("cache", cache),
+            Err(msg) => ServeReply::err(id, Some("explore".to_string()), msg),
         }
     }
 
@@ -692,12 +751,12 @@ impl Service {
             }
             Some(_) => return Err("'axes' must be an object of axis -> value arrays".to_string()),
         };
-        let epoch = get_f64(j, "epoch", repro::MID_EPOCH)?;
-        let samples = get_usize(j, "samples", repro::DEFAULT_SAMPLES)?;
-        let seed = get_seed(j, 42)?;
-        let budget = get_usize(j, "budget", 8)?.max(1);
+        let epoch = params::get_f64(j, "epoch", repro::MID_EPOCH)?;
+        let samples = params::get_usize(j, "samples", repro::DEFAULT_SAMPLES)?;
+        let seed = params::get_seed(j, params::DEFAULT_SEED)?;
+        let budget = params::get_usize(j, "budget", params::DEFAULT_EXPLORE_BUDGET)?.max(1);
         let population =
-            get_usize(j, "population", search::default_population(budget))?.max(1);
+            params::get_usize(j, "population", search::default_population(budget))?.max(1);
         let spec = ExploreSpec::with_profiles(space, models, epoch, samples, seed, budget)
             .with_population(population);
         let before = self.cache.stats();
@@ -732,23 +791,22 @@ impl Service {
         Json::Obj(m)
     }
 
-    fn stats_line(&self, id: Option<Json>) -> String {
+    fn stats_reply(&self, id: Option<Json>) -> ServeReply {
         let (profiles, traces) = self.artifacts.loaded();
-        let mut m = envelope(id);
-        m.insert("ok".to_string(), Json::Bool(true));
-        m.insert("cache".to_string(), self.cache.stats().to_json());
-        m.insert("cache_entries".to_string(), Json::Num(self.cache.len() as f64));
-        m.insert("cache_shards".to_string(), Json::Num(self.cache.shard_count() as f64));
-        m.insert("latency".to_string(), self.latency_json());
-        m.insert("profiles_loaded".to_string(), Json::Num(profiles as f64));
-        m.insert("traces_loaded".to_string(), Json::Num(traces as f64));
-        Json::Obj(m).render()
+        ServeReply::ok(id, "stats")
+            .field("cache", self.cache.stats().to_json())
+            .field("cache_entries", Json::Num(self.cache.len() as f64))
+            .field("cache_shards", Json::Num(self.cache.shard_count() as f64))
+            .field("latency", self.latency_json())
+            .field("mux", self.mux.to_json())
+            .field("profiles_loaded", Json::Num(profiles as f64))
+            .field("traces_loaded", Json::Num(traces as f64))
     }
 
     /// The blocking line loop: read requests from `reader`, stream
     /// responses to `writer` (flushed per line), return on EOF or a
-    /// `shutdown` op. This is both the stdin/stdout mode and the
-    /// per-connection TCP loop.
+    /// `shutdown` op. This is the stdin/stdout mode (and the reference
+    /// single-threaded transport the benches race against).
     pub fn serve_lines<R: BufRead, W: Write>(
         &self,
         reader: R,
@@ -773,52 +831,62 @@ impl Service {
         Ok(())
     }
 
-    /// Bind `addr` and serve it with a bounded worker pool: see
-    /// [`Self::serve_listener`].
-    pub fn serve_tcp(
-        &self,
-        addr: &str,
-        workers: usize,
-        queue_depth: usize,
-    ) -> std::io::Result<()> {
+    /// Bind `addr` and serve it with the request-multiplexing
+    /// transport: see [`Self::serve_listener`].
+    pub fn serve_tcp(&self, addr: &str, opts: ServeOptions) -> std::io::Result<()> {
         let listener = TcpListener::bind(addr)?;
-        self.serve_listener(listener, workers, queue_depth)
+        self.serve_listener(listener, opts)
     }
 
     /// Serve an already-bound listener until a `shutdown` op arrives
-    /// on any connection. The calling thread becomes the fixed accept
-    /// thread: it blocks in `accept()` (no polling — an idle server
-    /// burns no CPU; shutdown wakes it with a self-connect poke) and
-    /// pushes each connection onto a depth-limited queue that
-    /// `workers` pool threads drain. A worker owns a connection until
-    /// EOF, so responses per connection stream strictly in request
-    /// order. When the queue is at `queue_depth` the accept thread
-    /// sheds load: the client gets an explicit "overloaded" error line
-    /// and a closed socket. On shutdown every in-service connection is
-    /// half-closed so workers blocked in a read drain promptly, and
-    /// queued-but-unserved connections are refused with an error line.
+    /// on any connection.
+    ///
+    /// The calling thread becomes the fixed accept thread: it blocks
+    /// in `accept()` (no polling — an idle server burns no CPU;
+    /// shutdown wakes it with a self-connect poke) and gives each
+    /// connection a reader thread and a writer thread. Readers parse
+    /// and tag requests into one global depth-limited *request* queue
+    /// that `opts.workers` compute threads drain, so admission control
+    /// is per request: past `opts.queue_depth` queued requests the
+    /// reader answers an in-band "overloaded" error and the connection
+    /// stays open. Writers re-sequence completions into request order
+    /// (v1 contract) unless the request opted into `"stream": true`,
+    /// in which case its response is written on completion with an
+    /// `"op"` echo.
+    ///
+    /// `opts.request_timeout` stamps every request with a deadline at
+    /// enqueue; a request still queued past its deadline answers an
+    /// in-band "timeout" error instead of computing. Requests queued
+    /// for a disconnected client are cancelled at dequeue, and
+    /// shutdown drains the queue with in-band errors before
+    /// half-closing every connection's read side.
     pub fn serve_listener(
         &self,
         listener: TcpListener,
-        workers: usize,
-        queue_depth: usize,
+        opts: ServeOptions,
     ) -> std::io::Result<()> {
-        let workers = workers.max(1);
+        let workers = opts.workers.max(1);
         let local = listener.local_addr()?;
+        let timeout_desc = match opts.request_timeout {
+            Some(t) => format!("{}ms", t.as_millis()),
+            None => "off".to_string(),
+        };
         eprintln!(
-            "tensordash serve: listening on {local} ({workers} workers, queue depth {})",
-            queue_depth.max(1)
+            "tensordash serve: listening on {local} ({workers} workers, request queue depth {}, \
+             request timeout {timeout_desc})",
+            opts.queue_depth.max(1)
         );
-        let queue = ConnQueue::new(queue_depth);
-        // Connections currently owned by workers, tracked so shutdown
-        // can half-close them. Each worker reaps its own entry on
-        // handoff — a resident service must not accumulate one fd per
-        // past connection.
+        let queue = ReqQueue::new(opts.queue_depth);
+        let default_timeout = opts.request_timeout;
+        // Read halves of live connections, tracked so shutdown can
+        // half-close them. Each reader reaps its own entry on exit — a
+        // resident service must not accumulate one fd per past
+        // connection.
         let conns: Mutex<Vec<(u64, TcpStream)>> = Mutex::new(Vec::new());
-        let next_id = AtomicU64::new(0);
+        let mut next_conn = 0u64;
         std::thread::scope(|s| {
             for _ in 0..workers {
-                s.spawn(|| self.worker_loop(&queue, &conns, &next_id, local));
+                s.spawn(|| self.compute_loop(&queue, local));
             }
             loop {
                 match listener.accept() {
@@ -828,9 +896,31 @@ impl Service {
                             drop(stream);
                             break;
                         }
-                        if let Err(stream) = queue.push(stream) {
-                            shed(stream, "overloaded: connection queue full, retry later");
-                        }
+                        // A connection whose socket cannot be cloned
+                        // for the writer/tracker is shed outright
+                        // (try_clone fails under fd pressure, where
+                        // shedding is the right move anyway).
+                        let halves = (stream.try_clone(), stream.try_clone());
+                        let (write_half, track_half) = match halves {
+                            (Ok(w), Ok(t)) => (w, t),
+                            _ => {
+                                bump(&self.mux.shed);
+                                shed(stream, "overloaded: cannot service connection, retry later");
+                                continue;
+                            }
+                        };
+                        let id = next_conn;
+                        next_conn += 1;
+                        conns.lock().unwrap().push((id, track_half));
+                        let conn = Arc::new(ConnShared::default());
+                        let writer_conn = Arc::clone(&conn);
+                        s.spawn(move || writer_loop(&writer_conn, write_half));
+                        let queue = &queue;
+                        let conns = &conns;
+                        s.spawn(move || {
+                            self.reader_loop(stream, conn, queue, default_timeout);
+                            conns.lock().unwrap().retain(|(i, _)| *i != id);
+                        });
                     }
                     // Transient accept failures (ECONNABORTED, EMFILE
                     // pressure, ...) must not take the service down —
@@ -844,14 +934,17 @@ impl Service {
                     }
                 }
             }
-            // Shutdown: refuse connections that were queued but never
-            // served (close() also wakes every idle worker), then
-            // half-close the read side of in-service connections —
-            // idle readers see EOF and exit, while workers
-            // mid-computation can still write their in-flight response
-            // before the scope joins them.
-            for stream in queue.close() {
-                shed(stream, "overloaded: service shutting down");
+            // Shutdown: cancel requests that were queued but never
+            // executed with an in-band error each (close() also wakes
+            // every idle worker), then half-close the read side of
+            // live connections — blocked readers see EOF and exit,
+            // and each writer drains its remaining completions before
+            // exiting.
+            for job in queue.close() {
+                bump(&self.mux.cancelled);
+                let ReqJob { conn, id, op, seq, stream, .. } = job;
+                let reply = ServeReply::err(id, op, "overloaded: service shutting down");
+                conn.post(seq, vec![reply.render(stream)], false);
             }
             for (_, c) in conns.lock().unwrap().iter() {
                 let _ = c.shutdown(std::net::Shutdown::Read);
@@ -860,33 +953,99 @@ impl Service {
         Ok(())
     }
 
-    /// One pool worker: take a connection from the queue, own it until
-    /// its line loop ends, repeat. Exits when the queue closes; a
-    /// worker that observes the stop flag pokes the accept thread out
-    /// of its blocking `accept()` so the whole scope can join.
-    fn worker_loop(
+    /// One per-connection reader: parse and tag each line into the
+    /// global request queue. Ordered (non-streaming) requests take a
+    /// sequence ticket the writer re-sequences by; streaming requests
+    /// skip ticketing entirely. In-band parse errors are posted
+    /// straight to the writer with an ordered ticket so they hold
+    /// their place in the response stream, exactly like v1.
+    fn reader_loop(
         &self,
-        queue: &ConnQueue,
-        conns: &Mutex<Vec<(u64, TcpStream)>>,
-        next_id: &AtomicU64,
-        local: SocketAddr,
+        stream: TcpStream,
+        conn: Arc<ConnShared>,
+        queue: &ReqQueue,
+        default_timeout: Option<Duration>,
     ) {
-        while let Some(stream) = queue.pop() {
-            let id = next_id.fetch_add(1, Ordering::Relaxed);
-            // An untracked connection could not be half-closed on
-            // shutdown, so an idle client would hang the scope join
-            // forever — refuse the connection instead of serving it
-            // untracked (try_clone fails under fd pressure, where
-            // shedding is the right move anyway).
-            match stream.try_clone() {
-                Ok(clone) => conns.lock().unwrap().push((id, clone)),
+        if stream.set_nonblocking(false).is_err() {
+            conn.mark_dead();
+            return;
+        }
+        let reader = BufReader::new(stream);
+        let mut next_seq = 0u64;
+        for line in reader.lines() {
+            let line = match line {
+                Ok(l) => l,
+                Err(_) => {
+                    // A torn read is a dead client: responses for its
+                    // queued work are dropped and remaining queued
+                    // work cancels at dequeue.
+                    conn.mark_dead();
+                    return;
+                }
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            let mut ticket = || {
+                let s = next_seq;
+                next_seq += 1;
+                Some(s)
+            };
+            let req = match Json::parse(&line) {
+                Ok(j) => j,
                 Err(e) => {
-                    eprintln!("serve: refusing untrackable connection: {e}");
+                    let reply = ServeReply::err(None, None, format!("bad json: {e}"));
+                    let seq = ticket();
+                    conn.add_outstanding();
+                    conn.post(seq, vec![reply.render(false)], false);
                     continue;
                 }
+            };
+            let id = req.get("id").cloned();
+            let op = req.get("op").and_then(Json::as_str).map(str::to_string);
+            let (stream_mode, deadline) = match parse_routing(&req, default_timeout) {
+                Ok(r) => r,
+                Err(msg) => {
+                    let reply = ServeReply::err(id, op, msg);
+                    let seq = ticket();
+                    conn.add_outstanding();
+                    conn.post(seq, vec![reply.render(false)], false);
+                    continue;
+                }
+            };
+            let seq = if stream_mode { None } else { ticket() };
+            conn.add_outstanding();
+            let job = ReqJob {
+                conn: Arc::clone(&conn),
+                req,
+                id,
+                op,
+                seq,
+                stream: stream_mode,
+                deadline,
+            };
+            if let Err(job) = queue.push(job) {
+                // Per-request load shedding: the connection stays
+                // open; only this request is refused.
+                bump(&self.mux.shed);
+                let ReqJob { conn: jc, id, op, seq, stream: streamed, .. } = job;
+                let reply = ServeReply::err(id, op, "overloaded: request queue full, retry later");
+                jc.post(seq, vec![reply.render(streamed)], false);
             }
-            let _ = self.handle_conn(stream);
-            conns.lock().unwrap().retain(|(i, _)| *i != id);
+        }
+        // Clean EOF is not a dead client: pipelined requests still in
+        // flight keep their responses; the writer exits once the last
+        // one drains.
+        conn.mark_eof();
+    }
+
+    /// One compute worker: execute individual requests off the global
+    /// queue. Exits when the queue closes; a worker that observes the
+    /// stop flag pokes the accept thread out of its blocking
+    /// `accept()` so the whole scope can join.
+    fn compute_loop(&self, queue: &ReqQueue, local: SocketAddr) {
+        while let Some(job) = queue.pop() {
+            self.execute_job(job);
             if self.stop.load(Ordering::SeqCst) {
                 break;
             }
@@ -896,62 +1055,240 @@ impl Service {
         }
     }
 
-    fn handle_conn(&self, stream: TcpStream) -> std::io::Result<()> {
-        stream.set_nonblocking(false)?;
-        let reader = BufReader::new(stream.try_clone()?);
-        let writer = BufWriter::new(stream);
-        self.serve_lines(reader, writer)
+    /// Execute one dequeued request: cancel it if its client is gone,
+    /// time it out if its deadline passed while queued, otherwise
+    /// compute and post the response to the connection's writer.
+    fn execute_job(&self, job: ReqJob) {
+        let ReqJob { conn, req, id, op, seq, stream, deadline } = job;
+        if conn.is_dead() {
+            // Disconnect cancellation: a dead client must not hold a
+            // compute slot. Nothing is posted (its writer is gone).
+            bump(&self.mux.cancelled);
+            return;
+        }
+        if let Some(d) = deadline {
+            if Instant::now() > d {
+                bump(&self.mux.timeouts);
+                let msg = "timeout: request deadline passed in queue, retry later";
+                let reply = ServeReply::err(id, op, msg);
+                conn.post(seq, vec![reply.render(stream)], false);
+                return;
+            }
+        }
+        let t0 = Instant::now();
+        let h = self.handle_json(&req);
+        let ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+        self.latency.lock().unwrap().record(ns);
+        if stream {
+            bump(&self.mux.streamed);
+        }
+        if h.shutdown {
+            self.stop.store(true, Ordering::SeqCst);
+        }
+        let lines: Vec<String> = h.replies.iter().map(|r| r.render(stream)).collect();
+        conn.post(seq, lines, h.shutdown);
     }
 }
 
 // ---------------------------------------------------------------------
-// TCP transport plumbing — the bounded handoff queue and backpressure
+// TCP transport plumbing — the request queue, per-connection writer
+// state, and backpressure
 // ---------------------------------------------------------------------
 
-/// Depth-bounded handoff queue between the accept thread and the
-/// worker pool. `push` never blocks: at depth the connection comes
-/// straight back so the accept thread can shed it, keeping admission
-/// control on the accept side and workers ignorant of load.
-struct ConnQueue {
+/// Options for the TCP transport ([`Service::serve_tcp`]).
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Compute-pool size (`--workers`).
+    pub workers: usize,
+    /// Global pending-request queue depth (`--queue-depth`); past it
+    /// readers shed requests with an in-band "overloaded" error.
+    pub queue_depth: usize,
+    /// Default per-request deadline (`--request-timeout`), measured
+    /// from enqueue; `None` means requests wait indefinitely. A
+    /// request-level `timeout_ms` field overrides it (0 disables).
+    pub request_timeout: Option<Duration>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> ServeOptions {
+        ServeOptions {
+            workers: DEFAULT_SERVE_WORKERS,
+            queue_depth: DEFAULT_QUEUE_DEPTH,
+            request_timeout: None,
+        }
+    }
+}
+
+/// Per-request routing fields: `stream` (opt out of response
+/// ordering) and `timeout_ms` (override the server's default
+/// deadline; 0 disables it for this request).
+fn parse_routing(
+    req: &Json,
+    default_timeout: Option<Duration>,
+) -> Result<(bool, Option<Instant>), String> {
+    let stream = params::get_bool(req, "stream", false)?;
+    let timeout = match req.get("timeout_ms") {
+        None => default_timeout,
+        Some(_) => {
+            let ms = params::get_usize(req, "timeout_ms", 0)?;
+            (ms > 0).then(|| Duration::from_millis(ms as u64))
+        }
+    };
+    let deadline = timeout.and_then(|t| Instant::now().checked_add(t));
+    Ok((stream, deadline))
+}
+
+/// One request's completed response: its ordering ticket (`None` for
+/// streaming requests) and rendered lines.
+struct Completion {
+    seq: Option<u64>,
+    lines: Vec<String>,
+    shutdown: bool,
+}
+
+/// State shared between one connection's reader, its writer, and the
+/// compute workers executing its requests.
+#[derive(Default)]
+struct ConnShared {
+    state: Mutex<ConnState>,
+    wake: Condvar,
+}
+
+#[derive(Default)]
+struct ConnState {
+    /// Completions awaiting the writer, in completion order.
+    mailbox: Vec<Completion>,
+    /// Requests admitted by the reader whose completion has not yet
+    /// reached the writer; the writer exits at EOF only once this
+    /// drains, so pipelined responses are never lost.
+    outstanding: u64,
+    /// Reader saw clean EOF: no further requests will be admitted.
+    eof: bool,
+    /// Connection is unusable (torn read, failed write, post-shutdown):
+    /// posts are dropped and queued work cancels at dequeue.
+    dead: bool,
+}
+
+impl ConnShared {
+    fn is_dead(&self) -> bool {
+        self.state.lock().unwrap().dead
+    }
+
+    fn mark_dead(&self) {
+        self.state.lock().unwrap().dead = true;
+        self.wake.notify_all();
+    }
+
+    fn mark_eof(&self) {
+        self.state.lock().unwrap().eof = true;
+        self.wake.notify_all();
+    }
+
+    fn add_outstanding(&self) {
+        self.state.lock().unwrap().outstanding += 1;
+    }
+
+    /// Deliver one request's response to the writer. Dropped silently
+    /// when the connection is already dead — its writer has exited.
+    fn post(&self, seq: Option<u64>, lines: Vec<String>, shutdown: bool) {
+        let mut g = self.state.lock().unwrap();
+        if g.dead {
+            return;
+        }
+        g.mailbox.push(Completion { seq, lines, shutdown });
+        self.wake.notify_all();
+    }
+}
+
+/// Restores request order on the writer side: ordered completions
+/// arrive tagged with their reader-assigned sequence number and are
+/// held until every earlier one has been released. Streaming
+/// completions never enter the resequencer.
+#[derive(Default)]
+struct Resequencer {
+    next: u64,
+    held: BTreeMap<u64, (Vec<String>, bool)>,
+}
+
+impl Resequencer {
+    /// Accept one ordered completion; returns every line now ready to
+    /// write, in request order, and whether a released completion was
+    /// the shutdown ack (the writer must close *after* writing it).
+    fn push(&mut self, seq: u64, lines: Vec<String>, shutdown: bool) -> (Vec<String>, bool) {
+        self.held.insert(seq, (lines, shutdown));
+        let mut out = Vec::new();
+        let mut shut = false;
+        while let Some((lines, s)) = self.held.remove(&self.next) {
+            out.extend(lines);
+            shut |= s;
+            self.next += 1;
+        }
+        (out, shut)
+    }
+
+    /// Completions held waiting for an earlier sequence number.
+    fn buffered(&self) -> usize {
+        self.held.len()
+    }
+}
+
+/// One tagged request in the global queue.
+struct ReqJob {
+    conn: Arc<ConnShared>,
+    req: Json,
+    id: Option<Json>,
+    op: Option<String>,
+    /// Ordering ticket; `None` for streaming requests.
+    seq: Option<u64>,
+    stream: bool,
+    /// Absolute deadline stamped at enqueue.
+    deadline: Option<Instant>,
+}
+
+/// Depth-bounded global request queue between the per-connection
+/// readers and the compute pool. `push` never blocks: at depth the
+/// job comes straight back so the reader can shed it in-band, keeping
+/// admission control on the read side and workers ignorant of load.
+struct ReqQueue {
     depth: usize,
-    state: Mutex<QueueState>,
+    state: Mutex<ReqQueueState>,
     ready: Condvar,
 }
 
 #[derive(Default)]
-struct QueueState {
-    pending: VecDeque<TcpStream>,
+struct ReqQueueState {
+    pending: VecDeque<ReqJob>,
     closed: bool,
 }
 
-impl ConnQueue {
-    fn new(depth: usize) -> ConnQueue {
-        ConnQueue {
+impl ReqQueue {
+    fn new(depth: usize) -> ReqQueue {
+        ReqQueue {
             depth: depth.max(1),
-            state: Mutex::new(QueueState::default()),
+            state: Mutex::new(ReqQueueState::default()),
             ready: Condvar::new(),
         }
     }
 
-    /// Enqueue a connection; hands it back when the queue is at depth
-    /// or closed (the caller sheds it).
-    fn push(&self, conn: TcpStream) -> Result<(), TcpStream> {
+    /// Enqueue a request; hands it back when the queue is at depth or
+    /// closed (the caller sheds it).
+    fn push(&self, job: ReqJob) -> Result<(), ReqJob> {
         let mut g = self.state.lock().unwrap();
         if g.closed || g.pending.len() >= self.depth {
-            return Err(conn);
+            return Err(job);
         }
-        g.pending.push_back(conn);
+        g.pending.push_back(job);
         self.ready.notify_one();
         Ok(())
     }
 
-    /// Block until a connection is available (`Some`) or the queue is
+    /// Block until a request is available (`Some`) or the queue is
     /// closed and drained (`None`).
-    fn pop(&self) -> Option<TcpStream> {
+    fn pop(&self) -> Option<ReqJob> {
         let mut g = self.state.lock().unwrap();
         loop {
-            if let Some(c) = g.pending.pop_front() {
-                return Some(c);
+            if let Some(job) = g.pending.pop_front() {
+                return Some(job);
             }
             if g.closed {
                 return None;
@@ -961,8 +1298,8 @@ impl ConnQueue {
     }
 
     /// Close the queue, waking every waiting worker; returns the
-    /// connections that were queued but never served.
-    fn close(&self) -> Vec<TcpStream> {
+    /// requests that were queued but never executed.
+    fn close(&self) -> Vec<ReqJob> {
         let mut g = self.state.lock().unwrap();
         g.closed = true;
         let drained = g.pending.drain(..).collect();
@@ -971,10 +1308,72 @@ impl ConnQueue {
     }
 }
 
-/// Backpressure: answer a connection the pool cannot take with an
-/// explicit in-protocol error line, then close it. The write gets a
-/// short timeout so a shed client that never reads cannot wedge the
-/// accept thread.
+/// One per-connection writer: drain the mailbox, re-sequence ordered
+/// completions, write streaming ones immediately. Exits when the
+/// connection dies, when the shutdown ack has been written, or at
+/// clean EOF once every admitted request's response has drained.
+fn writer_loop(conn: &ConnShared, stream: TcpStream) {
+    let mut writer = BufWriter::new(stream);
+    let mut reseq = Resequencer::default();
+    loop {
+        let batch: Vec<Completion> = {
+            let mut g = conn.state.lock().unwrap();
+            loop {
+                if g.dead {
+                    return;
+                }
+                if !g.mailbox.is_empty() {
+                    break;
+                }
+                if g.eof && g.outstanding == 0 {
+                    debug_assert_eq!(reseq.buffered(), 0, "resequencer drained at EOF");
+                    return;
+                }
+                g = conn.wake.wait(g).unwrap();
+            }
+            let batch: Vec<Completion> = g.mailbox.drain(..).collect();
+            g.outstanding = g.outstanding.saturating_sub(batch.len() as u64);
+            batch
+        };
+        let mut lines: Vec<String> = Vec::new();
+        let mut shutdown = false;
+        for c in batch {
+            match c.seq {
+                Some(seq) => {
+                    let (ready, shut) = reseq.push(seq, c.lines, c.shutdown);
+                    lines.extend(ready);
+                    shutdown |= shut;
+                }
+                None => {
+                    lines.extend(c.lines);
+                    shutdown |= c.shutdown;
+                }
+            }
+        }
+        // Write and flush outside the lock: a slow client must not
+        // block the workers posting into the mailbox.
+        let mut failed = false;
+        for l in &lines {
+            if writer.write_all(l.as_bytes()).is_err() || writer.write_all(b"\n").is_err() {
+                failed = true;
+                break;
+            }
+        }
+        if !failed && writer.flush().is_err() {
+            failed = true;
+        }
+        if failed || shutdown {
+            // v1 contract: nothing is written after the shutdown ack.
+            conn.mark_dead();
+            return;
+        }
+    }
+}
+
+/// Backpressure of last resort: answer a connection the transport
+/// cannot service at all with an explicit in-protocol error line,
+/// then close it. The write gets a short timeout so a shed client
+/// that never reads cannot wedge the accept thread.
 fn shed(mut stream: TcpStream, msg: &str) {
     let _ = stream.set_write_timeout(Some(Duration::from_millis(250)));
     let _ = stream.write_all(error_line(None, msg).as_bytes());
@@ -995,20 +1394,8 @@ fn poke_listener(local: SocketAddr) {
     let _ = TcpStream::connect_timeout(&loopback, timeout);
 }
 
-fn envelope(id: Option<Json>) -> BTreeMap<String, Json> {
-    let mut m = BTreeMap::new();
-    m.insert("schema".to_string(), Json::Str(SERVE_SCHEMA.to_string()));
-    if let Some(id) = id {
-        m.insert("id".to_string(), id);
-    }
-    m
-}
-
 fn error_line(id: Option<Json>, msg: &str) -> String {
-    let mut m = envelope(id);
-    m.insert("ok".to_string(), Json::Bool(false));
-    m.insert("error".to_string(), Json::Str(msg.to_string()));
-    Json::Obj(m).render()
+    ServeReply::err(id, None, msg).render(false)
 }
 
 // ---------------------------------------------------------------------
@@ -1018,7 +1405,7 @@ fn error_line(id: Option<Json>, msg: &str) -> String {
 /// Dispatch one `store_*` op. Stateless with respect to the service:
 /// each request opens the store file it names (`db`), so different
 /// requests may address different stores.
-fn store_line(op: &str, j: &Json, id: Option<Json>) -> String {
+fn store_reply(op: &str, j: &Json, id: Option<Json>) -> ServeReply {
     let result = match op {
         "store_ingest" => store_ingest(j),
         "store_query" => store_query(j),
@@ -1026,12 +1413,11 @@ fn store_line(op: &str, j: &Json, id: Option<Json>) -> String {
     };
     match result {
         Ok(m) => {
-            let mut env = envelope(id);
-            env.insert("ok".to_string(), Json::Bool(true));
-            env.extend(m);
-            Json::Obj(env).render()
+            let mut reply = ServeReply::ok(id, op);
+            reply.fields = m;
+            reply
         }
-        Err(msg) => error_line(id, &msg),
+        Err(msg) => ServeReply::err(id, Some(op.to_string()), msg),
     }
 }
 
@@ -1282,6 +1668,11 @@ mod tests {
         let max = lat.get("max_ns").unwrap().as_f64().unwrap();
         assert!(p50 <= p99 && p99 <= max, "percentiles must be ordered: {p50} {p99} {max}");
         assert!(max > 0.0, "a handled line takes nonzero time");
+        // The multiplexer counters ride along, all zero off-TCP.
+        let mux = j.get("mux").expect("stats carries the mux counters");
+        for k in ["cancelled", "shed", "streamed", "timeouts"] {
+            assert_eq!(mux.get(k).unwrap().as_f64(), Some(0.0), "{k}");
+        }
     }
 
     #[test]
@@ -1361,65 +1752,172 @@ mod tests {
     }
 
     #[test]
-    fn tcp_worker_pool_keeps_order_sheds_past_depth_and_shuts_down() {
+    fn serve_reply_pins_v1_bytes_and_streaming_op_echo() {
+        let err = ServeReply::err(Some(Json::Num(7.0)), Some("simulate".to_string()), "boom");
+        assert_eq!(
+            err.render(false),
+            r#"{"error":"boom","id":7,"ok":false,"schema":"tensordash.serve.v1"}"#
+        );
+        assert_eq!(
+            err.render(true),
+            r#"{"error":"boom","id":7,"ok":false,"op":"simulate","schema":"tensordash.serve.v1"}"#
+        );
+        let ack = ServeReply::ok(Some(Json::Str("x".to_string())), "shutdown")
+            .field("bye", Json::Bool(true));
+        assert_eq!(
+            ack.render(false),
+            r#"{"bye":true,"id":"x","ok":true,"schema":"tensordash.serve.v1"}"#
+        );
+    }
+
+    #[test]
+    fn op_responses_keep_the_v1_envelope_bytes() {
+        let s = service(1);
+        let req = r#"{"op":"simulate","id":"r","model":"gcn","samples":1,"seed":7}"#;
+        let h = s.handle_line(req);
+        let j = Json::parse(&h.lines[0]).unwrap();
+        let keys: Vec<&str> = match &j {
+            Json::Obj(m) => m.keys().map(String::as_str).collect(),
+            _ => panic!("response must be an object"),
+        };
+        assert_eq!(keys, ["cache", "id", "ok", "report", "schema"], "no new top-level keys");
+        // Rebuilding the envelope by hand reproduces the typed reply's
+        // line byte-for-byte: ServeReply is a pure refactoring of the
+        // v1 envelope, not a new format.
+        let mut m = BTreeMap::new();
+        m.insert("schema".to_string(), Json::Str(SERVE_SCHEMA.to_string()));
+        m.insert("id".to_string(), Json::Str("r".to_string()));
+        m.insert("ok".to_string(), Json::Bool(true));
+        m.insert("report".to_string(), j.get("report").unwrap().clone());
+        m.insert("cache".to_string(), j.get("cache").unwrap().clone());
+        assert_eq!(h.lines[0], Json::Obj(m).render());
+    }
+
+    #[test]
+    fn resequencer_restores_request_order_for_any_completion_order() {
+        let mut rng = Rng::new(7);
+        for _ in 0..64 {
+            let n = 1 + rng.below(12);
+            let mut order: Vec<u64> = (0..n as u64).collect();
+            // Fisher-Yates over the completion order.
+            for i in (1..order.len()).rev() {
+                let k = rng.below(i + 1);
+                order.swap(i, k);
+            }
+            let mut reseq = Resequencer::default();
+            let mut out: Vec<String> = Vec::new();
+            for &seq in &order {
+                let lines = vec![format!("a{seq}"), format!("b{seq}")];
+                let (ready, shut) = reseq.push(seq, lines, false);
+                assert!(!shut);
+                out.extend(ready);
+            }
+            let want: Vec<String> =
+                (0..n as u64).flat_map(|s| [format!("a{s}"), format!("b{s}")]).collect();
+            assert_eq!(out, want, "completion order {order:?}");
+            assert_eq!(reseq.buffered(), 0, "nothing left behind");
+        }
+    }
+
+    #[test]
+    fn dead_connections_cancel_queued_work_and_deadlines_time_out() {
+        let s = service(1);
+        // A queued request whose client disconnected: cancelled
+        // without computing (no latency sample), nothing posted.
+        let conn = Arc::new(ConnShared::default());
+        conn.add_outstanding();
+        conn.mark_dead();
+        s.execute_job(ReqJob {
+            conn: Arc::clone(&conn),
+            req: Json::parse(r#"{"op":"stats","id":1}"#).unwrap(),
+            id: Some(Json::Num(1.0)),
+            op: Some("stats".to_string()),
+            seq: Some(0),
+            stream: false,
+            deadline: None,
+        });
+        assert_eq!(s.mux.cancelled.load(Ordering::Relaxed), 1);
+        assert!(conn.state.lock().unwrap().mailbox.is_empty(), "nothing posted to a dead conn");
+        assert_eq!(s.latency.lock().unwrap().count, 0, "cancelled work is not computed");
+        // A queued request whose deadline passed: in-band timeout
+        // error with the streaming op echo, still without computing.
+        let live = Arc::new(ConnShared::default());
+        live.add_outstanding();
+        let deadline = Instant::now();
+        std::thread::sleep(Duration::from_millis(5));
+        s.execute_job(ReqJob {
+            conn: Arc::clone(&live),
+            req: Json::parse(r#"{"op":"stats","id":2}"#).unwrap(),
+            id: Some(Json::Num(2.0)),
+            op: Some("stats".to_string()),
+            seq: None,
+            stream: true,
+            deadline: Some(deadline),
+        });
+        assert_eq!(s.mux.timeouts.load(Ordering::Relaxed), 1);
+        let g = live.state.lock().unwrap();
+        assert_eq!(g.mailbox.len(), 1, "timeout answers in-band");
+        let j = Json::parse(&g.mailbox[0].lines[0]).unwrap();
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)));
+        assert!(j.get("error").unwrap().as_str().unwrap().contains("timeout"));
+        assert_eq!(j.get("id").unwrap().as_f64(), Some(2.0));
+        assert_eq!(j.get("op").unwrap().as_str(), Some("stats"));
+        assert_eq!(s.latency.lock().unwrap().count, 0, "timed-out work is not computed");
+    }
+
+    #[test]
+    fn tcp_multiplexer_sheds_streams_and_keeps_v1_order() {
         use std::io::{BufRead, BufReader, Write};
 
         let s = service(1);
         let listener = TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
         std::thread::scope(|scope| {
-            // workers=1, queue_depth=1: one connection in service, one
-            // queued, the next one shed.
-            let server = scope.spawn(|| s.serve_listener(listener, 1, 1));
+            // One worker and a depth-1 request queue: one request in
+            // service, one queued, the next one shed in-band.
+            let opts = ServeOptions { workers: 1, queue_depth: 1, request_timeout: None };
+            let server = scope.spawn(|| s.serve_listener(listener, opts));
 
-            let connect = || {
-                let c = TcpStream::connect(addr).unwrap();
-                c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
-                c
-            };
-            // Connection A is picked up by the single worker; three
-            // pipelined requests come back in request order.
-            let a = connect();
-            let mut a_r = BufReader::new(a.try_clone().unwrap());
-            let mut a_w = a;
-            for id in 1..=3 {
-                a_w.write_all(format!("{{\"op\":\"stats\",\"id\":{id}}}\n").as_bytes()).unwrap();
-            }
-            for want in 1..=3 {
+            let c = TcpStream::connect(addr).unwrap();
+            c.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+            let mut r = BufReader::new(c.try_clone().unwrap());
+            let mut w = c;
+            // R1: a slow cold sweep the single worker picks up.
+            let slow = concat!(
+                r#"{"op":"sweep","models":["alexnet","gcn"],"epochs":[0.1,0.3,0.5,0.7,0.9],"#,
+                r#""samples":3,"seed":97,"id":"slow"}"#,
+            );
+            w.write_all(slow.as_bytes()).unwrap();
+            w.write_all(b"\n").unwrap();
+            std::thread::sleep(Duration::from_millis(150));
+            // R2 fills the depth-1 queue behind it...
+            w.write_all(b"{\"op\":\"stats\",\"id\":\"queued\"}\n").unwrap();
+            std::thread::sleep(Duration::from_millis(75));
+            // ...so R3 is shed — and, being a streaming request, its
+            // error overtakes both pending ordered responses while
+            // the connection stays open.
+            w.write_all(b"{\"op\":\"stats\",\"id\":\"shed\",\"stream\":true}\n").unwrap();
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            let j = Json::parse(&line).unwrap();
+            assert_eq!(j.get("id").unwrap().as_str(), Some("shed"), "{line}");
+            assert_eq!(j.get("ok"), Some(&Json::Bool(false)), "{line}");
+            assert!(j.get("error").unwrap().as_str().unwrap().contains("overloaded"), "{line}");
+            assert_eq!(j.get("op").unwrap().as_str(), Some("stats"), "op echo: {line}");
+            // The ordered responses still arrive strictly in request
+            // order: the slow sweep first, then the queued stats.
+            for want in ["slow", "queued"] {
                 let mut line = String::new();
-                a_r.read_line(&mut line).unwrap();
+                r.read_line(&mut line).unwrap();
                 let j = Json::parse(&line).unwrap();
                 assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{line}");
-                assert_eq!(j.get("id").unwrap().as_f64(), Some(want as f64), "in order: {line}");
+                assert_eq!(j.get("id").unwrap().as_str(), Some(want), "in order: {line}");
             }
-            // B fills the queue (the worker still owns A) ...
-            let b = connect();
-            std::thread::sleep(Duration::from_millis(300));
-            // ... so C is shed with an explicit in-protocol error.
-            let c = connect();
-            let mut c_r = BufReader::new(c);
+            // Shutdown acks and joins the server cleanly.
+            w.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
             let mut line = String::new();
-            c_r.read_line(&mut line).unwrap();
-            let j = Json::parse(&line).unwrap();
-            assert_eq!(j.get("ok"), Some(&Json::Bool(false)), "shed response: {line}");
-            assert!(
-                j.get("error").unwrap().as_str().unwrap().contains("overloaded"),
-                "shed response names the overload: {line}"
-            );
-            // Shutdown over A acks, unblocks the accept thread and the
-            // queued-but-unserved B, and joins the server cleanly.
-            a_w.write_all(b"{\"op\":\"shutdown\"}\n").unwrap();
-            let mut line = String::new();
-            a_r.read_line(&mut line).unwrap();
+            r.read_line(&mut line).unwrap();
             assert_eq!(Json::parse(&line).unwrap().get("bye"), Some(&Json::Bool(true)));
-            let mut b_r = BufReader::new(b);
-            let mut b_line = String::new();
-            // B either gets the shutting-down refusal or a clean EOF.
-            let n = b_r.read_line(&mut b_line).unwrap();
-            if n > 0 {
-                let j = Json::parse(&b_line).unwrap();
-                assert_eq!(j.get("ok"), Some(&Json::Bool(false)), "{b_line}");
-            }
             server.join().unwrap().unwrap();
         });
     }

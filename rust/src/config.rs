@@ -30,7 +30,7 @@ pub enum SparsitySide {
 }
 
 /// Chip configuration (Table 2 defaults).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ChipConfig {
     /// MAC lanes per PE (16 in the paper; the scheduler structure is
     /// specialised for 16).

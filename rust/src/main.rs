@@ -26,9 +26,11 @@
 //!   tensordash train --steps 50 --log-every 10
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
-use tensordash::api::{self, Cell, Engine, Report, Service, SimRequest, UnitCache};
+use tensordash::api::params;
+use tensordash::api::{self, Cell, Engine, Report, ServeOptions, Service, SimRequest, UnitCache};
 use tensordash::config::{ChipConfig, DataType};
 use tensordash::coordinator::data::DataGen;
 use tensordash::coordinator::Trainer;
@@ -57,18 +59,25 @@ const USAGE: &str = "usage: tensordash <repro|simulate|train|explore|serve|store
            and the run fails if its staging-depth slice violates the
            fig-19 depth ordering
   serve    [--listen ADDR] [--jobs N] [--workers N] [--queue-depth N]
-           [--cache-cap N] [--cache-dir DIR] [--shards N]
-           [--preload m1,m2,...]
+           [--request-timeout MS] [--cache-cap N] [--cache-dir DIR]
+           [--shards N] [--preload m1,m2,...]
            JSON-lines loop (tensordash.serve.v1): one request object per
            line on stdin (or per TCP connection with --listen), one
            response per line in request order. Ops: simulate, sweep,
            trace, explore, batch, stats, store_ingest, store_query,
            store_diff, shutdown. Identical units across a batch
-           coalesce onto one computation. With --listen a fixed accept
-           thread feeds a --queue-depth bounded queue drained by
-           --workers pool threads (default 8/64); past the depth the
-           service sheds load with an explicit \"overloaded\" error
-           response instead of spawning unboundedly.
+           coalesce onto one computation. With --listen requests are
+           multiplexed: per-connection readers feed one --queue-depth
+           bounded request queue (default 64) drained by --workers
+           compute threads (default 8), responses re-sequence into
+           request order — or stream out of order, tagged with an
+           \"op\" echo, when a request carries \"stream\":true. Past
+           the queue depth a request is shed with an explicit
+           \"overloaded\" error (the connection stays open);
+           --request-timeout MS (default 0 = off; per-request
+           \"timeout_ms\" overrides) answers \"timeout\" for requests
+           that outwait their deadline in the queue, and work queued
+           for a disconnected client is cancelled.
   store    ingest --db FILE --commit ID file.json [file2.json ...]
            | query --db FILE [--schema S] [--id R] [--commit C]
                    [--model M] [--metric COL]
@@ -137,18 +146,17 @@ fn main() {
     }
 }
 
+/// Lift a shared-parameter parse error into the CLI's error type.
+fn param<T>(r: std::result::Result<T, String>) -> Result<T> {
+    r.map_err(anyhow::Error::msg)
+}
+
+/// Chip geometry from the CLI flags, through the same validated path
+/// the serve protocol uses ([`params::chip_config`]) — `--depth 9` now
+/// fails up front with the same wording a serve request would get,
+/// instead of asserting deep inside a worker.
 fn chip_from_args(args: &Args) -> Result<ChipConfig> {
-    let mut cfg = ChipConfig::default();
-    cfg.tile_rows = args.get_usize("rows", cfg.tile_rows)?;
-    cfg.tile_cols = args.get_usize("cols", cfg.tile_cols)?;
-    cfg.staging_depth = args.get_usize("depth", cfg.staging_depth)?;
-    if args.flag("bf16") {
-        cfg.dtype = DataType::Bf16;
-    }
-    if args.flag("power-gate") {
-        cfg.power_gate = true;
-    }
-    Ok(cfg)
+    param(params::chip_config(args))
 }
 
 /// Build a unit cache of `cap` entries over `shards` lock stripes,
@@ -238,8 +246,8 @@ fn emit(reports: &[Report], args: &Args) -> Result<()> {
 
 fn cmd_repro(args: &Args) -> Result<()> {
     let format = report_format(args)?;
-    let samples = args.get_usize("samples", repro::DEFAULT_SAMPLES)?;
-    let seed = args.get_u64("seed", 42)?;
+    let samples = param(params::get_usize(args, "samples", repro::DEFAULT_SAMPLES))?;
+    let seed = param(params::get_seed(args, params::DEFAULT_SEED))?;
     let all = args.flag("all");
     let fig = args.get("fig").map(|s| s.to_string());
     let table = args.get("table").map(|s| s.to_string());
@@ -299,7 +307,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
         // Fig. 20's sampling knob is tensor draws per sparsity level; it
         // honors --samples like every other figure (default 10, the
         // paper's setting).
-        let per_level = args.get_usize("samples", 10)?;
+        let per_level = param(params::get_usize(args, "samples", 10))?;
         add(repro::fig20(&engine, per_level, seed));
     }
     if want("gcn") {
@@ -330,9 +338,9 @@ fn cmd_repro(args: &Args) -> Result<()> {
 fn cmd_simulate(args: &Args) -> Result<()> {
     report_format(args)?;
     let model = args.get("model").unwrap_or("resnet50").to_string();
-    let epoch = args.get_f64("epoch", repro::MID_EPOCH)?;
-    let samples = args.get_usize("samples", repro::DEFAULT_SAMPLES)?;
-    let seed = args.get_u64("seed", 42)?;
+    let epoch = param(params::get_f64(args, "epoch", repro::MID_EPOCH))?;
+    let samples = param(params::get_usize(args, "samples", repro::DEFAULT_SAMPLES))?;
+    let seed = param(params::get_seed(args, params::DEFAULT_SEED))?;
     let cfg = chip_from_args(args)?;
     let (engine, cache) = engine_from_args(args)?;
     let req = SimRequest::profile(&model, epoch, cfg.clone(), samples, seed)
@@ -356,8 +364,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     let steps = args.get_usize("steps", 50)?;
     let log_every = args.get_usize("log-every", 10)?.max(1);
     let sim_every = args.get_usize("sim-every", 10)?.max(1);
-    let samples = args.get_usize("samples", repro::DEFAULT_SAMPLES)?;
-    let seed = args.get_u64("seed", 42)?;
+    let samples = param(params::get_usize(args, "samples", repro::DEFAULT_SAMPLES))?;
+    let seed = param(params::get_seed(args, params::DEFAULT_SEED))?;
     let dir = args.get_or("artifacts", "artifacts");
     let cfg = chip_from_args(args)?;
     // Captured bitmaps change every step, but the cache still helps
@@ -494,11 +502,12 @@ fn cmd_explore(args: &Args) -> Result<()> {
     if models.is_empty() {
         anyhow::bail!("--models needs at least one model name");
     }
-    let epoch = args.get_f64("epoch", repro::MID_EPOCH)?;
-    let samples = args.get_usize("samples", repro::DEFAULT_SAMPLES)?.max(1);
-    let seed = args.get_u64("seed", 42)?;
-    let budget = args.get_usize("budget", 12)?.max(1);
-    let population = args.get_usize("population", search::default_population(budget))?;
+    let epoch = param(params::get_f64(args, "epoch", repro::MID_EPOCH))?;
+    let samples = param(params::get_usize(args, "samples", repro::DEFAULT_SAMPLES))?.max(1);
+    let seed = param(params::get_seed(args, params::DEFAULT_SEED))?;
+    let budget = param(params::get_usize(args, "budget", params::DEFAULT_EXPLORE_BUDGET))?.max(1);
+    let population =
+        param(params::get_usize(args, "population", search::default_population(budget)))?;
     let space = space_from_args(args)?;
     // Exploration always runs cached — survivor re-evaluations and
     // revisited design points are the whole workload. --cache-cap and
@@ -543,6 +552,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let shards = args.get_usize("shards", api::DEFAULT_CACHE_SHARDS)?;
     let workers = args.get_usize("workers", api::DEFAULT_SERVE_WORKERS)?;
     let queue_depth = args.get_usize("queue-depth", api::DEFAULT_QUEUE_DEPTH)?;
+    // Default per-request deadline in milliseconds; 0 = off. Requests
+    // can override it with their own `timeout_ms` field.
+    let request_timeout_ms = args.get_u64("request-timeout", 0)?;
     let cache = Arc::new(build_cache(cap, shards, args.get("cache-dir"))?);
     let service = Service::new(Engine::new(jobs), Arc::clone(&cache));
     // Pre-resolve profiles into the artifact store so first requests
@@ -555,7 +567,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     }
     match args.get("listen") {
-        Some(addr) => service.serve_tcp(addr, workers, queue_depth)?,
+        Some(addr) => {
+            let opts = ServeOptions {
+                workers,
+                queue_depth,
+                request_timeout: (request_timeout_ms > 0)
+                    .then(|| Duration::from_millis(request_timeout_ms)),
+            };
+            service.serve_tcp(addr, opts)?
+        }
         None => {
             let stdin = std::io::stdin();
             let stdout = std::io::stdout();
@@ -678,5 +698,30 @@ fn cmd_info(args: &Args) -> Result<()> {
     for (alias, tag) in registered_schemas() {
         println!("  {alias:<10} {tag}");
     }
+    // Serve transport defaults, kept in lockstep with the constants the
+    // service actually uses so `info` cannot drift from `serve`.
+    println!("\nserve transport defaults ({}):", api::SERVE_SCHEMA);
+    println!(
+        "  --workers          {:<6} compute threads draining the request queue",
+        api::DEFAULT_SERVE_WORKERS
+    );
+    println!(
+        "  --queue-depth      {:<6} bounded request queue; excess requests get an \
+         in-band \"overloaded\" error",
+        api::DEFAULT_QUEUE_DEPTH
+    );
+    println!(
+        "  --request-timeout  {:<6} ms queue deadline (0 = off; per-request \
+         \"timeout_ms\" overrides)",
+        0
+    );
+    println!(
+        "  --shards           {:<6} unit-cache shards",
+        api::DEFAULT_CACHE_SHARDS
+    );
+    println!(
+        "  request \"stream\":true opts out of response ordering; streamed replies \
+         carry an \"op\" echo"
+    );
     Ok(())
 }

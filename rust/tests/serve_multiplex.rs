@@ -1,0 +1,189 @@
+//! Contract of the request-multiplexed TCP transport (`serve
+//! --listen`): requests — not connections — are the scheduling unit.
+//!
+//! * A slow cold sweep on a connection no longer blocks that
+//!   connection's fast requests: `"stream": true` replies overtake it,
+//!   tagged with an `"op"` echo, while ordered replies still arrive
+//!   strictly in request order (v1 contract).
+//! * Shutdown drains the request queue with an in-band error per
+//!   queued request before closing connections — queued work is never
+//!   silently dropped.
+//! * An abrupt client disconnect cancels its queued work without
+//!   wedging the server: later connections are still served and the
+//!   server still joins cleanly on shutdown.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use tensordash::api::{Engine, ServeOptions, Service, UnitCache, DEFAULT_CACHE_CAP};
+use tensordash::util::json::Json;
+
+/// A fresh single-job service over its own warm-capable cache.
+fn service() -> Service {
+    Service::new(Engine::new(1), Arc::new(UnitCache::new(DEFAULT_CACHE_CAP)))
+}
+
+/// Connect with a generous read timeout (the slow sweep is slow on
+/// purpose; only a wedged server should ever hit it).
+fn connect(addr: SocketAddr) -> (BufReader<TcpStream>, TcpStream) {
+    let c = TcpStream::connect(addr).expect("connect");
+    c.set_read_timeout(Some(Duration::from_secs(120))).expect("read timeout");
+    let _ = c.set_nodelay(true);
+    let r = BufReader::new(c.try_clone().expect("clone"));
+    (r, c)
+}
+
+fn send(w: &mut TcpStream, line: &str) {
+    w.write_all(line.as_bytes()).expect("send");
+    w.write_all(b"\n").expect("send newline");
+}
+
+fn read_json(r: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    r.read_line(&mut line).expect("recv");
+    Json::parse(&line).unwrap_or_else(|e| panic!("bad response line {line:?}: {e}"))
+}
+
+fn id_of(j: &Json) -> String {
+    j.get("id").and_then(Json::as_str).expect("string id").to_string()
+}
+
+/// A multi-model, multi-epoch cold sweep: seconds of compute, so fast
+/// requests sent behind it race it by a wide margin.
+const SLOW_SWEEP: &str = concat!(
+    r#"{"op":"sweep","models":["alexnet","gcn"],"epochs":[0.1,0.3,0.5,0.7,0.9],"#,
+    r#""samples":3,"seed":97,"id":"slow"}"#,
+);
+
+#[test]
+fn streaming_fast_requests_overtake_a_slow_sweep_on_one_connection() {
+    let s = service();
+    // Warm the fast request's units through the in-process path so the
+    // TCP round trips below are cache hits.
+    let fast = |i: usize, stream: bool| {
+        let tail = if stream { r#","stream":true"# } else { "" };
+        format!(
+            "{{\"op\":\"simulate\",\"model\":\"gcn\",\"epoch\":0.5,\
+             \"samples\":2,\"seed\":4242,\"id\":\"f{i}\"{tail}}}"
+        )
+    };
+    let h = s.handle_line(&fast(0, false));
+    assert_eq!(h.lines.len(), 1);
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::scope(|scope| {
+        let opts = ServeOptions { workers: 2, ..ServeOptions::default() };
+        let server = scope.spawn(|| s.serve_listener(listener, opts));
+
+        let (mut r, mut w) = connect(addr);
+        send(&mut w, SLOW_SWEEP);
+        // Let a worker dequeue the sweep before the fast requests go
+        // out (the sweep then runs for seconds — the margin is wide).
+        std::thread::sleep(Duration::from_millis(100));
+        for i in 0..4 {
+            send(&mut w, &fast(i, true));
+        }
+        // All four streamed replies arrive before the sweep's, each
+        // ok, each tagged with the op echo that marks an out-of-order
+        // response.
+        let mut streamed: Vec<String> = Vec::new();
+        for _ in 0..4 {
+            let j = read_json(&mut r);
+            assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{j:?}");
+            assert_eq!(j.get("op").and_then(Json::as_str), Some("simulate"), "op echo: {j:?}");
+            assert!(j.get("report").is_some(), "streamed reply carries the report");
+            streamed.push(id_of(&j));
+        }
+        streamed.sort();
+        assert_eq!(streamed, ["f0", "f1", "f2", "f3"], "every fast request overtook the sweep");
+        let j = read_json(&mut r);
+        assert_eq!(id_of(&j), "slow", "the ordered sweep reply comes last");
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("op"), None, "ordered v1 replies carry no op echo");
+
+        send(&mut w, r#"{"op":"shutdown"}"#);
+        let j = read_json(&mut r);
+        assert_eq!(j.get("bye"), Some(&Json::Bool(true)));
+        server.join().unwrap().unwrap();
+    });
+}
+
+#[test]
+fn shutdown_cancels_queued_requests_with_in_band_errors() {
+    let s = service();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::scope(|scope| {
+        // One worker: the sweep occupies it, everything after queues.
+        let opts = ServeOptions { workers: 1, ..ServeOptions::default() };
+        let server = scope.spawn(|| s.serve_listener(listener, opts));
+
+        let (mut r1, mut w1) = connect(addr);
+        let (mut r2, mut w2) = connect(addr);
+        send(&mut w1, SLOW_SWEEP);
+        std::thread::sleep(Duration::from_millis(100));
+        // Queued behind the sweep: first the shutdown, then a request
+        // the shutdown strands in the queue.
+        send(&mut w1, r#"{"op":"shutdown","id":"sd"}"#);
+        std::thread::sleep(Duration::from_millis(50));
+        send(&mut w2, r#"{"op":"stats","id":"doomed"}"#);
+
+        // Connection 1 sees the v1-ordered sweep reply then the ack —
+        // and nothing after the ack.
+        let j = read_json(&mut r1);
+        assert_eq!(id_of(&j), "slow");
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)));
+        let j = read_json(&mut r1);
+        assert_eq!(id_of(&j), "sd");
+        assert_eq!(j.get("bye"), Some(&Json::Bool(true)));
+
+        // The stranded request is answered, not dropped: an in-band
+        // error naming the shutdown.
+        let j = read_json(&mut r2);
+        assert_eq!(id_of(&j), "doomed");
+        assert_eq!(j.get("ok"), Some(&Json::Bool(false)), "{j:?}");
+        let err = j.get("error").and_then(Json::as_str).expect("error text");
+        assert!(err.contains("shutting down"), "{err}");
+
+        server.join().unwrap().unwrap();
+    });
+}
+
+#[test]
+fn abrupt_disconnect_does_not_wedge_the_server() {
+    let s = service();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    std::thread::scope(|scope| {
+        let opts = ServeOptions { workers: 1, ..ServeOptions::default() };
+        let server = scope.spawn(|| s.serve_listener(listener, opts));
+
+        // A client queues a slow sweep plus pipelined work, then
+        // vanishes without reading a byte.
+        {
+            let (_r, mut w) = connect(addr);
+            send(&mut w, SLOW_SWEEP);
+            std::thread::sleep(Duration::from_millis(100));
+            for i in 0..3 {
+                send(&mut w, &format!(r#"{{"op":"stats","id":"gone{i}"}}"#));
+            }
+        } // both halves drop here
+
+        // The server keeps serving: a fresh connection's request
+        // round-trips once the worker frees up.
+        let (mut r, mut w) = connect(addr);
+        send(&mut w, r#"{"op":"stats","id":"alive"}"#);
+        let j = read_json(&mut r);
+        assert_eq!(id_of(&j), "alive");
+        assert_eq!(j.get("ok"), Some(&Json::Bool(true)), "{j:?}");
+
+        // And still shuts down cleanly.
+        send(&mut w, r#"{"op":"shutdown"}"#);
+        let j = read_json(&mut r);
+        assert_eq!(j.get("bye"), Some(&Json::Bool(true)));
+        server.join().unwrap().unwrap();
+    });
+}
