@@ -1,0 +1,199 @@
+#!/usr/bin/env python3
+"""Sparsity-regime scenario smoke: the transformer tier (``bert``) and
+the N:M structured regime pushed through every user-facing surface.
+
+* ``simulate`` — ``bert`` under ``uniform``, ``nm:2:4`` and a schedule
+  curve; each run repeated and byte-compared (fixed-seed determinism
+  across processes), and the structured run must move at least one
+  reported number relative to uniform (the mask really bites);
+* CLI validation — ``--epoch 1.5`` and ``--regime nm:4:2`` fail fast
+  with the exact ``api::params`` wording the serve path uses;
+* ``serve`` — the same three regimes as JSON-lines requests over TCP,
+  byte-identical repeats, regime-distinct bodies, clean shutdown;
+* ``explore`` — a tiny-budget search over ``bert`` under ``nm:2:4``,
+  frontier stamped with the regime, byte-identical repeat;
+* ``info`` — the self-documenting surface lists the transformer tier
+  and every regime spelling.
+
+Usage: python3 ci/scenario_smoke.py [path/to/tensordash]
+"""
+
+import json
+import os
+import socket
+import subprocess
+import sys
+import tempfile
+import time
+
+BIN = sys.argv[1] if len(sys.argv) > 1 else "target/release/tensordash"
+HOST = "127.0.0.1"
+PORT = 17879
+
+REGIMES = ["uniform", "nm:2:4", "schedule:pruned-reclaim:0.3"]
+
+
+def run(args, expect_ok=True, timeout=600):
+    proc = subprocess.run([BIN, *args], capture_output=True, text=True, timeout=timeout)
+    if expect_ok and proc.returncode != 0:
+        raise SystemExit(
+            f"{' '.join(args)} exited with code {proc.returncode}:\n{proc.stderr}"
+        )
+    return proc
+
+
+def simulate(regime, out_path):
+    run(
+        [
+            "simulate", "--model", "bert", "--epoch", "0.4", "--samples", "1",
+            "--seed", "7", "--regime", regime, "--format", "json", "--out", out_path,
+        ]
+    )
+    with open(out_path, encoding="utf-8") as f:
+        return f.read()
+
+
+def check_simulate(tmp):
+    bodies = {}
+    for i, regime in enumerate(REGIMES):
+        a = simulate(regime, os.path.join(tmp, f"sim_{i}_a.json"))
+        b = simulate(regime, os.path.join(tmp, f"sim_{i}_b.json"))
+        if a != b:
+            raise SystemExit(f"simulate --regime {regime} rerun is not byte-identical")
+        doc = json.loads(a)
+        if doc.get("schema") != "tensordash.report.v1":
+            raise SystemExit(f"unexpected schema: {doc.get('schema')!r}")
+        bodies[regime] = a
+    if bodies["uniform"] == bodies["nm:2:4"]:
+        raise SystemExit("nm:2:4 produced the same report as uniform — mask not applied")
+    print("ok: simulate bert under all regimes, byte-identical reruns, nm bites")
+
+
+def check_cli_wording():
+    cases = [
+        (["simulate", "--model", "bert", "--epoch", "1.5"],
+         "--epoch must be within [0, 1]"),
+        (["simulate", "--model", "bert", "--regime", "nm:4:2"],
+         "--regime nm requires n <= m"),
+        (["explore", "--models", "bert", "--epoch", "-0.1"],
+         "--epoch must be within [0, 1]"),
+    ]
+    for args, wording in cases:
+        proc = run(args, expect_ok=False)
+        if proc.returncode == 0:
+            raise SystemExit(f"{' '.join(args)} should have failed")
+        if wording not in proc.stderr:
+            raise SystemExit(
+                f"{' '.join(args)}: expected {wording!r} in stderr, got:\n{proc.stderr}"
+            )
+    print("ok: CLI rejects bad epoch/regime with the shared params wording")
+
+
+def wait_for_port(proc, port, timeout=60.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if proc.poll() is not None:
+            raise SystemExit(f"server exited early with code {proc.returncode}")
+        try:
+            with socket.create_connection((HOST, port), timeout=1.0):
+                return
+        except OSError:
+            time.sleep(0.2)
+    raise SystemExit("server never opened its port")
+
+
+def roundtrip(payload, port):
+    with socket.create_connection((HOST, port), timeout=300.0) as sock:
+        sock.sendall((json.dumps(payload) + "\n").encode())
+        with sock.makefile("r", encoding="utf-8") as f:
+            line = f.readline()
+    if not line:
+        raise SystemExit(f"no response for {payload!r}")
+    return json.loads(line)
+
+
+def check_serve():
+    server = subprocess.Popen(
+        [BIN, "serve", "--listen", f"{HOST}:{PORT}", "--jobs", "4", "--preload", "bert"],
+        stdout=subprocess.DEVNULL,
+        stderr=subprocess.PIPE,
+        text=True,
+    )
+    try:
+        wait_for_port(server, PORT)
+        bodies = {}
+        for i, regime in enumerate(REGIMES):
+            req = {
+                "op": "simulate", "id": f"r{i}", "model": "bert", "epoch": 0.4,
+                "samples": 1, "seed": 7, "regime": regime,
+            }
+            first = roundtrip(req, PORT)
+            if first.get("ok") is not True:
+                raise SystemExit(f"serve rejected {regime}: {first!r}")
+            again = roundtrip(req, PORT)
+            if first.get("report") != again.get("report"):
+                raise SystemExit(f"serve repeat for {regime} is not byte-identical")
+            bodies[regime] = json.dumps(first.get("report"), sort_keys=True)
+        if bodies["uniform"] == bodies["nm:2:4"]:
+            raise SystemExit("serve: nm:2:4 body matches uniform — regime not threaded")
+        bad = roundtrip({"op": "simulate", "model": "bert", "regime": "nm:4:2"}, PORT)
+        if bad.get("ok") is not False or bad.get("error") != "'regime' nm requires n <= m":
+            raise SystemExit(f"serve accepted a bad regime or reworded the error: {bad!r}")
+        done = roundtrip({"op": "shutdown"}, PORT)
+        if done.get("bye") is not True:
+            raise SystemExit(f"shutdown not acknowledged: {done!r}")
+        if server.wait(timeout=60) != 0:
+            raise SystemExit(f"server exited with code {server.returncode}")
+    finally:
+        if server.poll() is None:
+            server.kill()
+            server.wait()
+    print("ok: serve ran bert under all regimes with byte-identical repeats + clean shutdown")
+
+
+def check_explore(tmp):
+    args = [
+        "explore", "--models", "bert", "--budget", "3", "--samples", "1",
+        "--seed", "7", "--regime", "nm:2:4",
+        "--axis", "staging_depth=2,3", "--axis", "tile_rows=2,4",
+        "--format", "json",
+    ]
+    outs = []
+    for tag in ("a", "b"):
+        out_path = os.path.join(tmp, f"frontier_{tag}.json")
+        run([*args, "--out", out_path])
+        with open(out_path, encoding="utf-8") as f:
+            outs.append(f.read())
+    if outs[0] != outs[1]:
+        raise SystemExit("explore rerun with the same seed is not byte-identical")
+    doc = json.loads(outs[0])
+    if doc.get("schema") != "tensordash.frontier.v1":
+        raise SystemExit(f"unexpected schema: {doc.get('schema')!r}")
+    if not doc.get("rows"):
+        raise SystemExit("frontier is empty")
+    if doc.get("meta", {}).get("regime") != "nm:2:4":
+        raise SystemExit(f"frontier not stamped with the regime: {doc.get('meta')!r}")
+    print("ok: explore searched bert under nm:2:4, stamped + byte-identical rerun")
+
+
+def check_info():
+    proc = run(["info"])
+    out = proc.stdout
+    for needle in ("bert", "transformer tier", "nm:N:M", "schedule:piecewise"):
+        if needle not in out:
+            raise SystemExit(f"info output is missing {needle!r}")
+    print("ok: info lists the transformer tier and every regime spelling")
+
+
+def main():
+    with tempfile.TemporaryDirectory() as tmp:
+        check_info()
+        check_cli_wording()
+        check_simulate(tmp)
+        check_explore(tmp)
+        check_serve()
+    print("scenario smoke passed")
+
+
+if __name__ == "__main__":
+    main()

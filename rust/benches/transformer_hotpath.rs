@@ -1,0 +1,131 @@
+//! §Perf — the transformer tier through the plan executor: `bert`'s
+//! flattened (layer, op) unit graph racing the serial walk.
+//!
+//! The transformer workload stresses the executor differently from the
+//! CNN zoo: sixteen fc-geometry layers (attention projections, per-head
+//! score/context matmuls, FFN) expand to 48 units whose costs span two
+//! orders of magnitude — the 768→3072 FFN units dominate while the
+//! per-head attention units are tiny — so this bench guards the
+//! scheduler against stragglers the CNN plans never produce. The run
+//! also re-asserts the regime contract on the hot path: an `nm:2:4`
+//! structured run must be byte-identical at jobs 1 and N.
+//!
+//! The parallel and serial runs are asserted **byte-identical** before
+//! anything is timed. Besides the console log, the run emits its
+//! medians and the jobs-N-over-jobs-1 speedup as
+//! `BENCH_transformer.json` (or `$BENCH_OUT` if set); CI archives it
+//! next to `BENCH_model.json` as the perf-trajectory artifact.
+
+use std::collections::BTreeMap;
+
+use tensordash::api::{default_jobs, Engine, ModelPlan, SimRequest};
+use tensordash::config::ChipConfig;
+use tensordash::repro::ModelSim;
+use tensordash::sparsity::Regime;
+use tensordash::util::bench::{bench, section, BenchStats};
+use tensordash::util::json::Json;
+
+/// One benchmark record for the JSON perf log.
+fn record(name: &str, s: &BenchStats) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(name.to_string()));
+    m.insert("median_ns".to_string(), Json::Num(s.median_ns));
+    m.insert("mean_ns".to_string(), Json::Num(s.mean_ns));
+    m.insert("min_ns".to_string(), Json::Num(s.min_ns));
+    m.insert("stddev_ns".to_string(), Json::Num(s.stddev_ns));
+    m.insert("iters".to_string(), Json::Num(s.iters as f64));
+    Json::Obj(m)
+}
+
+fn speedup_record(name: &str, serial_ns: f64, parallel_ns: f64, jobs: usize) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("name".to_string(), Json::Str(name.to_string()));
+    m.insert("serial_median_ns".to_string(), Json::Num(serial_ns));
+    m.insert("parallel_median_ns".to_string(), Json::Num(parallel_ns));
+    m.insert("jobs".to_string(), Json::Num(jobs as f64));
+    m.insert("speedup".to_string(), Json::Num(serial_ns / parallel_ns));
+    Json::Obj(m)
+}
+
+fn assert_identical(a: &ModelSim, b: &ModelSim) {
+    assert_eq!(a.per_op, b.per_op, "plan-parallel diverged (cycles)");
+    assert_eq!(a.sched, b.sched, "plan-parallel diverged (telemetry)");
+    assert_eq!(
+        a.energy_td.total_pj().to_bits(),
+        b.energy_td.total_pj().to_bits(),
+        "plan-parallel diverged (energy bits)"
+    );
+    assert_eq!(a.layers, b.layers, "plan-parallel diverged (per-unit results)");
+}
+
+fn main() {
+    let model = "bert";
+    let samples = 2; // keeps a bench iteration in seconds, not minutes
+    let seed = 42;
+    let req = SimRequest::profile(model, 0.4, ChipConfig::default(), samples, seed)
+        .expect("known model");
+    let units = ModelPlan::for_request(&req).expect("profile plan").unit_count();
+    // The acceptance point is jobs=8 vs jobs=1; on smaller hosts use
+    // every core and scale the gate accordingly.
+    let jobs = default_jobs().clamp(2, 8);
+    let serial_engine = Engine::new(1);
+    let parallel_engine = Engine::new(jobs);
+
+    section(&format!(
+        "transformer plan executor: {model} ({units} units, samples={samples}, jobs 1 vs {jobs})"
+    ));
+    let s_sim = serial_engine.run(&req);
+    let p_sim = parallel_engine.run(&req);
+    assert_identical(&s_sim, &p_sim);
+    // The regime contract holds on the hot path too: a structured run
+    // is byte-identical at every worker count.
+    let nm = req.clone().with_regime(Regime::parse("nm:2:4").expect("spelling"));
+    assert_identical(&serial_engine.run(&nm), &parallel_engine.run(&nm));
+    println!(
+        "  result: {:.2}x model speedup over baseline, {} units retained — \
+         byte-identical at jobs 1 and {} (uniform and nm:2:4)",
+        s_sim.overall_speedup(),
+        s_sim.layers.len(),
+        jobs
+    );
+
+    let s = bench("simulate_transformer_jobs1", 1, 5, || serial_engine.run(&req));
+    let p = bench(&format!("simulate_transformer_jobs{jobs}"), 1, 5, || {
+        parallel_engine.run(&req)
+    });
+    let speedup = s.median_ns / p.median_ns;
+    println!("  -> plan-parallel speedup {speedup:.2}x on {jobs} workers");
+
+    let records = vec![
+        record("simulate_transformer_jobs1", &s),
+        record(&format!("simulate_transformer_jobs{jobs}"), &p),
+        speedup_record("simulate_transformer_speedup", s.median_ns, p.median_ns, jobs),
+    ];
+
+    // Machine-readable perf point for the BENCH_* trajectory.
+    let out_path =
+        std::env::var("BENCH_OUT").unwrap_or_else(|_| "BENCH_transformer.json".to_string());
+    let mut doc = BTreeMap::new();
+    doc.insert("schema".to_string(), Json::Str("tensordash.bench.v1".to_string()));
+    doc.insert("bench".to_string(), Json::Str("transformer_hotpath".to_string()));
+    doc.insert("records".to_string(), Json::Arr(records));
+    let mut text = Json::Obj(doc).render_pretty();
+    text.push('\n');
+    match std::fs::write(&out_path, text.as_bytes()) {
+        Ok(()) => println!("\nwrote {out_path} ({} bytes)", text.len()),
+        Err(e) => eprintln!("\ncould not write {out_path}: {e}"),
+    }
+
+    // Acceptance bar (EXPERIMENTS.md §Perf), enforced after the artifact
+    // is on disk so a regressing run is still archived: >= 3x at 8
+    // workers, pro-rated on smaller hosts (parallel efficiency >= ~45%).
+    let gate = if jobs >= 8 { 3.0 } else { jobs as f64 * 0.45 };
+    if speedup < gate {
+        eprintln!(
+            "PERF GATE: transformer plan speedup {speedup:.2}x < {gate:.2}x on {jobs} workers \
+             — unit-level parallelism regressed"
+        );
+        std::process::exit(1);
+    }
+    println!("perf gate passed: {speedup:.2}x >= {gate:.2}x on {jobs} workers");
+}

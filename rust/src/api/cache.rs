@@ -2,10 +2,11 @@
 //!
 //! PR 3 made every (layer, op) unit a pure function of
 //! `(UnitSpec, derived seed, ChipConfig)`; this module exploits that
-//! purity. A [`UnitKey`] is a *fixed-layout binary encoding* (the v2
+//! purity. A [`UnitKey`] is a *fixed-layout binary encoding* (the v3
 //! key format — versioned magic, little-endian fields) of everything a
 //! unit's result depends on — chip config, op, layer geometry, sampling
-//! budget, derived seed, and a content hash of the operand bitmaps —
+//! budget, derived seed, the sparsity regime, and a content hash of the
+//! operand bitmaps —
 //! hashed with FNV-1a over the bytes. The canonical JSON document of
 //! the same content is *derived* from the bytes ([`UnitKey::canon`])
 //! and only materialises at the disk-mirror boundary; the hot lookup
@@ -28,7 +29,7 @@
 //! **adding a field to `ChipConfig` or changing any encoding detail
 //! requires bumping the binary format byte *and* [`UNIT_KEY_VERSION`]
 //! together**, or stale disk entries would silently alias new
-//! configurations. The golden-key test below pins the v2 bytes, the
+//! configurations. The golden-key test below pins the v3 bytes, the
 //! hash and the derived canonical JSON so accidental drift fails
 //! loudly.
 //!
@@ -37,7 +38,7 @@
 //! slice of the total capacity (`ceil(cap / shards)` entries), with
 //! counters for hit/miss/insert/evict/coalesce telemetry. A key's
 //! stripe is `key.hash % shards` — deterministic, because the FNV-1a
-//! hash is a pure function of the v2 key bytes — so concurrent serve
+//! hash is a pure function of the v3 key bytes — so concurrent serve
 //! connections touching different units take different locks instead
 //! of convoying on one global mutex. [`UnitCache::stats`] merges the
 //! per-stripe counters by summation; since hits and misses are counted
@@ -65,6 +66,7 @@ use std::path::PathBuf;
 use std::sync::{Arc, Mutex, OnceLock};
 
 use crate::config::{ChipConfig, DataType, SparsitySide};
+use crate::sparsity::{Curve, MaskAxis, Regime};
 use crate::conv::{ConvShape, TrainOp};
 use crate::energy::EnergyBreakdown;
 use crate::sim::stream::CacheStats;
@@ -79,10 +81,11 @@ use super::report::Report;
 /// **any** change to the key encoding, `ChipConfig`'s field set, or the
 /// unit pipeline's observable behaviour — the disk store
 /// self-invalidates because old entries are stored under the old
-/// version's canonical string. v2 = the fixed-layout binary encoding
-/// (v1 was canonical JSON built per lookup); v1 mirror entries read as
-/// clean misses under v2.
-pub const UNIT_KEY_VERSION: &str = "tensordash.unitkey.v2";
+/// version's canonical string. v3 = v2 plus the sparsity-regime tag in
+/// profile recipes (v2 was the first fixed-layout binary encoding; v1
+/// was canonical JSON built per lookup); v1 and v2 mirror entries both
+/// read as clean misses under v3.
+pub const UNIT_KEY_VERSION: &str = "tensordash.unitkey.v3";
 
 /// Schema tag of the per-unit documents in the disk mirror.
 pub const UNIT_CACHE_SCHEMA: &str = "tensordash.unitcache.v1";
@@ -177,12 +180,16 @@ pub fn shape_json(s: &ConvShape) -> Json {
 fn recipe_json(r: &TensorRecipe) -> Json {
     let mut m = BTreeMap::new();
     match r {
-        TensorRecipe::Profile { model, layer, epoch, bitmap_seed } => {
+        TensorRecipe::Profile { model, layer, epoch, bitmap_seed, regime } => {
             m.insert("kind".to_string(), Json::Str("profile".to_string()));
             m.insert("model".to_string(), Json::Str(model.clone()));
             m.insert("layer".to_string(), num(*layer as f64));
             m.insert("epoch".to_string(), num(*epoch));
             m.insert("bitmap_seed".to_string(), hex64(*bitmap_seed));
+            // The regime's canonical spelling: `render` round-trips
+            // through `parse` exactly (floats use the shortest
+            // representation), so one string is the whole encoding.
+            m.insert("regime".to_string(), Json::Str(regime.render()));
         }
         TensorRecipe::Bitmaps { a, g } => {
             m.insert("kind".to_string(), Json::Str("bitmaps".to_string()));
@@ -217,7 +224,7 @@ fn canon_json(
 
 /// The canonical JSON key document built *directly* from the spec —
 /// the agreement oracle for the binary encoding: [`UnitKey::canon`]
-/// (which decodes the v2 bytes) must return exactly this string for
+/// (which decodes the v3 bytes) must return exactly this string for
 /// every unit. Also the yardstick the `serve_hotpath` bench races the
 /// binary encoder against.
 pub fn canon_json_for_unit(cfg: &ChipConfig, spec: &UnitSpec) -> String {
@@ -233,12 +240,12 @@ pub fn canon_json_for_unit(cfg: &ChipConfig, spec: &UnitSpec) -> String {
 }
 
 // ---------------------------------------------------------------------
-// Binary v2 key encoding
+// Binary v3 key encoding
 // ---------------------------------------------------------------------
 //
 // Byte layout (DESIGN.md §4; all multi-byte integers little-endian):
 //
-//   magic   "TDK" + format byte (= 2)                          4 bytes
+//   magic   "TDK" + format byte (= 3)                          4 bytes
 //   enums   op u8 | dtype u8 | side u8 | flags u8              4 bytes
 //           (op: 0 Fwd, 1 Igrad, 2 Wgrad; dtype: 0 fp32, 1 bf16;
 //            side: 0 b, 1 both; flags: bit0 power_gate,
@@ -251,8 +258,17 @@ pub fn canon_json_for_unit(cfg: &ChipConfig, spec: &UnitSpec) -> String {
 //   unit    batch_mult, samples, seed                     3 x u64
 //   tensors kind u8 = 0 (profile): epoch (f64 bits) u64,
 //             bitmap_seed u64, layer u64,
-//             model-name byte length u32 + UTF-8 bytes
+//             model-name byte length u32 + UTF-8 bytes,
+//             regime tag u8 = 0 (uniform)
+//                        u8 = 1 (nm): n u64, m u64, axis u8 (0 channel)
+//                        u8 = 2 (schedule): curve tag u8 = 0 (flat)
+//                          | 1 (dense-u): swing (f64 bits) u64
+//                          | 2 (pruned-reclaim): boost (f64 bits) u64
+//                          | 3 (piecewise): knot count u32,
+//                              then per knot e, f (f64 bits) 2 x u64
 //           kind u8 = 1 (bitmaps): a hash u64, g hash u64
+//             (bitmaps are content-addressed; any regime's masks are
+//              already baked into the hashes, so no regime tag here)
 //
 // The layout is self-contained: [`UnitKey::canon`] decodes it back to
 // the canonical JSON document (needed only at the disk-mirror
@@ -260,12 +276,58 @@ pub fn canon_json_for_unit(cfg: &ChipConfig, spec: &UnitSpec) -> String {
 // *and* [`UNIT_KEY_VERSION`] together and repin the golden test.
 
 const KEY_MAGIC: [u8; 3] = *b"TDK";
-const KEY_FORMAT: u8 = 2;
+const KEY_FORMAT: u8 = 3;
 const TENSORS_PROFILE: u8 = 0;
 const TENSORS_BITMAPS: u8 = 1;
+const REGIME_UNIFORM: u8 = 0;
+const REGIME_NM: u8 = 1;
+const REGIME_SCHEDULE: u8 = 2;
+const AXIS_CHANNEL: u8 = 0;
+const CURVE_FLAT: u8 = 0;
+const CURVE_DENSE_U: u8 = 1;
+const CURVE_PRUNED_RECLAIM: u8 = 2;
+const CURVE_PIECEWISE: u8 = 3;
 
 fn put_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append the regime's binary tag (profile recipes only — explicit
+/// bitmaps are content-addressed and carry no regime).
+fn encode_regime(out: &mut Vec<u8>, regime: &Regime) {
+    match regime {
+        Regime::Uniform => out.push(REGIME_UNIFORM),
+        Regime::NM { n, m, axis } => {
+            out.push(REGIME_NM);
+            put_u64(out, *n as u64);
+            put_u64(out, *m as u64);
+            out.push(match axis {
+                MaskAxis::Channel => AXIS_CHANNEL,
+            });
+        }
+        Regime::Schedule { curve } => {
+            out.push(REGIME_SCHEDULE);
+            match curve {
+                Curve::Flat => out.push(CURVE_FLAT),
+                Curve::DenseU { swing } => {
+                    out.push(CURVE_DENSE_U);
+                    put_u64(out, swing.to_bits());
+                }
+                Curve::PrunedReclaim { start_boost } => {
+                    out.push(CURVE_PRUNED_RECLAIM);
+                    put_u64(out, start_boost.to_bits());
+                }
+                Curve::Piecewise { points } => {
+                    out.push(CURVE_PIECEWISE);
+                    out.extend_from_slice(&(points.len() as u32).to_le_bytes());
+                    for (e, f) in points {
+                        put_u64(out, e.to_bits());
+                        put_u64(out, f.to_bits());
+                    }
+                }
+            }
+        }
+    }
 }
 
 fn encode_key(cfg: &ChipConfig, spec: &UnitSpec) -> Vec<u8> {
@@ -311,13 +373,14 @@ fn encode_key(cfg: &ChipConfig, spec: &UnitSpec) -> Vec<u8> {
     put_u64(&mut b, spec.samples as u64);
     put_u64(&mut b, spec.seed);
     match spec.tensor_recipe() {
-        TensorRecipe::Profile { model, layer, epoch, bitmap_seed } => {
+        TensorRecipe::Profile { model, layer, epoch, bitmap_seed, regime } => {
             b.push(TENSORS_PROFILE);
             put_u64(&mut b, epoch.to_bits());
             put_u64(&mut b, bitmap_seed);
             put_u64(&mut b, layer as u64);
             b.extend_from_slice(&(model.len() as u32).to_le_bytes());
             b.extend_from_slice(model.as_bytes());
+            encode_regime(&mut b, &regime);
         }
         TensorRecipe::Bitmaps { a, g } => {
             b.push(TENSORS_BITMAPS);
@@ -328,8 +391,8 @@ fn encode_key(cfg: &ChipConfig, spec: &UnitSpec) -> Vec<u8> {
     b
 }
 
-/// Sequential little-endian reader over a v2 key's payload bytes.
-/// Panics on truncation — v2 bytes only come out of [`encode_key`]
+/// Sequential little-endian reader over a v3 key's payload bytes.
+/// Panics on truncation — v3 bytes only come out of [`encode_key`]
 /// within this process, so malformed input is an invariant breach.
 struct KeyReader<'a> {
     b: &'a [u8],
@@ -337,7 +400,7 @@ struct KeyReader<'a> {
 
 impl<'a> KeyReader<'a> {
     fn u8(&mut self) -> u8 {
-        let (v, rest) = self.b.split_first().expect("truncated v2 unit key");
+        let (v, rest) = self.b.split_first().expect("truncated v3 unit key");
         self.b = rest;
         *v
     }
@@ -357,34 +420,67 @@ impl<'a> KeyReader<'a> {
     fn str(&mut self, len: usize) -> String {
         let (head, rest) = self.b.split_at(len);
         self.b = rest;
-        String::from_utf8(head.to_vec()).expect("UTF-8 model name in v2 unit key")
+        String::from_utf8(head.to_vec()).expect("UTF-8 model name in v3 unit key")
     }
 }
 
-/// Decode a v2 key back into its content. Exactly inverts
+/// Inverse of [`encode_regime`].
+fn decode_regime(r: &mut KeyReader) -> Regime {
+    match r.u8() {
+        REGIME_UNIFORM => Regime::Uniform,
+        REGIME_NM => {
+            let n = r.u64() as usize;
+            let m = r.u64() as usize;
+            let axis = match r.u8() {
+                AXIS_CHANNEL => MaskAxis::Channel,
+                k => panic!("bad mask-axis tag {k} in v3 unit key"),
+            };
+            Regime::NM { n, m, axis }
+        }
+        REGIME_SCHEDULE => {
+            let curve = match r.u8() {
+                CURVE_FLAT => Curve::Flat,
+                CURVE_DENSE_U => Curve::DenseU { swing: f64::from_bits(r.u64()) },
+                CURVE_PRUNED_RECLAIM => Curve::PrunedReclaim { start_boost: f64::from_bits(r.u64()) },
+                CURVE_PIECEWISE => {
+                    let count = r.u32() as usize;
+                    let points = (0..count)
+                        .map(|_| (f64::from_bits(r.u64()), f64::from_bits(r.u64())))
+                        .collect();
+                    Curve::Piecewise { points }
+                }
+                k => panic!("bad curve tag {k} in v3 unit key"),
+            };
+            Regime::Schedule { curve }
+        }
+        k => panic!("bad regime tag {k} in v3 unit key"),
+    }
+}
+
+/// Decode a v3 key back into its content. Exactly inverts
 /// [`encode_key`]; the agreement test pins the round trip.
 #[allow(clippy::type_complexity)]
 fn decode_key(bytes: &[u8]) -> (ChipConfig, TrainOp, ConvShape, u64, u64, u64, TensorRecipe) {
     assert!(
         bytes.len() > 4 && bytes[..3] == KEY_MAGIC && bytes[3] == KEY_FORMAT,
-        "not a v2 unit key"
+        "not a v3 unit key"
     );
     let mut r = KeyReader { b: &bytes[4..] };
     let op = match r.u8() {
         0 => TrainOp::Fwd,
         1 => TrainOp::Igrad,
         2 => TrainOp::Wgrad,
-        k => panic!("bad op tag {k} in v2 unit key"),
+        k => panic!("bad op tag {k} in v3 unit key"),
     };
     let dtype = match r.u8() {
         0 => DataType::Fp32,
         1 => DataType::Bf16,
-        k => panic!("bad dtype tag {k} in v2 unit key"),
+        k => panic!("bad dtype tag {k} in v3 unit key"),
     };
     let side = match r.u8() {
         0 => SparsitySide::BSide,
         1 => SparsitySide::Both,
-        k => panic!("bad side tag {k} in v2 unit key"),
+        k => panic!("bad side tag {k} in v3 unit key"),
     };
     let flags = r.u8();
     let lanes = r.u64() as usize;
@@ -439,16 +535,17 @@ fn decode_key(bytes: &[u8]) -> (ChipConfig, TrainOp, ConvShape, u64, u64, u64, T
             let layer = r.u64() as usize;
             let len = r.u32() as usize;
             let model = r.str(len);
-            TensorRecipe::Profile { model, layer, epoch, bitmap_seed }
+            let regime = decode_regime(&mut r);
+            TensorRecipe::Profile { model, layer, epoch, bitmap_seed, regime }
         }
         TENSORS_BITMAPS => TensorRecipe::Bitmaps { a: r.u64(), g: r.u64() },
-        k => panic!("bad tensors tag {k} in v2 unit key"),
+        k => panic!("bad tensors tag {k} in v3 unit key"),
     };
-    assert!(r.b.is_empty(), "trailing bytes in v2 unit key");
+    assert!(r.b.is_empty(), "trailing bytes in v3 unit key");
     (cfg, op, shape, batch_mult, samples, seed, recipe)
 }
 
-/// The cache key of one unit under one chip configuration: the v2
+/// The cache key of one unit under one chip configuration: the v3
 /// fixed-layout binary encoding plus its FNV-1a hash. The in-memory
 /// map is keyed by the hash; the bytes ride along so lookups verify
 /// the full key and a hash collision degrades to a miss. The canonical
@@ -470,7 +567,7 @@ impl UnitKey {
 
     /// The canonical JSON key document, decoded from the binary form —
     /// the disk mirror's record key (human-inspectable, and distinct
-    /// per [`UNIT_KEY_VERSION`], so stale v1 mirror entries read as
+    /// per [`UNIT_KEY_VERSION`], so stale v1/v2 mirror entries read as
     /// clean misses). Panics on bytes not produced by
     /// [`UnitKey::for_unit`].
     pub fn canon(&self) -> String {
@@ -640,7 +737,7 @@ impl UnitCacheStats {
 
 #[derive(Debug, Clone)]
 struct CachedUnit {
-    /// The full v2 key bytes, verified on every lookup.
+    /// The full v3 key bytes, verified on every lookup.
     bytes: Vec<u8>,
     stamp: u64,
     sim: LayerOpSim,
@@ -954,8 +1051,8 @@ mod tests {
 
     /// The exact canonical string PR 3's v1 JSON encoder produced for
     /// `explicit_spec(42, 2, 0)` under the default config — kept as the
-    /// stale-mirror fixture: a v2 cache must treat a mirror entry
-    /// stored under this key as a clean miss.
+    /// stale-mirror fixture: a v3 cache must treat a mirror entry
+    /// stored under this key (or its v2 respelling) as a clean miss.
     const V1_GOLDEN_CANON: &str = concat!(
         "{\"batch_mult\":1,\"cfg\":{\"dram_gate\":false,\"dram_gbps\":51.2,",
         "\"dtype\":\"fp32\",\"freq_mhz\":500,\"lanes\":16,\"lead_limit\":6,",
@@ -970,13 +1067,13 @@ mod tests {
     );
 
     #[test]
-    fn golden_key_pins_v2_bytes_and_hash() {
+    fn golden_key_pins_v3_bytes_and_hash() {
         // Any change to the binary layout, the field order, the enum
         // tags or `ChipConfig`'s field set shows up here first. If this
         // test fails and the change is intentional, bump KEY_FORMAT and
         // UNIT_KEY_VERSION together and repin.
         let key = UnitKey::for_unit(&ChipConfig::default(), &explicit_spec(42, 2, 0));
-        let mut golden: Vec<u8> = vec![b'T', b'D', b'K', 2, 0, 0, 0, 0];
+        let mut golden: Vec<u8> = vec![b'T', b'D', b'K', 3, 0, 0, 0, 0];
         // cfg u64 block: lanes, depth, rows, cols, tiles, lead_limit,
         // freq, sram bank bytes/banks, spad bytes/banks, transposers.
         for v in [16u64, 3, 4, 4, 16, 6, 500, 262144, 4, 1024, 3, 15] {
@@ -999,9 +1096,61 @@ mod tests {
         assert_eq!(key.bytes, golden);
         assert_eq!(key.hash, fnv1a64(&golden));
         // The derived canonical document is the v1 golden with the
-        // version tag bumped — same content, new namespace on disk.
-        assert_eq!(key.canon(), V1_GOLDEN_CANON.replace("unitkey.v1", "unitkey.v2"));
+        // version tag bumped — same content, new namespace on disk
+        // (explicit bitmaps carry no regime, so only the tag moved).
+        assert_eq!(key.canon(), V1_GOLDEN_CANON.replace("unitkey.v1", "unitkey.v3"));
         assert_ne!(key.canon(), V1_GOLDEN_CANON);
+    }
+
+    #[test]
+    fn golden_profile_key_pins_regime_tail_bytes() {
+        // The v3 addition is the regime tag at the end of profile
+        // recipes. Pin the exact tensors-section tail for each regime
+        // so the encoding can never drift silently.
+        let cfg = ChipConfig::default();
+        let p = Arc::new(crate::trace::profiles::ModelProfile::for_model("gcn").unwrap());
+        let tail_for = |regime: Regime, extra: &[u8]| {
+            let plan = crate::api::plan::ModelPlan::profile_regime(
+                Arc::clone(&p),
+                0.4,
+                regime,
+                &cfg,
+                1,
+                7,
+            );
+            let unit = &plan.units[0];
+            let key = UnitKey::for_unit(&cfg, unit);
+            let mut tail: Vec<u8> = vec![TENSORS_PROFILE];
+            tail.extend_from_slice(&0.4f64.to_bits().to_le_bytes());
+            tail.extend_from_slice(&7u64.to_le_bytes()); // plan bitmap seed
+            tail.extend_from_slice(&0u64.to_le_bytes()); // layer 0
+            tail.extend_from_slice(&3u32.to_le_bytes());
+            tail.extend_from_slice(b"gcn");
+            tail.extend_from_slice(extra);
+            assert!(
+                key.bytes.ends_with(&tail),
+                "regime tail must pin exactly: {:?}",
+                &key.bytes[key.bytes.len() - tail.len().min(key.bytes.len())..]
+            );
+            key
+        };
+        let uniform = tail_for(Regime::Uniform, &[REGIME_UNIFORM]);
+        let mut nm_tail = vec![REGIME_NM];
+        nm_tail.extend_from_slice(&2u64.to_le_bytes());
+        nm_tail.extend_from_slice(&4u64.to_le_bytes());
+        nm_tail.push(AXIS_CHANNEL);
+        let nm = tail_for(Regime::NM { n: 2, m: 4, axis: MaskAxis::Channel }, &nm_tail);
+        let mut sched_tail = vec![REGIME_SCHEDULE, CURVE_DENSE_U];
+        sched_tail.extend_from_slice(&0.25f64.to_bits().to_le_bytes());
+        let sched = tail_for(Regime::Schedule { curve: Curve::DenseU { swing: 0.25 } }, &sched_tail);
+        // Distinct regimes must key distinctly (same unit otherwise).
+        assert_ne!(uniform, nm);
+        assert_ne!(uniform, sched);
+        assert_ne!(nm, sched);
+        // And the canonical documents spell the regime out.
+        assert!(uniform.canon().contains("\"regime\":\"uniform\""));
+        assert!(nm.canon().contains("\"regime\":\"nm:2:4\""));
+        assert!(sched.canon().contains("\"regime\":\"schedule:dense-u:0.25\""));
     }
 
     #[test]
@@ -1037,21 +1186,37 @@ mod tests {
                 }
             }
         }
-        // Profile recipes carry the model name and layer; every unit of
-        // a real plan must round-trip, and distinct layers must key
-        // distinctly (their bitmaps differ by recipe).
-        let p = crate::trace::profiles::ModelProfile::for_model("gcn").unwrap();
-        let plan = crate::api::plan::ModelPlan::profile(&p, 0.4, &configs[0], 1, 7);
-        let mut seen = std::collections::HashSet::new();
-        for u in &plan.units {
-            let key = UnitKey::for_unit(&plan.cfg, u);
-            let canon = key.canon();
-            assert_eq!(canon, canon_json_for_unit(&plan.cfg, u));
-            assert!(canon.contains("\"kind\":\"profile\""));
-            assert!(canon.contains(UNIT_KEY_VERSION));
-            seen.insert(key.bytes.clone());
+        // Profile recipes carry the model name, layer and regime; every
+        // unit of a real plan must round-trip under each regime, and
+        // distinct layers must key distinctly (their bitmaps differ by
+        // recipe).
+        let p = Arc::new(crate::trace::profiles::ModelProfile::for_model("gcn").unwrap());
+        let regimes = [
+            Regime::Uniform,
+            Regime::NM { n: 2, m: 4, axis: MaskAxis::Channel },
+            Regime::Schedule { curve: Curve::Piecewise { points: vec![(0.0, 1.0), (1.0, 0.5)] } },
+        ];
+        for regime in regimes {
+            let plan = crate::api::plan::ModelPlan::profile_regime(
+                Arc::clone(&p),
+                0.4,
+                regime,
+                &configs[0],
+                1,
+                7,
+            );
+            let mut seen = std::collections::HashSet::new();
+            for u in &plan.units {
+                let key = UnitKey::for_unit(&plan.cfg, u);
+                let canon = key.canon();
+                assert_eq!(canon, canon_json_for_unit(&plan.cfg, u));
+                assert!(canon.contains("\"kind\":\"profile\""));
+                assert!(canon.contains("\"regime\":"));
+                assert!(canon.contains(UNIT_KEY_VERSION));
+                seen.insert(key.bytes.clone());
+            }
+            assert_eq!(seen.len(), plan.units.len(), "every (layer, op) unit keys distinctly");
         }
-        assert_eq!(seen.len(), plan.units.len(), "every (layer, op) unit keys distinctly");
     }
 
     #[test]
@@ -1070,7 +1235,7 @@ mod tests {
             let mut log = RecordLog::open(dir.join(UNIT_CACHE_FILE)).unwrap();
             log.append(V1_GOLDEN_CANON, &payload).unwrap();
         }
-        // The v2 canonical string differs (the version tag is part of
+        // The v3 canonical string differs (the version tag is part of
         // the document), so the stale entry is unreachable: a clean
         // miss, not an error and never a wrong answer.
         assert_ne!(key.canon(), V1_GOLDEN_CANON);
@@ -1078,7 +1243,35 @@ mod tests {
         assert!(cache.lookup(&key).is_none());
         let s = cache.stats();
         assert_eq!((s.hits, s.misses, s.disk_misses), (0, 1, 1));
-        // And the mirror keeps working under the v2 namespace.
+        // And the mirror keeps working under the v3 namespace.
+        cache.insert(&key, sim);
+        assert_eq!(cache.lookup(&key), Some(sim));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_v2_mirror_entries_read_as_clean_misses() {
+        let dir = std::env::temp_dir().join(format!("td_unitcache_v2_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let (key, sim) = small_unit(42);
+        // A v2 mirror entry is the v1 canonical document with the
+        // version tag respelled — exactly what the v2 encoder stored
+        // for this unit (the regime tag did not exist yet).
+        let v2_canon = V1_GOLDEN_CANON.replace("unitkey.v1", "unitkey.v2");
+        let mut m = BTreeMap::new();
+        m.insert("schema".to_string(), Json::Str(UNIT_CACHE_SCHEMA.to_string()));
+        m.insert("unit".to_string(), unit_to_json(&sim));
+        let payload = Json::Obj(m).render();
+        {
+            let mut log = RecordLog::open(dir.join(UNIT_CACHE_FILE)).unwrap();
+            log.append(&v2_canon, &payload).unwrap();
+        }
+        assert_ne!(key.canon(), v2_canon);
+        let cache = UnitCache::new(8).with_disk(&dir).unwrap();
+        assert!(cache.lookup(&key).is_none(), "v2 entries must read as misses under v3");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.disk_misses), (0, 1, 1));
         cache.insert(&key, sim);
         assert_eq!(cache.lookup(&key), Some(sim));
         let _ = std::fs::remove_dir_all(&dir);

@@ -29,6 +29,7 @@
 //!   mechanical, never per-parameter.
 
 use crate::config::{ChipConfig, DataType};
+use crate::sparsity::Regime;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -134,6 +135,38 @@ pub fn get_bool<S: ParamSource + ?Sized>(
         None => Ok(default),
         Some(ParamValue::Bool(b)) => Ok(b),
         Some(_) => Err(format!("{} must be a boolean", src.spell(name))),
+    }
+}
+
+/// An epoch-fraction parameter. Every sparsity profile (and every
+/// schedule curve) is defined on the training-run fraction [0, 1];
+/// values outside it used to sail through and silently clamp deep in
+/// the generator, so both paths now reject them up front with the same
+/// wording.
+pub fn get_epoch<S: ParamSource + ?Sized>(
+    src: &S,
+    name: &str,
+    default: f64,
+) -> Result<f64, String> {
+    let e = get_f64(src, name, default)?;
+    if !(0.0..=1.0).contains(&e) {
+        return Err(format!("{} must be within [0, 1]", src.spell(name)));
+    }
+    Ok(e)
+}
+
+/// The sparsity-regime parameter (absent = `uniform`, the historical
+/// generator). The value is the regime's canonical spelling —
+/// `uniform`, `nm:N:M` or `schedule:<curve>` — validated up front
+/// (N > M, block size > 16, malformed curves) with identical wording on
+/// the CLI and over the wire.
+pub fn get_regime<S: ParamSource + ?Sized>(src: &S) -> Result<Regime, String> {
+    match src.value("regime") {
+        None => Ok(Regime::Uniform),
+        Some(ParamValue::Str(s)) => {
+            Regime::parse(s).map_err(|msg| format!("{} {msg}", src.spell("regime")))
+        }
+        Some(_) => Err(format!("{} must be a string", src.spell("regime"))),
     }
 }
 
@@ -309,6 +342,59 @@ mod tests {
         );
         let gated = chip_config(&cli("--power-gate")).unwrap();
         assert!(gated.power_gate, "power_gate maps to --power-gate");
+    }
+
+    #[test]
+    fn epoch_bounds_share_wording_across_sources() {
+        assert_eq!(get_epoch(&json(r#"{"epoch":0.4}"#), "epoch", 0.0).unwrap(), 0.4);
+        assert_eq!(get_epoch(&json("{}"), "epoch", 0.4).unwrap(), 0.4);
+        assert_eq!(get_epoch(&cli("--epoch 1"), "epoch", 0.0).unwrap(), 1.0);
+        // Identical template, per-source spelling — the wire contract.
+        assert_eq!(
+            get_epoch(&json(r#"{"epoch":1.5}"#), "epoch", 0.0).unwrap_err(),
+            "'epoch' must be within [0, 1]"
+        );
+        assert_eq!(
+            get_epoch(&cli("--epoch -0.1"), "epoch", 0.0).unwrap_err(),
+            "--epoch must be within [0, 1]"
+        );
+        assert_eq!(
+            get_epoch(&json(r#"{"epoch":"x"}"#), "epoch", 0.0).unwrap_err(),
+            "'epoch' must be a number"
+        );
+    }
+
+    #[test]
+    fn regime_parses_and_rejects_identically_across_sources() {
+        use crate::sparsity::{MaskAxis, Regime};
+        assert_eq!(get_regime(&json("{}")).unwrap(), Regime::Uniform);
+        assert_eq!(get_regime(&cli("")).unwrap(), Regime::Uniform);
+        assert_eq!(
+            get_regime(&json(r#"{"regime":"nm:2:4"}"#)).unwrap(),
+            Regime::NM { n: 2, m: 4, axis: MaskAxis::Channel }
+        );
+        assert_eq!(
+            get_regime(&json(r#"{"regime":"nm:2:4"}"#)).unwrap(),
+            get_regime(&cli("--regime nm:2:4")).unwrap()
+        );
+        // N > M is rejected up front, both paths, same predicate.
+        assert_eq!(
+            get_regime(&json(r#"{"regime":"nm:4:2"}"#)).unwrap_err(),
+            "'regime' nm requires n <= m"
+        );
+        assert_eq!(
+            get_regime(&cli("--regime nm:4:2")).unwrap_err(),
+            "--regime nm requires n <= m"
+        );
+        assert_eq!(
+            get_regime(&json(r#"{"regime":7}"#)).unwrap_err(),
+            "'regime' must be a string"
+        );
+        assert_eq!(
+            get_regime(&cli("--regime schedule:nope")).unwrap_err(),
+            "--regime must name a schedule curve: flat, dense-u:<swing>, \
+             pruned-reclaim:<boost> or piecewise:<e@f,...>"
+        );
     }
 
     #[test]

@@ -35,6 +35,7 @@ use crate::conv::{ConvShape, TrainOp};
 use crate::metrics::pct;
 use crate::repro::ModelSim;
 use crate::sim::unit::{simulate_unit, LayerOpSim};
+use crate::sparsity::{self, Regime};
 use crate::tensor::TensorBitmap;
 use crate::trace::profiles::ModelProfile;
 use crate::util::hash::bitmap_hash;
@@ -57,6 +58,9 @@ pub enum UnitTensors {
         profile: Arc<ModelProfile>,
         epoch: f64,
         bitmap_seed: u64,
+        /// Sparsity regime the generator applies on top of the profile
+        /// (`Uniform` is exactly the historical generator).
+        regime: Regime,
         bitmaps: Arc<OnceLock<(TensorBitmap, TensorBitmap)>>,
     },
     /// Captured-trace bitmaps: the whole step's layer vector shared by
@@ -76,7 +80,7 @@ pub enum UnitTensors {
 /// [`UnitTensors::Explicit`] carriers by construction.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TensorRecipe {
-    Profile { model: String, layer: usize, epoch: f64, bitmap_seed: u64 },
+    Profile { model: String, layer: usize, epoch: f64, bitmap_seed: u64, regime: Regime },
     Bitmaps { a: u64, g: u64 },
 }
 
@@ -100,9 +104,10 @@ impl UnitSpec {
     /// Execute this unit. Pure: depends only on the spec and `cfg`.
     pub fn execute(&self, cfg: &ChipConfig) -> LayerOpSim {
         let (a, g): (&TensorBitmap, &TensorBitmap) = match &self.tensors {
-            UnitTensors::Profile { profile, epoch, bitmap_seed, bitmaps } => {
-                let pair = bitmaps
-                    .get_or_init(|| profile.layer_bitmaps(self.layer, *epoch, *bitmap_seed));
+            UnitTensors::Profile { profile, epoch, bitmap_seed, regime, bitmaps } => {
+                let pair = bitmaps.get_or_init(|| {
+                    regime_bitmaps(profile, self.layer, *epoch, *bitmap_seed, regime)
+                });
                 (&pair.0, &pair.1)
             }
             UnitTensors::Trace { layers } => {
@@ -130,12 +135,15 @@ impl UnitSpec {
     /// key layer free of tensor types.
     pub fn tensor_recipe(&self) -> TensorRecipe {
         match &self.tensors {
-            UnitTensors::Profile { profile, epoch, bitmap_seed, .. } => TensorRecipe::Profile {
-                model: profile.name().to_string(),
-                layer: self.layer,
-                epoch: *epoch,
-                bitmap_seed: *bitmap_seed,
-            },
+            UnitTensors::Profile { profile, epoch, bitmap_seed, regime, .. } => {
+                TensorRecipe::Profile {
+                    model: profile.name().to_string(),
+                    layer: self.layer,
+                    epoch: *epoch,
+                    bitmap_seed: *bitmap_seed,
+                    regime: regime.clone(),
+                }
+            }
             UnitTensors::Trace { layers } => {
                 let (a, g) = &layers[self.layer];
                 TensorRecipe::Bitmaps { a: bitmap_hash(a), g: bitmap_hash(g) }
@@ -179,6 +187,21 @@ impl ModelPlan {
         samples: usize,
         seed: u64,
     ) -> ModelPlan {
+        Self::profile_regime(shared, epoch, Regime::Uniform, cfg, samples, seed)
+    }
+
+    /// [`ModelPlan::profile_shared`] under an explicit sparsity regime.
+    /// Unit seeds and the bitmap seed are regime-independent, so every
+    /// regime of a `(model, epoch, seed)` cell perturbs the *same* base
+    /// tensors and results stay directly comparable.
+    pub fn profile_regime(
+        shared: Arc<ModelProfile>,
+        epoch: f64,
+        regime: Regime,
+        cfg: &ChipConfig,
+        samples: usize,
+        seed: u64,
+    ) -> ModelPlan {
         let profile = shared.as_ref();
         let batch_mult = profile.batch_mult();
         let mut plan = ModelPlan {
@@ -203,6 +226,7 @@ impl ModelPlan {
                         // refactor — config sweeps still see identical
                         // tensors per (model, epoch) cell.
                         bitmap_seed: seed,
+                        regime: regime.clone(),
                         bitmaps: Arc::clone(&bitmaps),
                     },
                     batch_mult,
@@ -254,19 +278,27 @@ impl ModelPlan {
     /// keeps executing those as a single cell-level work item).
     pub fn for_request(req: &SimRequest) -> Option<ModelPlan> {
         match &req.workload {
-            Workload::Profile { model, epoch } => {
+            Workload::Profile { model, epoch, regime } => {
                 // Unknown names are rejected at request-build time; an
                 // invariant breach here should be loud.
                 let p = ModelProfile::for_model(model)
                     .unwrap_or_else(|| panic!("unknown model '{model}' reached the planner"));
-                let mut plan = ModelPlan::profile(&p, *epoch, &req.cfg, req.samples, req.seed);
+                let mut plan = ModelPlan::profile_regime(
+                    Arc::new(p),
+                    *epoch,
+                    regime.clone(),
+                    &req.cfg,
+                    req.samples,
+                    req.seed,
+                );
                 plan.name = req.label.clone();
                 Some(plan)
             }
-            Workload::ProfileShared { profile, epoch } => {
-                let mut plan = ModelPlan::profile_shared(
+            Workload::ProfileShared { profile, epoch, regime } => {
+                let mut plan = ModelPlan::profile_regime(
                     Arc::clone(profile),
                     *epoch,
+                    regime.clone(),
                     &req.cfg,
                     req.samples,
                     req.seed,
@@ -335,6 +367,36 @@ impl ModelPlan {
 /// because changing it silently would change every published report.
 fn plan_unit_key(layer: usize, op: TrainOp) -> u64 {
     (layer * TrainOp::ALL.len() + op as usize) as u64
+}
+
+/// Generate one layer's (A, G) bitmaps under a sparsity regime — a pure
+/// function of its arguments, so the op triplet's lazy cache may be
+/// filled by whichever worker gets there first at any `--jobs`.
+fn regime_bitmaps(
+    profile: &ModelProfile,
+    layer: usize,
+    epoch: f64,
+    seed: u64,
+    regime: &Regime,
+) -> (TensorBitmap, TensorBitmap) {
+    match regime {
+        Regime::Uniform => profile.layer_bitmaps(layer, epoch, seed),
+        // The request's curve replaces the model's own trajectory; the
+        // underlying RNG stream is unchanged, so scheduling a model
+        // onto its own curve is bit-identical to Uniform.
+        Regime::Schedule { curve } => {
+            profile.layer_bitmaps_with_factor(layer, epoch, seed, curve.factor(epoch))
+        }
+        // Structured masks AND into the profile bitmaps; mask streams
+        // are seeded per (seed, layer, tensor) — order-free.
+        Regime::NM { n, m, .. } => {
+            let (a, g) = profile.layer_bitmaps(layer, epoch, seed);
+            (
+                sparsity::apply_nm(&a, *n, *m, sparsity::nm_mask_seed(seed, layer as u64, 0)),
+                sparsity::apply_nm(&g, *n, *m, sparsity::nm_mask_seed(seed, layer as u64, 1)),
+            )
+        }
+    }
 }
 
 /// Render the per-unit breakdown of a merged [`ModelSim`] as a
@@ -443,6 +505,42 @@ mod tests {
         assert_eq!(
             forward.energy_td.total_pj().to_bits(),
             merged.energy_td.total_pj().to_bits()
+        );
+    }
+
+    #[test]
+    fn regime_reaches_units_and_recipes() {
+        let nm = Regime::parse("nm:2:4").unwrap();
+        let req = SimRequest::profile("gcn", 0.4, ChipConfig::default(), 1, 7)
+            .unwrap()
+            .with_regime(nm.clone());
+        let plan = ModelPlan::for_request(&req).unwrap();
+        for u in &plan.units {
+            match u.tensor_recipe() {
+                TensorRecipe::Profile { regime, .. } => assert_eq!(regime, nm),
+                r => panic!("unexpected recipe {r:?}"),
+            }
+        }
+        // Uniform and NM plans share unit seeds (regimes perturb the
+        // same base tensors), but execute to different masked streams.
+        let base = ModelPlan::for_request(&req.clone().with_regime(Regime::Uniform)).unwrap();
+        for (a, b) in plan.units.iter().zip(&base.units) {
+            assert_eq!(a.seed, b.seed);
+        }
+    }
+
+    #[test]
+    fn schedule_regime_on_own_curve_is_byte_identical() {
+        let p = ModelProfile::for_model("alexnet").unwrap();
+        let own = Regime::Schedule { curve: p.curve.clone() };
+        let req = SimRequest::profile("alexnet", 0.3, ChipConfig::default(), 1, 11).unwrap();
+        let uniform = ModelPlan::for_request(&req).unwrap().execute_serial();
+        let scheduled = ModelPlan::for_request(&req.with_regime(own)).unwrap().execute_serial();
+        assert_eq!(uniform.per_op, scheduled.per_op);
+        assert_eq!(uniform.layers, scheduled.layers);
+        assert_eq!(
+            uniform.energy_td.total_pj().to_bits(),
+            scheduled.energy_td.total_pj().to_bits()
         );
     }
 

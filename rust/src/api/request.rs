@@ -12,6 +12,7 @@ use std::sync::Arc;
 
 use crate::config::ChipConfig;
 use crate::conv::{ConvShape, TrainOp};
+use crate::sparsity::Regime;
 use crate::tensor::TensorBitmap;
 use crate::trace::profiles::ModelProfile;
 
@@ -19,12 +20,14 @@ use crate::trace::profiles::ModelProfile;
 #[derive(Debug, Clone)]
 pub enum Workload {
     /// A full model from its synthetic sparsity profile at an epoch
-    /// fraction (the Fig. 13/14/17/18/19 workload).
-    Profile { model: String, epoch: f64 },
+    /// fraction (the Fig. 13/14/17/18/19 workload), under a sparsity
+    /// [`Regime`] (`Uniform` reproduces the pre-regime behaviour
+    /// byte-for-byte).
+    Profile { model: String, epoch: f64, regime: Regime },
     /// Like `Profile`, but carrying a pre-resolved profile behind an
     /// `Arc` — the serving layer's artifact store loads each model once
     /// and every request shares it without re-building the topology.
-    ProfileShared { profile: Arc<ModelProfile>, epoch: f64 },
+    ProfileShared { profile: Arc<ModelProfile>, epoch: f64, regime: Regime },
     /// A full model from *captured* (real-training) bitmaps — the
     /// `train` subcommand and `train_e2e` workload. The layer bitmaps
     /// sit behind one `Arc` so plan expansion and unit execution share
@@ -68,12 +71,16 @@ impl SimRequest {
         seed: u64,
     ) -> Result<SimRequest, String> {
         if ModelProfile::for_model(model).is_none() {
-            return Err(format!("unknown model '{model}' (see models::FIG13_MODELS)"));
+            return Err(format!("unknown model '{model}' (see models::ALL_MODELS)"));
         }
         Ok(SimRequest {
             label: model.to_string(),
             cfg,
-            workload: Workload::Profile { model: model.to_string(), epoch },
+            workload: Workload::Profile {
+                model: model.to_string(),
+                epoch,
+                regime: Regime::Uniform,
+            },
             samples,
             seed,
         })
@@ -91,10 +98,22 @@ impl SimRequest {
         SimRequest {
             label: profile.name().to_string(),
             cfg,
-            workload: Workload::ProfileShared { profile, epoch },
+            workload: Workload::ProfileShared { profile, epoch, regime: Regime::Uniform },
             samples,
             seed,
         }
+    }
+
+    /// Replace the sparsity regime of a profile workload. No-op on the
+    /// explicit-bitmap workloads (their tensors are already decided).
+    pub fn with_regime(mut self, regime: Regime) -> SimRequest {
+        match &mut self.workload {
+            Workload::Profile { regime: r, .. } | Workload::ProfileShared { regime: r, .. } => {
+                *r = regime;
+            }
+            _ => {}
+        }
+        self
     }
 
     pub fn trace(
@@ -189,6 +208,10 @@ pub struct SweepSpec {
     pub models: Vec<String>,
     pub samples: usize,
     pub base_seed: u64,
+    /// Sparsity regime applied to every cell ([`Regime::Uniform`] keeps
+    /// the historical bytes; seeds never depend on it, so regimes stay
+    /// directly comparable on identical base tensors).
+    pub regime: Regime,
 }
 
 impl SweepSpec {
@@ -206,11 +229,17 @@ impl SweepSpec {
             models: models.iter().map(|m| m.to_string()).collect(),
             samples,
             base_seed: seed,
+            regime: Regime::Uniform,
         }
     }
 
     pub fn with_epochs(mut self, epochs: &[f64]) -> SweepSpec {
         self.epochs = epochs.to_vec();
+        self
+    }
+
+    pub fn with_regime(mut self, regime: Regime) -> SweepSpec {
+        self.regime = regime;
         self
     }
 
@@ -243,7 +272,7 @@ impl SweepSpec {
         for m in &self.models {
             assert!(
                 ModelProfile::for_model(m).is_some(),
-                "unknown model '{m}' in sweep (see models::FIG13_MODELS)"
+                "unknown model '{m}' in sweep (see models::ALL_MODELS)"
             );
         }
         let mut out = Vec::with_capacity(self.len());
@@ -261,7 +290,11 @@ impl SweepSpec {
                     out.push(SimRequest {
                         label,
                         cfg: cfg.clone(),
-                        workload: Workload::Profile { model: model.clone(), epoch },
+                        workload: Workload::Profile {
+                            model: model.clone(),
+                            epoch,
+                            regime: self.regime.clone(),
+                        },
                         samples: self.samples,
                         seed,
                     });
@@ -337,5 +370,34 @@ mod tests {
     fn profile_request_rejects_unknown_model() {
         assert!(SimRequest::profile("nope", 0.4, ChipConfig::default(), 2, 1).is_err());
         assert!(SimRequest::profile("resnet50", 0.4, ChipConfig::default(), 2, 1).is_ok());
+        assert!(SimRequest::profile("bert", 0.4, ChipConfig::default(), 2, 1).is_ok());
+    }
+
+    #[test]
+    fn regimes_thread_through_requests_and_sweeps() {
+        let nm = Regime::parse("nm:2:4").unwrap();
+        let req = SimRequest::profile("bert", 0.4, ChipConfig::default(), 2, 1)
+            .unwrap()
+            .with_regime(nm.clone());
+        match &req.workload {
+            Workload::Profile { regime, .. } => assert_eq!(*regime, nm),
+            w => panic!("unexpected workload {w:?}"),
+        }
+        // Sweeps stamp the regime on every cell, but seeds stay derived
+        // from the (model, epoch) coordinate alone: regimes compare on
+        // identical base tensors.
+        let cfg = ChipConfig::default();
+        let base = SweepSpec::models(&["alexnet", "gcn"], 0.4, &cfg, 2, 9).cells();
+        let cells = SweepSpec::models(&["alexnet", "gcn"], 0.4, &cfg, 2, 9)
+            .with_regime(nm.clone())
+            .cells();
+        assert_eq!(cells.len(), base.len());
+        for (b, c) in base.iter().zip(&cells) {
+            assert_eq!(b.seed, c.seed);
+            match &c.workload {
+                Workload::Profile { regime, .. } => assert_eq!(*regime, nm),
+                w => panic!("unexpected workload {w:?}"),
+            }
+        }
     }
 }

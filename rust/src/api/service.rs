@@ -575,13 +575,15 @@ impl Service {
                     .and_then(Json::as_str)
                     .ok_or("'simulate' needs a 'model'")?
                     .to_string();
-                let epoch = params::get_f64(j, "epoch", repro::MID_EPOCH)?;
+                let epoch = params::get_epoch(j, "epoch", repro::MID_EPOCH)?;
+                let regime = params::get_regime(j)?;
                 let cfg = params::chip_config(j)?;
                 let profile = self
                     .artifacts
                     .profile(&model)
                     .ok_or_else(|| format!("unknown model '{model}'"))?;
-                let req = SimRequest::profile_shared(profile, epoch, cfg.clone(), samples, seed);
+                let req = SimRequest::profile_shared(profile, epoch, cfg.clone(), samples, seed)
+                    .with_regime(regime);
                 Ok((SubKind::Simulate { model, epoch, cfg, samples, seed }, per_layer, vec![req]))
             }
             Some("sweep") => {
@@ -596,24 +598,29 @@ impl Service {
                         .collect::<Option<_>>()
                         .ok_or("'epochs' must contain numbers")?,
                 };
+                if epochs.iter().any(|e| !(0.0..=1.0).contains(e)) {
+                    return Err("'epochs' must be within [0, 1]".to_string());
+                }
+                let regime = params::get_regime(j)?;
                 let cfg = params::chip_config(j)?;
                 let names: Vec<&str> = models.iter().map(|(m, _)| m.as_str()).collect();
                 let spec = SweepSpec::models(&names, repro::MID_EPOCH, &cfg, samples, seed)
-                    .with_epochs(&epochs);
+                    .with_epochs(&epochs)
+                    .with_regime(regime);
                 // Keep SweepSpec's label/seed semantics, then swap
                 // each cell onto the store's Arc'd profile so plan
                 // expansion stops re-building topologies per request.
                 let mut cells = spec.cells();
                 for cell in &mut cells {
                     let shared = match &cell.workload {
-                        Workload::Profile { model, epoch } => models
+                        Workload::Profile { model, epoch, regime } => models
                             .iter()
                             .find(|(m, _)| m == model)
-                            .map(|(_, p)| (Arc::clone(p), *epoch)),
+                            .map(|(_, p)| (Arc::clone(p), *epoch, regime.clone())),
                         _ => None,
                     };
-                    if let Some((profile, epoch)) = shared {
-                        cell.workload = Workload::ProfileShared { profile, epoch };
+                    if let Some((profile, epoch, regime)) = shared {
+                        cell.workload = Workload::ProfileShared { profile, epoch, regime };
                     }
                 }
                 Ok((SubKind::Sweep, per_layer, cells))
@@ -751,14 +758,16 @@ impl Service {
             }
             Some(_) => return Err("'axes' must be an object of axis -> value arrays".to_string()),
         };
-        let epoch = params::get_f64(j, "epoch", repro::MID_EPOCH)?;
+        let epoch = params::get_epoch(j, "epoch", repro::MID_EPOCH)?;
+        let regime = params::get_regime(j)?;
         let samples = params::get_usize(j, "samples", repro::DEFAULT_SAMPLES)?;
         let seed = params::get_seed(j, params::DEFAULT_SEED)?;
         let budget = params::get_usize(j, "budget", params::DEFAULT_EXPLORE_BUDGET)?.max(1);
         let population =
             params::get_usize(j, "population", search::default_population(budget))?.max(1);
         let spec = ExploreSpec::with_profiles(space, models, epoch, samples, seed, budget)
-            .with_population(population);
+            .with_population(population)
+            .with_regime(regime);
         let before = self.cache.stats();
         let res = search::explore(&self.engine, &spec);
         let delta = self.cache.stats().since(&before);

@@ -53,6 +53,7 @@ pub mod repro;
 pub mod runtime;
 pub mod search;
 pub mod sim;
+pub mod sparsity;
 pub mod store;
 pub mod tensor;
 pub mod trace;

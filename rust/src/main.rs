@@ -45,12 +45,18 @@ const USAGE: &str = "usage: tensordash <repro|simulate|train|explore|serve|store
   repro    --all | --fig <1|13|14|15|16|17|18|19|20|gcn|ablations>
            | --table <3|bf16>  [--samples N] [--seed S]
   simulate --model <name> [--epoch F] [--samples N] [--seed S]
+           [--regime uniform|nm:N:M|schedule:<curve>]
            [--rows R] [--cols C] [--depth 2|3] [--bf16] [--power-gate]
            [--per-layer]
+           --epoch is an [0, 1] training fraction; --regime picks the
+           sparsity regime (run `info` for the model zoo + regime
+           spellings and bounds). A fixed seed is byte-deterministic
+           under every regime at any --jobs/--shards
   train    [--steps N] [--log-every K] [--seed S] [--artifacts DIR]
            [--samples N] [--sim-every K] [--per-layer]
   explore  [--models m1,m2] [--budget N] [--population N] [--epoch F]
            [--samples N] [--seed S]
+           [--regime uniform|nm:N:M|schedule:<curve>]
            [--space FILE | --axis name=v1,v2 [--axis ...]]
            [--cache-cap N] [--cache-dir DIR]
            cache-driven Pareto search over ChipConfig axes (run `info`
@@ -92,7 +98,9 @@ const USAGE: &str = "usage: tensordash <repro|simulate|train|explore|serve|store
            frontiers (added/kept/removed/newly-dominated points);
            compact rewrites the log keeping only live records. Run
            `info` for the registered schema list
-  info
+  info     chip configuration + area model, the model zoo (paper nine
+           + the bert transformer tier), sparsity-regime spellings and
+           bounds, explore axes, store schemas, serve defaults
 
 report options (repro, simulate, train, explore, store query/diff):
   --format table|json|csv   renderer (default table). json emits the
@@ -338,13 +346,15 @@ fn cmd_repro(args: &Args) -> Result<()> {
 fn cmd_simulate(args: &Args) -> Result<()> {
     report_format(args)?;
     let model = args.get("model").unwrap_or("resnet50").to_string();
-    let epoch = param(params::get_f64(args, "epoch", repro::MID_EPOCH))?;
+    let epoch = param(params::get_epoch(args, "epoch", repro::MID_EPOCH))?;
     let samples = param(params::get_usize(args, "samples", repro::DEFAULT_SAMPLES))?;
     let seed = param(params::get_seed(args, params::DEFAULT_SEED))?;
+    let regime = param(params::get_regime(args))?;
     let cfg = chip_from_args(args)?;
     let (engine, cache) = engine_from_args(args)?;
     let req = SimRequest::profile(&model, epoch, cfg.clone(), samples, seed)
-        .map_err(|e| anyhow::anyhow!(e))?;
+        .map_err(|e| anyhow::anyhow!(e))?
+        .with_regime(regime);
     let sim = engine.run(&req);
 
     let mut r = repro::simulate_report(&model, epoch, &cfg, samples, seed, &sim);
@@ -502,9 +512,10 @@ fn cmd_explore(args: &Args) -> Result<()> {
     if models.is_empty() {
         anyhow::bail!("--models needs at least one model name");
     }
-    let epoch = param(params::get_f64(args, "epoch", repro::MID_EPOCH))?;
+    let epoch = param(params::get_epoch(args, "epoch", repro::MID_EPOCH))?;
     let samples = param(params::get_usize(args, "samples", repro::DEFAULT_SAMPLES))?.max(1);
     let seed = param(params::get_seed(args, params::DEFAULT_SEED))?;
+    let regime = param(params::get_regime(args))?;
     let budget = param(params::get_usize(args, "budget", params::DEFAULT_EXPLORE_BUDGET))?.max(1);
     let population =
         param(params::get_usize(args, "population", search::default_population(budget)))?;
@@ -520,7 +531,8 @@ fn cmd_explore(args: &Args) -> Result<()> {
     let names: Vec<&str> = models.iter().map(String::as_str).collect();
     let spec = ExploreSpec::new(space, &names, epoch, samples, seed, budget)
         .map_err(|e| anyhow::anyhow!(e))?
-        .with_population(population);
+        .with_population(population)
+        .with_regime(regime);
     let (res, report) = search::run(&engine, &spec);
     eprintln!(
         "explore: {} evaluations over {} generations, frontier size {} \
@@ -680,6 +692,33 @@ fn cmd_info(args: &Args) -> Result<()> {
     println!("  staging depth {}, dtype {:?}, side {:?}", cfg.staging_depth, cfg.dtype, cfg.side);
     println!("  DRAM: {} GB/s ({:.1} B/cycle)", cfg.dram_gbps, cfg.dram_bytes_per_cycle());
     repro::table3(cfg.dtype).print();
+    // The model zoo: every name `simulate`/`serve`/`explore` resolve,
+    // with its plan size. The paper's fig-13 nine are tagged; `bert`
+    // is the transformer tier beyond the 2020 zoo.
+    println!("\nmodels (--model NAME; layers x 3 training ops = plan units):");
+    for name in tensordash::models::ALL_MODELS {
+        let topo = tensordash::models::topology(name, tensordash::models::BATCH)
+            .expect("ALL_MODELS entries resolve");
+        let tier = if tensordash::models::FIG13_MODELS.contains(&name) {
+            "paper zoo"
+        } else {
+            "transformer tier"
+        };
+        println!(
+            "  {:<14} {:>3} layers, {:>3} units  {}",
+            name,
+            topo.layers.len(),
+            topo.layers.len() * 3,
+            tier
+        );
+    }
+    // Sparsity regimes: every --regime spelling with its parameter
+    // bounds, straight from the parser's own help table so `info`
+    // cannot drift from what `Regime::parse` accepts.
+    println!("\nsparsity regimes (--regime R; also the serve \"regime\" field):");
+    for (spelling, what) in tensordash::sparsity::Regime::help() {
+        println!("  {spelling:<34} {what}");
+    }
     // Self-documenting search surface: every explorable axis with its
     // default value and accepted bounds (`explore --axis name=v1,v2`).
     println!("\nexplore search axes (use: explore --axis name=v1,v2 [--axis ...]):");

@@ -215,6 +215,35 @@ pub fn gcn(n: usize) -> Topology {
     Topology { name: "gcn", layers }
 }
 
+/// BERT-class transformer encoder (the scenario tier beyond the paper's
+/// 2020 zoo). Two representative encoder blocks at hidden size 768,
+/// 12 heads of 64, FFN 3072, sequence length 128; token positions fold
+/// into the batch dimension exactly like snli/gcn, and the attention
+/// matmuls fold (batch × head) the same way:
+///
+/// * `q`/`k`/`v`/`proj` — the four 768×768 projections over all tokens;
+/// * `attn_score` — Q·Kᵀ per head: each of the `n*12` head-batches
+///   contracts 64 channels into 128 key positions, for all 128 queries;
+/// * `attn_ctx` — scores·V per head: 128 key positions contract into
+///   the 64-wide head output;
+/// * `ffn_up`/`ffn_down` — the 768→3072→768 MLP.
+pub fn bert(n: usize) -> Topology {
+    let (seq, d, heads, head_dim, ffn) = (128, 768, 12, 64, 3072);
+    let tokens = n * seq;
+    let mut layers = Vec::new();
+    for l in 0..2 {
+        layers.push(fc(format!("enc{l}_q"), tokens, d, d));
+        layers.push(fc(format!("enc{l}_k"), tokens, d, d));
+        layers.push(fc(format!("enc{l}_v"), tokens, d, d));
+        layers.push(fc(format!("enc{l}_attn_score"), n * heads * seq, head_dim, seq));
+        layers.push(fc(format!("enc{l}_attn_ctx"), n * heads * seq, seq, head_dim));
+        layers.push(fc(format!("enc{l}_proj"), tokens, d, d));
+        layers.push(fc(format!("enc{l}_ffn_up"), tokens, d, ffn));
+        layers.push(fc(format!("enc{l}_ffn_down"), tokens, ffn, d));
+    }
+    Topology { name: "bert", layers }
+}
+
 /// Every paper workload by name (the ResNet pruned variants share the
 /// resnet50 topology; their difference lives in the sparsity profile).
 pub fn topology(name: &str, n: usize) -> Option<Topology> {
@@ -235,6 +264,7 @@ pub fn topology(name: &str, n: usize) -> Option<Topology> {
         "img2txt" => img2txt(n),
         "snli" => snli(n),
         "gcn" => gcn(n),
+        "bert" => bert(n),
         _ => return None,
     })
 }
@@ -252,13 +282,29 @@ pub const FIG13_MODELS: [&str; 9] = [
     "resnet50",
 ];
 
+/// Every name [`topology`] resolves: the paper's nine plus the
+/// transformer tier. The fig-13 drivers stay pinned to the paper set;
+/// `info`, `simulate`, `serve` and `explore` accept all of these.
+pub const ALL_MODELS: [&str; 10] = [
+    "alexnet",
+    "densenet121",
+    "img2txt",
+    "resnet50_DS90",
+    "resnet50_SM90",
+    "snli",
+    "squeezenet",
+    "vgg16",
+    "resnet50",
+    "bert",
+];
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     #[test]
     fn all_models_build_and_are_lane_aligned() {
-        for name in FIG13_MODELS {
+        for name in ALL_MODELS {
             let t = topology(name, BATCH).unwrap();
             assert!(!t.layers.is_empty(), "{name} empty");
             for l in &t.layers {
@@ -289,6 +335,23 @@ mod tests {
         let macs: u64 = t.layers.iter().map(|l| l.shape.macs()).sum();
         let g = macs as f64 / 1e9;
         assert!((3.5..7.0).contains(&g), "resnet50 {g} GMACs");
+    }
+
+    #[test]
+    fn bert_encoder_geometry() {
+        let t = bert(BATCH);
+        // 2 encoder blocks x (QKV + score + ctx + proj + 2 FFN) = 16.
+        assert_eq!(t.layers.len(), 16);
+        // Attention matmuls fold (batch x heads x queries) into n.
+        let score = t.layers.iter().find(|l| l.name == "enc0_attn_score").unwrap();
+        assert_eq!(score.shape.n, BATCH * 12 * 128);
+        assert_eq!((score.shape.c, score.shape.f), (64, 128));
+        let ffn = t.layers.iter().find(|l| l.name == "enc1_ffn_up").unwrap();
+        assert_eq!(ffn.shape.n, BATCH * 128);
+        assert_eq!((ffn.shape.c, ffn.shape.f), (768, 3072));
+        // The paper's figure set is untouched by the new tier.
+        assert!(!FIG13_MODELS.contains(&"bert"));
+        assert_eq!(&ALL_MODELS[..9], &FIG13_MODELS[..]);
     }
 
     #[test]

@@ -11,12 +11,13 @@
 
 pub mod ablations;
 
-use crate::api::{derive_seed, Cell, Engine, ModelPlan, Report, SimRequest, SweepSpec};
+use crate::api::{derive_seed, Cell, Engine, ModelPlan, Report, SimRequest, SweepSpec, Workload};
 use crate::config::{ChipConfig, DataType};
 use crate::conv::{ConvShape, TrainOp};
 use crate::energy::{AreaReport, EnergyBreakdown};
 use crate::metrics::{geomean, pct};
 use crate::models::FIG13_MODELS;
+use crate::sparsity::Regime;
 use crate::sim::unit::{cycle_ratio, simulate_unit_with_rng};
 use crate::tensor::TensorBitmap;
 use crate::trace::profiles::{ModelProfile, PHASES};
@@ -259,14 +260,32 @@ pub fn fig13(sims: &[ModelSim]) -> Report {
     r
 }
 
-/// Fig. 14 — speedup as training progresses: a model × epoch sweep.
+/// Fig. 14 — speedup as training progresses: a model × epoch sweep,
+/// expressed on the [`Regime::Schedule`] machinery: each model's cells
+/// run under that model's own trajectory curve. A model scheduled onto
+/// its own curve is bit-identical to the uniform default (the curve
+/// *is* the profile's trajectory), so this generalisation changes no
+/// bytes — pinned by `fig14_is_byte_identical_on_the_schedule_regime`.
 pub fn fig14(engine: &Engine, cfg: &ChipConfig, samples: usize, seed: u64) -> Report {
     let mut columns: Vec<String> = vec!["model".into()];
     columns.extend(PHASES.iter().map(|e| format!("{:.0}%", e * 100.0)));
     let href: Vec<&str> = columns.iter().map(|s| s.as_str()).collect();
     let mut r = Report::new("fig14", "Fig. 14 — speedup vs training progress", &href);
     let spec = SweepSpec::models(&FIG13_MODELS, MID_EPOCH, cfg, samples, seed).with_epochs(&PHASES);
-    let sims = engine.run_all(&spec.cells());
+    let cells: Vec<SimRequest> = spec
+        .cells()
+        .into_iter()
+        .map(|cell| {
+            let curve = match &cell.workload {
+                Workload::Profile { model, .. } => {
+                    ModelProfile::for_model(model).expect("sweep validated the name").curve
+                }
+                _ => unreachable!("model sweeps expand to profile workloads"),
+            };
+            cell.with_regime(Regime::Schedule { curve })
+        })
+        .collect();
+    let sims = engine.run_all(&cells);
     for (mi, m) in FIG13_MODELS.iter().enumerate() {
         let mut row = vec![Cell::text(*m)];
         for ei in 0..PHASES.len() {

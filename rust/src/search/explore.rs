@@ -36,6 +36,7 @@ use std::sync::Arc;
 use crate::api::cache::cfg_json;
 use crate::api::report::FRONTIER_SCHEMA;
 use crate::api::{derive_seed, Cell, Engine, Report, SimRequest};
+use crate::sparsity::Regime;
 use crate::trace::profiles::ModelProfile;
 use crate::util::rng::Rng;
 
@@ -64,6 +65,10 @@ pub struct ExploreSpec {
     pub budget: usize,
     /// Batch size per generation (survivors + fresh candidates).
     pub population: usize,
+    /// Sparsity regime every evaluation request carries. Seeds never
+    /// depend on it, so regimes are directly comparable sweeps over the
+    /// same base tensors.
+    pub regime: Regime,
 }
 
 impl ExploreSpec {
@@ -80,7 +85,7 @@ impl ExploreSpec {
         let mut resolved = Vec::with_capacity(models.len());
         for m in models {
             let p = ModelProfile::for_model(m)
-                .ok_or_else(|| format!("unknown model '{m}' (see models::FIG13_MODELS)"))?;
+                .ok_or_else(|| format!("unknown model '{m}' (see models::ALL_MODELS)"))?;
             resolved.push((m.to_string(), Arc::new(p)));
         }
         Ok(ExploreSpec::with_profiles(space, resolved, epoch, samples, seed, budget))
@@ -98,11 +103,27 @@ impl ExploreSpec {
     ) -> ExploreSpec {
         assert!(!models.is_empty(), "explore needs at least one model");
         let population = default_population(budget);
-        ExploreSpec { space, models, epoch, samples, seed, budget, population }
+        ExploreSpec {
+            space,
+            models,
+            epoch,
+            samples,
+            seed,
+            budget,
+            population,
+            regime: Regime::Uniform,
+        }
     }
 
     pub fn with_population(mut self, population: usize) -> ExploreSpec {
         self.population = population.max(1);
+        self
+    }
+
+    /// Evaluate every candidate under `regime` instead of the default
+    /// uniform workload.
+    pub fn with_regime(mut self, regime: Regime) -> ExploreSpec {
+        self.regime = regime;
         self
     }
 }
@@ -245,13 +266,16 @@ pub fn explore(engine: &Engine, spec: &ExploreSpec) -> ExploreResult {
             for (mi, (_, profile)) in spec.models.iter().enumerate() {
                 // Seed per model only: every candidate sees identical
                 // tensors (the Fig. 17–19 comparability convention).
-                reqs.push(SimRequest::profile_shared(
-                    Arc::clone(profile),
-                    spec.epoch,
-                    cfg.clone(),
-                    spec.samples,
-                    derive_seed(spec.seed, mi as u64),
-                ));
+                reqs.push(
+                    SimRequest::profile_shared(
+                        Arc::clone(profile),
+                        spec.epoch,
+                        cfg.clone(),
+                        spec.samples,
+                        derive_seed(spec.seed, mi as u64),
+                    )
+                    .with_regime(spec.regime.clone()),
+                );
             }
         }
         let sims = engine.run_all(&reqs);
@@ -347,6 +371,7 @@ pub fn frontier_report(spec: &ExploreSpec, res: &ExploreResult) -> Report {
         ]);
     }
     r.meta_str("models", &models.join(","));
+    r.meta_str("regime", &spec.regime.render());
     r.meta_num("epoch", spec.epoch);
     r.meta_num("samples", spec.samples as f64);
     r.meta_num("seed", spec.seed as f64);

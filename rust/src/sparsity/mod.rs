@@ -1,0 +1,379 @@
+//! First-class sparsity regimes.
+//!
+//! Every synthetic workload carries a [`Regime`] describing *how* its
+//! operand tensors are sparse, as a typed, cache-keyed dimension of the
+//! request (DESIGN.md §Sparsity-regimes):
+//!
+//! * [`Regime::Uniform`] — the original behaviour: the model profile's
+//!   own clustered bitmaps at the requested epoch, untouched. Requests
+//!   that never mention a regime get this and stay byte-identical to
+//!   every release before the regime existed.
+//! * [`Regime::NM`] — N:M structured sparsity (Procrustes, arXiv
+//!   2009.10976): on top of the profile bitmaps, a deterministic
+//!   keep-mask forces all but `n` positions in every `m`-wide channel
+//!   block to zero, per (sample, y, x) site — the block shape hardware
+//!   sparsity formats (2:4 et al.) prescribe.
+//! * [`Regime::Schedule`] — time-varying sparsity (arXiv 2109.07710):
+//!   a reusable [`Curve`] evaluated at the request's epoch fraction
+//!   replaces the model's own hard-coded trajectory. This generalises
+//!   the fig-14 sparsity-over-time machinery: the built-in model
+//!   curves *are* `Curve` values now, so scheduling a model onto its
+//!   own curve is bit-identical to `Uniform`.
+//!
+//! Determinism contract: bitmap generation under any regime is a pure
+//! function of `(model, layer, epoch, seed, regime)` — mask RNG streams
+//! are seeded per unit from those inputs alone, never from thread or
+//! arrival order, so reports stay byte-identical at any `--jobs` and
+//! any `--shards`, warm or cold.
+
+use crate::tensor::TensorBitmap;
+use crate::util::rng::Rng;
+
+/// How sparsity evolves over training (the Fig. 14 families plus
+/// free-form piecewise-linear profiles). The multiplier scales a
+/// tensor's base sparsity; epoch fractions live in `[0, 1]`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Curve {
+    /// Dense models: low at random init, rapid rise over the first
+    /// epochs, stable mid-training, mild decline entering the second
+    /// half, stable finish — the paper's inverted-U.
+    DenseU { swing: f64 },
+    /// Pruning-during-training (DS90/SM90): aggressive early pruning
+    /// that training then partially "reclaims".
+    PrunedReclaim { start_boost: f64 },
+    /// No meaningful evolution (GCN).
+    Flat,
+    /// Free-form piecewise-linear profile over `(epoch, factor)` knots
+    /// sorted by epoch; clamped to the end values outside the knots.
+    Piecewise { points: Vec<(f64, f64)> },
+}
+
+impl Curve {
+    /// Multiplier on the base *sparsity* at epoch fraction `e` in `[0, 1]`.
+    pub fn factor(&self, e: f64) -> f64 {
+        match self {
+            Curve::DenseU { swing } => {
+                // rise to plateau by e=0.15 from (1 - swing), dip after
+                // e=0.5 by swing/2, restabilise by e=0.75.
+                let rise = (e / 0.15).min(1.0);
+                let dip = ((e - 0.45) / 0.3).clamp(0.0, 1.0);
+                1.0 - swing * (1.0 - rise) - (swing * 0.45) * dip
+            }
+            Curve::PrunedReclaim { start_boost } => {
+                // settle from (1 + boost) to 1.0 within the first 5%.
+                let settle = (e / 0.05).min(1.0);
+                1.0 + start_boost * (1.0 - settle)
+            }
+            Curve::Flat => 1.0,
+            Curve::Piecewise { points } => {
+                if points.is_empty() {
+                    return 1.0;
+                }
+                if e <= points[0].0 {
+                    return points[0].1;
+                }
+                for pair in points.windows(2) {
+                    let ((e0, f0), (e1, f1)) = (pair[0], pair[1]);
+                    if e <= e1 {
+                        if e1 <= e0 {
+                            return f1;
+                        }
+                        let t = (e - e0) / (e1 - e0);
+                        return f0 + (f1 - f0) * t;
+                    }
+                }
+                points[points.len() - 1].1
+            }
+        }
+    }
+
+    /// The canonical spelling accepted back by [`Regime::parse`].
+    pub fn render(&self) -> String {
+        match self {
+            Curve::DenseU { swing } => format!("dense-u:{swing}"),
+            Curve::PrunedReclaim { start_boost } => format!("pruned-reclaim:{start_boost}"),
+            Curve::Flat => "flat".to_string(),
+            Curve::Piecewise { points } => {
+                let knots: Vec<String> =
+                    points.iter().map(|(e, f)| format!("{e}@{f}")).collect();
+                format!("piecewise:{}", knots.join(","))
+            }
+        }
+    }
+
+    fn parse(s: &str) -> Result<Curve, String> {
+        let bad = || {
+            "must name a schedule curve: flat, dense-u:<swing>, \
+             pruned-reclaim:<boost> or piecewise:<e@f,...>"
+                .to_string()
+        };
+        if s == "flat" {
+            return Ok(Curve::Flat);
+        }
+        if let Some(v) = s.strip_prefix("dense-u:") {
+            let swing: f64 = v.parse().map_err(|_| bad())?;
+            return Ok(Curve::DenseU { swing });
+        }
+        if let Some(v) = s.strip_prefix("pruned-reclaim:") {
+            let start_boost: f64 = v.parse().map_err(|_| bad())?;
+            return Ok(Curve::PrunedReclaim { start_boost });
+        }
+        if let Some(v) = s.strip_prefix("piecewise:") {
+            let mut points = Vec::new();
+            for knot in v.split(',') {
+                let (e, f) = knot
+                    .split_once('@')
+                    .ok_or_else(|| "piecewise wants knots 'e@f' with e in [0, 1]".to_string())?;
+                let e: f64 = e
+                    .parse()
+                    .map_err(|_| "piecewise wants knots 'e@f' with e in [0, 1]".to_string())?;
+                let f: f64 = f
+                    .parse()
+                    .map_err(|_| "piecewise wants knots 'e@f' with e in [0, 1]".to_string())?;
+                if !(0.0..=1.0).contains(&e) {
+                    return Err("piecewise wants knots 'e@f' with e in [0, 1]".to_string());
+                }
+                points.push((e, f));
+            }
+            if points.windows(2).any(|p| p[1].0 < p[0].0) {
+                return Err("piecewise knots must be sorted by epoch".to_string());
+            }
+            return Ok(Curve::Piecewise { points });
+        }
+        Err(bad())
+    }
+}
+
+/// Which axis the N:M blocks run along. Only the 16-lane channel axis
+/// exists today (the axis the PE reduces over), but the key encoding
+/// reserves the byte.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MaskAxis {
+    Channel,
+}
+
+impl MaskAxis {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            MaskAxis::Channel => "channel",
+        }
+    }
+}
+
+/// The sparsity regime of a synthetic workload. See the module docs for
+/// the semantics of each variant.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Regime {
+    Uniform,
+    NM { n: usize, m: usize, axis: MaskAxis },
+    Schedule { curve: Curve },
+}
+
+impl Regime {
+    /// Parse the shared CLI/serve spelling: `uniform`, `nm:N:M`, or
+    /// `schedule:<curve>`. Error strings are predicates (no subject) so
+    /// `api::params` can prefix whichever spelling — `--regime` or
+    /// `'regime'` — the request used.
+    pub fn parse(s: &str) -> Result<Regime, String> {
+        if s == "uniform" {
+            return Ok(Regime::Uniform);
+        }
+        if let Some(v) = s.strip_prefix("nm:") {
+            let (n, m) = v
+                .split_once(':')
+                .ok_or_else(|| "nm wants positive integers n:m".to_string())?;
+            let n: usize = n.parse().map_err(|_| "nm wants positive integers n:m".to_string())?;
+            let m: usize = m.parse().map_err(|_| "nm wants positive integers n:m".to_string())?;
+            if n == 0 || m == 0 {
+                return Err("nm wants positive integers n:m".to_string());
+            }
+            if n > m {
+                return Err("nm requires n <= m".to_string());
+            }
+            if m > 16 {
+                return Err("nm block size m must be <= 16".to_string());
+            }
+            return Ok(Regime::NM { n, m, axis: MaskAxis::Channel });
+        }
+        if let Some(v) = s.strip_prefix("schedule:") {
+            return Ok(Regime::Schedule { curve: Curve::parse(v)? });
+        }
+        Err("must be 'uniform', 'nm:N:M' or 'schedule:<curve>'".to_string())
+    }
+
+    /// The canonical spelling; `parse(render()) == self`.
+    pub fn render(&self) -> String {
+        match self {
+            Regime::Uniform => "uniform".to_string(),
+            Regime::NM { n, m, .. } => format!("nm:{n}:{m}"),
+            Regime::Schedule { curve } => format!("schedule:{}", curve.render()),
+        }
+    }
+
+    /// `(spelling, bounds)` rows for the `info` subcommand.
+    pub fn help() -> &'static [(&'static str, &'static str)] {
+        &[
+            ("uniform", "the model profile's own clustered bitmaps (default)"),
+            ("nm:N:M", "N:M structured channel mask, 1 <= N <= M <= 16"),
+            ("schedule:flat", "no sparsity evolution over epochs"),
+            ("schedule:dense-u:<swing>", "inverted-U trajectory, swing in [0, 1]"),
+            ("schedule:pruned-reclaim:<boost>", "early boost settling to 1.0, boost in [0, 1]"),
+            ("schedule:piecewise:<e@f,...>", "piecewise-linear knots, epochs sorted in [0, 1]"),
+        ]
+    }
+}
+
+/// Domain constant separating N:M mask RNG streams from every other
+/// consumer of the same request seed.
+const NM_MASK_DOMAIN: u64 = 0x6E4D_6D61_736B_2E31; // "nMmask.1"
+
+/// Seed of the N:M mask stream for one tensor of one unit: a pure
+/// function of the request's bitmap seed, the layer and which tensor
+/// (0 = A, 1 = G), so mask generation is `--jobs`-independent.
+pub fn nm_mask_seed(bitmap_seed: u64, layer: u64, tensor: u64) -> u64 {
+    bitmap_seed
+        ^ NM_MASK_DOMAIN
+        ^ layer.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ tensor.wrapping_mul(0xD1B5_4A32_D192_ED03)
+}
+
+/// Deterministic N:M keep-mask over the channel axis: for every
+/// (sample, y, x) site and every `m`-wide channel block, exactly
+/// `min(n, block_len)` positions are kept (chosen uniformly by the
+/// seeded RNG); all others read as zero.
+pub fn nm_mask(dims: (usize, usize, usize, usize), n: usize, m: usize, seed: u64) -> TensorBitmap {
+    let (nn, h, w, c) = dims;
+    assert!(n >= 1 && n <= m && m <= 16, "N:M out of range: {n}:{m}");
+    assert_eq!(c % 16, 0);
+    let mut rng = Rng::new(seed);
+    let cb = c / 16;
+    let mut words = Vec::with_capacity(nn * h * w * cb);
+    let mut lanes = vec![false; c];
+    for _site in 0..nn * h * w {
+        lanes.iter_mut().for_each(|b| *b = false);
+        let mut c0 = 0;
+        while c0 < c {
+            let block = m.min(c - c0);
+            for k in rng.sample_indices(block, n.min(block)) {
+                lanes[c0 + k] = true;
+            }
+            c0 += block;
+        }
+        for b in 0..cb {
+            let mut word = 0u16;
+            for l in 0..16 {
+                word |= u16::from(lanes[b * 16 + l]) << l;
+            }
+            words.push(word);
+        }
+    }
+    TensorBitmap::from_raw(dims, words)
+}
+
+/// AND an N:M keep-mask into a generated bitmap: the result carries the
+/// bitmap's zeros *plus* the structured zeros the mask forces.
+pub fn apply_nm(bm: &TensorBitmap, n: usize, m: usize, seed: u64) -> TensorBitmap {
+    let dims = (bm.n, bm.h, bm.w, bm.c);
+    let mask = nm_mask(dims, n, m, seed);
+    let words = bm
+        .words()
+        .iter()
+        .zip(mask.words())
+        .map(|(a, b)| a & b)
+        .collect();
+    TensorBitmap::from_raw(dims, words)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regime_spellings_round_trip() {
+        for s in [
+            "uniform",
+            "nm:2:4",
+            "nm:1:16",
+            "schedule:flat",
+            "schedule:dense-u:0.3",
+            "schedule:pruned-reclaim:0.22",
+            "schedule:piecewise:0@1,0.5@0.6,1@0.8",
+        ] {
+            let r = Regime::parse(s).unwrap();
+            assert_eq!(r.render(), s, "round trip of {s}");
+            assert_eq!(Regime::parse(&r.render()).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn regime_parse_rejects_bad_spellings() {
+        assert_eq!(
+            Regime::parse("nm:4:2").unwrap_err(),
+            "nm requires n <= m"
+        );
+        assert_eq!(
+            Regime::parse("nm:2:32").unwrap_err(),
+            "nm block size m must be <= 16"
+        );
+        assert_eq!(
+            Regime::parse("nm:0:4").unwrap_err(),
+            "nm wants positive integers n:m"
+        );
+        assert!(Regime::parse("banded").unwrap_err().starts_with("must be 'uniform'"));
+        assert!(Regime::parse("schedule:banded").unwrap_err().contains("schedule curve"));
+        assert_eq!(
+            Regime::parse("schedule:piecewise:0.5@1,0.2@1").unwrap_err(),
+            "piecewise knots must be sorted by epoch"
+        );
+    }
+
+    #[test]
+    fn piecewise_interpolates_and_clamps() {
+        let c = Curve::Piecewise { points: vec![(0.2, 1.0), (0.6, 0.5)] };
+        assert_eq!(c.factor(0.0), 1.0); // clamp low
+        assert_eq!(c.factor(0.2), 1.0);
+        assert!((c.factor(0.4) - 0.75).abs() < 1e-12);
+        assert_eq!(c.factor(0.6), 0.5);
+        assert_eq!(c.factor(1.0), 0.5); // clamp high
+        assert_eq!(Curve::Piecewise { points: vec![] }.factor(0.3), 1.0);
+    }
+
+    #[test]
+    fn nm_mask_keeps_exactly_n_per_block() {
+        let (n, m) = (2, 4);
+        let mask = nm_mask((2, 3, 3, 32), n, m, 7);
+        for s in 0..2 {
+            for y in 0..3 {
+                for x in 0..3 {
+                    for c0 in (0..32).step_by(m) {
+                        let kept: usize =
+                            (c0..c0 + m).map(|c| mask.bit(s, y, x, c) as usize).sum();
+                        assert_eq!(kept, n, "site ({s},{y},{x}) block {c0}");
+                    }
+                }
+            }
+        }
+        // Exact density accounting: n/m of all positions are kept.
+        assert_eq!(mask.nonzeros(), mask.values() * n as u64 / m as u64);
+    }
+
+    #[test]
+    fn nm_mask_is_seed_deterministic() {
+        let a = nm_mask((1, 4, 4, 64), 2, 4, 42);
+        let b = nm_mask((1, 4, 4, 64), 2, 4, 42);
+        assert_eq!(a, b);
+        let c = nm_mask((1, 4, 4, 64), 2, 4, 43);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn apply_nm_only_clears_bits() {
+        let mut rng = Rng::new(5);
+        let bm = crate::trace::synthetic::random_bitmap((1, 4, 4, 32), 0.3, &mut rng);
+        let masked = apply_nm(&bm, 2, 4, 11);
+        for (a, b) in bm.words().iter().zip(masked.words()) {
+            assert_eq!(a & b, *b, "mask set a bit the source lacked");
+        }
+        assert!(masked.nonzeros() <= bm.nonzeros());
+    }
+}

@@ -29,40 +29,10 @@ use crate::util::rng::Rng;
 /// Epoch phases sampled for Fig. 14 (fractions of total training).
 pub const PHASES: [f64; 10] = [0.0, 0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.65, 0.8, 1.0];
 
-/// How a model's sparsity evolves over training (Fig. 14 families).
-#[derive(Debug, Clone, Copy, PartialEq)]
-pub enum EpochCurve {
-    /// Dense models: low at random init, rapid rise over the first
-    /// epochs, stable mid-training, mild decline entering the second
-    /// half, stable finish — the paper's inverted-U.
-    DenseU { swing: f64 },
-    /// Pruning-during-training (DS90/SM90): aggressive early pruning
-    /// that training then partially "reclaims".
-    PrunedReclaim { start_boost: f64 },
-    /// No meaningful evolution (GCN).
-    Flat,
-}
-
-impl EpochCurve {
-    /// Multiplier on the base *sparsity* at epoch fraction `e` in `[0, 1]`.
-    pub fn factor(&self, e: f64) -> f64 {
-        match *self {
-            EpochCurve::DenseU { swing } => {
-                // rise to plateau by e=0.15 from (1 - swing), dip after
-                // e=0.5 by swing/2, restabilise by e=0.75.
-                let rise = (e / 0.15).min(1.0);
-                let dip = ((e - 0.45) / 0.3).clamp(0.0, 1.0);
-                1.0 - swing * (1.0 - rise) - (swing * 0.45) * dip
-            }
-            EpochCurve::PrunedReclaim { start_boost } => {
-                // settle from (1 + boost) to 1.0 within the first 5%.
-                let settle = (e / 0.05).min(1.0);
-                1.0 + start_boost * (1.0 - settle)
-            }
-            EpochCurve::Flat => 1.0,
-        }
-    }
-}
+/// How a model's sparsity evolves over training: the Fig. 14 families
+/// are [`crate::sparsity::Curve`] values, so a `Schedule` regime can
+/// reuse (or replace) any model's built-in trajectory.
+pub use crate::sparsity::Curve;
 
 /// A workload with calibrated sparsity levels.
 #[derive(Debug, Clone)]
@@ -72,7 +42,7 @@ pub struct ModelProfile {
     pub a_sparsity: f64,
     /// Base zero-fraction of the output gradients (op-2/op-3 operand).
     pub g_sparsity: f64,
-    pub curve: EpochCurve,
+    pub curve: Curve,
     /// Fraction of feature maps carrying most non-zeros (§4.4).
     pub cluster: f64,
     /// Per-layer depth gradient: sparsity scaled by
@@ -98,20 +68,24 @@ impl ModelProfile {
         let topo = topology(name, BATCH)?;
         // (a_sparsity, g_sparsity, curve, cluster, depth_slope, batch)
         let (sa, sg, curve, cluster, slope, batch) = match name {
-            "alexnet" => (0.55, 0.70, EpochCurve::DenseU { swing: 0.35 }, 0.35, 0.35, 128),
-            "vgg16" => (0.63, 0.78, EpochCurve::DenseU { swing: 0.32 }, 0.35, 0.35, 64),
-            "squeezenet" => (0.52, 0.68, EpochCurve::DenseU { swing: 0.18 }, 0.40, 0.25, 143),
-            "resnet50" => (0.52, 0.66, EpochCurve::DenseU { swing: 0.15 }, 0.40, 0.30, 96),
+            "alexnet" => (0.55, 0.70, Curve::DenseU { swing: 0.35 }, 0.35, 0.35, 128),
+            "vgg16" => (0.63, 0.78, Curve::DenseU { swing: 0.32 }, 0.35, 0.35, 64),
+            "squeezenet" => (0.52, 0.68, Curve::DenseU { swing: 0.18 }, 0.40, 0.25, 143),
+            "resnet50" => (0.52, 0.66, Curve::DenseU { swing: 0.15 }, 0.40, 0.30, 96),
             "resnet50_DS90" => {
-                (0.55, 0.59, EpochCurve::PrunedReclaim { start_boost: 0.10 }, 0.35, 0.15, 96)
+                (0.55, 0.59, Curve::PrunedReclaim { start_boost: 0.10 }, 0.35, 0.15, 96)
             }
             "resnet50_SM90" => {
-                (0.40, 0.43, EpochCurve::PrunedReclaim { start_boost: 0.22 }, 0.35, 0.15, 96)
+                (0.40, 0.43, Curve::PrunedReclaim { start_boost: 0.22 }, 0.35, 0.15, 96)
             }
-            "densenet121" => (0.48, 0.03, EpochCurve::DenseU { swing: 0.12 }, 0.45, 0.20, 64),
-            "img2txt" => (0.60, 0.74, EpochCurve::DenseU { swing: 0.20 }, 0.40, 0.20, 64),
-            "snli" => (0.50, 0.62, EpochCurve::DenseU { swing: 0.18 }, 0.45, 0.10, 143),
-            "gcn" => (0.02, 0.015, EpochCurve::Flat, 0.90, 0.0, 96),
+            "densenet121" => (0.48, 0.03, Curve::DenseU { swing: 0.12 }, 0.45, 0.20, 64),
+            "img2txt" => (0.60, 0.74, Curve::DenseU { swing: 0.20 }, 0.40, 0.20, 64),
+            "snli" => (0.50, 0.62, Curve::DenseU { swing: 0.18 }, 0.45, 0.10, 143),
+            "gcn" => (0.02, 0.015, Curve::Flat, 0.90, 0.0, 96),
+            // BERT-class encoder: GELU FFNs and attention keep more
+            // values live than post-ReLU CNN maps, gradients sparser
+            // than activations, shallow depth gradient across blocks.
+            "bert" => (0.45, 0.60, Curve::DenseU { swing: 0.25 }, 0.40, 0.15, 64),
             _ => return None,
         };
         let w_sparsity = match name {
@@ -148,19 +122,46 @@ impl ModelProfile {
         1.0 + self.depth_slope * (frac - 0.5)
     }
 
+    /// Sparsity of the A tensor of layer `i` under an explicit curve
+    /// multiplier (the `Schedule` regime's evaluation point).
+    pub fn a_sparsity_with_factor(&self, i: usize, factor: f64) -> f64 {
+        (self.a_sparsity * self.depth_factor(i) * factor).clamp(0.0, 0.98)
+    }
+
+    /// Sparsity of the G tensor of layer `i` under an explicit curve
+    /// multiplier.
+    pub fn g_sparsity_with_factor(&self, i: usize, factor: f64) -> f64 {
+        (self.g_sparsity * self.depth_factor(i) * factor).clamp(0.0, 0.98)
+    }
+
     /// Sparsity of the A tensor of layer `i` at epoch fraction `e`.
     pub fn a_sparsity_at(&self, i: usize, e: f64) -> f64 {
-        (self.a_sparsity * self.depth_factor(i) * self.curve.factor(e)).clamp(0.0, 0.98)
+        self.a_sparsity_with_factor(i, self.curve.factor(e))
     }
 
     /// Sparsity of the G tensor of layer `i` at epoch fraction `e`.
     pub fn g_sparsity_at(&self, i: usize, e: f64) -> f64 {
-        (self.g_sparsity * self.depth_factor(i) * self.curve.factor(e)).clamp(0.0, 0.98)
+        self.g_sparsity_with_factor(i, self.curve.factor(e))
     }
 
     /// Generate the (A, G) bitmaps of layer `i` at epoch fraction `e`.
     /// Deterministic in `(model, layer, epoch, seed)`.
     pub fn layer_bitmaps(&self, i: usize, e: f64, seed: u64) -> (TensorBitmap, TensorBitmap) {
+        self.layer_bitmaps_with_factor(i, e, seed, self.curve.factor(e))
+    }
+
+    /// Same generator with the curve multiplier supplied by the caller
+    /// (the `Schedule` regime). The RNG stream depends only on
+    /// `(model, layer, epoch, seed)` — never on the factor — so
+    /// scheduling a model onto its own curve is bit-identical to
+    /// [`Self::layer_bitmaps`].
+    pub fn layer_bitmaps_with_factor(
+        &self,
+        i: usize,
+        e: f64,
+        seed: u64,
+        factor: f64,
+    ) -> (TensorBitmap, TensorBitmap) {
         let s: &ConvShape = &self.topology.layers[i].shape;
         let mut rng = Rng::new(
             seed ^ (i as u64).wrapping_mul(0x9E3779B97F4A7C15)
@@ -169,13 +170,13 @@ impl ModelProfile {
         );
         let a = clustered_bitmap(
             (s.n, s.h, s.w, s.c),
-            self.a_sparsity_at(i, e),
+            self.a_sparsity_with_factor(i, factor),
             self.cluster,
             &mut rng,
         );
         let g = clustered_bitmap(
             (s.n, s.out_h(), s.out_w(), s.f),
-            self.g_sparsity_at(i, e),
+            self.g_sparsity_with_factor(i, factor),
             self.cluster,
             &mut rng,
         );
@@ -249,11 +250,11 @@ mod tests {
 
     #[test]
     fn epoch_curves_match_fig14_shape() {
-        let dense = EpochCurve::DenseU { swing: 0.3 };
+        let dense = Curve::DenseU { swing: 0.3 };
         assert!(dense.factor(0.0) < dense.factor(0.2));
         assert!(dense.factor(0.3) > dense.factor(0.9)); // late dip
         assert!((dense.factor(0.2) - dense.factor(0.4)).abs() < 1e-9); // plateau
-        let pruned = EpochCurve::PrunedReclaim { start_boost: 0.2 };
+        let pruned = Curve::PrunedReclaim { start_boost: 0.2 };
         assert!(pruned.factor(0.0) > pruned.factor(0.05));
         assert!((pruned.factor(0.05) - 1.0).abs() < 1e-9);
         assert!((pruned.factor(0.8) - 1.0).abs() < 1e-9);
@@ -275,6 +276,30 @@ mod tests {
         assert_eq!(a1, a2);
         let (a3, _) = p.layer_bitmaps(2, 0.4, 8);
         assert_ne!(a1, a3);
+    }
+
+    #[test]
+    fn own_curve_factor_is_bit_identical() {
+        // The Schedule regime's contract: supplying a model's own curve
+        // factor reproduces the default generator exactly.
+        for name in ["resnet50", "gcn", "bert"] {
+            let p = ModelProfile::for_model(name).unwrap();
+            let f = p.curve.factor(0.3);
+            let (a1, g1) = p.layer_bitmaps(1, 0.3, 42);
+            let (a2, g2) = p.layer_bitmaps_with_factor(1, 0.3, 42, f);
+            assert_eq!(a1, a2, "{name} A diverged");
+            assert_eq!(g1, g2, "{name} G diverged");
+        }
+    }
+
+    #[test]
+    fn bert_profile_exists_outside_fig13() {
+        let p = ModelProfile::for_model("bert").unwrap();
+        assert_eq!(p.name(), "bert");
+        assert!(p.a_sparsity_at(0, 0.4) > 0.3);
+        assert!(p.g_sparsity_at(0, 0.4) > p.a_sparsity_at(0, 0.4));
+        // The fig-13 set stays the paper's nine models.
+        assert!(!crate::models::FIG13_MODELS.contains(&"bert"));
     }
 
     #[test]
